@@ -1,0 +1,49 @@
+//! Bayesian inference workloads (paper Fig 9b/9c): object location over
+//! a 64×64 grid and heart-disaster prediction, both through the PJRT
+//! artifacts. Prints the located object cell and a risk table.
+//!
+//! Run: cargo run --release --example bayesian_inference
+
+use stoch_imc::apps::{hdp::Hdp, ol::Ol, App};
+use stoch_imc::coordinator::{BatcherConfig, Coordinator};
+
+fn main() -> anyhow::Result<()> {
+    let coord = Coordinator::start(std::path::Path::new("artifacts"), BatcherConfig::default())?;
+
+    // --- Object location: evaluate p(x,y) over a sub-grid.
+    let ol = Ol { grid: 32, sensors: 3 };
+    let (grid_points, obj) = ol.grid_workload(0xB0B);
+    let t0 = std::time::Instant::now();
+    let probs = coord.run_workload("app_ol", &grid_points)?;
+    println!(
+        "OL: {} grid points in {:.2?}; argmax p = {:.4}",
+        probs.len(),
+        t0.elapsed(),
+        probs.iter().cloned().fold(0.0, f64::max)
+    );
+    let best = probs
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap()
+        .0;
+    println!("object located at grid cell ({}, {})", best % 32, best / 32);
+    let (bx, by) = (best % 32, best / 32);
+    let dist =
+        (((bx as f64 - obj.0 as f64).powi(2) + (by as f64 - obj.1 as f64).powi(2)) as f64).sqrt();
+    println!("true object at ({}, {}) — distance {dist:.1} cells", obj.0, obj.1);
+    anyhow::ensure!(dist <= 6.0, "stochastic localization strayed too far");
+
+    // --- Heart-disaster prediction: a batch of patients.
+    let hdp = Hdp;
+    let patients = hdp.workload(16, 0xCAFE);
+    let risks = coord.run_workload("app_hdp", &patients)?;
+    println!("\nHDP risk table (stochastic vs float):");
+    for (i, (x, r)) in patients.iter().zip(&risks).enumerate() {
+        let f = hdp.float_ref(x);
+        println!("  patient {i:>2}: P(HD) = {r:.3} (ref {f:.3})");
+        anyhow::ensure!((r - f).abs() < 0.12, "patient {i} error too large");
+    }
+    println!("bayesian_inference OK");
+    Ok(())
+}

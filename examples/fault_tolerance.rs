@@ -1,0 +1,32 @@
+//! Bitflip-tolerance demo (paper Table 4): inject faults at operation
+//! boundaries and watch binary IMC degrade while Stoch-IMC shrugs.
+//! Pure L3 functional models (fault injection needs bit-level access,
+//! which the in-graph artifacts deliberately do not expose).
+//!
+//! Run: cargo run --release --example fault_tolerance
+
+use stoch_imc::apps::{all_apps, output_error_pct};
+
+fn main() {
+    let rates = [0.0, 0.05, 0.10, 0.15, 0.20];
+    println!("mean output error (%) vs injected bitflip rate");
+    println!("{:<6} {:>8} | {}", "app", "method", "0%     5%    10%    15%    20%");
+    for app in all_apps() {
+        let w = app.workload(16, 99);
+        for (label, stochastic) in [("binary", false), ("stoch", true)] {
+            let errs: Vec<String> = rates
+                .iter()
+                .map(|&r| {
+                    format!(
+                        "{:6.2}",
+                        output_error_pct(app.as_ref(), &w, 256, 8, r, stochastic, 0xF417)
+                    )
+                })
+                .collect();
+            println!("{:<6} {:>8} | {}", app.name(), label, errs.join(" "));
+        }
+    }
+    println!("\nNote the crossover around 5% (paper §5.3.2): below it the");
+    println!("stochastic approximation noise dominates; above it binary's");
+    println!("MSB fragility takes over while Stoch-IMC stays below ~7%.");
+}

@@ -1,0 +1,62 @@
+//! End-to-end driver (DESIGN.md E4/LIT): Sauvola local image
+//! thresholding of a synthetic degraded document, full three-layer path:
+//! Rust coordinator → PJRT (JAX/Pallas artifact `app_lit`) → StoB.
+//! Reports per-window accuracy vs the float reference, the binarized
+//! image, throughput, and coordinator batching metrics.
+//!
+//! Run: cargo run --release --example image_thresholding
+
+use stoch_imc::apps::{lit::Lit, App};
+use stoch_imc::coordinator::{BatcherConfig, Coordinator};
+use stoch_imc::util::stats::mean_error_pct;
+
+fn main() -> anyhow::Result<()> {
+    let app = Lit::default();
+    let windows = app.workload(app.eval_instances(), 0x570C41);
+    println!(
+        "LIT: {} windows of {}×{} from a {}×{} synthetic degraded page",
+        windows.len(),
+        app.side,
+        app.side,
+        app.image_side,
+        app.image_side
+    );
+
+    println!("compiling app_lit PJRT executable (one-time)…");
+    let coord = Coordinator::start(std::path::Path::new("artifacts"), BatcherConfig::default())?;
+    let t0 = std::time::Instant::now();
+    let thresholds = coord.run_workload("app_lit", &windows)?;
+    let dt = t0.elapsed();
+
+    let refs: Vec<f64> = windows.iter().map(|w| app.float_ref(w)).collect();
+    let err = mean_error_pct(&refs, &thresholds);
+    println!(
+        "{} windows in {:.2?} ({:.1} windows/s), mean threshold error {:.2}%",
+        windows.len(),
+        dt,
+        windows.len() as f64 / dt.as_secs_f64(),
+        err
+    );
+    println!("coordinator: {}", coord.metrics("app_lit").summary());
+
+    // Binarize and render one strip of the page with the thresholds.
+    let tiles = app.image_side / app.side;
+    println!("binarized page (first {} window-rows):", tiles.min(4));
+    for wy in 0..tiles.min(4) {
+        for py in 0..app.side {
+            let mut line = String::new();
+            for wx in 0..tiles {
+                let w = &windows[wy * tiles + wx];
+                let t = thresholds[wy * tiles + wx];
+                for px in 0..app.side {
+                    let v = w[py * app.side + px];
+                    line.push(if v < t { '#' } else { '.' });
+                }
+            }
+            println!("{line}");
+        }
+    }
+    anyhow::ensure!(err < 20.0, "accuracy regression: {err:.2}%");
+    println!("image_thresholding OK");
+    Ok(())
+}

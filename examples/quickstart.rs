@@ -1,0 +1,34 @@
+//! Quickstart: the three-layer path in one page.
+//!
+//! 1. L3 loads the AOT artifacts (L2 JAX graphs embedding L1 Pallas
+//!    kernels, lowered to HLO text by `make artifacts`).
+//! 2. Requests flow through the coordinator's batcher to PJRT.
+//! 3. Results come back as binary values (StoB popcount done in-graph).
+//!
+//! Run: cargo run --release --example quickstart
+
+use stoch_imc::coordinator::{BatcherConfig, Coordinator};
+
+fn main() -> anyhow::Result<()> {
+    let coord = Coordinator::start(std::path::Path::new("artifacts"), BatcherConfig::default())?;
+    println!("artifacts: {:?}", coord.apps());
+
+    // Stochastic multiplication: 0.6 × 0.7 on a 256-bit stream.
+    let out = coord.run_workload("op_multiply", &[vec![0.6, 0.7]])?[0];
+    println!("0.6 × 0.7 ≈ {out:.3} (exact 0.42)");
+    assert!((out - 0.42).abs() < 0.07);
+
+    // Scaled division a/(a+b) — the JK feedback divider.
+    let out = coord.run_workload("op_scaled_divide", &[vec![0.3, 0.6]])?[0];
+    println!("0.3/(0.3+0.6) ≈ {out:.3} (exact 0.333)");
+    assert!((out - 1.0 / 3.0).abs() < 0.08);
+
+    // A batch: the batcher packs these into one subarray-group wave.
+    let pairs: Vec<Vec<f64>> = (1..=8).map(|i| vec![i as f64 / 10.0, 0.5]).collect();
+    let outs = coord.run_workload("op_multiply", &pairs)?;
+    for (p, o) in pairs.iter().zip(&outs) {
+        println!("{:.1} × 0.5 ≈ {o:.3}", p[0]);
+    }
+    println!("quickstart OK — {}", coord.metrics("op_multiply").summary());
+    Ok(())
+}

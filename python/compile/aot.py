@@ -1,0 +1,73 @@
+"""AOT lowering: JAX graphs → HLO *text* artifacts for the Rust runtime.
+
+HLO text, NOT serialized protos: jax ≥ 0.5 emits HloModuleProto with
+64-bit instruction ids which xla_extension 0.5.1 (the version the
+published `xla` 0.1.6 crate binds) rejects; the text parser reassigns
+ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:
+    python -m compile.aot --out ../artifacts [--batch 64] [--bl 256]
+
+Each artifact `<name>.hlo.txt` takes (values f32[B, n], seed i32) and
+returns a 1-tuple (f32[B],). A manifest `manifest.txt` lists
+name, n_inputs, batch, bl per line for the Rust artifact registry.
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import ARTIFACTS, BL
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_artifact(name: str, batch: int, bl: int) -> str:
+    fn, n_inputs = ARTIFACTS[name]
+
+    def wrapped(values, seed):
+        return fn(values, seed, bl=bl)
+
+    values_spec = jax.ShapeDtypeStruct((batch, n_inputs), jnp.float32)
+    seed_spec = jax.ShapeDtypeStruct((), jnp.int32)
+    lowered = jax.jit(wrapped).lower(values_spec, seed_spec)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--bl", type=int, default=BL)
+    ap.add_argument(
+        "--only", nargs="*", default=None, help="subset of artifact names"
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    names = args.only or list(ARTIFACTS)
+    manifest = []
+    for name in names:
+        text = lower_artifact(name, args.batch, args.bl)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        n_inputs = ARTIFACTS[name][1]
+        manifest.append(f"{name} {n_inputs} {args.batch} {args.bl}")
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(args.out, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"wrote manifest with {len(manifest)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""L1 Pallas kernel: one bit-parallel IMC logic cycle over cell planes.
+
+The hot spot of Stoch-IMC value computation: every scheduled cycle
+applies ONE gate type across all active rows at aligned columns
+(paper §4.2 constraints). On a [lanes, bl] plane that is a pure
+elementwise op — the TPU adaptation tiles the plane into VMEM-sized
+blocks with the bitstream axis minor (vector lanes), one grid step per
+block (DESIGN.md §Hardware-Adaptation).
+
+interpret=True always: the CPU PJRT plugin cannot run Mosaic
+custom-calls; lowering through interpret mode emits plain HLO that the
+Rust runtime executes. Real-TPU performance is estimated from the
+BlockSpec footprint in DESIGN.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# VMEM-friendly tile: 8×512 uint8 = 4 KiB/operand; lanes×bl planes of
+# 256×256 fit in 13 grid steps along lanes with full rows resident.
+TILE_LANES = 8
+TILE_BL = 512
+
+
+def _unary_kernel(op, a_ref, o_ref):
+    a = a_ref[...]
+    o_ref[...] = ref.gate_plane(op, a)
+
+
+def _binary_kernel(op, a_ref, b_ref, o_ref):
+    o_ref[...] = ref.gate_plane(op, a_ref[...], b_ref[...])
+
+
+def _mux_kernel(s_ref, a_ref, b_ref, o_ref):
+    o_ref[...] = ref.mux_plane(s_ref[...], a_ref[...], b_ref[...])
+
+
+def _grid_spec(shape, n_operands):
+    lanes, bl = shape
+    tl = min(TILE_LANES, lanes)
+    tb = min(TILE_BL, bl)
+    grid = (pl.cdiv(lanes, tl), pl.cdiv(bl, tb))
+    spec = pl.BlockSpec((tl, tb), lambda i, j: (i, j))
+    return grid, [spec] * n_operands, spec
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def gate_plane(op: int, a, b=None):
+    """Apply gate `op` bit-parallel over uint8 planes [lanes, bl]."""
+    a = a.astype(jnp.uint8)
+    operands = (a,) if b is None else (a, b.astype(jnp.uint8))
+    grid, in_specs, out_spec = _grid_spec(a.shape, len(operands))
+    kernel = (
+        functools.partial(_unary_kernel, op)
+        if b is None
+        else functools.partial(_binary_kernel, op)
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct(a.shape, jnp.uint8),
+        interpret=True,
+    )(*operands)
+
+
+@jax.jit
+def mux_plane(s, a, b):
+    """MUX (scaled addition select) bit-parallel over planes."""
+    s = s.astype(jnp.uint8)
+    a = a.astype(jnp.uint8)
+    b = b.astype(jnp.uint8)
+    grid, in_specs, out_spec = _grid_spec(s.shape, 3)
+    return pl.pallas_call(
+        _mux_kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct(s.shape, jnp.uint8),
+        interpret=True,
+    )(s, a, b)

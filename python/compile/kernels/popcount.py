@@ -1,0 +1,45 @@
+"""L1 Pallas kernel: StoB popcount (§2.3 step 3 / §4.3 accumulators).
+
+Two-level reduction mirroring the architecture's local (per-group) and
+global accumulator tree: each grid step popcounts one [tl, tb] block
+into a partial (local accumulator), accumulated across the bl axis into
+the output (global accumulator). n+m-step semantics, n×m work.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .gate_plane import TILE_BL, TILE_LANES
+
+
+def _popcount_kernel(bits_ref, o_ref):
+    j = pl.program_id(1)
+    # Local accumulation of this block.
+    partial = jnp.sum(bits_ref[...].astype(jnp.int32), axis=-1, keepdims=True)
+    # Global accumulation across bl blocks (grid is sequential in
+    # interpret mode, matching the architecture's step-wise global sum).
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = partial
+
+    @pl.when(j != 0)
+    def _acc():
+        o_ref[...] = o_ref[...] + partial
+
+
+@jax.jit
+def popcount(bits):
+    """bits: [lanes, bl] u8 → ones per lane [lanes, 1] i32."""
+    lanes, bl = bits.shape
+    tl = min(TILE_LANES, lanes)
+    tb = min(TILE_BL, bl)
+    grid = (pl.cdiv(lanes, tl), pl.cdiv(bl, tb))
+    return pl.pallas_call(
+        _popcount_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((tl, tb), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((tl, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((lanes, 1), jnp.int32),
+        interpret=True,
+    )(bits)

@@ -1,0 +1,74 @@
+"""Pure-jnp oracles for the Pallas kernels (L1 correctness baseline).
+
+Planes are uint8 {0,1} arrays of shape [lanes, bl]: lane = subarray row
+(bit of the bitstream), bl = bitstream position. One IMC logic cycle is
+one elementwise gate over aligned planes — exactly what the hardware does
+across rows of a subarray group (paper §4.2/§4.3).
+"""
+
+import jax.numpy as jnp
+
+# Gate opcodes shared with gate_plane.py (compile-time constants).
+OP_NOT = 0
+OP_AND = 1
+OP_NAND = 2
+OP_OR = 3
+OP_NOR = 4
+OP_XOR = 5
+OP_BUFF = 6
+
+OP_NAMES = {
+    OP_NOT: "not",
+    OP_AND: "and",
+    OP_NAND: "nand",
+    OP_OR: "or",
+    OP_NOR: "nor",
+    OP_XOR: "xor",
+    OP_BUFF: "buff",
+}
+
+
+def gate_plane(op: int, a, b=None):
+    """Oracle for one bit-parallel gate cycle over uint8 {0,1} planes."""
+    a = a.astype(jnp.uint8)
+    if b is not None:
+        b = b.astype(jnp.uint8)
+    one = jnp.uint8(1)
+    if op == OP_NOT:
+        return one - a
+    if op == OP_BUFF:
+        return a
+    if op == OP_AND:
+        return a & b
+    if op == OP_NAND:
+        return one - (a & b)
+    if op == OP_OR:
+        return a | b
+    if op == OP_NOR:
+        return one - (a | b)
+    if op == OP_XOR:
+        return a ^ b
+    raise ValueError(f"unknown opcode {op}")
+
+
+def mux_plane(s, a, b):
+    """MUX oracle: out = s ? a : b (scaled addition, Fig 4a)."""
+    s = s.astype(jnp.uint8)
+    return (s & a.astype(jnp.uint8)) | ((1 - s) & b.astype(jnp.uint8))
+
+
+def sng(values, uniforms):
+    """SNG oracle: bit[i, t] = uniforms[i, t] < values[i] (§2.3 step 1).
+
+    values: [lanes] float32 in [0,1]; uniforms: [lanes, bl] float32.
+    Models the MTJ stochastic write: P(bit=1) = value.
+    """
+    return (uniforms < values[:, None]).astype(jnp.uint8)
+
+
+def popcount(bits):
+    """StoB oracle: ones count per lane (§2.3 step 3).
+
+    bits: [lanes, bl] uint8 → [lanes] int32.
+    """
+    return jnp.sum(bits.astype(jnp.int32), axis=-1)

@@ -1,0 +1,40 @@
+"""L1 Pallas kernel: stochastic number generation (BtoS, §2.3 step 1).
+
+Models the MTJ stochastic write pulse: each cell of an input column
+switches with probability equal to the binary value. As a kernel:
+bit[i, t] = (u[i, t] < value[i]), one comparator per cell — the same
+comparison the BtoS memory's pulse realizes physically.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .gate_plane import TILE_BL, TILE_LANES
+
+
+def _sng_kernel(v_ref, u_ref, o_ref):
+    # v block: [tl, 1] values; u block: [tl, tb] uniforms.
+    v = v_ref[...]
+    u = u_ref[...]
+    o_ref[...] = (u < v).astype(jnp.uint8)
+
+
+@jax.jit
+def sng(values, uniforms):
+    """values: [lanes] f32; uniforms: [lanes, bl] f32 → [lanes, bl] u8."""
+    lanes, bl = uniforms.shape
+    tl = min(TILE_LANES, lanes)
+    tb = min(TILE_BL, bl)
+    grid = (pl.cdiv(lanes, tl), pl.cdiv(bl, tb))
+    return pl.pallas_call(
+        _sng_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tl, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((tl, tb), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((tl, tb), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((lanes, bl), jnp.uint8),
+        interpret=True,
+    )(values[:, None], uniforms)

@@ -1,0 +1,299 @@
+"""L2 — JAX compute graphs of the stochastic operations and the four
+applications, composed from the L1 Pallas kernels.
+
+Every public graph is a *batch value evaluator*: it takes binary input
+values (f32 in [0,1], shape [B, n_inputs]) plus an int32 seed, performs
+SNG → bit-parallel stochastic circuit → StoB popcount entirely inside
+the graph (bits never cross the boundary), and returns the output values
+(f32 [B]). This is exactly the work one subarray-group wave performs in
+the architecture; the Rust coordinator batches workload instances into
+these artifacts.
+
+Sequential circuits (scaled division's JK flip-flop, the square root
+ADDIE) use lax.scan over the bit axis — the same semantics as the Rust
+functional simulator (rust/src/sc/ops.rs).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels import ref
+from .kernels.gate_plane import gate_plane, mux_plane
+from .kernels.popcount import popcount
+from .kernels.sng import sng
+
+BL = 256  # default bitstream length (2^8 resolution, §5.1)
+
+
+# ---- stream helpers -----------------------------------------------------
+
+
+def _uniforms(key, shape):
+    return jax.random.uniform(key, shape, dtype=jnp.float32)
+
+
+def streams(key, values, bl):
+    """Independent SNs: values [B] → bits [B, bl] uint8."""
+    u = _uniforms(key, (values.shape[0], bl))
+    return sng(values, u)
+
+
+def correlated_pair(key, a_vals, b_vals, bl):
+    """Maximally-correlated SN pair (shared uniforms — §4.1 abs-sub)."""
+    u = _uniforms(key, (a_vals.shape[0], bl))
+    return sng(a_vals, u), sng(b_vals, u)
+
+
+def to_value(bits):
+    """StoB: popcount / bl."""
+    bl = bits.shape[-1]
+    return popcount(bits)[:, 0].astype(jnp.float32) / jnp.float32(bl)
+
+
+# ---- arithmetic operations (Fig 5) --------------------------------------
+
+
+def op_multiply(values, seed, bl=BL):
+    """values [B,2] → a·b. AND = NOT(NAND) over the reliable gate set."""
+    key = jax.random.key(seed)
+    k1, k2 = jax.random.split(key)
+    a = streams(k1, values[:, 0], bl)
+    b = streams(k2, values[:, 1], bl)
+    nand = gate_plane(ref.OP_NAND, a, b)
+    out = gate_plane(ref.OP_NOT, nand)
+    return (to_value(out),)
+
+
+def op_scaled_add(values, seed, bl=BL):
+    """values [B,2] → (a+b)/2 via MUX with an s=0.5 stream."""
+    key = jax.random.key(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    a = streams(k1, values[:, 0], bl)
+    b = streams(k2, values[:, 1], bl)
+    s = streams(k3, jnp.full((values.shape[0],), 0.5, jnp.float32), bl)
+    return (to_value(mux_plane(s, a, b)),)
+
+
+def op_abs_subtract(values, seed, bl=BL):
+    """values [B,2] → |a−b| via XOR of correlated streams."""
+    key = jax.random.key(seed)
+    a, b = correlated_pair(key, values[:, 0], values[:, 1], bl)
+    return (to_value(gate_plane(ref.OP_XOR, a, b)),)
+
+
+def _divide_bits(a, b):
+    """JK divider over planes: out_t = Q_t; Q' = (a·Q̄)+(b̄·Q), Q0=0."""
+
+    def step(q, ab):
+        a_t, b_t = ab
+        out = q
+        q_next = (a_t & (1 - q)) | ((1 - b_t) & q)
+        return q_next, out
+
+    q0 = jnp.zeros((a.shape[0],), jnp.uint8)
+    _, outs = lax.scan(step, q0, (a.T, b.T))
+    return outs.T  # [B, bl]
+
+
+def op_scaled_divide(values, seed, bl=BL):
+    """values [B,2] → a/(a+b) via the JK feedback divider."""
+    key = jax.random.key(seed)
+    k1, k2 = jax.random.split(key)
+    a = streams(k1, values[:, 0], bl)
+    b = streams(k2, values[:, 1], bl)
+    return (to_value(_divide_bits(a, b)),)
+
+
+def _addie_sqrt_bits(key, x1, x2, counter_bits=6):
+    """ADDIE integrator over alternating copies (rust sc::ops::Addie)."""
+    bl = x1.shape[1]
+    maxc = jnp.int32(1 << counter_bits)
+    u = _uniforms(key, (x1.shape[0], bl, 2))
+
+    def step(c, inp):
+        x1_t, x2_t, u_t, t = inp
+        y = (u_t[:, 0] * maxc.astype(jnp.float32)) < c.astype(jnp.float32)
+        y2 = (u_t[:, 1] * maxc.astype(jnp.float32)) < c.astype(jnp.float32)
+        x = jnp.where(t % 2 == 0, x1_t, x2_t).astype(jnp.bool_)
+        c = jnp.clip(
+            c + x.astype(jnp.int32) - (y & y2).astype(jnp.int32), 0, maxc
+        )
+        return c, y.astype(jnp.uint8)
+
+    c0 = jnp.full((x1.shape[0],), (1 << counter_bits) // 2, jnp.int32)
+    ts = jnp.arange(bl)
+    _, outs = lax.scan(step, c0, (x1.T, x2.T, jnp.swapaxes(u, 0, 1), ts))
+    return outs.T
+
+
+def op_square_root(values, seed, bl=BL):
+    """values [B,1] → √a (two independent copies + ADDIE, Fig 5e)."""
+    key = jax.random.key(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    a1 = streams(k1, values[:, 0], bl)
+    a2 = streams(k2, values[:, 0], bl)
+    return (to_value(_addie_sqrt_bits(k3, a1, a2)),)
+
+
+def _exp_bits(key, x_vals, c, bl):
+    """e^{−cx} bits via the 5-stage Maclaurin/Horner circuit (Fig 5f)."""
+    b = x_vals.shape[0]
+    keys = jax.random.split(key, 10)
+    acc = None
+    for k in range(4, -1, -1):
+        a_k = streams(keys[k], x_vals, bl)
+        c_k = streams(
+            keys[5 + k], jnp.full((b,), c / (k + 1), jnp.float32), bl
+        )
+        if acc is None:  # innermost: 1 − u5 = NAND(a5, c5)
+            acc = gate_plane(ref.OP_NAND, a_k, c_k)
+        else:
+            u = gate_plane(ref.OP_NOT, gate_plane(ref.OP_NAND, a_k, c_k))
+            acc = gate_plane(ref.OP_NAND, u, acc)
+    return acc
+
+
+def op_exponential(values, seed, c=1.0, bl=BL):
+    """values [B,1] → e^{−c·a}, 0 < c ≤ 1."""
+    key = jax.random.key(seed)
+    return (to_value(_exp_bits(key, values[:, 0], c, bl)),)
+
+
+# ---- applications (Fig 9) -----------------------------------------------
+
+
+def app_ol(values, seed, bl=BL):
+    """Object location: values [B,6] → Π p_i (AND tree)."""
+    key = jax.random.key(seed)
+    keys = jax.random.split(key, 6)
+    acc = streams(keys[0], values[:, 0], bl)
+    for i in range(1, 6):
+        s = streams(keys[i], values[:, i], bl)
+        acc = gate_plane(ref.OP_NOT, gate_plane(ref.OP_NAND, acc, s))
+    return (to_value(acc),)
+
+
+def app_hdp(values, seed, bl=BL):
+    """Heart-disaster prediction: values [B,8] = [BP, CP, E, D, t_ED,
+    t_ED̄, t_ĒD, t_ĒD̄] → P(HD) (Eqs 8–9)."""
+    key = jax.random.key(seed)
+    keys = jax.random.split(key, 8)
+    bp = streams(keys[0], values[:, 0], bl)
+    cp = streams(keys[1], values[:, 1], bl)
+    e = streams(keys[2], values[:, 2], bl)
+    d = streams(keys[3], values[:, 3], bl)
+    t = [streams(keys[4 + i], values[:, 4 + i], bl) for i in range(4)]
+    hi = mux_plane(d, t[0], t[1])
+    lo = mux_plane(d, t[2], t[3])
+    h = mux_plane(e, hi, lo)
+    band = gate_plane(ref.OP_NOT, gate_plane(ref.OP_NAND, bp, cp))
+    n = gate_plane(ref.OP_NOT, gate_plane(ref.OP_NAND, band, h))
+    bp_n = gate_plane(ref.OP_NOT, bp)
+    cp_n = gate_plane(ref.OP_NOT, cp)
+    h_n = gate_plane(ref.OP_NOT, h)
+    bcn = gate_plane(ref.OP_NOT, gate_plane(ref.OP_NAND, bp_n, cp_n))
+    m = gate_plane(ref.OP_NOT, gate_plane(ref.OP_NAND, bcn, h_n))
+    return (to_value(_divide_bits(n, m)),)
+
+
+def _mean_tree(planes, key, bl):
+    """Balanced MUX tree (pads to a power of two with zero planes)."""
+    level = list(planes)
+    target = 1 << (len(level) - 1).bit_length()
+    while len(level) < target:
+        level.append(jnp.zeros_like(level[0]))
+    i = 0
+    while len(level) > 1:
+        nxt = []
+        for j in range(0, len(level), 2):
+            key, sub = jax.random.split(key)
+            s = streams(
+                sub, jnp.full((level[0].shape[0],), 0.5, jnp.float32), bl
+            )
+            nxt.append(mux_plane(s, level[j], level[j + 1]))
+            i += 1
+        level = nxt
+    return level[0]
+
+
+def app_lit(values, seed, bl=BL, pixels=64):
+    """Local image thresholding: values [B,64] (8×8 window) → T.
+
+    Three in-memory stages with StoB→BtoS regeneration between them
+    (DESIGN.md §7): trees → correlated |σ²| → √ and final product.
+    """
+    key = jax.random.key(seed)
+    ks = jax.random.split(key, 8)
+    # Stage 1: two mean trees, squares tree.
+    set1 = [streams(jax.random.fold_in(ks[0], i), values[:, i], bl) for i in range(pixels)]
+    set2 = [streams(jax.random.fold_in(ks[1], i), values[:, i], bl) for i in range(pixels)]
+    set3 = [streams(jax.random.fold_in(ks[2], i), values[:, i], bl) for i in range(pixels)]
+    set4 = [streams(jax.random.fold_in(ks[3], i), values[:, i], bl) for i in range(pixels)]
+    mean1 = _mean_tree(set1, ks[4], bl)
+    mean2 = _mean_tree(set2, ks[5], bl)
+    squares = [
+        gate_plane(ref.OP_NOT, gate_plane(ref.OP_NAND, a, b))
+        for a, b in zip(set3, set4)
+    ]
+    mean_sq = _mean_tree(squares, ks[6], bl)
+    m2sq = gate_plane(ref.OP_NOT, gate_plane(ref.OP_NAND, mean1, mean2))
+    v_mean = to_value(mean1)
+    v_meansq = to_value(mean_sq)
+    v_m2 = to_value(m2sq)
+    # Stage 2: correlated regeneration → |σ²|.
+    k_a, k_b, k_c, k_d, k_e = jax.random.split(ks[7], 5)
+    ca, cb = correlated_pair(k_a, v_meansq, v_m2, bl)
+    var = gate_plane(ref.OP_XOR, ca, cb)
+    v_var = to_value(var)
+    # Stage 3: √ → (σ+1)/2 → × mean.
+    a1 = streams(k_b, v_var, bl)
+    a2 = streams(k_c, v_var, bl)
+    sigma = _addie_sqrt_bits(k_d, a1, a2)
+    ones = jnp.ones_like(sigma)
+    k_s, k_m = jax.random.split(k_e)
+    sel = streams(k_s, jnp.full((values.shape[0],), 0.5, jnp.float32), bl)
+    half = mux_plane(sel, sigma, ones)
+    mean_r = streams(k_m, v_mean, bl)
+    t = gate_plane(ref.OP_NOT, gate_plane(ref.OP_NAND, mean_r, half))
+    return (to_value(t),)
+
+
+def app_kde(values, seed, bl=BL, history=8, c=4.0):
+    """KDE: values [B, 1+history] = [X_t, X_{t−1}..] → PDF(X_t) (Eq 10)."""
+    key = jax.random.key(seed)
+    frames = []
+    for i in range(1, history + 1):
+        key, k_corr, k_exp = jax.random.split(key, 3)
+        a, b = correlated_pair(k_corr, values[:, 0], values[:, i], bl)
+        d = gate_plane(ref.OP_XOR, a, b)
+        v_d = to_value(d)  # StoB, then regenerate for the exp stages
+        prod = None
+        for s in range(5):
+            k_exp, sub = jax.random.split(k_exp)
+            e = _exp_bits(sub, v_d, c / 5.0, bl)
+            if prod is None:
+                prod = e
+            else:
+                prod = gate_plane(ref.OP_NOT, gate_plane(ref.OP_NAND, prod, e))
+        frames.append(prod)
+    key, k_tree = jax.random.split(key)
+    return (to_value(_mean_tree(frames, k_tree, bl)),)
+
+
+# ---- artifact registry (consumed by aot.py and the Rust runtime) --------
+
+# name → (fn, n_inputs). All artifacts share the (values [B, n], seed)
+# calling convention.
+ARTIFACTS = {
+    "op_multiply": (op_multiply, 2),
+    "op_scaled_add": (op_scaled_add, 2),
+    "op_abs_subtract": (op_abs_subtract, 2),
+    "op_scaled_divide": (op_scaled_divide, 2),
+    "op_square_root": (op_square_root, 1),
+    "op_exponential": (op_exponential, 1),
+    "app_ol": (app_ol, 6),
+    "app_hdp": (app_hdp, 8),
+    "app_lit": (app_lit, 64),
+    "app_kde": (app_kde, 9),
+}

@@ -1,0 +1,105 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (exact), with
+hypothesis sweeping shapes and dtypes-of-input edge cases."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.gate_plane import gate_plane, mux_plane
+from compile.kernels.popcount import popcount
+from compile.kernels.sng import sng
+
+BINARY_OPS = [ref.OP_AND, ref.OP_NAND, ref.OP_OR, ref.OP_NOR, ref.OP_XOR]
+UNARY_OPS = [ref.OP_NOT, ref.OP_BUFF]
+
+
+def rand_plane(key, shape):
+    return jax.random.bernoulli(key, 0.5, shape).astype(jnp.uint8)
+
+
+@pytest.mark.parametrize("op", BINARY_OPS, ids=lambda o: ref.OP_NAMES[o])
+def test_binary_gates_match_ref(op):
+    key = jax.random.key(op)
+    k1, k2 = jax.random.split(key)
+    a = rand_plane(k1, (64, 256))
+    b = rand_plane(k2, (64, 256))
+    np.testing.assert_array_equal(gate_plane(op, a, b), ref.gate_plane(op, a, b))
+
+
+@pytest.mark.parametrize("op", UNARY_OPS, ids=lambda o: ref.OP_NAMES[o])
+def test_unary_gates_match_ref(op):
+    a = rand_plane(jax.random.key(9), (64, 256))
+    np.testing.assert_array_equal(gate_plane(op, a), ref.gate_plane(op, a))
+
+
+def test_mux_matches_ref():
+    key = jax.random.key(1)
+    k1, k2, k3 = jax.random.split(key, 3)
+    s = rand_plane(k1, (32, 512))
+    a = rand_plane(k2, (32, 512))
+    b = rand_plane(k3, (32, 512))
+    np.testing.assert_array_equal(mux_plane(s, a, b), ref.mux_plane(s, a, b))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    lanes=st.sampled_from([1, 3, 8, 17, 64]),
+    bl=st.sampled_from([8, 64, 256, 500, 512]),
+    op=st.sampled_from(BINARY_OPS),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gate_plane_shape_sweep(lanes, bl, op, seed):
+    """Odd shapes exercise BlockSpec padding/tiling edges."""
+    key = jax.random.key(seed)
+    k1, k2 = jax.random.split(key)
+    a = rand_plane(k1, (lanes, bl))
+    b = rand_plane(k2, (lanes, bl))
+    got = gate_plane(op, a, b)
+    assert got.shape == (lanes, bl)
+    assert got.dtype == jnp.uint8
+    np.testing.assert_array_equal(got, ref.gate_plane(op, a, b))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    lanes=st.sampled_from([1, 5, 8, 33, 64]),
+    bl=st.sampled_from([16, 256, 777, 1024]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sng_matches_ref_sweep(lanes, bl, seed):
+    key = jax.random.key(seed)
+    k1, k2 = jax.random.split(key)
+    values = jax.random.uniform(k1, (lanes,))
+    uniforms = jax.random.uniform(k2, (lanes, bl))
+    np.testing.assert_array_equal(sng(values, uniforms), ref.sng(values, uniforms))
+
+
+def test_sng_statistics():
+    key = jax.random.key(3)
+    values = jnp.array([0.1, 0.5, 0.9], jnp.float32)
+    uniforms = jax.random.uniform(jax.random.key(4), (3, 1 << 16))
+    bits = sng(values, uniforms)
+    rates = np.asarray(bits).mean(axis=1)
+    np.testing.assert_allclose(rates, np.asarray(values), atol=0.01)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    lanes=st.sampled_from([1, 8, 31, 64]),
+    bl=st.sampled_from([8, 256, 500, 2048]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_popcount_matches_ref_sweep(lanes, bl, seed):
+    bits = rand_plane(jax.random.key(seed), (lanes, bl))
+    got = popcount(bits)[:, 0]
+    np.testing.assert_array_equal(got, ref.popcount(bits))
+
+
+def test_popcount_extremes():
+    zeros = jnp.zeros((8, 256), jnp.uint8)
+    ones = jnp.ones((8, 256), jnp.uint8)
+    assert int(popcount(zeros).sum()) == 0
+    assert int(popcount(ones).sum()) == 8 * 256

@@ -1,0 +1,116 @@
+"""L2 correctness: op/app graphs converge to their closed forms, and the
+artifact registry lowers to HLO text."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+
+BL = 2048  # longer streams for tighter tolerances in tests
+
+unit = st.floats(0.05, 0.95, allow_nan=False)
+
+
+@settings(max_examples=10, deadline=None)
+@given(a=unit, b=unit, seed=st.integers(0, 2**31 - 1))
+def test_multiply(a, b, seed):
+    vals = jnp.array([[a, b]], jnp.float32)
+    (out,) = model.op_multiply(vals, seed, bl=BL)
+    assert abs(float(out[0]) - a * b) < 0.05
+
+
+@settings(max_examples=10, deadline=None)
+@given(a=unit, b=unit, seed=st.integers(0, 2**31 - 1))
+def test_scaled_add(a, b, seed):
+    vals = jnp.array([[a, b]], jnp.float32)
+    (out,) = model.op_scaled_add(vals, seed, bl=BL)
+    assert abs(float(out[0]) - (a + b) / 2) < 0.05
+
+
+@settings(max_examples=10, deadline=None)
+@given(a=unit, b=unit, seed=st.integers(0, 2**31 - 1))
+def test_abs_subtract(a, b, seed):
+    vals = jnp.array([[a, b]], jnp.float32)
+    (out,) = model.op_abs_subtract(vals, seed, bl=BL)
+    assert abs(float(out[0]) - abs(a - b)) < 0.05
+
+
+@settings(max_examples=8, deadline=None)
+@given(a=unit, b=unit, seed=st.integers(0, 2**31 - 1))
+def test_scaled_divide(a, b, seed):
+    vals = jnp.array([[a, b]], jnp.float32)
+    (out,) = model.op_scaled_divide(vals, seed, bl=BL)
+    assert abs(float(out[0]) - a / (a + b)) < 0.06
+
+
+@settings(max_examples=8, deadline=None)
+@given(a=st.floats(0.1, 0.9), seed=st.integers(0, 2**31 - 1))
+def test_square_root(a, seed):
+    vals = jnp.array([[a]], jnp.float32)
+    (out,) = model.op_square_root(vals, seed, bl=4096)
+    assert abs(float(out[0]) - a**0.5) < 0.08
+
+
+@settings(max_examples=8, deadline=None)
+@given(a=unit, seed=st.integers(0, 2**31 - 1))
+def test_exponential(a, seed):
+    vals = jnp.array([[a]], jnp.float32)
+    (out,) = model.op_exponential(vals, seed, c=0.8, bl=BL)
+    want = float(np.exp(-0.8 * a))
+    assert abs(float(out[0]) - want) < 0.05
+
+
+def test_batch_dimension_independent():
+    vals = jnp.array([[0.2, 0.5], [0.8, 0.5], [0.5, 0.5]], jnp.float32)
+    (out,) = model.op_multiply(vals, 7, bl=BL)
+    np.testing.assert_allclose(
+        np.asarray(out), [0.1, 0.4, 0.25], atol=0.04
+    )
+
+
+def test_app_ol():
+    x = np.array([[0.9, 0.8, 0.95, 0.7, 0.85, 0.9]], np.float32)
+    (out,) = model.app_ol(jnp.asarray(x), 11, bl=BL)
+    assert abs(float(out[0]) - float(np.prod(x))) < 0.05
+
+
+def test_app_hdp():
+    x = np.array([[0.6, 0.5, 0.7, 0.6, 0.2, 0.4, 0.35, 0.8]], np.float32)
+    bp, cp, e, d = x[0, :4]
+    t = x[0, 4:]
+    h = (t[0] * d + t[1] * (1 - d)) * e + (t[2] * d + t[3] * (1 - d)) * (1 - e)
+    n = bp * cp * h
+    m = (1 - bp) * (1 - cp) * (1 - h)
+    want = n / (n + m)
+    (out,) = model.app_hdp(jnp.asarray(x), 13, bl=4096)
+    assert abs(float(out[0]) - want) < 0.06
+
+
+def test_app_lit():
+    rng = np.random.default_rng(0)
+    w = rng.uniform(0.1, 0.9, (1, 64)).astype(np.float32)
+    mean = w.mean()
+    sigma = np.sqrt(abs((w**2).mean() - mean**2))
+    want = mean * (sigma + 1) / 2
+    (out,) = model.app_lit(jnp.asarray(w), 17, bl=1024)
+    assert abs(float(out[0]) - want) < 0.08, (float(out[0]), want)
+
+
+def test_app_kde():
+    rng = np.random.default_rng(1)
+    x = rng.uniform(0.2, 0.8, (1, 9)).astype(np.float32)
+    want = np.mean(np.exp(-4.0 * np.abs(x[0, 0] - x[0, 1:])))
+    (out,) = model.app_kde(jnp.asarray(x), 19, bl=1024)
+    assert abs(float(out[0]) - want) < 0.1, (float(out[0]), want)
+
+
+@pytest.mark.parametrize("name", list(model.ARTIFACTS))
+def test_artifacts_lower_to_hlo_text(name):
+    from compile.aot import lower_artifact
+
+    text = lower_artifact(name, batch=4, bl=64)
+    assert "HloModule" in text
+    assert "f32[4" in text  # batched input present

@@ -1,0 +1,41 @@
+//! E5 — regenerate paper Fig 10: energy breakdown per method per app,
+//! plus the peripheral-constant sensitivity ablation (DESIGN.md §6).
+use stoch_imc::config::Config;
+use stoch_imc::report;
+
+fn main() {
+    let cfg = Config::default();
+    let rows = report::table3(&cfg);
+    println!("# Fig 10 — energy breakdown (%) [logic | preset/reset | input-init | peripheral]");
+    for r in &rows {
+        for (m, b) in [
+            ("binary", &r.binary_energy_breakdown),
+            ("[22]", &r.sc_cram_energy_breakdown),
+            ("stoch", &r.stoch_energy_breakdown),
+        ] {
+            let p = b.percentages();
+            println!(
+                "{:<6} {:<7} | {:>6.1} {:>6.1} {:>6.1} {:>6.1}",
+                r.app, m, p[0], p[1], p[2], p[3]
+            );
+        }
+    }
+    // Paper shape: logic+preset dominate for the compute-heavy apps;
+    // OL's 10-gate circuit is legitimately accumulator-dominated.
+    for r in &rows {
+        let p = r.stoch_energy_breakdown.percentages();
+        if r.app != "ol" {
+            assert!(p[0] + p[1] > 50.0, "{}: logic+preset should dominate", r.app);
+        }
+    }
+    // Sensitivity: ×4 peripheral constants must keep peripheral a minority.
+    let mut cfg4 = Config::default();
+    cfg4.energy.e_acc_local *= 4.0;
+    cfg4.energy.e_acc_global *= 4.0;
+    cfg4.energy.e_driver_cycle *= 4.0;
+    println!("\n## ablation: peripheral constants ×4");
+    for r in report::table3(&cfg4) {
+        let p = r.stoch_energy_breakdown.percentages();
+        println!("{:<6} stoch peripheral = {:>5.1}%", r.app, p[3]);
+    }
+}

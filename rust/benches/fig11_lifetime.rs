@@ -1,0 +1,20 @@
+//! E6 — regenerate paper Fig 11: lifetime improvement (Eq 11).
+use stoch_imc::config::Config;
+use stoch_imc::report;
+use stoch_imc::util::stats::geomean;
+
+fn main() {
+    let cfg = Config::default();
+    let rows = report::table3(&cfg);
+    println!("# Fig 11 — lifetime improvement over binary IMC (Eq 11, used-cell capacity / write traffic)");
+    let mut st = Vec::new();
+    let mut ratio = Vec::new();
+    for (app, s, c) in report::fig11(&rows) {
+        println!("{app:<6}  Stoch-IMC {s:>10.2}x    [22] {c:>10.4}x");
+        assert!(s > c, "{app}: Stoch-IMC must outlive the bit-serial [22]");
+        st.push(s);
+        ratio.push(s / c);
+    }
+    println!("\ngeomean Stoch-IMC vs binary : {:>8.1}x (paper 4.9x)", geomean(&st));
+    println!("geomean Stoch-IMC vs [22]   : {:>8.1}x (paper 216.3x)", geomean(&ratio));
+}

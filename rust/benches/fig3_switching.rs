@@ -1,0 +1,23 @@
+//! E1 — regenerate paper Fig 3: P_sw vs V_p for t_p ∈ {3..10} ns.
+use stoch_imc::config::Config;
+use stoch_imc::report;
+
+fn main() {
+    let cfg = Config::default();
+    let (series, secs) = stoch_imc::util::timed(|| report::fig3(&cfg.device));
+    println!("# Fig 3 — MTJ switching probability (Eqs 1–2, Table 1 + DESIGN.md §6 calibration)");
+    print!("{:>6}", "V_p");
+    for (tp, _) in &series {
+        print!(" {:>8}", format!("{tp}ns"));
+    }
+    println!();
+    for i in 0..series[0].1.len() {
+        print!("{:>6.3}", series[0].1[i].0);
+        for (_, s) in &series {
+            print!(" {:>8.4}", s[i].1);
+        }
+        println!();
+    }
+    println!("# anchor: P_sw(0.310V, 4ns) should be 0.70 (paper §2.3)");
+    println!("# generated in {secs:.3}s");
+}

@@ -1,0 +1,48 @@
+//! E2 — regenerate paper Fig 7: 4-bit in-memory addition, binary vs
+//! stochastic, including the full per-cycle schedule dump.
+use stoch_imc::baseline::{binary_op_netlist, BinaryOp};
+use stoch_imc::netlist::{ops, replicate::replicate};
+use stoch_imc::report;
+use stoch_imc::scheduler::algorithm1::{schedule, Mode, Options};
+
+fn main() {
+    let (b, s) = report::fig7();
+    println!("# Fig 7 — 4-bit in-memory addition sequence flow");
+    println!("binary: {b} cycles (paper 9)   stochastic: {s} cycles (paper 4)");
+    assert_eq!((b, s), (9, 4), "Fig 7 cycle counts regressed");
+
+    println!("\n## binary RCA schedule (Fig 7a)");
+    let nl = binary_op_netlist(BinaryOp::Add, 4, 4);
+    let sch = schedule(&nl, &Options::default());
+    for (t, step) in sch.steps.iter().enumerate() {
+        println!(
+            "  t{:<2} {:<8} ×{} rows={:?}",
+            t + 1,
+            format!("{:?}", step.ops[0].kind),
+            step.ops.len(),
+            step.ops.iter().map(|o| o.out.row).collect::<Vec<_>>()
+        );
+    }
+    println!("\n## stochastic scaled-add schedule, 4 lanes (Fig 7b)");
+    let rep = replicate(&ops::scaled_add(), 4);
+    let sch = schedule(&rep, &Options::default());
+    for (t, step) in sch.steps.iter().enumerate() {
+        println!(
+            "  t{:<2} {:<8} ×{} (all lanes simultaneously)",
+            t + 1,
+            format!("{:?}", step.ops[0].kind),
+            step.ops.len()
+        );
+    }
+    // Scheduler-mode ablation (design-choice bench, DESIGN.md §7).
+    println!("\n## ablation: ASAP vs the paper's layer-strict Algorithm 1");
+    for (name, nl) in [
+        ("binary_add4", binary_op_netlist(BinaryOp::Add, 4, 4)),
+        ("stoch_add×256", replicate(&ops::scaled_add(), 256)),
+        ("stoch_exp×256", replicate(&ops::exponential(), 256)),
+    ] {
+        let a = schedule(&nl, &Options { mode: Mode::Asap }).logic_cycles();
+        let l = schedule(&nl, &Options { mode: Mode::LayerStrict }).logic_cycles();
+        println!("  {name:<14} asap={a:<4} layer-strict={l}");
+    }
+}

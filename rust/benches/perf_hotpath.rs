@@ -1,0 +1,94 @@
+//! E8 — §Perf: hot-path microbenchmarks for the three layers' L3-side
+//! components plus the end-to-end PJRT wave throughput.
+//!
+//! L3 hot paths: packed-bitstream gate ops (64 lanes/word), the
+//! scheduler on large netlists, and the coordinator wave loop. Each is
+//! timed over enough iterations for stable numbers; results are logged
+//! in EXPERIMENTS.md §Perf (before/after the optimization pass).
+use std::collections::HashMap;
+use std::time::Instant;
+
+use stoch_imc::netlist::{ops, replicate::replicate};
+use stoch_imc::sc::bitstream::Bitstream;
+use stoch_imc::scheduler::algorithm1::{schedule, Options};
+use stoch_imc::util::prng::Xoshiro256;
+
+fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
+    // Warmup.
+    for _ in 0..iters / 10 + 1 {
+        f();
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let per = t0.elapsed().as_secs_f64() / iters as f64;
+    println!("{name:<44} {:>12.3} µs/iter", per * 1e6);
+    per
+}
+
+fn main() {
+    println!("# §Perf — hot-path microbenchmarks");
+    let mut rng = Xoshiro256::seeded(1);
+
+    // L3a: packed bitstream ops (the functional simulator's hot loop).
+    let a = Bitstream::sample(0.5, 65536, &mut rng);
+    let b = Bitstream::sample(0.5, 65536, &mut rng);
+    let and_t = bench("bitstream AND 64k bits", 10_000, || {
+        std::hint::black_box(a.and(&b));
+    });
+    println!(
+        "{:<44} {:>12.1} Gbit/s",
+        "  → elementwise gate throughput",
+        65536.0 / and_t / 1e9
+    );
+    bench("bitstream popcount 64k bits", 10_000, || {
+        std::hint::black_box(a.popcount());
+    });
+    bench("SNG sample 64k bits", 100, || {
+        std::hint::black_box(Bitstream::sample(0.5, 65536, &mut rng));
+    });
+
+    // L3b: scheduler on a large replicated netlist (exp × 256 lanes).
+    let rep = replicate(&ops::exponential(), 256);
+    bench("Algorithm 1 (ASAP) exp×256 (3328 gates)", 20, || {
+        std::hint::black_box(schedule(&rep, &Options::default()));
+    });
+
+    // L3c: sequential divider scan (the one bit-serial code path).
+    bench("JK divider scan 64k bits", 1_000, || {
+        std::hint::black_box(stoch_imc::sc::ops::scaled_divide(&a, &b));
+    });
+
+    // End-to-end: PJRT wave throughput per artifact (needs artifacts).
+    let dir = std::path::Path::new("artifacts");
+    if dir.join("manifest.txt").exists() {
+        use stoch_imc::coordinator::{BatcherConfig, Coordinator};
+        println!("\n# end-to-end PJRT wave throughput (batch=64, BL=256)");
+        let coord = Coordinator::start(dir, BatcherConfig::default()).expect("coordinator");
+        let mut results: HashMap<String, f64> = HashMap::new();
+        // app_lit/app_kde excluded: their XLA compiles take minutes and
+        // the examples cover them end-to-end (EXPERIMENTS.md).
+        for (name, n_in, waves) in [
+            ("op_multiply", 2usize, 40usize),
+            ("op_scaled_divide", 2, 40),
+            ("app_ol", 6, 20),
+            ("app_hdp", 8, 20),
+        ] {
+            let batch: Vec<Vec<f64>> =
+                (0..64).map(|i| vec![0.3 + 0.005 * i as f64; n_in]).collect();
+            // Warmup (compilation already done at load).
+            let _ = coord.run_workload(name, &batch).unwrap();
+            let t0 = Instant::now();
+            for _ in 0..waves {
+                let _ = coord.run_workload(name, &batch).unwrap();
+            }
+            let dt = t0.elapsed().as_secs_f64();
+            let inst_per_s = (waves * 64) as f64 / dt;
+            println!("{name:<18} {:>10.0} instances/s ({:.2} ms/wave)", inst_per_s, dt * 1e3 / waves as f64);
+            results.insert(name.to_string(), inst_per_s);
+        }
+    } else {
+        println!("\n(artifacts not built — skipping end-to-end PJRT benches)");
+    }
+}

@@ -1,0 +1,25 @@
+//! E3 — regenerate paper Table 2: the six arithmetic operations.
+use stoch_imc::config::Config;
+use stoch_imc::report;
+
+fn main() {
+    let cfg = Config::default();
+    let (rows, secs) = stoch_imc::util::timed(|| report::table2(&cfg));
+    println!("# Table 2 — arithmetic operations (normalized to binary IMC)");
+    println!(
+        "{:<18} {:>11} {:>8} {:>8} | {:>9} {:>9} | {:>9} {:>9} | {:>8}",
+        "operation", "bin array", "[22]", "stoch", "area[22]", "areaS", "time[22]", "timeS", "energyS"
+    );
+    for r in &rows {
+        println!(
+            "{:<18} {:>11} {:>8} {:>8} | {:>9.3} {:>9.3} | {:>9.3} {:>9.4} | {:>8.3}",
+            r.op,
+            format!("{}x{}", r.binary_array.0, r.binary_array.1),
+            format!("{}x{}", r.sc_cram_array.0, r.sc_cram_array.1),
+            format!("{}x{}", r.stoch_array.0, r.stoch_array.1),
+            r.area_sc_cram, r.area_stoch, r.time_sc_cram, r.time_stoch, r.energy_stoch
+        );
+    }
+    println!("# paper shapes: stoch time ≪ 1 everywhere; add/sub area > 1; sqrt/exp area ≪ 1");
+    println!("# generated in {secs:.1}s");
+}

@@ -1,0 +1,32 @@
+//! E4 — regenerate paper Table 3: the four applications + headline
+//! geomeans (135.7×/124.2×/1.5× in the paper).
+use stoch_imc::config::Config;
+use stoch_imc::report;
+
+fn main() {
+    let cfg = Config::default();
+    let (rows, secs) = stoch_imc::util::timed(|| report::table3(&cfg));
+    println!("# Table 3 — applications (normalized to binary IMC)");
+    println!(
+        "{:<6} {:>11} {:>9} | {:>9} {:>9} | {:>10} {:>10} | {:>8} {:>8}",
+        "app", "bin subarr", "stoch", "area[22]", "areaS", "time[22]", "timeS", "en[22]", "enS"
+    );
+    for r in &rows {
+        println!(
+            "{:<6} {:>11} {:>9} | {:>9.3} {:>9.3} | {:>10.3} {:>10.4} | {:>8.3} {:>8.3}",
+            r.app,
+            format!("{}x{}", r.binary_subarray.0, r.binary_subarray.1),
+            format!("{}x{}", r.stoch_subarray.0, r.stoch_subarray.1),
+            r.area_sc_cram, r.area_stoch, r.time_sc_cram, r.time_stoch,
+            r.energy_sc_cram, r.energy_stoch
+        );
+    }
+    let (vs_bin, vs_scc, en) = report::headline(&rows);
+    println!("\nheadline geomeans:");
+    println!("  speedup vs binary IMC : {vs_bin:>9.1}x   (paper 135.7x)");
+    println!("  speedup vs [22]       : {vs_scc:>9.1}x   (paper 124.2x)");
+    println!("  energy vs binary IMC  : {:>9.2}x   (paper 1.5x reduction)", 1.0 / en);
+    assert!(vs_bin > 10.0, "stoch must dominate binary on time");
+    assert!(vs_scc > 10.0, "stoch must dominate [22] on time");
+    println!("# generated in {secs:.1}s");
+}

@@ -1,0 +1,209 @@
+//! Heart-disaster prediction (HDP, Fig 9c / Eqs 8–9): a Bayesian belief
+//! network. Inputs (8 values): P(BP), P(CP), P(E), P(D) and the four
+//! conditional table entries t_ED, t_ED̄, t_ĒD, t_ĒD̄ of Eq 9.
+//!
+//!   h  = [t_ED·P(D) + t_ED̄·P(D̄)]·P(E) + [t_ĒD·P(D) + t_ĒD̄·P(D̄)]·P(Ē)
+//!      = MUX(E; MUX(D; t_ED, t_ED̄), MUX(D; t_ĒD, t_ĒD̄))   — exact in SC
+//!   P(HD) = N / (N + M),  N = P(BP)·P(CP)·h,  M = P(B̄P)·P(C̄P)·(1−h)
+//!
+//! The final division is the JK feedback divider (a/(a+b)), the
+//! operation Table 2 calls scaled division.
+
+use super::{bq, flip, App, Instance};
+use crate::netlist::graph::InputClass;
+use crate::netlist::ops::{and_rel, divide_into, mux_into};
+use crate::netlist::Netlist;
+use crate::sc::bitstream::Bitstream;
+use crate::sc::ops as sc_ops;
+use crate::util::prng::Xoshiro256;
+
+pub struct Hdp;
+
+const NAMES: [&str; 8] = ["bp", "cp", "e", "d", "t_ed", "t_end", "t_ned", "t_nend"];
+
+impl App for Hdp {
+    fn name(&self) -> &'static str {
+        "hdp"
+    }
+
+    fn workload(&self, n: usize, seed: u64) -> Vec<Instance> {
+        let mut rng = Xoshiro256::seeded(seed);
+        (0..n)
+            .map(|_| {
+                // Plausible clinical priors: moderate evidence probs,
+                // conditional table skewed by risk factors.
+                vec![
+                    0.2 + 0.6 * rng.next_f64(), // P(BP)
+                    0.2 + 0.6 * rng.next_f64(), // P(CP)
+                    0.3 + 0.5 * rng.next_f64(), // P(E)
+                    0.3 + 0.5 * rng.next_f64(), // P(D)
+                    0.05 + 0.3 * rng.next_f64(), // t_ED  (low risk)
+                    0.2 + 0.4 * rng.next_f64(),  // t_ED̄
+                    0.2 + 0.4 * rng.next_f64(),  // t_ĒD
+                    0.5 + 0.45 * rng.next_f64(), // t_ĒD̄ (high risk)
+                ]
+            })
+            .collect()
+    }
+
+    fn float_ref(&self, x: &[f64]) -> f64 {
+        let (bp, cp, e, d) = (x[0], x[1], x[2], x[3]);
+        let h = (x[4] * d + x[5] * (1.0 - d)) * e + (x[6] * d + x[7] * (1.0 - d)) * (1.0 - e);
+        let n = bp * cp * h;
+        let m = (1.0 - bp) * (1.0 - cp) * (1.0 - h);
+        n / (n + m)
+    }
+
+    fn stoch_value(&self, x: &[f64], bl: usize, rng: &mut Xoshiro256, fr: f64) -> f64 {
+        let s = |v: f64, rng: &mut Xoshiro256| Bitstream::sample(v, bl, rng);
+        let bp = flip(&s(x[0], rng), fr, rng);
+        let cp = flip(&s(x[1], rng), fr, rng);
+        let e = flip(&s(x[2], rng), fr, rng);
+        let d = flip(&s(x[3], rng), fr, rng);
+        let t: Vec<Bitstream> = (4..8).map(|i| flip(&s(x[i], rng), fr, rng)).collect();
+        // h = MUX(E; MUX(D; t_ED, t_ED̄), MUX(D; t_ĒD, t_ĒD̄)).
+        let hi = flip(&Bitstream::mux(&d, &t[0], &t[1]), fr, rng);
+        let lo = flip(&Bitstream::mux(&d, &t[2], &t[3]), fr, rng);
+        let h = flip(&Bitstream::mux(&e, &hi, &lo), fr, rng);
+        let n = flip(&sc_ops::multiply(&sc_ops::multiply(&bp, &cp), &h), fr, rng);
+        let m = flip(
+            &sc_ops::multiply(&sc_ops::multiply(&bp.not(), &cp.not()), &h.not()),
+            fr,
+            rng,
+        );
+        let out = flip(&sc_ops::scaled_divide(&n, &m), fr, rng);
+        out.value()
+    }
+
+    fn binary_value(&self, x: &[f64], bits: u32, rng: &mut Xoshiro256, fr: f64) -> f64 {
+        let q = |v: f64, rng: &mut Xoshiro256| bq(v, bits, fr, rng);
+        let (bp, cp, e, d) = (q(x[0], rng), q(x[1], rng), q(x[2], rng), q(x[3], rng));
+        let t: Vec<f64> = (4..8).map(|i| q(x[i], rng)).collect();
+        let hi = q(t[0] * d + t[1] * (1.0 - d), rng);
+        let lo = q(t[2] * d + t[3] * (1.0 - d), rng);
+        let h = q(hi * e + lo * (1.0 - e), rng);
+        let n = q(q(bp * cp, rng) * h, rng);
+        let m = q(q((1.0 - bp) * (1.0 - cp), rng) * (1.0 - h), rng);
+        if n + m < 1.0 / (1u64 << bits) as f64 {
+            return 0.0;
+        }
+        q(n / (n + m), rng)
+    }
+
+    fn stoch_cost_netlists(&self) -> Vec<Netlist> {
+        let mut nl = Netlist::new();
+        let ids: Vec<_> = NAMES
+            .iter()
+            .map(|n| nl.input(n, 0, 1, InputClass::Stochastic))
+            .collect();
+        let (bp, cp, e, d) = (ids[0], ids[1], ids[2], ids[3]);
+        let hi = mux_into(&mut nl, d, ids[4], ids[5]);
+        let lo = mux_into(&mut nl, d, ids[6], ids[7]);
+        let h = mux_into(&mut nl, e, hi, lo);
+        let bc = and_rel(&mut nl, bp, cp);
+        let n = and_rel(&mut nl, bc, h);
+        let bp_n = nl.gate(crate::netlist::GateKind::Not, 0, vec![bp]);
+        let cp_n = nl.gate(crate::netlist::GateKind::Not, 0, vec![cp]);
+        let h_n = nl.gate(crate::netlist::GateKind::Not, 0, vec![h]);
+        let bcn = and_rel(&mut nl, bp_n, cp_n);
+        let m = and_rel(&mut nl, bcn, h_n);
+        let out = divide_into(&mut nl, n, m);
+        nl.mark_output("out", out);
+        vec![nl]
+    }
+
+    fn binary_cost_netlist(&self) -> Netlist {
+        let mut b = crate::netlist::binary::BinaryBuilder::new(16);
+        let words: Vec<_> =
+            NAMES.iter().map(|n| b.input_word(n, 8, false)).collect();
+        let (bp, cp, e, d) = (&words[0], &words[1], &words[2], &words[3]);
+        let d_c = d.complement();
+        let e_c = e.complement();
+        // hi = t_ED·d + t_ED̄·(1−d), etc.
+        let p1 = b.fixmul(&words[4], d, 8);
+        let p2 = b.fixmul(&words[5], &d_c, 8);
+        let z0 = b.const0();
+        let (hi, _) = b.adder(&p1, &p2, z0);
+        let p3 = b.fixmul(&words[6], d, 8);
+        let p4 = b.fixmul(&words[7], &d_c, 8);
+        let z = b.const0();
+        let (lo, _) = b.adder(&p3, &p4, z);
+        let he = b.fixmul(&hi, e, 8);
+        let le = b.fixmul(&lo, &e_c, 8);
+        let z2 = b.const0();
+        let (h, _) = b.adder(&he, &le, z2);
+        let bc = b.fixmul(bp, cp, 8);
+        let n = b.fixmul(&bc, &h, 8);
+        let bc_n = {
+            let bpc = bp.complement();
+            let cpc = cp.complement();
+            b.fixmul(&bpc, &cpc, 8)
+        };
+        let h_c = h.complement();
+        let m = b.fixmul(&bc_n, &h_c, 8);
+        let (den, _) = {
+            let z3 = b.const0();
+            b.adder(&n, &m, z3)
+        };
+        let q = b.divider(&n, &den);
+        for (k, bit) in q.bits.iter().enumerate() {
+            b.nl.mark_output(&format!("o{k}"), bit.id);
+        }
+        b.nl
+    }
+
+    fn eval_instances(&self) -> usize {
+        256 // a batch of belief-network queries
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::forall;
+
+    #[test]
+    fn stochastic_tracks_float() {
+        let app = Hdp;
+        let insts = app.workload(8, 3);
+        for x in &insts {
+            let mut rng = Xoshiro256::seeded(17);
+            let s = app.stoch_value(x, 65536, &mut rng, 0.0);
+            let f = app.float_ref(x);
+            assert!((s - f).abs() < 0.05, "s={s} f={f} x={x:?}");
+        }
+    }
+
+    #[test]
+    fn binary_tracks_float() {
+        let app = Hdp;
+        forall(0x42, 20, |g| {
+            let x: Vec<f64> = (0..8).map(|_| g.f64_in(0.1, 0.9)).collect();
+            let mut rng = Xoshiro256::seeded(1);
+            let b = app.binary_value(&x, 8, &mut rng, 0.0);
+            assert!((b - app.float_ref(&x)).abs() < 0.03);
+        });
+    }
+
+    #[test]
+    fn probability_always_in_unit_interval() {
+        let app = Hdp;
+        for x in app.workload(64, 9) {
+            let f = app.float_ref(&x);
+            assert!((0.0..=1.0).contains(&f));
+        }
+    }
+
+    #[test]
+    fn stoch_netlist_has_divider_state() {
+        let app = Hdp;
+        let nl = &app.stoch_cost_netlists()[0];
+        let delays = nl
+            .nodes
+            .iter()
+            .filter(|n| matches!(n, crate::netlist::Node::Delay { .. }))
+            .count();
+        assert_eq!(delays, 1);
+        assert!(nl.gate_count() > 20);
+    }
+}

@@ -1,0 +1,264 @@
+//! Kernel density estimation (KDE, Fig 9d / Eq 10 — [37]): per pixel,
+//!   PDF(X_t) = (1/N) Σ_{i=1..N} e^{−4|X_t − X_{t−i}|}
+//! over an N-frame history. e^{−4x} exceeds unipolar range at c=4, so —
+//! exactly as the paper does (§5.3.2) — it is computed as the product of
+//! five e^{−(4/5)x} stages, each the 5th-order Maclaurin circuit.
+//!
+//! Staging: |X_t − X_{t−i}| is a correlated XOR of *primary inputs*
+//! (stage 1, pure in-array); each exponential stage needs five
+//! independent copies of d_i, provided by StoB→BtoS regeneration
+//! (stage 2), as in LIT.
+
+use super::{bq, flip, mean_tree, App, Instance};
+use crate::netlist::graph::InputClass;
+use crate::netlist::ops::{and_rel, exp_into, xor_into};
+use crate::netlist::Netlist;
+use crate::sc::bitstream::Bitstream;
+use crate::sc::encode::encode_correlated;
+use crate::sc::ops as sc_ops;
+use crate::util::prng::Xoshiro256;
+
+pub struct Kde {
+    /// History depth N.
+    pub history: usize,
+    /// Exponent constant (4 in Eq 10), factored as 5 stages of c/5.
+    pub c: f64,
+}
+
+impl Default for Kde {
+    fn default() -> Self {
+        Self { history: 8, c: 4.0 }
+    }
+}
+
+impl Kde {
+    /// The 5th-order Maclaurin value of e^{−cx} (the circuit's target —
+    /// baseline approximation error shows against the true exponential).
+    fn maclaurin(c: f64, x: f64) -> f64 {
+        let u = c * x;
+        1.0 - u * (1.0 - (u / 2.0) * (1.0 - (u / 3.0) * (1.0 - (u / 4.0) * (1.0 - u / 5.0))))
+    }
+}
+
+impl App for Kde {
+    fn name(&self) -> &'static str {
+        "kde"
+    }
+
+    /// Instance = [X_t, X_{t−1}, ..., X_{t−N}]: a pixel's recent history
+    /// — a slowly varying background value with occasional foreground
+    /// jumps (the surveillance scenario KDE background-modeling serves).
+    fn workload(&self, n: usize, seed: u64) -> Vec<Instance> {
+        let mut rng = Xoshiro256::seeded(seed);
+        (0..n)
+            .map(|_| {
+                let background = 0.2 + 0.6 * rng.next_f64();
+                let mut hist = Vec::with_capacity(self.history + 1);
+                let mut v = background;
+                for _ in 0..=self.history {
+                    // AR(1)-style drift + rare foreground object.
+                    v = (0.9 * v + 0.1 * background + 0.04 * (rng.next_f64() - 0.5))
+                        .clamp(0.0, 1.0);
+                    let sample =
+                        if rng.bernoulli(0.08) { (v + 0.5).min(1.0) } else { v };
+                    hist.push(sample);
+                }
+                hist
+            })
+            .collect()
+    }
+
+    fn float_ref(&self, x: &[f64]) -> f64 {
+        let xt = x[0];
+        let n = self.history as f64;
+        x[1..=self.history]
+            .iter()
+            .map(|&xi| (-self.c * (xt - xi).abs()).exp())
+            .sum::<f64>()
+            / n
+    }
+
+    fn stoch_value(&self, x: &[f64], bl: usize, rng: &mut Xoshiro256, fr: f64) -> f64 {
+        let xt = x[0];
+        let cs = self.c / 5.0;
+        let mut frame_streams = Vec::with_capacity(self.history);
+        for i in 1..=self.history {
+            // Stage 1: correlated XOR of the two primary inputs.
+            let corr = encode_correlated(&[xt, x[i]], bl, rng);
+            let d = flip(&sc_ops::abs_subtract_correlated(&corr[0], &corr[1]), fr, rng);
+            let v_d = d.value(); // StoB
+
+            // Stage 2: five e^{−(c/5)d} instances (each over 5 fresh
+            // copies of d), multiplied together.
+            let mut prod: Option<Bitstream> = None;
+            for _ in 0..5 {
+                let copies = sc_ops::independent_copies(v_d, bl, rng);
+                let consts = sc_ops::exp_constant_streams(cs, bl, rng);
+                let e = flip(&sc_ops::exponential(&copies, &consts), fr, rng);
+                prod = Some(match prod {
+                    None => e,
+                    Some(p) => flip(&sc_ops::multiply(&p, &e), fr, rng),
+                });
+            }
+            frame_streams.push(prod.unwrap());
+        }
+        // Mean over the N frames (MUX tree; N is a power of two here).
+        // Injection at the op output, not per tree level (paper model).
+        flip(&mean_tree(&frame_streams, bl, rng, 0.0), fr, rng).value()
+    }
+
+    fn binary_value(&self, x: &[f64], bits: u32, rng: &mut Xoshiro256, fr: f64) -> f64 {
+        let xt = bq(x[0], bits, fr, rng);
+        let cs = self.c / 5.0;
+        let mut sum = 0.0;
+        for i in 1..=self.history {
+            let xi = bq(x[i], bits, fr, rng);
+            let d = bq((xt - xi).abs(), bits, fr, rng);
+            // Same 5-stage Maclaurin factorization as the circuit.
+            let mut prod = 1.0;
+            for _ in 0..5 {
+                let e = bq(Self::maclaurin(cs, d).clamp(0.0, 1.0), bits, fr, rng);
+                prod = bq(prod * e, bits, fr, rng);
+            }
+            sum += prod;
+        }
+        bq(sum / self.history as f64, bits, fr, rng)
+    }
+
+    fn stoch_cost_netlists(&self) -> Vec<Netlist> {
+        // Stage 1: N correlated XORs.
+        let mut s1 = Netlist::new();
+        for i in 0..self.history {
+            let a = s1.input(&format!("xt_{i}"), 0, 1, InputClass::Correlated(i as u32));
+            let b = s1.input(&format!("xh_{i}"), 0, 1, InputClass::Correlated(i as u32));
+            let d = xor_into(&mut s1, a, b);
+            s1.mark_output(&format!("d{i}"), d);
+        }
+        // Stage 2: per frame, 5 exponential circuits + product chain;
+        // then the mean tree.
+        let mut s2 = Netlist::new();
+        let mut frame_outs = Vec::new();
+        for i in 0..self.history {
+            let mut prod: Option<_> = None;
+            for s in 0..5 {
+                let copies: Vec<_> = (0..5)
+                    .map(|k| {
+                        s2.input(&format!("d{i}_{s}_{k}"), 0, 1, InputClass::Stochastic)
+                    })
+                    .collect();
+                let consts: Vec<_> = (0..5)
+                    .map(|k| {
+                        s2.input(&format!("c{i}_{s}_{k}"), 0, 1, InputClass::ConstStream)
+                    })
+                    .collect();
+                let e = exp_into(&mut s2, &copies, &consts);
+                prod = Some(match prod {
+                    None => e,
+                    Some(p) => and_rel(&mut s2, p, e),
+                });
+            }
+            frame_outs.push(prod.unwrap());
+        }
+        let mut level = frame_outs;
+        let mut sel = 0usize;
+        while level.len() > 1 {
+            let mut next = Vec::new();
+            for pair in level.chunks(2) {
+                let s = s2.input(&format!("sel{sel}"), 0, 1, InputClass::ConstStream);
+                sel += 1;
+                next.push(crate::netlist::ops::mux_into(&mut s2, s, pair[0], pair[1]));
+            }
+            level = next;
+        }
+        s2.mark_output("pdf", level.pop().unwrap());
+        vec![s1, s2]
+    }
+
+    fn binary_cost_netlist(&self) -> Netlist {
+        // Representative slice: two history frames of the full pipeline
+        // (|Δ| + 5-stage Maclaurin product) + the combining adder; the
+        // bench scales linearly to N frames (DESIGN.md §7).
+        let mut b = crate::netlist::binary::BinaryBuilder::new(64);
+        let xt = b.input_word("xt", 8, false);
+        let mut frames = Vec::new();
+        for i in 0..2usize {
+            let xi = b.input_word(&format!("x{i}"), 8, false);
+            let (d, _) = b.subtractor(&xt, &xi); // |Δ| modeled as sub
+            let d8 = d.slice(0, 8);
+            let mut prod = b.constant_word(255, 8);
+            for _ in 0..2 {
+                // two of the five stages in the representative slice
+                let e = b.exp_maclaurin(&d8, self.c / 5.0);
+                prod = b.fixmul(&prod, &e, 8);
+            }
+            frames.push(prod);
+        }
+        let z = b.const0();
+        let mut a = frames[0].clone();
+        let mut c = frames[1].clone();
+        a.bits.push(z);
+        c.bits.push(z);
+        let (s, _) = b.adder(&a, &c, z);
+        for (k, bit) in s.bits.iter().enumerate() {
+            b.nl.mark_output(&format!("o{k}"), bit.id);
+        }
+        b.nl
+    }
+
+    fn binary_cost_scale(&self) -> f64 {
+        // Slice: 2 of N frames × 2 of 5 Maclaurin stages.
+        (self.history as f64 / 2.0) * (5.0 / 2.0)
+    }
+
+    fn eval_instances(&self) -> usize {
+        1024 // pixels × one history window each
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stochastic_tracks_float() {
+        let app = Kde::default();
+        let insts = app.workload(3, 31);
+        for x in &insts {
+            let mut rng = Xoshiro256::seeded(41);
+            let s = app.stoch_value(x, 8192, &mut rng, 0.0);
+            let f = app.float_ref(x);
+            // Maclaurin truncation + SC noise: generous but bounded.
+            assert!((s - f).abs() < 0.1, "s={s} f={f}");
+        }
+    }
+
+    #[test]
+    fn binary_tracks_float() {
+        let app = Kde::default();
+        let insts = app.workload(8, 33);
+        let mut rng = Xoshiro256::seeded(1);
+        for x in &insts {
+            let b = app.binary_value(x, 8, &mut rng, 0.0);
+            let f = app.float_ref(x);
+            assert!((b - f).abs() < 0.08, "b={b} f={f}");
+        }
+    }
+
+    #[test]
+    fn maclaurin_five_stage_factorization_is_accurate() {
+        for x in [0.0, 0.1, 0.3, 0.5, 0.8, 1.0] {
+            let five = Kde::maclaurin(0.8, x).powi(5);
+            let want = (-4.0 * x).exp();
+            assert!((five - want).abs() < 0.03, "x={x} five={five} want={want}");
+        }
+    }
+
+    #[test]
+    fn stage2_is_the_wide_netlist() {
+        let app = Kde::default();
+        let stages = app.stoch_cost_netlists();
+        assert_eq!(stages.len(), 2);
+        // 8 frames × 5 exp instances × 13 gates + products + tree.
+        assert!(stages[1].gate_count() > 500, "got {}", stages[1].gate_count());
+    }
+}

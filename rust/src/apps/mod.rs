@@ -1,0 +1,203 @@
+//! S13 — the paper's four evaluation applications (§5.3.1, Fig 9):
+//! local image thresholding (LIT), Bayesian object location (OL),
+//! heart-disaster prediction (HDP), and kernel density estimation (KDE).
+//!
+//! Each application provides three value models and two cost models:
+//! * `float_ref`    — exact f64 golden function;
+//! * `stoch_value`  — bitstream-exact staged stochastic evaluation
+//!   (with optional bitflip injection at every operation boundary,
+//!   Table 4's fault model);
+//! * `binary_value` — 8-bit fixed-point evaluation quantizing after
+//!   every operation (the exact behaviour of the binary-IMC circuits,
+//!   which are bit-exact), same injection points;
+//! * `stoch_cost_netlists` — single-lane netlists per in-memory stage
+//!   (multi-stage apps use the architecture's StoB→BtoS regeneration
+//!   between stages — DESIGN.md §7);
+//! * `binary_cost_netlist` — the full binary circuit for cost accounting.
+
+pub mod hdp;
+pub mod kde;
+pub mod lit;
+pub mod ol;
+
+use crate::netlist::Netlist;
+use crate::sc::bitstream::Bitstream;
+use crate::util::prng::Xoshiro256;
+
+/// One workload instance: the application's input values, all in [0,1].
+pub type Instance = Vec<f64>;
+
+pub trait App: Send + Sync {
+    fn name(&self) -> &'static str;
+    /// Generate `n` synthetic workload instances (deterministic in seed).
+    fn workload(&self, n: usize, seed: u64) -> Vec<Instance>;
+    fn float_ref(&self, x: &[f64]) -> f64;
+    /// Stochastic evaluation at bitstream length `bl`, flipping each
+    /// stream bit at operation boundaries with probability `flip`.
+    fn stoch_value(&self, x: &[f64], bl: usize, rng: &mut Xoshiro256, flip: f64) -> f64;
+    /// Binary fixed-point evaluation at `bits` resolution, flipping each
+    /// value bit at operation boundaries with probability `flip`.
+    fn binary_value(&self, x: &[f64], bits: u32, rng: &mut Xoshiro256, flip: f64) -> f64;
+    /// Per-stage single-lane stochastic netlists (cost model).
+    fn stoch_cost_netlists(&self) -> Vec<Netlist>;
+    /// Full binary circuit (cost model). May be a representative slice;
+    /// [`App::binary_cost_scale`] scales its counts to the full workload.
+    fn binary_cost_netlist(&self) -> Netlist;
+    /// Analytic multiplier from the representative binary slice to the
+    /// full per-instance circuit (1.0 when the netlist is complete).
+    fn binary_cost_scale(&self) -> f64 {
+        1.0
+    }
+    /// Workload instances used in the Table 3 evaluation.
+    fn eval_instances(&self) -> usize;
+}
+
+/// All four applications.
+pub fn all_apps() -> Vec<Box<dyn App>> {
+    vec![
+        Box::new(lit::Lit::default()),
+        Box::new(ol::Ol::default()),
+        Box::new(hdp::Hdp),
+        Box::new(kde::Kde::default()),
+    ]
+}
+
+// ---- shared stochastic helpers -----------------------------------------
+
+/// Inject a node-level fault on a stream (no-op at rate 0): with
+/// probability `rate` one random bit of the operand flips (Table 4's
+/// fault model — see fault/mod.rs).
+pub(crate) fn flip(bs: &Bitstream, rate: f64, rng: &mut Xoshiro256) -> Bitstream {
+    crate::fault::inject_stream_node(bs, rate, rng)
+}
+
+/// Balanced MUX mean tree: pads to the next power of two with zero
+/// streams; output value = Σ values / 2^depth.
+pub(crate) fn mean_tree(
+    streams: &[Bitstream],
+    bl: usize,
+    rng: &mut Xoshiro256,
+    flip_rate: f64,
+) -> Bitstream {
+    assert!(!streams.is_empty());
+    let mut level: Vec<Bitstream> = streams.to_vec();
+    let target = level.len().next_power_of_two();
+    while level.len() < target {
+        level.push(Bitstream::zeros(bl));
+    }
+    while level.len() > 1 {
+        let mut next = Vec::with_capacity(level.len() / 2);
+        for pair in level.chunks(2) {
+            let s = Bitstream::sample(0.5, bl, rng);
+            let m = crate::sc::ops::scaled_add(&pair[0], &pair[1], &s);
+            next.push(flip(&m, flip_rate, rng));
+        }
+        level = next;
+    }
+    level.pop().unwrap()
+}
+
+/// Build a MUX mean-tree netlist over `n` external stochastic inputs
+/// named `x0..x{n-1}` (padded internally with const-0 streams); returns
+/// the netlist with output "out". Used by the cost models.
+pub(crate) fn mean_tree_netlist(n: usize) -> Netlist {
+    use crate::netlist::graph::InputClass;
+    use crate::netlist::ops::mux_into;
+    let mut nl = Netlist::new();
+    let mut level: Vec<_> = (0..n)
+        .map(|i| nl.input(&format!("x{i}"), 0, 1, InputClass::Stochastic))
+        .collect();
+    let target = n.next_power_of_two();
+    for i in level.len()..target {
+        level.push(nl.input(&format!("z{i}"), 0, 1, InputClass::ConstStream));
+    }
+    let mut sel = 0usize;
+    while level.len() > 1 {
+        let mut next = Vec::with_capacity(level.len() / 2);
+        for pair in level.chunks(2) {
+            let s = nl.input(&format!("s{sel}"), 0, 1, InputClass::ConstStream);
+            sel += 1;
+            next.push(mux_into(&mut nl, s, pair[0], pair[1]));
+        }
+        level = next;
+    }
+    let out = level.pop().unwrap();
+    nl.mark_output("out", out);
+    nl
+}
+
+/// Quantize + optionally node-level fault-inject a binary value.
+pub(crate) fn bq(v: f64, bits: u32, rate: f64, rng: &mut Xoshiro256) -> f64 {
+    let q = crate::sc::encode::quantize(v, bits);
+    if rate > 0.0 {
+        crate::fault::inject_binary_node(q, bits, rate, rng)
+    } else {
+        q
+    }
+}
+
+/// Mean output-error (%) of a method against the float reference over a
+/// workload — the Table 4 metric.
+pub fn output_error_pct(
+    app: &dyn App,
+    instances: &[Instance],
+    bl: usize,
+    bits: u32,
+    flip_rate: f64,
+    stochastic: bool,
+    seed: u64,
+) -> f64 {
+    let mut rng = Xoshiro256::seeded(seed);
+    let mut refs = Vec::with_capacity(instances.len());
+    let mut got = Vec::with_capacity(instances.len());
+    for x in instances {
+        refs.push(app.float_ref(x));
+        got.push(if stochastic {
+            app.stoch_value(x, bl, &mut rng, flip_rate)
+        } else {
+            app.binary_value(x, bits, &mut rng, flip_rate)
+        });
+    }
+    crate::util::stats::range_error_pct(&refs, &got)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_tree_value() {
+        let mut rng = Xoshiro256::seeded(5);
+        let bl = 65536;
+        let streams: Vec<Bitstream> =
+            [0.2, 0.4, 0.6, 0.8].iter().map(|&p| Bitstream::sample(p, bl, &mut rng)).collect();
+        let m = mean_tree(&streams, bl, &mut rng, 0.0);
+        assert!((m.value() - 0.5).abs() < 0.02);
+    }
+
+    #[test]
+    fn mean_tree_pads_with_zeros() {
+        let mut rng = Xoshiro256::seeded(6);
+        let bl = 65536;
+        let streams: Vec<Bitstream> =
+            [0.8, 0.8, 0.8].iter().map(|&p| Bitstream::sample(p, bl, &mut rng)).collect();
+        let m = mean_tree(&streams, bl, &mut rng, 0.0);
+        assert!((m.value() - 2.4 / 4.0).abs() < 0.02); // padded to 4
+    }
+
+    #[test]
+    fn mean_tree_netlist_shape() {
+        let nl = mean_tree_netlist(4);
+        // 3 MUXes × 4 gates.
+        assert_eq!(nl.gate_count(), 12);
+        let nl5 = mean_tree_netlist(5);
+        assert_eq!(nl5.gate_count(), 7 * 4); // padded to 8 ⇒ 7 MUXes
+    }
+
+    #[test]
+    fn all_apps_present() {
+        let apps = all_apps();
+        let names: Vec<_> = apps.iter().map(|a| a.name()).collect();
+        assert_eq!(names, vec!["lit", "ol", "hdp", "kde"]);
+    }
+}

@@ -1,0 +1,212 @@
+//! Object location (OL, Fig 9b / Eq 7): a Bayesian inference over a
+//! 64×64 2-D grid with three (distance, bearing) sensors:
+//!   p(x,y) = Π_i p(B_i|x,y) · p(D_i|x,y)      (6 likelihood factors)
+//! Stochastic realization: a 6-input AND tree (products of independent
+//! unipolar SNs). The workload generator synthesizes Gaussian sensor
+//! likelihood fields over the grid, mimicking [36]'s setup.
+
+use super::{bq, flip, App, Instance};
+use crate::netlist::graph::InputClass;
+use crate::netlist::ops::and_rel;
+use crate::netlist::Netlist;
+use crate::sc::bitstream::Bitstream;
+use crate::util::prng::Xoshiro256;
+
+pub struct Ol {
+    pub grid: usize,
+    pub sensors: usize,
+}
+
+impl Default for Ol {
+    fn default() -> Self {
+        Self { grid: 64, sensors: 3 }
+    }
+}
+
+impl Ol {
+    fn factors(&self) -> usize {
+        2 * self.sensors
+    }
+
+    /// Full row-major grid sweep (index k ↔ cell (k%grid, k/grid)) plus
+    /// the hidden object position — the localization-demo workload.
+    pub fn grid_workload(&self, seed: u64) -> (Vec<Instance>, (usize, usize)) {
+        let mut rng = Xoshiro256::seeded(seed);
+        let g = self.grid as f64;
+        let obj = (rng.next_f64() * g, rng.next_f64() * g);
+        let sensors: Vec<(f64, f64)> =
+            (0..self.sensors).map(|_| (rng.next_f64() * g, rng.next_f64() * g)).collect();
+        let mut out = Vec::with_capacity(self.grid * self.grid);
+        for idx in 0..self.grid * self.grid {
+            let (px, py) = ((idx % self.grid) as f64, (idx / self.grid) as f64);
+            out.push(self.factors_at(px, py, obj, &sensors));
+        }
+        (out, (obj.0.round() as usize, obj.1.round() as usize))
+    }
+
+    fn factors_at(
+        &self,
+        px: f64,
+        py: f64,
+        obj: (f64, f64),
+        sensors: &[(f64, f64)],
+    ) -> Instance {
+        let g = self.grid as f64;
+        let mut inst = Vec::with_capacity(self.factors());
+        for &(sx, sy) in sensors {
+            let d_point = ((px - sx).powi(2) + (py - sy).powi(2)).sqrt();
+            let d_obj = ((obj.0 - sx).powi(2) + (obj.1 - sy).powi(2)).sqrt();
+            let sigma_d = 0.15 * g;
+            let p_d = (-((d_point - d_obj).powi(2)) / (2.0 * sigma_d * sigma_d)).exp();
+            let b_point = (py - sy).atan2(px - sx);
+            let b_obj = (obj.1 - sy).atan2(obj.0 - sx);
+            let mut db = (b_point - b_obj).abs();
+            if db > std::f64::consts::PI {
+                db = 2.0 * std::f64::consts::PI - db;
+            }
+            let sigma_b = 0.6;
+            let p_b = (-(db * db) / (2.0 * sigma_b * sigma_b)).exp();
+            inst.push(p_d.clamp(0.0, 1.0));
+            inst.push(p_b.clamp(0.0, 1.0));
+        }
+        inst
+    }
+}
+
+impl App for Ol {
+    fn name(&self) -> &'static str {
+        "ol"
+    }
+
+    /// Each instance = the 6 likelihood factors at one grid point,
+    /// sampled around the hidden object (the posterior-refinement
+    /// region, where probabilities are non-vanishing — error metrics on
+    /// the far-field would divide by ~0). The full-grid sweep for the
+    /// localization demo is [`Ol::grid_workload`].
+    fn workload(&self, n: usize, seed: u64) -> Vec<Instance> {
+        let mut rng = Xoshiro256::seeded(seed);
+        let g = self.grid as f64;
+        // Hidden object + three fixed sensors.
+        let obj = (rng.next_f64() * g, rng.next_f64() * g);
+        let sensors: Vec<(f64, f64)> =
+            (0..self.sensors).map(|_| (rng.next_f64() * g, rng.next_f64() * g)).collect();
+        let mut out = Vec::with_capacity(n);
+        for _k in 0..n {
+            // Gaussian sample around the object, clamped to the grid.
+            let px = (obj.0 + 0.25 * g * (rng.next_f64() + rng.next_f64() - 1.0))
+                .clamp(0.0, g - 1.0)
+                .round();
+            let py = (obj.1 + 0.25 * g * (rng.next_f64() + rng.next_f64() - 1.0))
+                .clamp(0.0, g - 1.0)
+                .round();
+            out.push(self.factors_at(px, py, obj, &sensors));
+        }
+        out
+    }
+
+    fn float_ref(&self, x: &[f64]) -> f64 {
+        x.iter().product()
+    }
+
+    fn stoch_value(&self, x: &[f64], bl: usize, rng: &mut Xoshiro256, fr: f64) -> f64 {
+        // AND-tree over independently generated streams.
+        let mut acc: Option<Bitstream> = None;
+        for &v in x {
+            let s = flip(&Bitstream::sample(v, bl, rng), fr, rng);
+            acc = Some(match acc {
+                None => s,
+                Some(a) => flip(&crate::sc::ops::multiply(&a, &s), fr, rng),
+            });
+        }
+        acc.unwrap().value()
+    }
+
+    fn binary_value(&self, x: &[f64], bits: u32, rng: &mut Xoshiro256, fr: f64) -> f64 {
+        let mut acc = bq(x[0], bits, fr, rng);
+        for &v in &x[1..] {
+            acc = bq(acc * bq(v, bits, fr, rng), bits, fr, rng);
+        }
+        acc
+    }
+
+    fn stoch_cost_netlists(&self) -> Vec<Netlist> {
+        // Single stage: chained AND (NAND+NOT) tree over 6 inputs.
+        let mut nl = Netlist::new();
+        let ins: Vec<_> = (0..self.factors())
+            .map(|i| nl.input(&format!("p{i}"), 0, 1, InputClass::Stochastic))
+            .collect();
+        let mut acc = ins[0];
+        for &i in &ins[1..] {
+            acc = and_rel(&mut nl, acc, i);
+        }
+        nl.mark_output("out", acc);
+        vec![nl]
+    }
+
+    fn binary_cost_netlist(&self) -> Netlist {
+        // Five chained 8-bit fixed-point multiplications.
+        let mut b = crate::netlist::binary::BinaryBuilder::new(16);
+        let mut acc = b.input_word("p0", 8, false);
+        for i in 1..self.factors() {
+            let w = b.input_word(&format!("p{i}"), 8, false);
+            acc = b.fixmul(&acc, &w, 8);
+        }
+        for (k, bit) in acc.bits.iter().enumerate() {
+            b.nl.mark_output(&format!("o{k}"), bit.id);
+        }
+        b.nl
+    }
+
+    fn eval_instances(&self) -> usize {
+        self.grid * self.grid
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::forall;
+
+    #[test]
+    fn stochastic_tracks_float() {
+        let app = Ol::default();
+        forall(0x01, 10, |g| {
+            let x: Vec<f64> = (0..6).map(|_| g.f64_in(0.3, 1.0)).collect();
+            let mut rng = Xoshiro256::seeded(g.u64_below(1 << 62));
+            let s = app.stoch_value(&x, 65536, &mut rng, 0.0);
+            let f = app.float_ref(&x);
+            assert!((s - f).abs() < 0.03, "s={s} f={f}");
+        });
+    }
+
+    #[test]
+    fn binary_is_near_exact_at_8bit() {
+        let app = Ol::default();
+        let mut rng = Xoshiro256::seeded(1);
+        let x = vec![0.9, 0.8, 0.95, 0.7, 0.85, 0.6];
+        let b = app.binary_value(&x, 8, &mut rng, 0.0);
+        assert!((b - app.float_ref(&x)).abs() < 0.02);
+    }
+
+    #[test]
+    fn workload_is_deterministic_and_valid() {
+        let app = Ol::default();
+        let w1 = app.workload(100, 7);
+        let w2 = app.workload(100, 7);
+        assert_eq!(w1, w2);
+        for inst in &w1 {
+            assert_eq!(inst.len(), 6);
+            assert!(inst.iter().all(|v| (0.0..=1.0).contains(v)));
+        }
+    }
+
+    #[test]
+    fn cost_netlist_shapes() {
+        let app = Ol::default();
+        let s = &app.stoch_cost_netlists()[0];
+        assert_eq!(s.gate_count(), 10); // 5 AND = 5×(NAND+NOT)
+        assert_eq!(s.len(), 16); // +6 inputs → paper Table 3 "1×16"
+        let b = app.binary_cost_netlist();
+        assert!(b.gate_count() > 1000); // 5 Wallace multipliers
+    }
+}

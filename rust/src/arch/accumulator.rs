@@ -1,0 +1,77 @@
+//! Local/global accumulator tree (§4.3): each group of m subarrays has a
+//! 1-bit-input local accumulator (⌊log m⌋+1-bit register); a global
+//! accumulator (⌊log(n·m)⌋+1-bit register) sums the n group partials.
+//! Grouping makes the StoB accumulation n+m steps instead of n×m.
+
+/// Accumulation cost/result for one StoB conversion of a result whose
+/// bits are spread over the architecture.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AccumulationResult {
+    /// Number of ones (the binary value numerator).
+    pub ones: u64,
+    /// Sequential accumulation steps taken.
+    pub steps: u64,
+    /// Local accumulator operations performed.
+    pub local_ops: u64,
+    /// Global accumulator operations performed.
+    pub global_ops: u64,
+}
+
+/// Accumulate the per-subarray popcounts `group_counts[g][s]` (ones of
+/// the result bits held in subarray s of group g) through the two-level
+/// tree. `grouped = false` models the ungrouped, globally-connected
+/// ablation the paper contrasts (n×m steps).
+pub fn accumulate(group_counts: &[Vec<u64>], grouped: bool) -> AccumulationResult {
+    let n = group_counts.len() as u64;
+    let m = group_counts.first().map_or(0, |g| g.len()) as u64;
+    let ones: u64 = group_counts.iter().flatten().sum();
+    if grouped {
+        // m steps of local accumulation (all groups in parallel), then
+        // n steps of global accumulation: n + m (§4.3 example: 16+16=32).
+        AccumulationResult {
+            ones,
+            steps: n + m,
+            local_ops: n * m,
+            global_ops: n,
+        }
+    } else {
+        AccumulationResult {
+            ones,
+            steps: n * m,
+            local_ops: 0,
+            global_ops: n * m,
+        }
+    }
+}
+
+/// Register widths of §4.3.
+pub fn local_register_bits(m: usize) -> u32 {
+    (m as f64).log2().floor() as u32 + 1
+}
+
+pub fn global_register_bits(n: usize, m: usize) -> u32 {
+    ((n * m) as f64).log2().floor() as u32 + 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grouped_is_n_plus_m() {
+        // Paper §4.3: BL=256, n=m=16 ⇒ 32 steps grouped, 256 ungrouped.
+        let counts: Vec<Vec<u64>> = (0..16).map(|_| vec![1u64; 16]).collect();
+        let g = accumulate(&counts, true);
+        assert_eq!(g.steps, 32);
+        assert_eq!(g.ones, 256);
+        let u = accumulate(&counts, false);
+        assert_eq!(u.steps, 256);
+        assert_eq!(u.ones, 256);
+    }
+
+    #[test]
+    fn register_widths() {
+        assert_eq!(local_register_bits(16), 5); // ⌊log 16⌋+1
+        assert_eq!(global_register_bits(16, 16), 9); // ⌊log 256⌋+1
+    }
+}

@@ -1,0 +1,80 @@
+//! BtoS (binary→stochastic) memory (§4.3): a 2^resolution-entry table
+//! mapping each binary value to the (V_p, t_p) write pulse whose MTJ
+//! switching probability equals the value. One lookup per stochastic
+//! input write; the pulse is applied to all lanes of the input column.
+
+use crate::device::{pulse_for_probability, MtjParams, Pulse};
+#[cfg(test)]
+use crate::device::switching_probability;
+
+/// The per-bank BtoS lookup memory.
+#[derive(Debug, Clone)]
+pub struct BtosMemory {
+    pub resolution: u32,
+    entries: Vec<Pulse>,
+    pub lookups: u64,
+}
+
+impl BtosMemory {
+    /// Build the table from the device model, choosing the minimum-energy
+    /// pulse per §5.1. Values 0 and 2^r−1 use degenerate pulses (keep
+    /// preset / deterministic write).
+    pub fn build(params: &MtjParams, resolution: u32) -> Self {
+        let n = 1usize << resolution;
+        let entries = (0..n)
+            .map(|i| {
+                let p = i as f64 / n as f64;
+                if p <= 0.0 {
+                    Pulse { v_p: 0.0, t_p: 0.0 }
+                } else {
+                    pulse_for_probability(params, p.min(1.0 - 1e-9)).0
+                }
+            })
+            .collect();
+        Self { resolution, entries, lookups: 0 }
+    }
+
+    /// Table size in bytes (§4.3: 2^resolution bytes).
+    pub fn size_bytes(&self) -> usize {
+        1 << self.resolution
+    }
+
+    /// Look up the pulse for a value in [0,1].
+    pub fn pulse_for(&mut self, value: f64) -> Pulse {
+        self.lookups += 1;
+        let n = self.entries.len();
+        let idx = ((value.clamp(0.0, 1.0) * n as f64) as usize).min(n - 1);
+        self.entries[idx]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_size_matches_resolution() {
+        let m = BtosMemory::build(&MtjParams::default(), 8);
+        assert_eq!(m.size_bytes(), 256);
+        assert_eq!(m.entries.len(), 256);
+    }
+
+    #[test]
+    fn pulses_realize_their_probabilities() {
+        let params = MtjParams::default();
+        let mut m = BtosMemory::build(&params, 8);
+        for &v in &[0.1, 0.25, 0.5, 0.75, 0.9] {
+            let pulse = m.pulse_for(v);
+            let p = switching_probability(&params, pulse);
+            assert!((p - v).abs() < 0.01, "v={v} p={p}");
+        }
+        assert_eq!(m.lookups, 5);
+    }
+
+    #[test]
+    fn zero_value_uses_no_pulse() {
+        let mut m = BtosMemory::build(&MtjParams::default(), 8);
+        let pulse = m.pulse_for(0.0);
+        assert_eq!(pulse.t_p, 0.0);
+    }
+}

@@ -1,0 +1,249 @@
+//! Stoch-IMC execution cost engine (§4.3): maps a scheduled stochastic
+//! circuit onto the [n, m] architecture and accounts cycles, energy,
+//! area, and wear for a workload of W instances × BL bits.
+//!
+//! Capacity model (two parallelism levels, as the paper's OL example):
+//!   * lanes/subarray   = min(subarray_rows, BL) bit lanes (Algorithm 1's
+//!     q, the rows of the replicated circuit);
+//!   * batch/subarray   = ⌊subarray_cols / circuit_cols⌋ independent
+//!     instances side by side;
+//!   * the bank's n×m subarrays process waves of (instance, sub-stream)
+//!     units; Pipeline reuses the bank across waves, Parallel multiplies
+//!     banks (area) to cut waves (§4.3 trade-off).
+//!
+//! Each wave costs the schedule's total cycles (preset lead-in + input
+//! init + logic); each produced result costs one grouped accumulation
+//! (n+m steps) for StoB.
+
+use crate::config::{ArchConfig, Policy};
+use crate::energy::{computation_energy, EnergyBreakdown, EnergyParams};
+use crate::lifetime::WearProfile;
+use crate::scheduler::schedule::Schedule;
+
+/// Cost summary of a run (one workload on one method).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunCost {
+    /// Total sequential cycles (the paper's "total time steps").
+    pub cycles: u64,
+    /// Computation-only cycles (no StoB accumulation) — Table 2 reports
+    /// "the computation part" (§5.2).
+    pub comp_cycles: u64,
+    pub energy: EnergyBreakdown,
+    /// Cells used per subarray-instance (area metric = used cells).
+    pub used_cells: u64,
+    /// Minimum subarray footprint of one replicated instance.
+    pub min_subarray: (usize, usize),
+    pub wear: WearProfile,
+    /// Waves executed (bank reuses under the pipeline policy).
+    pub waves: u64,
+    /// Banks needed (>1 only under the parallel policy).
+    pub banks_used: u64,
+}
+
+/// Cost one stochastic workload: `sched` is the Algorithm 1 schedule of
+/// the circuit replicated over `lanes` rows; `instances` is W; the
+/// bitstream length comes from `cfg`.
+pub fn run_stochastic(
+    cfg: &ArchConfig,
+    energy: &EnergyParams,
+    sched: &Schedule,
+    lanes: usize,
+    circuit_cols: usize,
+    instances: u64,
+) -> RunCost {
+    let bl = cfg.bitstream_len as u64;
+    assert!(lanes <= cfg.subarray_rows, "lanes exceed subarray rows");
+    assert!(
+        circuit_cols <= cfg.subarray_cols,
+        "circuit wider than subarray ({circuit_cols} > {}); partition first",
+        cfg.subarray_cols
+    );
+
+    // Units of work: one unit = one instance × one `lanes`-bit sub-stream.
+    let substreams = bl.div_ceil(lanes as u64);
+    let units = instances * substreams;
+
+    // Per-wave capacity.
+    let batch = (cfg.subarray_cols / circuit_cols).max(1) as u64;
+    let per_subarray = batch; // one unit's lanes occupy the rows
+    let per_bank = per_subarray * cfg.total_subarrays() as u64;
+
+    let (waves, banks_used) = match cfg.policy {
+        Policy::Pipeline => (units.div_ceil(per_bank), 1),
+        Policy::Parallel => {
+            let banks = units.div_ceil(per_bank).max(1);
+            (1, banks)
+        }
+    };
+
+    // Cycles: waves × per-wave schedule cycles + one grouped StoB
+    // accumulation phase per *result wave* (results of a wave accumulate
+    // while the next wave computes only in part — we charge them fully,
+    // conservative).
+    let acc_steps = (cfg.groups + cfg.subarrays_per_group) as u64;
+    let result_waves = instances.div_ceil(per_bank / substreams.max(1)).max(1);
+    let comp_cycles = waves * sched.total_cycles() as u64;
+    let cycles = comp_cycles + result_waves * acc_steps;
+
+    // Energy: computation per unit × units + peripheral.
+    let comp_unit = computation_energy(energy, sched, 1);
+    let mut e = comp_unit.scaled(units as f64);
+    let active_subarray_cycles = waves.min(units) * sched.logic_cycles() as u64;
+    e.peripheral = instances as f64
+        * (cfg.total_subarrays() as f64 * energy.e_acc_local
+            + cfg.groups as f64 * energy.e_acc_global)
+        + active_subarray_cycles as f64 * energy.e_driver_cycle;
+
+    // Area: used cells of one replicated instance (the paper's area
+    // metric counts utilized cells of the mapped circuit).
+    let used_cells = sched.used_cells() as u64;
+
+    // Wear: writes spread over all cells the workload touches.
+    let writes_per_unit: u64 = sched
+        .write_traffic()
+        .values()
+        .sum::<u64>();
+    let cells_touched = used_cells * per_bank.min(units).max(1);
+    let total_writes = writes_per_unit * units;
+    // Hottest cell: a cell is reused once per wave.
+    let max_cell_writes = waves.max(1) * 2; // preset + result per wave
+    let wear = WearProfile {
+        used_cells: cells_touched,
+        writes: total_writes,
+        max_cell_writes,
+    };
+
+    RunCost {
+        cycles,
+        comp_cycles,
+        energy: e,
+        used_cells,
+        min_subarray: (lanes, circuit_cols),
+        wear,
+        waves,
+        banks_used,
+    }
+}
+
+/// Cost a *binary* workload mapped on the same architecture: the circuit
+/// is not lane-replicated (one instance = `sched` itself). Circuits wider
+/// than a subarray are partitioned column-wise: `col_chunks` sequential
+/// chunks with intermediate store/reload (one extra cycle per chunk
+/// boundary, charged as a BUFF-equivalent write pass).
+pub fn run_binary(
+    cfg: &ArchConfig,
+    energy: &EnergyParams,
+    sched: &Schedule,
+    instances: u64,
+) -> RunCost {
+    let (rows, cols) = sched.min_array();
+    let row_chunks = rows.div_ceil(cfg.subarray_rows) as u64;
+    let col_chunks = cols.div_ceil(cfg.subarray_cols) as u64;
+    let chunks = row_chunks * col_chunks;
+
+    // Subarrays each hold one instance-chunk; a full instance needs
+    // `chunks` subarray-executions (sequential when chunked: the carry/
+    // intermediate values cross chunk boundaries).
+    let per_bank_instances = (cfg.total_subarrays() as u64 / chunks.max(1)).max(1);
+    let waves = instances.div_ceil(per_bank_instances);
+
+    let chunk_overhead = (chunks.saturating_sub(1)) * 2; // store + reload
+    let cycles = waves * (sched.total_cycles() as u64 + chunk_overhead);
+
+    let comp_unit = computation_energy(energy, sched, 1);
+    let mut e = comp_unit.scaled(instances as f64);
+    // No StoB accumulators in the binary path — peripheral is driver only.
+    e.peripheral = (waves * sched.logic_cycles() as u64) as f64 * energy.e_driver_cycle;
+
+    let used_cells = sched.used_cells() as u64;
+    let writes_per_instance: u64 = sched.write_traffic().values().sum::<u64>();
+    let wear = WearProfile {
+        used_cells: used_cells * per_bank_instances.min(instances).max(1),
+        writes: writes_per_instance * instances,
+        max_cell_writes: waves.max(1) * 2,
+    };
+
+    RunCost {
+        cycles,
+        comp_cycles: cycles,
+        energy: e,
+        used_cells,
+        min_subarray: (rows, cols),
+        wear,
+        waves,
+        banks_used: 1,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::netlist::{ops, replicate::replicate};
+    use crate::scheduler::algorithm1::{schedule, Options};
+
+    fn sched_for(base: &crate::netlist::Netlist, lanes: usize) -> (Schedule, usize) {
+        let rep = replicate(base, lanes);
+        let s = schedule(&rep, &Options::default());
+        let cols = s.cols_used;
+        (s, cols)
+    }
+
+    #[test]
+    fn multiply_one_instance_fits_one_wave() {
+        let cfg = Config::default();
+        let (s, cols) = sched_for(&ops::multiply(), 256);
+        let cost = run_stochastic(&cfg.arch, &cfg.energy, &s, 256, cols, 1);
+        assert_eq!(cost.waves, 1);
+        // Logic 2 + preset 1 + init 2 + accumulation 32.
+        assert_eq!(cost.cycles, 5 + 32);
+        assert_eq!(cost.comp_cycles, 5);
+        assert_eq!(cost.min_subarray, (256, 4));
+        assert!(cost.energy.total() > 0.0);
+    }
+
+    #[test]
+    fn pipeline_waves_scale_with_instances() {
+        let cfg = Config::default();
+        let (s, cols) = sched_for(&ops::multiply(), 256);
+        // batch/subarray = 256/4 = 64; bank = 64×256 = 16384 instances.
+        let c1 = run_stochastic(&cfg.arch, &cfg.energy, &s, 256, cols, 16384);
+        assert_eq!(c1.waves, 1);
+        let c2 = run_stochastic(&cfg.arch, &cfg.energy, &s, 256, cols, 16385);
+        assert_eq!(c2.waves, 2);
+        assert!(c2.cycles > c1.cycles);
+    }
+
+    #[test]
+    fn parallel_policy_trades_banks_for_waves() {
+        let mut cfg = Config::default();
+        cfg.arch.policy = crate::config::Policy::Parallel;
+        let (s, cols) = sched_for(&ops::multiply(), 256);
+        let c = run_stochastic(&cfg.arch, &cfg.energy, &s, 256, cols, 100_000);
+        assert_eq!(c.waves, 1);
+        assert!(c.banks_used > 1);
+    }
+
+    #[test]
+    fn energy_scales_linearly_with_instances() {
+        let cfg = Config::default();
+        let (s, cols) = sched_for(&ops::scaled_add(), 256);
+        let e1 = run_stochastic(&cfg.arch, &cfg.energy, &s, 256, cols, 10).energy.total();
+        let e2 = run_stochastic(&cfg.arch, &cfg.energy, &s, 256, cols, 20).energy.total();
+        assert!(e2 > 1.9 * e1 && e2 < 2.1 * e1);
+    }
+
+    #[test]
+    fn binary_chunked_when_oversized() {
+        use crate::netlist::binary::BinaryBuilder;
+        let cfg = Config::default();
+        let mut b = BinaryBuilder::new(16);
+        let wa = b.input_word("a", 8, false);
+        let wb = b.input_word("b", 8, false);
+        let _ = b.multiplier(&wa, &wb);
+        let s = schedule(&b.nl, &Options::default());
+        let cost = run_binary(&cfg.arch, &cfg.energy, &s, 1);
+        assert!(cost.cycles >= s.total_cycles() as u64);
+        assert!(cost.min_subarray.0 <= 16);
+    }
+}

@@ -1,0 +1,11 @@
+//! S8 — the Stoch-IMC [n, m] memory architecture (§4.3): BtoS memory,
+//! local/global accumulator tree, and the execution-cost engine that
+//! maps scheduled circuits onto banks of subarray groups.
+
+pub mod accumulator;
+pub mod btos;
+pub mod engine;
+
+pub use accumulator::{accumulate, AccumulationResult};
+pub use btos::BtosMemory;
+pub use engine::{run_binary, run_stochastic, RunCost};

@@ -1,0 +1,148 @@
+//! Binary-IMC implementations of the six Table 2 arithmetic operations,
+//! at the paper's 8-bit fixed-point resolution (§5.1): ripple-carry
+//! addition, Wallace multiplication, full subtraction, non-restoring
+//! division, three Newton–Raphson square-root steps, and the 5th-order
+//! Maclaurin exponential.
+
+use crate::netlist::binary::BinaryBuilder;
+use crate::netlist::Netlist;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BinaryOp {
+    Add,
+    Multiply,
+    Subtract,
+    Divide,
+    Sqrt,
+    Exp,
+}
+
+impl BinaryOp {
+    pub const ALL: [BinaryOp; 6] = [
+        BinaryOp::Add,
+        BinaryOp::Multiply,
+        BinaryOp::Subtract,
+        BinaryOp::Divide,
+        BinaryOp::Sqrt,
+        BinaryOp::Exp,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            BinaryOp::Add => "scaled_addition",
+            BinaryOp::Multiply => "multiplication",
+            BinaryOp::Subtract => "abs_subtraction",
+            BinaryOp::Divide => "scaled_division",
+            BinaryOp::Sqrt => "square_root",
+            BinaryOp::Exp => "exponential",
+        }
+    }
+}
+
+/// Build the 8-bit binary netlist of an operation. `row_budget` caps the
+/// rows the builder spreads over (bit-significance layout).
+pub fn binary_op_netlist(op: BinaryOp, bits: usize, row_budget: usize) -> Netlist {
+    let mut b = BinaryBuilder::new(row_budget);
+    match op {
+        BinaryOp::Add => {
+            let wa = b.input_word("a", bits, true);
+            let wb = b.input_word("b", bits, true);
+            let cin = b.const0();
+            let (sum, cout) = b.adder(&wa, &wb, cin);
+            for (k, bit) in sum.bits.iter().enumerate() {
+                b.nl.mark_output(&format!("s{k}"), bit.id);
+            }
+            b.nl.mark_output("cout", cout.id);
+        }
+        BinaryOp::Multiply => {
+            let wa = b.input_word("a", bits, false);
+            let wb = b.input_word("b", bits, false);
+            let p = b.multiplier(&wa, &wb);
+            for (k, bit) in p.bits.iter().enumerate() {
+                b.nl.mark_output(&format!("p{k}"), bit.id);
+            }
+        }
+        BinaryOp::Subtract => {
+            let wa = b.input_word("a", bits, false);
+            let wb = b.input_word("b", bits, false);
+            let (d, _) = b.subtractor(&wa, &wb);
+            for (k, bit) in d.bits.iter().enumerate() {
+                b.nl.mark_output(&format!("d{k}"), bit.id);
+            }
+        }
+        BinaryOp::Divide => {
+            let wa = b.input_word("a", bits, false);
+            let wd = b.input_word("d", bits, false);
+            let q = b.divider(&wa, &wd);
+            for (k, bit) in q.bits.iter().enumerate() {
+                b.nl.mark_output(&format!("q{k}"), bit.id);
+            }
+        }
+        BinaryOp::Sqrt => {
+            let wa = b.input_word("a", bits, false);
+            let s = b.sqrt_newton(&wa);
+            for (k, bit) in s.bits.iter().enumerate() {
+                b.nl.mark_output(&format!("s{k}"), bit.id);
+            }
+        }
+        BinaryOp::Exp => {
+            let wx = b.input_word("x", bits, false);
+            let e = b.exp_maclaurin(&wx, 1.0);
+            for (k, bit) in e.bits.iter().enumerate() {
+                b.nl.mark_output(&format!("e{k}"), bit.id);
+            }
+        }
+    }
+    b.nl
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::algorithm1::{schedule, Options};
+
+    #[test]
+    fn complexity_ordering_matches_paper() {
+        // Table 2's binary column: add ≪ mult ≪ exp < sqrt in cost.
+        let cycles = |op| {
+            let nl = binary_op_netlist(op, 8, 32);
+            schedule(&nl, &Options::default()).logic_cycles()
+        };
+        let add = cycles(BinaryOp::Add);
+        let mul = cycles(BinaryOp::Multiply);
+        let div = cycles(BinaryOp::Divide);
+        let sqrt = cycles(BinaryOp::Sqrt);
+        let exp = cycles(BinaryOp::Exp);
+        assert!(add < mul && add < div, "add={add} mul={mul} div={div}");
+        assert!(mul < sqrt && div < sqrt, "mul={mul} div={div} sqrt={sqrt}");
+        assert!(exp > mul, "exp={exp} mul={mul}");
+    }
+
+    #[test]
+    fn adder_8bit_is_17_cycles() {
+        // 2(n−1)+3 for even n (paper §4.1): 8-bit ⇒ 17.
+        let nl = binary_op_netlist(BinaryOp::Add, 8, 8);
+        let s = schedule(&nl, &Options::default());
+        assert_eq!(s.logic_cycles(), 17, "got {}", s.logic_cycles());
+    }
+
+    #[test]
+    fn adder_4bit_is_9_cycles_fig7() {
+        let nl = binary_op_netlist(BinaryOp::Add, 4, 4);
+        let s = schedule(&nl, &Options::default());
+        assert_eq!(s.logic_cycles(), 9, "Fig 7a: got {}", s.logic_cycles());
+    }
+
+    #[test]
+    fn sqrt_and_exp_are_the_largest_circuits() {
+        // Paper Table 2: sqrt (32×1413) and exp (17×1255) dwarf the rest.
+        let sizes: Vec<usize> = BinaryOp::ALL
+            .iter()
+            .map(|&op| binary_op_netlist(op, 8, 32).gate_count())
+            .collect();
+        for i in 0..4 {
+            assert!(sizes[4] > 4 * sizes[i], "sizes={sizes:?}");
+            assert!(sizes[5] > 4 * sizes[i], "sizes={sizes:?}");
+        }
+    }
+}

@@ -1,0 +1,8 @@
+//! S5/S9 — baselines: the binary-IMC cost builders (over
+//! `netlist::binary`) and the SC-CRAM [22] bit-serial model.
+
+pub mod binary_ops;
+pub mod sc_cram;
+
+pub use binary_ops::{binary_op_netlist, BinaryOp};
+pub use sc_cram::{run as run_sc_cram, ScCramCost};

@@ -1,0 +1,118 @@
+//! S9 — model of the in-memory SC baseline, SC-CRAM [22] (Zink et al.).
+//!
+//! Characteristics the paper attributes to [22] (§3, §5):
+//! * bit-serial: the per-bit stochastic circuit is repeated BL times in
+//!   a *single* subarray — no bit-parallel rows;
+//! * no result-storage / StoB mechanism (the paper notes one "has not
+//!   been provided"), so no accumulator energy or steps are charged;
+//! * the same per-bit circuit implementation as Stoch-IMC (the paper
+//!   says the per-bit energies "may be in the same order").
+//!
+//! Cell reuse across bits concentrates write traffic on the one circuit
+//! footprint — the cause of the ~216× lifetime gap in Fig 11.
+
+use crate::energy::{histogram_energy, EnergyBreakdown, EnergyParams};
+use crate::lifetime::WearProfile;
+use crate::netlist::graph::{InputClass, Netlist, Node};
+use crate::scheduler::algorithm1::{schedule, Options, ADDIE_CYCLES};
+
+/// Cost summary of SC-CRAM executing one circuit over a workload.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScCramCost {
+    pub cycles: u64,
+    pub energy: EnergyBreakdown,
+    pub used_cells: u64,
+    pub min_subarray: (usize, usize),
+    pub wear: WearProfile,
+}
+
+/// Cost `instances` runs of the single-lane circuit at bitstream length
+/// `bl`, executed bit-serially.
+pub fn run(
+    energy: &EnergyParams,
+    base: &Netlist,
+    bl: u64,
+    instances: u64,
+) -> ScCramCost {
+    // Schedule the single-lane circuit once; repeat per bit.
+    let sched = schedule(base, &Options::default());
+    let per_bit_logic = sched.logic_cycles() as u64;
+    // Per bit: preset pass + stochastic init of the input cells + logic.
+    let per_bit = 1 + 1 + per_bit_logic;
+    let cycles = per_bit * bl * instances;
+
+    let mut hist = sched.op_histogram();
+    // ADDIE lanes appear once here (single lane).
+    let _ = ADDIE_CYCLES;
+    for n in hist.values_mut() {
+        *n *= (bl * instances) as usize;
+    }
+    let sbg_cells = base
+        .nodes
+        .iter()
+        .filter(|n| {
+            matches!(
+                n,
+                Node::Input { class: InputClass::Stochastic, .. }
+                    | Node::Input { class: InputClass::Correlated(_), .. }
+                    | Node::Input { class: InputClass::ConstStream, .. }
+            )
+        })
+        .count() as u64;
+    let presets = (sched.preset_count() as u64) * bl * instances;
+    let e = histogram_energy(
+        energy,
+        &hist,
+        presets as usize,
+        (sbg_cells * bl * instances) as usize,
+        0,
+    );
+
+    let used = sched.used_cells() as u64;
+    // Every bit reuses the same cells: the hottest cell (the output of
+    // the deepest gate) is written twice (preset+logic) per bit.
+    let wear = WearProfile {
+        used_cells: used,
+        writes: sched.write_traffic().values().sum::<u64>() * bl * instances,
+        max_cell_writes: 2 * bl * instances,
+    };
+    ScCramCost {
+        cycles,
+        energy: e,
+        used_cells: used,
+        min_subarray: sched.min_array(),
+        wear,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netlist::ops;
+
+    #[test]
+    fn bit_serial_cycles_scale_with_bl() {
+        let e = EnergyParams::default();
+        let c256 = run(&e, &ops::multiply(), 256, 1);
+        let c512 = run(&e, &ops::multiply(), 512, 1);
+        assert_eq!(c512.cycles, 2 * c256.cycles);
+        // multiply: 2 logic + 2 init/preset per bit = 4×256.
+        assert_eq!(c256.cycles, 4 * 256);
+    }
+
+    #[test]
+    fn footprint_is_single_lane() {
+        let e = EnergyParams::default();
+        let c = run(&e, &ops::multiply(), 256, 1);
+        assert_eq!(c.min_subarray, (1, 4)); // Table 2: [22] mult = 1×4
+        assert_eq!(c.used_cells, 4);
+    }
+
+    #[test]
+    fn wear_concentrates_on_reused_cells() {
+        let e = EnergyParams::default();
+        let c = run(&e, &ops::scaled_add(), 256, 1);
+        assert_eq!(c.wear.max_cell_writes, 512);
+        assert_eq!(c.wear.used_cells, 7);
+    }
+}

@@ -1,0 +1,172 @@
+//! S16 — configuration system.
+//!
+//! A hand-rolled TOML-subset parser (`toml.rs`) plus typed config structs
+//! for the architecture, device, energy model and application workloads.
+//! `configs/default.toml` holds the paper's evaluation setup (§5.1):
+//! one bank, n=16 groups × m=16 subarrays of 256×256 cells, BL=256,
+//! 8-bit resolution, pipeline policy.
+
+pub mod toml;
+
+use std::path::Path;
+
+use crate::device::MtjParams;
+use crate::energy::EnergyParams;
+use toml::{parse, Table, Value};
+
+/// Bitstream distribution policy when BL > n×m (§4.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    /// Reuse one bank over sub-bitstream pairs (min area, more latency).
+    Pipeline,
+    /// Spread over parallel banks (min latency, more area).
+    Parallel,
+}
+
+/// Architecture configuration ([n, m] of §4.3).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArchConfig {
+    /// Groups per bank (n).
+    pub groups: usize,
+    /// Subarrays per group (m).
+    pub subarrays_per_group: usize,
+    pub subarray_rows: usize,
+    pub subarray_cols: usize,
+    /// Bitstream length (2^resolution).
+    pub bitstream_len: usize,
+    /// Binary resolution in bits.
+    pub resolution: u32,
+    pub policy: Policy,
+    /// Banks (the paper evaluates 1 for fairness with [22]).
+    pub banks: usize,
+}
+
+impl Default for ArchConfig {
+    fn default() -> Self {
+        Self {
+            groups: 16,
+            subarrays_per_group: 16,
+            subarray_rows: 256,
+            subarray_cols: 256,
+            bitstream_len: 256,
+            resolution: 8,
+            policy: Policy::Pipeline,
+            banks: 1,
+        }
+    }
+}
+
+impl ArchConfig {
+    /// Total subarrays n×m per bank.
+    pub fn total_subarrays(&self) -> usize {
+        self.groups * self.subarrays_per_group
+    }
+
+    /// BtoS memory size in bytes: 2^resolution entries (§4.3).
+    pub fn btos_bytes(&self) -> usize {
+        1usize << self.resolution
+    }
+}
+
+/// Full run configuration.
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    pub arch: ArchConfig,
+    pub device: MtjParams,
+    pub energy: EnergyParams,
+    pub seed: u64,
+}
+
+fn get_usize(t: &Table, key: &str, default: usize) -> usize {
+    t.get(key).and_then(Value::as_usize).unwrap_or(default)
+}
+
+fn get_f64(t: &Table, key: &str, default: f64) -> f64 {
+    t.get(key).and_then(Value::as_f64).unwrap_or(default)
+}
+
+impl Config {
+    /// Parse from TOML-subset text; unknown keys are ignored, missing
+    /// keys take paper defaults.
+    pub fn from_text(text: &str) -> Result<Self, toml::ParseError> {
+        let t = parse(text)?;
+        let mut cfg = Config { seed: get_usize(&t, "seed", 0x570C41) as u64, ..Config::default() };
+
+        let a = &mut cfg.arch;
+        a.groups = get_usize(&t, "arch.groups", a.groups);
+        a.subarrays_per_group = get_usize(&t, "arch.subarrays_per_group", a.subarrays_per_group);
+        a.subarray_rows = get_usize(&t, "arch.subarray_rows", a.subarray_rows);
+        a.subarray_cols = get_usize(&t, "arch.subarray_cols", a.subarray_cols);
+        a.bitstream_len = get_usize(&t, "arch.bitstream_len", a.bitstream_len);
+        a.resolution = get_usize(&t, "arch.resolution", a.resolution as usize) as u32;
+        a.banks = get_usize(&t, "arch.banks", a.banks);
+        if let Some(p) = t.get("arch.policy").and_then(Value::as_str) {
+            a.policy = match p {
+                "pipeline" => Policy::Pipeline,
+                "parallel" => Policy::Parallel,
+                other => {
+                    return Err(toml::ParseError {
+                        line: 0,
+                        message: format!("unknown policy `{other}`"),
+                    })
+                }
+            };
+        }
+
+        let d = &mut cfg.device;
+        d.delta = get_f64(&t, "device.delta", d.delta);
+        d.tau_0 = get_f64(&t, "device.tau_0", d.tau_0);
+        d.v_c0 = get_f64(&t, "device.v_c0", d.v_c0);
+        d.r_p = get_f64(&t, "device.r_p", d.r_p);
+        d.r_ap = get_f64(&t, "device.r_ap", d.r_ap);
+
+        let e = &mut cfg.energy;
+        e.e_sbg = get_f64(&t, "energy.e_sbg", e.e_sbg);
+        e.e_write = get_f64(&t, "energy.e_write", e.e_write);
+        e.e_acc_local = get_f64(&t, "energy.e_acc_local", e.e_acc_local);
+        e.e_acc_global = get_f64(&t, "energy.e_acc_global", e.e_acc_global);
+        e.e_driver_cycle = get_f64(&t, "energy.e_driver_cycle", e.e_driver_cycle);
+        e.e_btos_lookup = get_f64(&t, "energy.e_btos_lookup", e.e_btos_lookup);
+
+        Ok(cfg)
+    }
+
+    pub fn from_file(path: &Path) -> Result<Self, Box<dyn std::error::Error>> {
+        let text = std::fs::read_to_string(path)?;
+        Ok(Self::from_text(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper_setup() {
+        let c = Config::default();
+        assert_eq!(c.arch.groups, 16);
+        assert_eq!(c.arch.subarrays_per_group, 16);
+        assert_eq!(c.arch.subarray_rows, 256);
+        assert_eq!(c.arch.bitstream_len, 256);
+        assert_eq!(c.arch.total_subarrays(), 256);
+        assert_eq!(c.arch.btos_bytes(), 256);
+    }
+
+    #[test]
+    fn overrides_apply() {
+        let c = Config::from_text(
+            "[arch]\ngroups = 8\npolicy = \"parallel\"\n[energy]\ne_sbg = 1e-18\n",
+        )
+        .unwrap();
+        assert_eq!(c.arch.groups, 8);
+        assert_eq!(c.arch.policy, Policy::Parallel);
+        assert_eq!(c.energy.e_sbg, 1e-18);
+        // Untouched keys keep defaults.
+        assert_eq!(c.arch.subarrays_per_group, 16);
+    }
+
+    #[test]
+    fn bad_policy_rejected() {
+        assert!(Config::from_text("[arch]\npolicy = \"zigzag\"\n").is_err());
+    }
+}

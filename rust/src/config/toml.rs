@@ -1,0 +1,195 @@
+//! Minimal TOML-subset parser (serde is not in the offline crate set).
+//!
+//! Supported: `[section]` / `[section.sub]` headers, `key = value` with
+//! integers, floats, booleans, quoted strings, and flat arrays of those;
+//! `#` comments; blank lines. That is all the config files here use.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Str(String),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            Value::Int(i) if *i >= 0 => Some(*i as usize),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+/// Dotted-key → value map, e.g. `"arch.groups" → Int(16)`.
+pub type Table = BTreeMap<String, Value>;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParseError {
+    pub line: usize,
+    pub message: String,
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "config parse error at line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+fn parse_scalar(s: &str, line: usize) -> Result<Value, ParseError> {
+    let s = s.trim();
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if s.starts_with('"') && s.ends_with('"') && s.len() >= 2 {
+        return Ok(Value::Str(s[1..s.len() - 1].to_string()));
+    }
+    if let Ok(i) = s.replace('_', "").parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.replace('_', "").parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(ParseError { line, message: format!("cannot parse value `{s}`") })
+}
+
+/// Parse a TOML-subset document into a flat dotted-key table.
+pub fn parse(text: &str) -> Result<Table, ParseError> {
+    let mut table = Table::new();
+    let mut section = String::new();
+    for (i, raw) in text.lines().enumerate() {
+        let line_no = i + 1;
+        let line = match raw.find('#') {
+            // Only strip comments outside quotes (our strings never
+            // contain '#'; keep the parser simple).
+            Some(pos) if !raw[..pos].contains('"') || raw[..pos].matches('"').count() % 2 == 0 => {
+                &raw[..pos]
+            }
+            _ => raw,
+        }
+        .trim();
+        if line.is_empty() {
+            continue;
+        }
+        if line.starts_with('[') {
+            if !line.ends_with(']') {
+                return Err(ParseError { line: line_no, message: "unterminated section".into() });
+            }
+            section = line[1..line.len() - 1].trim().to_string();
+            if section.is_empty() {
+                return Err(ParseError { line: line_no, message: "empty section name".into() });
+            }
+            continue;
+        }
+        let Some(eq) = line.find('=') else {
+            return Err(ParseError { line: line_no, message: format!("expected key=value, got `{line}`") });
+        };
+        let key = line[..eq].trim();
+        if key.is_empty() {
+            return Err(ParseError { line: line_no, message: "empty key".into() });
+        }
+        let raw_val = line[eq + 1..].trim();
+        let value = if raw_val.starts_with('[') {
+            if !raw_val.ends_with(']') {
+                return Err(ParseError { line: line_no, message: "unterminated array".into() });
+            }
+            let inner = &raw_val[1..raw_val.len() - 1];
+            let items: Result<Vec<Value>, ParseError> = inner
+                .split(',')
+                .map(str::trim)
+                .filter(|s| !s.is_empty())
+                .map(|s| parse_scalar(s, line_no))
+                .collect();
+            Value::Array(items?)
+        } else {
+            parse_scalar(raw_val, line_no)?
+        };
+        let full_key = if section.is_empty() {
+            key.to_string()
+        } else {
+            format!("{section}.{key}")
+        };
+        table.insert(full_key, value);
+    }
+    Ok(table)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let t = parse(
+            r#"
+# top comment
+title = "stoch-imc"
+[arch]
+groups = 16
+subarrays = 16   # per group
+rows = 256
+[device]
+delta = 40.0
+calibrate = true
+pulse_ns = [3, 4.5, 10]
+"#,
+        )
+        .unwrap();
+        assert_eq!(t["title"].as_str(), Some("stoch-imc"));
+        assert_eq!(t["arch.groups"].as_usize(), Some(16));
+        assert_eq!(t["device.delta"].as_f64(), Some(40.0));
+        assert_eq!(t["device.calibrate"].as_bool(), Some(true));
+        match &t["device.pulse_ns"] {
+            Value::Array(xs) => assert_eq!(xs.len(), 3),
+            other => panic!("expected array, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn error_reports_line() {
+        let err = parse("a = 1\nbroken line\n").unwrap_err();
+        assert_eq!(err.line, 2);
+    }
+
+    #[test]
+    fn rejects_bad_value() {
+        assert!(parse("x = what").is_err());
+    }
+
+    #[test]
+    fn underscored_numbers() {
+        let t = parse("n = 1_000_000\n").unwrap();
+        assert_eq!(t["n"].as_usize(), Some(1_000_000));
+    }
+}

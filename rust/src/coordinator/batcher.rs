@@ -1,0 +1,140 @@
+//! Dynamic batcher: groups per-instance requests into artifact-sized
+//! waves (one wave = one subarray-group execution). A wave closes when
+//! full or when the oldest request has waited `max_wait`; partial waves
+//! are zero-padded (padded slots are wasted subarray capacity, a metric
+//! the coordinator reports).
+
+use std::sync::mpsc::Sender;
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct BatcherConfig {
+    /// Wave size = artifact batch dimension.
+    pub batch: usize,
+    /// Close a partial wave after this wait.
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        Self { batch: 64, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// One pending request: flattened inputs + the response channel.
+pub struct Pending {
+    pub inputs: Vec<f32>,
+    pub respond: Sender<f32>,
+    pub enqueued: Instant,
+}
+
+/// A closed wave ready for execution.
+pub struct Batch {
+    /// Row-major [batch, n_inputs], zero-padded.
+    pub values: Vec<f32>,
+    /// Response channels for the live (non-padding) rows.
+    pub responders: Vec<Sender<f32>>,
+    pub padded: usize,
+}
+
+/// Accumulates pending requests into waves.
+pub struct Batcher {
+    cfg: BatcherConfig,
+    n_inputs: usize,
+    pending: Vec<Pending>,
+}
+
+impl Batcher {
+    pub fn new(cfg: BatcherConfig, n_inputs: usize) -> Self {
+        Self { cfg, n_inputs, pending: Vec::new() }
+    }
+
+    pub fn push(&mut self, p: Pending) {
+        assert_eq!(p.inputs.len(), self.n_inputs, "input arity mismatch");
+        self.pending.push(p);
+    }
+
+    pub fn len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    /// Whether a wave should close now.
+    pub fn ready(&self, now: Instant) -> bool {
+        if self.pending.len() >= self.cfg.batch {
+            return true;
+        }
+        match self.pending.first() {
+            Some(p) => now.duration_since(p.enqueued) >= self.cfg.max_wait,
+            None => false,
+        }
+    }
+
+    /// Close and return one wave (up to `batch` requests, zero-padded).
+    pub fn drain(&mut self) -> Batch {
+        let take = self.pending.len().min(self.cfg.batch);
+        let live: Vec<Pending> = self.pending.drain(..take).collect();
+        let mut values = vec![0.0f32; self.cfg.batch * self.n_inputs];
+        let mut responders = Vec::with_capacity(live.len());
+        for (i, p) in live.into_iter().enumerate() {
+            values[i * self.n_inputs..(i + 1) * self.n_inputs].copy_from_slice(&p.inputs);
+            responders.push(p.respond);
+        }
+        let padded = self.cfg.batch - responders.len();
+        Batch { values, responders, padded }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    fn pending(vals: &[f32]) -> (Pending, std::sync::mpsc::Receiver<f32>) {
+        let (tx, rx) = channel();
+        (Pending { inputs: vals.to_vec(), respond: tx, enqueued: Instant::now() }, rx)
+    }
+
+    #[test]
+    fn full_wave_closes_immediately() {
+        let mut b = Batcher::new(BatcherConfig { batch: 2, max_wait: Duration::from_secs(10) }, 2);
+        let (p1, _r1) = pending(&[0.1, 0.2]);
+        let (p2, _r2) = pending(&[0.3, 0.4]);
+        b.push(p1);
+        assert!(!b.ready(Instant::now()));
+        b.push(p2);
+        assert!(b.ready(Instant::now()));
+        let wave = b.drain();
+        assert_eq!(wave.padded, 0);
+        assert_eq!(wave.values, vec![0.1, 0.2, 0.3, 0.4]);
+    }
+
+    #[test]
+    fn partial_wave_closes_on_timeout_with_padding() {
+        let mut b = Batcher::new(BatcherConfig { batch: 4, max_wait: Duration::ZERO }, 1);
+        let (p1, _r1) = pending(&[0.9]);
+        b.push(p1);
+        assert!(b.ready(Instant::now()));
+        let wave = b.drain();
+        assert_eq!(wave.padded, 3);
+        assert_eq!(wave.values, vec![0.9, 0.0, 0.0, 0.0]);
+        assert_eq!(wave.responders.len(), 1);
+    }
+
+    #[test]
+    fn oversized_queue_drains_in_waves() {
+        let mut b = Batcher::new(BatcherConfig { batch: 2, max_wait: Duration::ZERO }, 1);
+        for i in 0..5 {
+            let (p, _r) = pending(&[i as f32]);
+            b.push(p);
+            std::mem::forget(_r);
+        }
+        assert_eq!(b.drain().responders.len(), 2);
+        assert_eq!(b.drain().responders.len(), 2);
+        assert_eq!(b.drain().responders.len(), 1);
+        assert!(b.is_empty());
+    }
+}

@@ -1,0 +1,209 @@
+//! The coordinator proper: request intake → batcher → executor thread
+//! (owns the PJRT engine) → response fan-out.
+//!
+//! Thread topology: callers submit on a channel; one controller thread
+//! runs the batching loop per artifact and drives the engine (the PJRT
+//! CPU client parallelizes internally across the batch, like a subarray
+//! group firing all its rows in one cycle). `shutdown` drains cleanly.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use super::batcher::{Batcher, BatcherConfig, Pending};
+use super::metrics::Metrics;
+use crate::runtime::Engine;
+
+enum Msg {
+    Request { app: String, inputs: Vec<f32>, respond: Sender<f32> },
+    Flush,
+    Shutdown,
+}
+
+pub struct Coordinator {
+    tx: Sender<Msg>,
+    handle: Option<JoinHandle<()>>,
+    metrics: Arc<Mutex<HashMap<String, Metrics>>>,
+    specs: HashMap<String, (usize, usize)>, // name → (n_inputs, batch)
+}
+
+impl Coordinator {
+    /// Load all artifacts from `dir` and start the controller thread.
+    /// The PJRT engine is constructed *inside* the controller thread —
+    /// the xla crate's handles are not `Send`.
+    pub fn start(dir: &Path, cfg: BatcherConfig) -> Result<Self> {
+        let mut specs = HashMap::new();
+        for s in crate::runtime::load_manifest(dir)? {
+            specs.insert(s.name.clone(), (s.n_inputs, s.batch));
+        }
+        let metrics: Arc<Mutex<HashMap<String, Metrics>>> = Arc::default();
+        let (tx, rx): (Sender<Msg>, Receiver<Msg>) = channel();
+        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        let m2 = Arc::clone(&metrics);
+        let specs2 = specs.clone();
+        let dir2 = dir.to_path_buf();
+        let handle = std::thread::Builder::new()
+            .name("stoch-imc-controller".into())
+            .spawn(move || {
+                let engine = match Engine::load(&dir2) {
+                    Ok(e) => {
+                        let _ = ready_tx.send(Ok(()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                controller_loop(engine, rx, m2, specs2, cfg)
+            })
+            .context("spawning controller")?;
+        ready_rx.recv().context("controller died during load")??;
+        Ok(Self { tx, handle: Some(handle), metrics, specs })
+    }
+
+    pub fn apps(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.specs.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    pub fn n_inputs(&self, app: &str) -> Option<usize> {
+        self.specs.get(app).map(|(n, _)| *n)
+    }
+
+    /// Submit one instance; returns the receiver for its result.
+    pub fn submit(&self, app: &str, inputs: &[f64]) -> Result<Receiver<f32>> {
+        let Some(&(n, _)) = self.specs.get(app) else {
+            bail!("unknown app `{app}` (have: {:?})", self.apps());
+        };
+        if inputs.len() != n {
+            bail!("app `{app}` expects {n} inputs, got {}", inputs.len());
+        }
+        let (rtx, rrx) = channel();
+        self.tx
+            .send(Msg::Request {
+                app: app.to_string(),
+                inputs: inputs.iter().map(|&v| v as f32).collect(),
+                respond: rtx,
+            })
+            .ok()
+            .context("controller gone")?;
+        Ok(rrx)
+    }
+
+    /// Run a whole workload synchronously; returns outputs in order.
+    pub fn run_workload(&self, app: &str, instances: &[Vec<f64>]) -> Result<Vec<f64>> {
+        let t0 = Instant::now();
+        let receivers: Result<Vec<Receiver<f32>>> =
+            instances.iter().map(|x| self.submit(app, x)).collect();
+        let receivers = receivers?;
+        self.tx.send(Msg::Flush).ok().context("controller gone")?;
+        let mut out = Vec::with_capacity(receivers.len());
+        for r in receivers {
+            out.push(r.recv().context("result dropped")? as f64);
+        }
+        if let Ok(mut m) = self.metrics.lock() {
+            m.entry(app.to_string()).or_default().total_time += t0.elapsed();
+        }
+        Ok(out)
+    }
+
+    pub fn metrics(&self, app: &str) -> Metrics {
+        self.metrics.lock().unwrap().get(app).cloned().unwrap_or_default()
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn controller_loop(
+    engine: Engine,
+    rx: Receiver<Msg>,
+    metrics: Arc<Mutex<HashMap<String, Metrics>>>,
+    specs: HashMap<String, (usize, usize)>,
+    cfg: BatcherConfig,
+) {
+    let mut batchers: HashMap<String, Batcher> = HashMap::new();
+    let mut seed: i32 = 0x5eed;
+    loop {
+        // Wait for work (bounded, so timeouts can close partial waves).
+        let msg = rx.recv_timeout(cfg.max_wait);
+        match msg {
+            Ok(Msg::Request { app, inputs, respond }) => {
+                let (n, batch) = specs[&app];
+                let b = batchers.entry(app.clone()).or_insert_with(|| {
+                    Batcher::new(BatcherConfig { batch, max_wait: cfg.max_wait }, n)
+                });
+                b.push(Pending { inputs, respond, enqueued: Instant::now() });
+            }
+            Ok(Msg::Flush) => {
+                for (app, b) in batchers.iter_mut() {
+                    while !b.is_empty() {
+                        execute_wave(&engine, app, b, &metrics, &mut seed);
+                    }
+                }
+                continue;
+            }
+            Ok(Msg::Shutdown) => {
+                for (app, b) in batchers.iter_mut() {
+                    while !b.is_empty() {
+                        execute_wave(&engine, app, b, &metrics, &mut seed);
+                    }
+                }
+                return;
+            }
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => return,
+        }
+        // Close any ready waves.
+        let now = Instant::now();
+        for (app, b) in batchers.iter_mut() {
+            while b.ready(now) {
+                execute_wave(&engine, app, b, &metrics, &mut seed);
+            }
+        }
+    }
+}
+
+fn execute_wave(
+    engine: &Engine,
+    app: &str,
+    b: &mut Batcher,
+    metrics: &Arc<Mutex<HashMap<String, Metrics>>>,
+    seed: &mut i32,
+) {
+    let wave = b.drain();
+    *seed = seed.wrapping_mul(0x343FD).wrapping_add(0x269EC3);
+    let t0 = Instant::now();
+    match engine.execute(app, &wave.values, *seed) {
+        Ok(outs) => {
+            let dt = t0.elapsed();
+            for (i, r) in wave.responders.iter().enumerate() {
+                let _ = r.send(outs[i]);
+            }
+            if let Ok(mut m) = metrics.lock() {
+                let e = m.entry(app.to_string()).or_default();
+                e.record_wave(wave.responders.len(), wave.padded, dt);
+                for _ in 0..wave.responders.len() {
+                    e.record_latency(dt);
+                }
+            }
+        }
+        Err(err) => {
+            // Surface the failure by dropping responders (recv() errors).
+            eprintln!("wave execution failed for `{app}`: {err:#}");
+        }
+    }
+}

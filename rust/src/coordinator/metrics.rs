@@ -1,0 +1,94 @@
+//! Coordinator metrics: waves, padding waste, latency and throughput.
+
+use std::time::Duration;
+
+#[derive(Debug, Clone, Default)]
+pub struct Metrics {
+    pub requests: u64,
+    pub waves: u64,
+    pub padded_slots: u64,
+    pub exec_time: Duration,
+    pub total_time: Duration,
+    latencies_us: Vec<u64>,
+}
+
+impl Metrics {
+    pub fn record_wave(&mut self, live: usize, padded: usize, exec: Duration) {
+        self.requests += live as u64;
+        self.waves += 1;
+        self.padded_slots += padded as u64;
+        self.exec_time += exec;
+    }
+
+    pub fn record_latency(&mut self, d: Duration) {
+        self.latencies_us.push(d.as_micros() as u64);
+    }
+
+    /// Requests per second over the recorded total time.
+    pub fn throughput(&self) -> f64 {
+        if self.total_time.is_zero() {
+            return 0.0;
+        }
+        self.requests as f64 / self.total_time.as_secs_f64()
+    }
+
+    /// Fraction of executed slots wasted on padding.
+    pub fn padding_waste(&self) -> f64 {
+        let total = self.requests + self.padded_slots;
+        if total == 0 {
+            return 0.0;
+        }
+        self.padded_slots as f64 / total as f64
+    }
+
+    /// Latency percentile in microseconds (p in [0,100]).
+    pub fn latency_us(&self, p: f64) -> u64 {
+        if self.latencies_us.is_empty() {
+            return 0;
+        }
+        let mut v = self.latencies_us.clone();
+        v.sort_unstable();
+        let idx = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
+        v[idx]
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "requests={} waves={} waste={:.1}% thru={:.0} req/s p50={}µs p99={}µs",
+            self.requests,
+            self.waves,
+            100.0 * self.padding_waste(),
+            self.throughput(),
+            self.latency_us(50.0),
+            self.latency_us(99.0),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn padding_waste_computed() {
+        let mut m = Metrics::default();
+        m.record_wave(48, 16, Duration::from_millis(1));
+        assert!((m.padding_waste() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn latency_percentiles() {
+        let mut m = Metrics::default();
+        for us in [100u64, 200, 300, 400, 1000] {
+            m.record_latency(Duration::from_micros(us));
+        }
+        assert_eq!(m.latency_us(50.0), 300);
+        assert_eq!(m.latency_us(100.0), 1000);
+    }
+
+    #[test]
+    fn throughput_zero_without_time() {
+        let m = Metrics::default();
+        assert_eq!(m.throughput(), 0.0);
+    }
+}

@@ -1,0 +1,15 @@
+//! S15 — the bank-controller coordinator (L3 request path).
+//!
+//! The Stoch-IMC bank controller (§4.3) owns the request loop: workload
+//! instances arrive as requests, the batcher groups them to the
+//! artifact's wave size (the subarray-group capacity the L2 graph was
+//! lowered for), an executor thread drives the PJRT engine, and results
+//! fan back out to waiters. Python is never on this path.
+
+pub mod batcher;
+pub mod engine;
+pub mod metrics;
+
+pub use batcher::{Batch, Batcher, BatcherConfig};
+pub use engine::Coordinator;
+pub use metrics::Metrics;

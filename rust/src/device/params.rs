@@ -1,0 +1,80 @@
+//! Physical parameters of the MTJ element (paper Table 1) plus the
+//! thermal-switching model constants calibrated in DESIGN.md §6.
+
+/// MTJ device parameters. Defaults reproduce paper Table 1.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MtjParams {
+    /// Low (parallel-state) resistance, ohms. Paper: 12.7 kΩ.
+    pub r_p: f64,
+    /// High (anti-parallel-state) resistance, ohms. Paper: 76.3 kΩ.
+    pub r_ap: f64,
+    /// Tunneling magnetoresistance ratio. Paper: 500% (=(R_AP-R_P)/R_P).
+    pub tmr: f64,
+    /// Critical switching current, amps. Paper: 0.79 µA.
+    pub i_c: f64,
+    /// Deterministic switching time, seconds. Paper: 1 ns.
+    pub t_switching: f64,
+    /// Thermal stability factor Δ (Eq 2). Not tabulated by the paper;
+    /// calibrated (DESIGN.md §6).
+    pub delta: f64,
+    /// Thermal attempt time τ0 at 0 K, seconds (Eq 2).
+    pub tau_0: f64,
+    /// Critical switching voltage V_c0, volts (Eq 2). Calibrated so that
+    /// P_sw(310 mV, 4 ns) = 0.7, the anchor the paper states in §2.3.
+    pub v_c0: f64,
+}
+
+impl Default for MtjParams {
+    fn default() -> Self {
+        Self {
+            r_p: 12.7e3,
+            r_ap: 76.3e3,
+            tmr: 5.0,
+            i_c: 0.79e-6,
+            t_switching: 1e-9,
+            delta: 40.0,
+            tau_0: 1e-9,
+            v_c0: calibrated_v_c0(40.0, 1e-9),
+        }
+    }
+}
+
+impl MtjParams {
+    /// Average resistance seen during a stochastic switching event (the
+    /// cell transits P→AP); used for SBG energy, E = V_p^2 t_p / R̄.
+    pub fn r_avg(&self) -> f64 {
+        0.5 * (self.r_p + self.r_ap)
+    }
+}
+
+/// Solve V_c0 from the paper's anchor P_sw(V_p=310 mV, t_p=4 ns) = 0.7:
+///   τ* = -t_p / ln(1 - P)   and   τ* = τ0 e^{Δ(1 - V_p/V_c0)}
+///   ⇒ V_c0 = V_p / (1 - ln(τ*/τ0)/Δ)
+pub fn calibrated_v_c0(delta: f64, tau_0: f64) -> f64 {
+    let v_p = 0.310;
+    let t_p = 4e-9;
+    let p = 0.7;
+    let tau_star = -t_p / (1.0 - p as f64).ln();
+    v_p / (1.0 - (tau_star / tau_0).ln() / delta)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_defaults() {
+        let p = MtjParams::default();
+        assert_eq!(p.r_p, 12.7e3);
+        assert_eq!(p.r_ap, 76.3e3);
+        assert_eq!(p.i_c, 0.79e-6);
+        // TMR consistency: (R_AP - R_P)/R_P ≈ 5.0 (500%)
+        assert!(((p.r_ap - p.r_p) / p.r_p - p.tmr).abs() < 0.01);
+    }
+
+    #[test]
+    fn v_c0_calibration_plausible() {
+        let v = calibrated_v_c0(40.0, 1e-9);
+        assert!(v > 0.25 && v < 0.45, "v_c0={v}");
+    }
+}

@@ -1,0 +1,230 @@
+//! S10 — energy model (paper Eqs 3–4 and the §5.1 SPICE constants).
+//!
+//!   E_total = BL × E_computation + E_peripheral               (Eq 3)
+//!   E_computation = N_preset·E_preset + N_SBG·E_SBG + Σ_g N_g·E_g (Eq 4)
+//!
+//! The per-gate energies are the paper's SPICE-extracted values. E_SBG
+//! is a calibrated aJ-scale constant (see DESIGN.md §6: the physical
+//! V²t/R value of the §2.3 pulse is fJ-scale, which would contradict the
+//! paper's own Fig 10 breakdown; the paper's accounting evidently uses a
+//! device-level aJ-scale stochastic-write energy, so we do too and keep
+//! it configurable).
+
+use std::collections::HashMap;
+
+use crate::netlist::graph::GateKind;
+use crate::scheduler::schedule::Schedule;
+
+/// Per-operation energies in joules.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EnergyParams {
+    pub e_not: f64,
+    pub e_buff: f64,
+    pub e_nand: f64,
+    pub e_nor: f64,
+    pub e_maj3: f64,
+    pub e_maj5: f64,
+    pub e_preset: f64,
+    /// Stochastic bit generation (one stochastic input write).
+    pub e_sbg: f64,
+    /// Deterministic binary write (one input cell).
+    pub e_write: f64,
+    /// Local accumulator op (1-bit add into ⌊log m⌋+1-bit register).
+    pub e_acc_local: f64,
+    /// Global accumulator op.
+    pub e_acc_global: f64,
+    /// Subarray peripheral circuitry per active subarray-cycle
+    /// (SL/BL drivers, modified SA driver).
+    pub e_driver_cycle: f64,
+    /// One BtoS memory lookup (binary value → pulse parameters).
+    pub e_btos_lookup: f64,
+}
+
+impl Default for EnergyParams {
+    fn default() -> Self {
+        Self {
+            // §5.1 SPICE-extracted gate energies.
+            e_not: 30.7e-18,
+            e_buff: 73.8e-18,
+            e_nand: 28.7e-18,
+            e_nor: 8.4e-18,
+            e_maj3: 7.6e-18,
+            e_maj5: 6.3e-18,
+            e_preset: 26.1e-18,
+            // Calibrated (DESIGN.md §6).
+            e_sbg: 25.0e-18,
+            e_write: 40.0e-18,
+            // 15nm Nangate-scale accumulators / peripherals (DESIGN.md §6).
+            e_acc_local: 0.8e-15,
+            e_acc_global: 2.4e-15,
+            e_driver_cycle: 1.1e-15,
+            e_btos_lookup: 0.05e-15,
+        }
+    }
+}
+
+impl EnergyParams {
+    pub fn gate_energy(&self, kind: GateKind) -> f64 {
+        match kind {
+            GateKind::Not => self.e_not,
+            GateKind::Buff => self.e_buff,
+            GateKind::Nand => self.e_nand,
+            GateKind::Nor => self.e_nor,
+            GateKind::Maj3Inv => self.e_maj3,
+            GateKind::Maj5Inv => self.e_maj5,
+            // AND/OR realized as NAND/NOR + NOT in the builders; a bare
+            // And/Or op is charged as its two-gate realization.
+            GateKind::And => self.e_nand + self.e_not,
+            GateKind::Or => self.e_nor + self.e_not,
+        }
+    }
+}
+
+/// Energy breakdown of one computation (Fig 10 categories).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct EnergyBreakdown {
+    pub logic: f64,
+    pub preset: f64,
+    pub input_init: f64,
+    pub peripheral: f64,
+}
+
+impl EnergyBreakdown {
+    pub fn total(&self) -> f64 {
+        self.logic + self.preset + self.input_init + self.peripheral
+    }
+
+    pub fn add(&mut self, other: &EnergyBreakdown) {
+        self.logic += other.logic;
+        self.preset += other.preset;
+        self.input_init += other.input_init;
+        self.peripheral += other.peripheral;
+    }
+
+    pub fn scaled(&self, k: f64) -> EnergyBreakdown {
+        EnergyBreakdown {
+            logic: self.logic * k,
+            preset: self.preset * k,
+            input_init: self.input_init * k,
+            peripheral: self.peripheral * k,
+        }
+    }
+
+    /// Percentages per Fig 10 (logic, preset/reset, input init,
+    /// peripheral).
+    pub fn percentages(&self) -> [f64; 4] {
+        let t = self.total().max(1e-300);
+        [
+            100.0 * self.logic / t,
+            100.0 * self.preset / t,
+            100.0 * self.input_init / t,
+            100.0 * self.peripheral / t,
+        ]
+    }
+}
+
+/// Computation-phase energy of a schedule execution (`passes` passes of
+/// the scheduled sub-bitstream — Eq 3's BL multiplier appears through
+/// the pass count × per-pass op counts).
+pub fn computation_energy(
+    params: &EnergyParams,
+    sched: &Schedule,
+    passes: usize,
+) -> EnergyBreakdown {
+    let mut logic = 0.0;
+    for (kind, n) in sched.op_histogram() {
+        // ADDIE macro lanes are charged at readout via the accumulator
+        // path; its in-array share is the tap BUFFs already in `steps`.
+        logic += params.gate_energy(kind) * n as f64;
+    }
+    let preset = sched.preset_count() as f64 * params.e_preset;
+    let input_init = sched.sbg_count as f64 * (params.e_sbg + params.e_btos_lookup)
+        + sched.binary_write_count as f64 * params.e_write;
+    EnergyBreakdown {
+        logic: logic * passes as f64,
+        preset: preset * passes as f64,
+        input_init: input_init * passes as f64,
+        peripheral: 0.0, // added by the architecture model
+    }
+}
+
+/// Peripheral energy of the [n,m] architecture's StoB accumulation:
+/// n×m local accumulator ops + n global ops per result, plus the driver
+/// energy of active subarray-cycles (§4.3 / Eq 3).
+pub fn peripheral_energy(
+    params: &EnergyParams,
+    n_groups: usize,
+    m_subarrays: usize,
+    results: usize,
+    active_subarray_cycles: u64,
+) -> f64 {
+    let acc = results as f64
+        * (n_groups as f64 * m_subarrays as f64 * params.e_acc_local
+            + n_groups as f64 * params.e_acc_global);
+    acc + active_subarray_cycles as f64 * params.e_driver_cycle
+}
+
+/// Count a breakdown per gate-kind histogram directly (used by the
+/// SC-CRAM baseline model which has no Schedule).
+pub fn histogram_energy(
+    params: &EnergyParams,
+    hist: &HashMap<GateKind, usize>,
+    presets: usize,
+    sbg: usize,
+    writes: usize,
+) -> EnergyBreakdown {
+    let logic = hist
+        .iter()
+        .map(|(k, n)| params.gate_energy(*k) * *n as f64)
+        .sum();
+    EnergyBreakdown {
+        logic,
+        preset: presets as f64 * params.e_preset,
+        input_init: sbg as f64 * params.e_sbg + writes as f64 * params.e_write,
+        peripheral: 0.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netlist::{ops, replicate::replicate};
+    use crate::scheduler::algorithm1::{schedule, Options};
+
+    #[test]
+    fn gate_energies_match_paper() {
+        let p = EnergyParams::default();
+        assert_eq!(p.e_not, 30.7e-18);
+        assert_eq!(p.e_preset, 26.1e-18);
+        assert_eq!(p.gate_energy(GateKind::Maj5Inv), 6.3e-18);
+    }
+
+    #[test]
+    fn multiply_energy_scales_with_lanes_and_passes() {
+        let p = EnergyParams::default();
+        let s64 = schedule(&replicate(&ops::multiply(), 64), &Options::default());
+        let s128 = schedule(&replicate(&ops::multiply(), 128), &Options::default());
+        let e64 = computation_energy(&p, &s64, 4).total();
+        let e128 = computation_energy(&p, &s128, 2).total();
+        // Same total work (256 bits) either way.
+        assert!((e64 - e128).abs() / e64 < 1e-9, "e64={e64} e128={e128}");
+    }
+
+    #[test]
+    fn breakdown_components_positive() {
+        let p = EnergyParams::default();
+        let s = schedule(&replicate(&ops::scaled_add(), 256), &Options::default());
+        let b = computation_energy(&p, &s, 1);
+        assert!(b.logic > 0.0 && b.preset > 0.0 && b.input_init > 0.0);
+        let pct = b.percentages();
+        assert!((pct.iter().sum::<f64>() - 100.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn peripheral_energy_formula() {
+        let p = EnergyParams::default();
+        let e = peripheral_energy(&p, 16, 16, 1, 0);
+        let want = 256.0 * p.e_acc_local + 16.0 * p.e_acc_global;
+        assert!((e - want).abs() < 1e-24);
+    }
+}

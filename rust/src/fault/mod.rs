@@ -1,0 +1,139 @@
+//! S12 — bitflip fault injection (paper §5.3.2 "Bitflip", Table 4).
+//!
+//! Faults are injected at the input/output nodes of the arithmetic
+//! operations, exactly as the paper describes: for the stochastic
+//! methods a fraction `rate` of stream bits flip; for the 8-bit binary
+//! baseline each of the 8 bits of a value flips with probability
+//! `rate` (bit significance makes the damage asymmetric — the effect
+//! Table 4 demonstrates).
+
+use crate::sc::bitstream::Bitstream;
+use crate::util::prng::Xoshiro256;
+
+/// Node-level fault model (the Table 4 interpretation): with probability
+/// `rate`, the node's stored value suffers ONE random bitflip. For a
+/// 256-bit SN that perturbs the value by 1/256; for an 8-bit binary word
+/// it can flip the MSB — the asymmetry Table 4 demonstrates.
+pub fn inject_stream_node(bs: &Bitstream, rate: f64, rng: &mut Xoshiro256) -> Bitstream {
+    let mut out = bs.clone();
+    if rate > 0.0 && rng.bernoulli(rate) {
+        out.flip(rng.next_index(bs.len()));
+    }
+    out
+}
+
+/// Node-level single-bit flip on a fixed-point value in [0,1].
+pub fn inject_binary_node(value: f64, bits: u32, rate: f64, rng: &mut Xoshiro256) -> f64 {
+    let steps = 1u64 << bits;
+    let mut q = ((value.clamp(0.0, 1.0) * steps as f64).round() as u64).min(steps - 1);
+    if rate > 0.0 && rng.bernoulli(rate) {
+        q ^= 1 << rng.next_below(bits as u64);
+    }
+    q as f64 / steps as f64
+}
+
+/// Flip each bit of a bitstream independently with probability `rate`
+/// (the *saturation* fault model; Table 4 uses the node-level model
+/// above — see the module docs).
+pub fn inject_stream(bs: &Bitstream, rate: f64, rng: &mut Xoshiro256) -> Bitstream {
+    let mut out = bs.clone();
+    if rate <= 0.0 {
+        return out;
+    }
+    for i in 0..bs.len() {
+        if rng.bernoulli(rate) {
+            out.flip(i);
+        }
+    }
+    out
+}
+
+/// Flip each of the `bits` bits of a fixed-point value (in [0,1), with
+/// `bits` fractional bits) independently with probability `rate`.
+pub fn inject_binary(value: f64, bits: u32, rate: f64, rng: &mut Xoshiro256) -> f64 {
+    let steps = 1u64 << bits;
+    let mut q = ((value.clamp(0.0, 1.0) * steps as f64).round() as u64).min(steps - 1);
+    for k in 0..bits {
+        if rng.bernoulli(rate) {
+            q ^= 1 << k;
+        }
+    }
+    q as f64 / steps as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_rate_is_identity() {
+        let mut rng = Xoshiro256::seeded(1);
+        let bs = Bitstream::sample(0.5, 1024, &mut rng);
+        assert_eq!(inject_stream(&bs, 0.0, &mut rng), bs);
+        assert_eq!(inject_binary(0.625, 8, 0.0, &mut rng), 0.625);
+    }
+
+    #[test]
+    fn stream_flip_rate_statistical() {
+        let mut rng = Xoshiro256::seeded(2);
+        let bs = Bitstream::zeros(100_000);
+        let flipped = inject_stream(&bs, 0.1, &mut rng);
+        let rate = flipped.popcount() as f64 / 100_000.0;
+        assert!((rate - 0.1).abs() < 0.005, "rate={rate}");
+    }
+
+    #[test]
+    fn stream_value_shift_is_bounded() {
+        // A flipped unipolar stream of value p moves toward 0.5:
+        // E[value'] = p(1-r) + (1-p)r.
+        let mut rng = Xoshiro256::seeded(3);
+        let bs = Bitstream::sample(0.8, 65536, &mut rng);
+        let f = inject_stream(&bs, 0.2, &mut rng);
+        let want = 0.8 * 0.8 + 0.2 * 0.2;
+        assert!((f.value() - want).abs() < 0.01);
+    }
+
+    #[test]
+    fn binary_flip_can_be_catastrophic() {
+        // MSB flip changes the value by 0.5 — the binary fragility the
+        // paper's Table 4 shows.
+        let mut rng = Xoshiro256::seeded(4);
+        let mut worst: f64 = 0.0;
+        for _ in 0..200 {
+            let v = inject_binary(0.0, 8, 0.15, &mut rng);
+            worst = worst.max(v);
+        }
+        assert!(worst >= 0.5, "worst={worst}");
+    }
+}
+
+#[cfg(test)]
+mod node_tests {
+    use super::*;
+
+    #[test]
+    fn node_flip_perturbs_stream_by_one_bit_at_most() {
+        let mut rng = Xoshiro256::seeded(9);
+        let bs = Bitstream::sample(0.5, 256, &mut rng);
+        for _ in 0..100 {
+            let f = inject_stream_node(&bs, 1.0, &mut rng);
+            let diff = f.xor(&bs).popcount();
+            assert_eq!(diff, 1);
+        }
+        let same = inject_stream_node(&bs, 0.0, &mut rng);
+        assert_eq!(same, bs);
+    }
+
+    #[test]
+    fn node_flip_on_binary_can_hit_msb() {
+        let mut rng = Xoshiro256::seeded(10);
+        let mut seen_large = false;
+        for _ in 0..200 {
+            let v = inject_binary_node(0.0, 8, 1.0, &mut rng);
+            if v >= 0.5 {
+                seen_large = true;
+            }
+        }
+        assert!(seen_large, "MSB flip never observed");
+    }
+}

@@ -1,0 +1,13 @@
+//! S6 — 2T-1MTJ subarray simulator.
+//!
+//! A digital, cycle-level model of the IMC-A array of §2.2: cells hold
+//! P/AP state; memory mode presets/writes cells (deterministic or
+//! stochastic via the §2.3 pulse); logic mode executes one gate per
+//! cycle across aligned rows, with the output preset semantics of the
+//! gate tables ([3,8]). Executing a schedule here validates that the
+//! mapping of Algorithm 1 computes the same bitstreams as the functional
+//! evaluator — the cross-layer check of DESIGN.md S6↔S7.
+
+pub mod subarray;
+
+pub use subarray::{execute_replicated, ExecStats, Subarray};

@@ -1,0 +1,18 @@
+//! Stoch-IMC: bit-parallel stochastic in-memory computing (STT-MRAM).
+#![allow(clippy::needless_range_loop)]
+pub mod device;
+pub mod netlist;
+pub mod runtime;
+pub mod sc;
+pub mod scheduler;
+pub mod util;
+pub mod imc;
+pub mod config;
+pub mod energy;
+pub mod fault;
+pub mod lifetime;
+pub mod arch;
+pub mod baseline;
+pub mod apps;
+pub mod coordinator;
+pub mod report;

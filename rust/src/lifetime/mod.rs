@@ -1,0 +1,72 @@
+//! S11 — lifetime model (paper Eq 11 and §5.3.2 "Lifetime").
+//!
+//!   Lifetime ∝ E_max × C / B
+//!
+//! with endurance E_max (technology constant, >10^15 for STT-MRAM),
+//! C the *utilized* cell count (the paper replaces total capacity with
+//! used cells since no wear-leveling is modeled), and B the write
+//! traffic. Comparing two methods on the same technology cancels E_max,
+//! so relative lifetime = (C₁/B₁)/(C₂/B₂).
+
+/// Write-traffic + capacity summary of one method executing one workload.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WearProfile {
+    /// Cells ever written (utilized capacity C).
+    pub used_cells: u64,
+    /// Total write operations (traffic B), including presets.
+    pub writes: u64,
+    /// Peak per-cell write count (hot-spot pressure; reported for the
+    /// bit-serial [22] comparison, which stresses single cells).
+    pub max_cell_writes: u64,
+}
+
+impl WearProfile {
+    /// Lifetime figure-of-merit C/B (unitless; relative use only).
+    pub fn merit(&self) -> f64 {
+        assert!(self.writes > 0, "no writes recorded");
+        self.used_cells as f64 / self.writes as f64
+    }
+
+    /// A stricter merit using the hottest cell: C / (max_cell_writes ×
+    /// used_cells) ∝ 1/max_cell_writes — the first-cell-to-die model.
+    /// The paper's Eq 11 assumes uniform distribution over used cells;
+    /// the hot-spot variant is reported alongside (Fig 11 discussion
+    /// attributes [22]'s deficiency to "access stress" on certain cells).
+    pub fn hotspot_merit(&self) -> f64 {
+        assert!(self.max_cell_writes > 0);
+        1.0 / self.max_cell_writes as f64
+    }
+}
+
+/// Relative lifetime improvement of `a` over `b` (Eq 11 ratio).
+pub fn improvement(a: &WearProfile, b: &WearProfile) -> f64 {
+    a.merit() / b.merit()
+}
+
+/// Hot-spot (first-death) lifetime improvement of `a` over `b`.
+pub fn hotspot_improvement(a: &WearProfile, b: &WearProfile) -> f64 {
+    a.hotspot_merit() / b.hotspot_merit()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merit_ratio() {
+        let a = WearProfile { used_cells: 1000, writes: 100, max_cell_writes: 1 };
+        let b = WearProfile { used_cells: 100, writes: 1000, max_cell_writes: 100 };
+        assert!((improvement(&a, &b) - 100.0).abs() < 1e-12);
+        assert!((hotspot_improvement(&a, &b) - 100.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn uniform_spread_beats_hotspot() {
+        // Same traffic, same capacity; concentrated writes lose on the
+        // hot-spot metric.
+        let spread = WearProfile { used_cells: 256, writes: 1024, max_cell_writes: 4 };
+        let hot = WearProfile { used_cells: 256, writes: 1024, max_cell_writes: 512 };
+        assert_eq!(improvement(&spread, &hot), 1.0);
+        assert!(hotspot_improvement(&spread, &hot) > 100.0);
+    }
+}

@@ -1,0 +1,313 @@
+//! stoch-imc CLI — leader entrypoint.
+//!
+//! Subcommands (hand-parsed; clap is not in the offline crate set):
+//!   info                      config + artifact inventory
+//!   fig3 | fig7 | table2 | table3 | table4 | fig10 | fig11
+//!                             regenerate a paper table/figure
+//!   run <app> [N]             end-to-end workload through the
+//!                             coordinator (PJRT artifacts), with
+//!                             accuracy vs the float reference
+//!   schedule <op> [lanes]     show Algorithm 1 output for one op
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+use stoch_imc::apps::all_apps;
+use stoch_imc::config::Config;
+use stoch_imc::coordinator::{BatcherConfig, Coordinator};
+use stoch_imc::report;
+use stoch_imc::util::stats::mean_error_pct;
+
+fn load_config(args: &[String]) -> Result<Config> {
+    if let Some(i) = args.iter().position(|a| a == "--config") {
+        let path = args.get(i + 1).context("--config needs a path")?;
+        Config::from_file(Path::new(path)).map_err(|e| anyhow::anyhow!("{e}"))
+    } else {
+        let default = Path::new("configs/default.toml");
+        if default.exists() {
+            Config::from_file(default).map_err(|e| anyhow::anyhow!("{e}"))
+        } else {
+            Ok(Config::default())
+        }
+    }
+}
+
+fn artifact_dir() -> PathBuf {
+    std::env::var("STOCH_IMC_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cfg = load_config(&args)?;
+    match args.first().map(String::as_str) {
+        Some("info") => cmd_info(&cfg),
+        Some("fig3") => cmd_fig3(&cfg),
+        Some("fig7") => cmd_fig7(),
+        Some("table2") => cmd_table2(&cfg),
+        Some("table3") => cmd_table3(&cfg),
+        Some("table4") => cmd_table4(&cfg),
+        Some("fig10") => cmd_fig10(&cfg),
+        Some("fig11") => cmd_fig11(&cfg),
+        Some("run") => cmd_run(&cfg, &args[1..]),
+        Some("schedule") => cmd_schedule(&args[1..]),
+        other => {
+            if let Some(o) = other {
+                eprintln!("unknown command `{o}`");
+            }
+            eprintln!(
+                "usage: stoch-imc <info|fig3|fig7|table2|table3|table4|fig10|fig11|run|schedule> \
+                 [--config FILE]"
+            );
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_info(cfg: &Config) -> Result<()> {
+    println!("Stoch-IMC — bit-parallel stochastic IMC (STT-MRAM 2T-1MTJ)");
+    println!(
+        "arch: [{}, {}] groups×subarrays of {}×{}, BL={}, {}-bit, policy={:?}",
+        cfg.arch.groups,
+        cfg.arch.subarrays_per_group,
+        cfg.arch.subarray_rows,
+        cfg.arch.subarray_cols,
+        cfg.arch.bitstream_len,
+        cfg.arch.resolution,
+        cfg.arch.policy
+    );
+    println!("BtoS memory: {} B", cfg.arch.btos_bytes());
+    let dir = artifact_dir();
+    match stoch_imc::runtime::load_manifest(&dir) {
+        Ok(specs) => {
+            println!("artifacts ({}):", dir.display());
+            for s in specs {
+                println!("  {:<18} inputs={:<3} batch={} bl={}", s.name, s.n_inputs, s.batch, s.bl);
+            }
+        }
+        Err(e) => println!("artifacts: not built ({e:#})"),
+    }
+    Ok(())
+}
+
+fn cmd_fig3(cfg: &Config) -> Result<()> {
+    println!("# Fig 3 — P_sw vs V_p (Eqs 1-2, Table 1 device)");
+    let series = report::fig3(&cfg.device);
+    print!("{:>6}", "V_p");
+    for (tp, _) in &series {
+        print!(" {:>7}", format!("{tp}ns"));
+    }
+    println!();
+    let n = series[0].1.len();
+    for i in 0..n {
+        print!("{:>6.3}", series[0].1[i].0);
+        for (_, s) in &series {
+            print!(" {:>7.4}", s[i].1);
+        }
+        println!();
+    }
+    Ok(())
+}
+
+fn cmd_fig7() -> Result<()> {
+    let (b, s) = report::fig7();
+    println!("# Fig 7 — 4-bit in-memory addition sequence flow");
+    println!("binary (ripple-carry MAJ/BUFF, Fig 7a): {b} cycles (paper: 9)");
+    println!("stochastic (MUX over 4 lanes, Fig 7b):  {s} cycles (paper: 4)");
+    Ok(())
+}
+
+fn cmd_table2(cfg: &Config) -> Result<()> {
+    println!("# Table 2 — arithmetic ops (norm. to binary IMC)");
+    println!(
+        "{:<18} {:>12} {:>10} {:>10} | {:>9} {:>9} | {:>9} {:>9} | {:>9}",
+        "op", "bin array", "[22]", "stoch", "area[22]", "areaS", "time[22]", "timeS", "energyS"
+    );
+    for r in report::table2(cfg) {
+        println!(
+            "{:<18} {:>12} {:>10} {:>10} | {:>9.3} {:>9.3} | {:>9.3} {:>9.4} | {:>9.3}",
+            r.op,
+            format!("{}x{}", r.binary_array.0, r.binary_array.1),
+            format!("{}x{}", r.sc_cram_array.0, r.sc_cram_array.1),
+            format!("{}x{}", r.stoch_array.0, r.stoch_array.1),
+            r.area_sc_cram,
+            r.area_stoch,
+            r.time_sc_cram,
+            r.time_stoch,
+            r.energy_stoch,
+        );
+    }
+    Ok(())
+}
+
+fn cmd_table3(cfg: &Config) -> Result<()> {
+    println!("# Table 3 — applications (norm. to binary IMC)");
+    println!(
+        "{:<6} {:>12} {:>10} | {:>9} {:>9} | {:>10} {:>10} | {:>9} {:>9}",
+        "app", "bin subarr", "stoch", "area[22]", "areaS", "time[22]", "timeS", "en[22]", "enS"
+    );
+    let rows = report::table3(cfg);
+    for r in &rows {
+        println!(
+            "{:<6} {:>12} {:>10} | {:>9.3} {:>9.3} | {:>10.3} {:>10.4} | {:>9.3} {:>9.3}",
+            r.app,
+            format!("{}x{}", r.binary_subarray.0, r.binary_subarray.1),
+            format!("{}x{}", r.stoch_subarray.0, r.stoch_subarray.1),
+            r.area_sc_cram,
+            r.area_stoch,
+            r.time_sc_cram,
+            r.time_stoch,
+            r.energy_sc_cram,
+            r.energy_stoch,
+        );
+    }
+    let (vs_bin, vs_scc, en) = report::headline(&rows);
+    println!(
+        "\ngeomean speedup vs binary: {vs_bin:.1}x (paper 135.7x); vs [22]: {vs_scc:.1}x \
+         (paper 124.2x); energy vs binary: {en:.2}x (paper 1.5x)"
+    );
+    Ok(())
+}
+
+fn cmd_table4(cfg: &Config) -> Result<()> {
+    println!("# Table 4 — output error (%) under injected bitflips");
+    let rates = [0.0, 0.05, 0.10, 0.15, 0.20];
+    let t = report::table4(cfg, &rates, 24);
+    println!(
+        "{:<6} | {:>35} | {:>35}",
+        "app", "binary-IMC (0/5/10/15/20 %)", "Stoch-IMC (0/5/10/15/20 %)"
+    );
+    for app in ["lit", "ol", "hdp", "kde"] {
+        let (b, s) = &t[app];
+        let fmt = |v: &Vec<f64>| {
+            v.iter().map(|x| format!("{x:6.2}")).collect::<Vec<_>>().join(" ")
+        };
+        println!("{:<6} | {:>35} | {:>35}", app, fmt(b), fmt(s));
+    }
+    Ok(())
+}
+
+fn cmd_fig10(cfg: &Config) -> Result<()> {
+    println!("# Fig 10 — energy breakdown (%)");
+    println!(
+        "{:<6} {:<9} | {:>7} {:>7} {:>9} {:>11}",
+        "app", "method", "logic", "preset", "input", "peripheral"
+    );
+    for r in report::table3(cfg) {
+        for (m, b) in [
+            ("binary", &r.binary_energy_breakdown),
+            ("[22]", &r.sc_cram_energy_breakdown),
+            ("stoch", &r.stoch_energy_breakdown),
+        ] {
+            let p = b.percentages();
+            println!(
+                "{:<6} {:<9} | {:>7.1} {:>7.1} {:>9.1} {:>11.1}",
+                r.app, m, p[0], p[1], p[2], p[3]
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_fig11(cfg: &Config) -> Result<()> {
+    println!("# Fig 11 — lifetime improvement vs binary IMC (Eq 11)");
+    let rows = report::table3(cfg);
+    let mut st = Vec::new();
+    let mut sc = Vec::new();
+    for (app, s, c) in report::fig11(&rows) {
+        println!("{app:<6} stoch={s:>10.2}x   [22]={c:>10.4}x");
+        st.push(s);
+        sc.push(s / c);
+    }
+    println!(
+        "geomean: stoch vs binary {:.1}x (paper 4.9x); stoch vs [22] {:.1}x (paper 216.3x)",
+        stoch_imc::util::stats::geomean(&st),
+        stoch_imc::util::stats::geomean(&sc),
+    );
+    Ok(())
+}
+
+fn cmd_run(cfg: &Config, args: &[String]) -> Result<()> {
+    let app_name = args.first().context("run <app> [instances]")?;
+    let n: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(256);
+    let apps = all_apps();
+    let app = apps
+        .iter()
+        .find(|a| a.name() == app_name)
+        .with_context(|| format!("unknown app `{app_name}` (lit|ol|hdp|kde)"))?;
+    let instances = app.workload(n, cfg.seed);
+
+    println!("loading artifacts + compiling PJRT executables…");
+    let coord = Coordinator::start(&artifact_dir(), BatcherConfig::default())?;
+    let artifact = format!("app_{app_name}");
+    let arity = coord.n_inputs(&artifact).context("artifact not found")?;
+    let padded: Vec<Vec<f64>> = instances
+        .iter()
+        .map(|x| {
+            let mut v = x.clone();
+            v.resize(arity, 0.0);
+            v
+        })
+        .collect();
+
+    let t0 = std::time::Instant::now();
+    let outs = coord.run_workload(&artifact, &padded)?;
+    let dt = t0.elapsed();
+
+    let refs: Vec<f64> = instances.iter().map(|x| app.float_ref(x)).collect();
+    let err = mean_error_pct(&refs, &outs);
+    let m = coord.metrics(&artifact);
+    println!(
+        "{} instances in {:.2?} ({:.0}/s) — mean output error vs float ref: {:.2}%",
+        outs.len(),
+        dt,
+        outs.len() as f64 / dt.as_secs_f64(),
+        err
+    );
+    println!("coordinator: {}", m.summary());
+    if err > 15.0 {
+        bail!("accuracy regression: {err:.2}%");
+    }
+    Ok(())
+}
+
+fn cmd_schedule(args: &[String]) -> Result<()> {
+    use stoch_imc::netlist::{ops, replicate::replicate};
+    use stoch_imc::scheduler::algorithm1::{schedule, Mode, Options};
+    let op = args.first().map(String::as_str).unwrap_or("multiply");
+    let lanes: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(8);
+    let base = match op {
+        "multiply" => ops::multiply(),
+        "scaled_add" => ops::scaled_add(),
+        "abs_subtract" => ops::abs_subtract(),
+        "scaled_divide" => ops::scaled_divide(),
+        "square_root" => ops::square_root(6),
+        "exponential" => ops::exponential(),
+        other => bail!("unknown op `{other}`"),
+    };
+    let rep = replicate(&base, lanes);
+    for mode in [Mode::Asap, Mode::LayerStrict] {
+        let s = schedule(&rep, &Options { mode });
+        println!(
+            "{op} × {lanes} lanes, {mode:?}: {} logic cycles, array {}×{}, {} copies",
+            s.logic_cycles(),
+            s.rows_used,
+            s.cols_used,
+            s.copy_count
+        );
+        if mode == Mode::Asap {
+            for (t, step) in s.steps.iter().enumerate() {
+                println!(
+                    "  t{:<3} {:<8} ×{:<4} in_cols={:?} out_col={}",
+                    t + 1,
+                    format!("{:?}", step.ops[0].kind),
+                    step.ops.len(),
+                    step.ops[0].ins.iter().map(|c| c.col).collect::<Vec<_>>(),
+                    step.ops[0].out.col
+                );
+            }
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,515 @@
+//! Binary in-memory arithmetic netlists — the binary-IMC baseline
+//! ([3,8], paper §5.1): ripple-carry addition, Wallace-tree
+//! multiplication, subtraction (two's complement), non-restoring
+//! division, Newton–Raphson square root, and Maclaurin exponential.
+//!
+//! The CRAM full adder is C̄out = MAJ3̄(A,B,C), S = MAJ5(A,B,C,C̄out,C̄out)
+//! (paper §4.1). We keep the complement bookkeeping of Fig 7(a) as
+//! explicit *polarity tracking*: a [`Bit`] records whether its cell holds
+//! the value or its complement. Because MAJ gates are self-dual, MAJ3̄
+//! over all-complemented inputs yields the *true* carry, so a ripple
+//! chain whose stages alternate input polarity needs no carry inverters —
+//! this is why odd rows of Fig 7(a) store Ā, B̄, and it is what makes the
+//! 4-bit adder 9 cycles (verified in tests and the Fig 7 bench).
+//!
+//! All circuits use the IMC gate set {NAND, NOT, BUFF, MAJ3̄, MAJ5̄}.
+
+use super::graph::{GateKind, InputClass, Netlist, NodeId};
+
+/// A mapped bit: a cell plus its polarity (true ⇒ cell stores complement).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Bit {
+    pub id: NodeId,
+    pub pol: bool,
+}
+
+impl Bit {
+    pub fn new(id: NodeId) -> Self {
+        Self { id, pol: false }
+    }
+
+    /// Logical complement — free: just flip the polarity flag.
+    pub fn complement(self) -> Self {
+        Self { id: self.id, pol: !self.pol }
+    }
+}
+
+/// A fixed-point word, LSB first.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Word {
+    pub bits: Vec<Bit>,
+}
+
+impl Word {
+    pub fn width(&self) -> usize {
+        self.bits.len()
+    }
+
+    /// One's complement (free, polarity flip per bit).
+    pub fn complement(&self) -> Word {
+        Word { bits: self.bits.iter().map(|b| b.complement()).collect() }
+    }
+
+    /// Take bits `lo..hi` (truncation / shift wiring — zero cost).
+    pub fn slice(&self, lo: usize, hi: usize) -> Word {
+        Word { bits: self.bits[lo..hi].to_vec() }
+    }
+}
+
+/// Builder for binary circuits over a shared netlist.
+pub struct BinaryBuilder {
+    pub nl: Netlist,
+    zero: Option<NodeId>,
+    /// Rows available; gate row = bit significance mod row budget.
+    pub row_budget: usize,
+}
+
+impl BinaryBuilder {
+    pub fn new(row_budget: usize) -> Self {
+        Self { nl: Netlist::new(), zero: None, row_budget }
+    }
+
+    fn row(&self, k: usize) -> usize {
+        k % self.row_budget.max(1)
+    }
+
+    /// Constant 0 cell (preset; shared).
+    pub fn const0(&mut self) -> Bit {
+        if self.zero.is_none() {
+            self.zero = Some(self.nl.input("__zero", 0, 1, InputClass::BinaryBit));
+        }
+        Bit::new(self.zero.unwrap())
+    }
+
+    /// Constant 1: complement-polarity view of the shared 0 cell.
+    pub fn const1(&mut self) -> Bit {
+        self.const0().complement()
+    }
+
+    /// Declare an n-bit input word. `prepolarize` stores odd-significance
+    /// bits complemented at write time (the Fig 7a layout) — free, since
+    /// the deterministic write can store either polarity.
+    pub fn input_word(&mut self, name: &str, width: usize, prepolarize: bool) -> Word {
+        let bits = (0..width)
+            .map(|k| {
+                let row = self.row(k);
+                let id = self.nl.input(&format!("{name}{k}"), row, 1, InputClass::BinaryBit);
+                Bit { id, pol: prepolarize && k % 2 == 1 }
+            })
+            .collect();
+        Word { bits }
+    }
+
+    /// Constant word of `value` (shared const cells + polarity).
+    pub fn constant_word(&mut self, value: u64, width: usize) -> Word {
+        let bits = (0..width)
+            .map(|k| if (value >> k) & 1 == 1 { self.const1() } else { self.const0() })
+            .collect();
+        Word { bits }
+    }
+
+    /// Materialize `bit` at polarity `pol` in `row`, inserting a NOT when
+    /// the stored polarity differs.
+    pub fn normalize(&mut self, bit: Bit, pol: bool, row: usize) -> Bit {
+        if bit.pol == pol {
+            bit
+        } else {
+            Bit { id: self.nl.gate(GateKind::Not, row, vec![bit.id]), pol }
+        }
+    }
+
+    /// CRAM full adder at stage polarity `p` in `row`: inputs are
+    /// normalized to polarity `p`; returns (sum, carry), each at
+    /// polarity `!p` (self-duality of the MAJ gates).
+    pub fn full_adder(&mut self, a: Bit, b: Bit, c: Bit, p: bool, row: usize) -> (Bit, Bit) {
+        let a = self.normalize(a, p, row);
+        let b = self.normalize(b, p, row);
+        let c = self.normalize(c, p, row);
+        let m3 = self.nl.gate(GateKind::Maj3Inv, row, vec![a.id, b.id, c.id]);
+        // MAJ5 needs two distinct copies of the carry cell.
+        let dup = self.nl.gate(GateKind::Buff, row, vec![m3]);
+        let m5 = self.nl.gate(GateKind::Maj5Inv, row, vec![a.id, b.id, c.id, m3, dup]);
+        (Bit { id: m5, pol: !p }, Bit { id: m3, pol: !p })
+    }
+
+    /// Half adder: sum = XOR (5 gates, polarity handled by normalize),
+    /// carry = NAND at complement polarity (1 gate).
+    pub fn half_adder(&mut self, a: Bit, b: Bit, row: usize) -> (Bit, Bit) {
+        let an = self.normalize(a, false, row);
+        let bn = self.normalize(b, false, row);
+        let sum = super::ops_xor_at(&mut self.nl, an.id, bn.id, row);
+        let carry = self.nl.gate(GateKind::Nand, row, vec![an.id, bn.id]);
+        (Bit::new(sum), Bit { id: carry, pol: true })
+    }
+
+    /// Ripple-carry adder: a + b + cin. Stage k runs at polarity k%2 (the
+    /// Fig 7a alternating layout). Sum bit k comes out at polarity
+    /// !(k%2) — callers track polarity. Returns (sum word, carry out).
+    pub fn adder(&mut self, a: &Word, b: &Word, cin: Bit) -> (Word, Bit) {
+        assert_eq!(a.width(), b.width());
+        let mut carry = cin;
+        let mut bits = Vec::with_capacity(a.width());
+        for k in 0..a.width() {
+            let p = k % 2 == 1;
+            let row = self.row(k);
+            let (s, c) = self.full_adder(a.bits[k], b.bits[k], carry, p, row);
+            bits.push(s);
+            carry = c;
+        }
+        (Word { bits }, carry)
+    }
+
+    /// Subtraction a − b = a + b̄ + 1 (complement is free).
+    pub fn subtractor(&mut self, a: &Word, b: &Word) -> (Word, Bit) {
+        let one = self.const1();
+        let bc = b.complement();
+        self.adder(a, &bc, one)
+    }
+
+    /// Unsigned multiplier (Wallace reduction): a (n bits) × b (m bits)
+    /// → n+m bits. Partial products are single NAND cells carried at
+    /// complement polarity (polarity tracking absorbs the inversion).
+    pub fn multiplier(&mut self, a: &Word, b: &Word) -> Word {
+        let (n, m) = (a.width(), b.width());
+        let out_w = n + m;
+        // Column buckets of partial-product bits by significance.
+        let mut cols: Vec<Vec<Bit>> = vec![Vec::new(); out_w];
+        for i in 0..n {
+            for j in 0..m {
+                let row = self.row(i + j);
+                let ai = self.normalize(a.bits[i], false, row);
+                let bj = self.normalize(b.bits[j], false, row);
+                let pp = self.nl.gate(GateKind::Nand, row, vec![ai.id, bj.id]);
+                cols[i + j].push(Bit { id: pp, pol: true });
+            }
+        }
+        // Wallace reduction to ≤2 bits per column.
+        loop {
+            let max_h = cols.iter().map(|c| c.len()).max().unwrap();
+            if max_h <= 2 {
+                break;
+            }
+            let mut next: Vec<Vec<Bit>> = vec![Vec::new(); out_w];
+            for k in 0..out_w {
+                let col = std::mem::take(&mut cols[k]);
+                let row = self.row(k);
+                let mut iter = col.into_iter();
+                while let Some(x) = iter.next() {
+                    match (iter.next(), iter.next()) {
+                        (Some(y), Some(z)) => {
+                            let (s, c) = self.full_adder(x, y, z, false, row);
+                            next[k].push(s);
+                            if k + 1 < out_w {
+                                next[k + 1].push(c);
+                            }
+                        }
+                        (Some(y), None) => {
+                            let (s, c) = self.half_adder(x, y, row);
+                            next[k].push(s);
+                            if k + 1 < out_w {
+                                next[k + 1].push(c);
+                            }
+                        }
+                        _ => next[k].push(x),
+                    }
+                }
+            }
+            cols = next;
+        }
+        // Final carry-propagate add of the two remaining rows.
+        let zero = self.const0();
+        let wa = Word {
+            bits: (0..out_w).map(|k| *cols[k].first().unwrap_or(&zero)).collect(),
+        };
+        let wb = Word {
+            bits: (0..out_w).map(|k| *cols[k].get(1).unwrap_or(&zero)).collect(),
+        };
+        let (sum, _) = self.adder(&wa, &wb, zero);
+        sum
+    }
+
+    /// Conditional ±: if `ctl` then a − b else a + b (non-restoring
+    /// division step): per-bit b_k ⊕ ctl, cin = ctl.
+    pub fn add_sub(&mut self, a: &Word, b: &Word, ctl: Bit) -> (Word, Bit) {
+        let mut bx = Vec::with_capacity(b.width());
+        for k in 0..b.width() {
+            let row = self.row(k);
+            let bn = self.normalize(b.bits[k], false, row);
+            let cn = self.normalize(ctl, false, row);
+            let x = super::ops_xor_at(&mut self.nl, bn.id, cn.id, row);
+            bx.push(Bit::new(x));
+        }
+        self.adder(a, &Word { bits: bx }, ctl)
+    }
+
+    /// Unsigned non-restoring divider: n-bit dividend / n-bit divisor →
+    /// n-bit integer quotient. Remainder register is n+1 bits wide.
+    pub fn divider(&mut self, dividend: &Word, divisor: &Word) -> Word {
+        let n = dividend.width();
+        assert_eq!(divisor.width(), n);
+        let zero = self.const0();
+        let mut d_ext = divisor.clone();
+        d_ext.bits.push(zero); // n+1-bit divisor
+        let mut r: Word = Word { bits: vec![zero; n + 1] };
+        let mut sub_next = self.const1(); // first step subtracts
+        let mut q_bits = vec![zero; n];
+        for step in 0..n {
+            let k = n - 1 - step;
+            // Shift remainder left, bringing in dividend bit k.
+            let mut shifted = vec![dividend.bits[k]];
+            shifted.extend_from_slice(&r.bits[..n]);
+            let r_shift = Word { bits: shifted };
+            let (r_new, _) = self.add_sub(&r_shift, &d_ext, sub_next);
+            // MSB sign: 0 ⇒ R ≥ 0 ⇒ quotient bit 1 and subtract next.
+            let sign = r_new.bits[n];
+            let row = self.row(k);
+            let q = self.normalize(sign.complement(), false, row);
+            q_bits[k] = q;
+            sub_next = q;
+            r = r_new;
+        }
+        Word { bits: q_bits }
+    }
+
+    /// Fixed-point multiply with `frac` fractional bits: full product
+    /// then >> frac (wiring), truncated to the wider operand's width.
+    pub fn fixmul(&mut self, a: &Word, b: &Word, frac: usize) -> Word {
+        let full = self.multiplier(a, b);
+        let w = a.width().max(b.width());
+        full.slice(frac, (frac + w).min(full.width()))
+    }
+
+    /// Fixed-point square root via Newton–Raphson on y = 1/√a:
+    /// y_{k+1} = y_k(3 − a·y_k²)/2, then √a = a·y. Three iterations from
+    /// y₀ = 1.5 (paper §5.1: "three steps of the Newton–Raphson method").
+    /// Input Q0.w in [0.25, 1); internal Q2.w on w+2 bits.
+    pub fn sqrt_newton(&mut self, a: &Word) -> Word {
+        let w = a.width();
+        let iw = w + 2; // Q2.w
+        let zero = self.const0();
+        let mut a_i = a.clone();
+        a_i.bits.push(zero);
+        a_i.bits.push(zero);
+        // y0 = 1.5 in Q2.w (decent seed across [0.25, 1)).
+        let mut y = self.constant_word(3u64 << (w - 1), iw);
+        let three = self.constant_word(3u64 << w, iw);
+        for _ in 0..3 {
+            let y2 = self.fixmul(&y, &y, w); // y², Q2.w
+            let ay2 = self.fixmul(&a_i, &y2, w); // a·y²
+            let (t, _) = self.subtractor(&three, &ay2); // 3 − a·y²
+            let ty = self.fixmul(&y, &t, w);
+            // Divide by 2: shift right (wiring only).
+            let mut bits = ty.bits[1..].to_vec();
+            bits.push(zero);
+            y = Word { bits };
+        }
+        // √a = a·y, back to Q0.w.
+        let s = self.fixmul(&a_i, &y, w);
+        s.slice(0, w)
+    }
+
+    /// Fixed-point e^{−cx} via the same 5th-order Maclaurin/Horner form
+    /// the stochastic circuit uses: acc ← 1 − (c/k)·x·acc, k = 5..1.
+    /// Input x in Q0.w; output Q0.w.
+    pub fn exp_maclaurin(&mut self, x: &Word, c: f64) -> Word {
+        let w = x.width();
+        let iw = w + 2;
+        let zero = self.const0();
+        let mut x_i = x.clone();
+        x_i.bits.push(zero);
+        x_i.bits.push(zero);
+        let one = self.constant_word(1u64 << w, iw);
+        let to_fix = |v: f64| ((v * (1u64 << w) as f64).round() as u64).min((1u64 << iw) - 1);
+        let mut acc = one.clone();
+        for k in (1..=5).rev() {
+            let ck = self.constant_word(to_fix(c / k as f64), iw);
+            let cx = self.fixmul(&ck, &x_i, w);
+            let t = self.fixmul(&cx, &acc, w);
+            let (next, _) = self.subtractor(&one, &t);
+            acc = next;
+        }
+        // Saturate to Q0.w: if an integer bit is set (acc ≥ 1.0, e.g.
+        // x = 0 ⇒ acc = 1.0 exactly), clamp the output to all-ones.
+        let sat = self.or_bit(acc.bits[w], acc.bits[w + 1], 0);
+        let bits = (0..w)
+            .map(|k| self.or_bit(acc.bits[k], sat, self.row(k)))
+            .collect();
+        Word { bits }
+    }
+
+    /// OR over the reliable set: OR(a,b) = NAND(ā, b̄); the complements
+    /// come free via polarity normalization.
+    pub fn or_bit(&mut self, a: Bit, b: Bit, row: usize) -> Bit {
+        // Cells holding ā / b̄ (a NOT is only inserted when the stored
+        // polarity is not already complemented).
+        let an = self.normalize(a.complement(), false, row);
+        let bn = self.normalize(b.complement(), false, row);
+        Bit::new(self.nl.gate(GateKind::Nand, row, vec![an.id, bn.id]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netlist::eval::eval_combinational;
+    use std::collections::HashMap;
+
+    /// Evaluate a builder's netlist on integer inputs; read a word back.
+    fn run(
+        b: &BinaryBuilder,
+        inputs: &[(&str, u64, usize, bool)], // (name, value, width, prepolarized)
+        out: &Word,
+    ) -> u64 {
+        let mut ins: HashMap<String, bool> = HashMap::new();
+        ins.insert("__zero".into(), false);
+        for (name, value, width, prepol) in inputs {
+            for k in 0..*width {
+                let v = (value >> k) & 1 == 1;
+                let stored = if *prepol && k % 2 == 1 { !v } else { v };
+                ins.insert(format!("{name}{k}"), stored);
+            }
+        }
+        let vals = {
+            let mut nl = b.nl.clone();
+            for (i, bit) in out.bits.iter().enumerate() {
+                nl.mark_output(&format!("__o{i}"), bit.id);
+            }
+            eval_combinational(&nl, &ins)
+        };
+        let mut acc = 0u64;
+        for (i, bit) in out.bits.iter().enumerate() {
+            if vals[&format!("__o{i}")] ^ bit.pol {
+                acc |= 1 << i;
+            }
+        }
+        acc
+    }
+
+    #[test]
+    fn adder_exhaustive_4bit() {
+        for a in 0u64..16 {
+            for bv in 0u64..16 {
+                let mut b = BinaryBuilder::new(4);
+                let wa = b.input_word("a", 4, true);
+                let wb = b.input_word("b", 4, true);
+                let cin = b.const0();
+                let (sum, cout) = b.adder(&wa, &wb, cin);
+                let mut out = sum.clone();
+                out.bits.push(cout);
+                let got = run(&b, &[("a", a, 4, true), ("b", bv, 4, true)], &out);
+                assert_eq!(got, a + bv, "a={a} b={bv}");
+            }
+        }
+    }
+
+    #[test]
+    fn adder_needs_no_polarity_nots_when_prepolarized() {
+        let mut b = BinaryBuilder::new(4);
+        let wa = b.input_word("a", 4, true);
+        let wb = b.input_word("b", 4, true);
+        let cin = b.const0();
+        let _ = b.adder(&wa, &wb, cin);
+        let h = b.nl.gate_histogram();
+        assert!(!h.contains_key(&GateKind::Not), "prepolarized RCA should be NOT-free: {h:?}");
+        assert_eq!(h[&GateKind::Maj3Inv], 4);
+        assert_eq!(h[&GateKind::Maj5Inv], 4);
+        assert_eq!(h[&GateKind::Buff], 4);
+    }
+
+    #[test]
+    fn subtractor_exhaustive_4bit() {
+        for a in 0u64..16 {
+            for bv in 0u64..=a {
+                let mut b = BinaryBuilder::new(4);
+                let wa = b.input_word("a", 4, false);
+                let wb = b.input_word("b", 4, false);
+                let (diff, _) = b.subtractor(&wa, &wb);
+                let got = run(&b, &[("a", a, 4, false), ("b", bv, 4, false)], &diff);
+                assert_eq!(got, a - bv, "a={a} b={bv}");
+            }
+        }
+    }
+
+    #[test]
+    fn multiplier_exhaustive_4x4() {
+        for a in 0u64..16 {
+            for bv in 0u64..16 {
+                let mut b = BinaryBuilder::new(8);
+                let wa = b.input_word("a", 4, false);
+                let wb = b.input_word("b", 4, false);
+                let prod = b.multiplier(&wa, &wb);
+                let got = run(&b, &[("a", a, 4, false), ("b", bv, 4, false)], &prod);
+                assert_eq!(got, a * bv, "a={a} b={bv}");
+            }
+        }
+    }
+
+    #[test]
+    fn multiplier_8x8_spot() {
+        for (a, bv) in [(0u64, 0u64), (255, 255), (200, 131), (17, 3), (128, 2)] {
+            let mut b = BinaryBuilder::new(16);
+            let wa = b.input_word("a", 8, false);
+            let wb = b.input_word("b", 8, false);
+            let prod = b.multiplier(&wa, &wb);
+            let got = run(&b, &[("a", a, 8, false), ("b", bv, 8, false)], &prod);
+            assert_eq!(got, a * bv, "a={a} b={bv}");
+        }
+    }
+
+    #[test]
+    fn divider_quotients() {
+        for (a, d) in [(100u64, 7u64), (255, 16), (13, 13), (0, 5), (255, 1), (37, 5)] {
+            let mut b = BinaryBuilder::new(8);
+            let wa = b.input_word("a", 8, false);
+            let wd = b.input_word("d", 8, false);
+            let q = b.divider(&wa, &wd);
+            let got = run(&b, &[("a", a, 8, false), ("d", d, 8, false)], &q);
+            assert_eq!(got, a / d, "a={a} d={d}");
+        }
+    }
+
+    #[test]
+    fn sqrt_newton_accuracy() {
+        for av in [0.25f64, 0.36, 0.5, 0.64, 0.81, 0.9] {
+            let a_fix = (av * 256.0).round() as u64;
+            let mut b = BinaryBuilder::new(32);
+            let wa = b.input_word("a", 8, false);
+            let s = b.sqrt_newton(&wa);
+            let got = run(&b, &[("a", a_fix, 8, false)], &s) as f64 / 256.0;
+            assert!((got - av.sqrt()).abs() < 0.05, "a={av} got={got} want={}", av.sqrt());
+        }
+    }
+
+    #[test]
+    fn exp_maclaurin_accuracy() {
+        for xv in [0.0f64, 0.25, 0.5, 0.75] {
+            let x_fix = (xv * 256.0).round() as u64;
+            let mut b = BinaryBuilder::new(32);
+            let wx = b.input_word("x", 8, false);
+            let e = b.exp_maclaurin(&wx, 0.8);
+            let got = run(&b, &[("x", x_fix, 8, false)], &e) as f64 / 256.0;
+            let want = (-0.8 * xv).exp();
+            assert!((got - want).abs() < 0.05, "x={xv} got={got} want={want}");
+        }
+    }
+
+    #[test]
+    fn gate_set_is_imc_only() {
+        let mut b = BinaryBuilder::new(8);
+        let wa = b.input_word("a", 8, false);
+        let wb = b.input_word("b", 8, false);
+        let _ = b.multiplier(&wa, &wb);
+        for n in &b.nl.nodes {
+            if let crate::netlist::Node::Gate { kind, .. } = n {
+                assert!(matches!(
+                    kind,
+                    GateKind::Nand
+                        | GateKind::Not
+                        | GateKind::Buff
+                        | GateKind::Maj3Inv
+                        | GateKind::Maj5Inv
+                ));
+            }
+        }
+    }
+}

@@ -1,0 +1,232 @@
+//! Functional evaluation of netlists.
+//!
+//! Two modes:
+//! * [`eval_stochastic`] — bit-sequential evaluation of a single-lane
+//!   stochastic circuit over input bitstreams, maintaining Delay/ADDIE
+//!   state across bit positions. This is the golden model the scheduled
+//!   in-memory execution (S6+S7) and the JAX artifacts must match.
+//! * [`eval_combinational`] — one-shot boolean evaluation (binary-IMC
+//!   netlists); Delay/ADDIE nodes are not allowed.
+//!
+//! The ADDIE macro shares `sc::ops::Addie` with the functional oracle so
+//! oracle and netlist evaluation are bit-identical for identical seeds.
+
+use std::collections::HashMap;
+
+use super::graph::{Netlist, Node, NodeId};
+use crate::sc::bitstream::Bitstream;
+use crate::sc::ops::{Addie, ADDIE_SEED};
+
+/// Evaluate a single-lane stochastic netlist over `len`-bit inputs.
+/// `inputs` maps PI names to bitstreams (all of equal length).
+/// Returns the named output bitstreams.
+pub fn eval_stochastic(
+    nl: &Netlist,
+    inputs: &HashMap<String, Bitstream>,
+) -> HashMap<String, Bitstream> {
+    let len = inputs
+        .values()
+        .next()
+        .map(|b| b.len())
+        .expect("eval_stochastic: no inputs");
+    for bs in inputs.values() {
+        assert_eq!(bs.len(), len, "input bitstream length mismatch");
+    }
+
+    let order = nl.topological_order();
+    let mut values = vec![false; nl.len()];
+    // Persistent state.
+    let mut delay_state: HashMap<NodeId, bool> = HashMap::new();
+    let mut addie_state: HashMap<NodeId, Addie> = HashMap::new();
+    for (id, node) in nl.nodes.iter().enumerate() {
+        match node {
+            Node::Delay { init, .. } => {
+                delay_state.insert(id, *init);
+            }
+            Node::Addie { counter_bits, .. } => {
+                addie_state.insert(id, Addie::new(*counter_bits, ADDIE_SEED ^ id as u64));
+            }
+            _ => {}
+        }
+    }
+
+    let mut outs: HashMap<String, Bitstream> = nl
+        .outputs
+        .iter()
+        .map(|(name, _)| (name.clone(), Bitstream::zeros(len)))
+        .collect();
+
+    for t in 0..len {
+        // Phase 1: combinational evaluation in topological order.
+        for &id in &order {
+            values[id] = match &nl.nodes[id] {
+                Node::Input { name, .. } => inputs
+                    .get(name)
+                    .unwrap_or_else(|| panic!("missing input '{name}'"))
+                    .get(t),
+                Node::Gate { kind, ins, .. } => {
+                    let bits: Vec<bool> = ins.iter().map(|&i| values[i]).collect();
+                    kind.eval(&bits)
+                }
+                Node::Delay { .. } => delay_state[&id],
+                Node::Addie { x1, x2, .. } => {
+                    // Alternate the two independent copies, matching
+                    // sc::ops::square_root_with.
+                    let x = if t % 2 == 0 { values[*x1] } else { values[*x2] };
+                    addie_state.get_mut(&id).unwrap().step(x)
+                }
+            };
+        }
+        // Phase 2: latch delay state from this bit's combinational values.
+        for (&id, state) in delay_state.iter_mut() {
+            if let Node::Delay { input, .. } = &nl.nodes[id] {
+                *state = values[*input];
+            }
+        }
+        for (name, out_id) in &nl.outputs {
+            if values[*out_id] {
+                outs.get_mut(name).unwrap().set(t, true);
+            }
+        }
+    }
+    outs
+}
+
+/// Evaluate a combinational (binary) netlist once. Inputs are named bits.
+pub fn eval_combinational(
+    nl: &Netlist,
+    inputs: &HashMap<String, bool>,
+) -> HashMap<String, bool> {
+    let order = nl.topological_order();
+    let mut values = vec![false; nl.len()];
+    for &id in &order {
+        values[id] = match &nl.nodes[id] {
+            Node::Input { name, .. } => *inputs
+                .get(name)
+                .unwrap_or_else(|| panic!("missing input '{name}'")),
+            Node::Gate { kind, ins, .. } => {
+                let bits: Vec<bool> = ins.iter().map(|&i| values[i]).collect();
+                kind.eval(&bits)
+            }
+            Node::Delay { .. } | Node::Addie { .. } => {
+                panic!("sequential node in combinational netlist")
+            }
+        };
+    }
+    nl.outputs
+        .iter()
+        .map(|(name, id)| (name.clone(), values[*id]))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netlist::ops;
+    use crate::sc::ops as sc_ops;
+    use crate::util::check::forall;
+    use crate::util::prng::Xoshiro256;
+
+    const LEN: usize = 16384;
+
+    fn streams(pairs: &[(&str, Bitstream)]) -> HashMap<String, Bitstream> {
+        pairs.iter().map(|(n, b)| (n.to_string(), b.clone())).collect()
+    }
+
+    #[test]
+    fn netlist_multiply_matches_oracle_exactly() {
+        forall(0x90, 20, |g| {
+            let (pa, pb) = (g.f64_in(0.0, 1.0), g.f64_in(0.0, 1.0));
+            let mut rng = Xoshiro256::seeded(g.u64_below(1 << 62));
+            let a = Bitstream::sample(pa, LEN, &mut rng);
+            let b = Bitstream::sample(pb, LEN, &mut rng);
+            let nl = ops::multiply();
+            let got = eval_stochastic(&nl, &streams(&[("a", a.clone()), ("b", b.clone())]));
+            assert_eq!(got["out"], sc_ops::multiply(&a, &b));
+        });
+    }
+
+    #[test]
+    fn netlist_scaled_add_matches_oracle_exactly() {
+        let mut rng = Xoshiro256::seeded(1);
+        let a = Bitstream::sample(0.3, LEN, &mut rng);
+        let b = Bitstream::sample(0.8, LEN, &mut rng);
+        let s = Bitstream::sample(0.5, LEN, &mut rng);
+        let nl = ops::scaled_add();
+        let got = eval_stochastic(
+            &nl,
+            &streams(&[("a", a.clone()), ("b", b.clone()), ("s", s.clone())]),
+        );
+        assert_eq!(got["out"], sc_ops::scaled_add(&a, &b, &s));
+    }
+
+    #[test]
+    fn netlist_abs_subtract_matches_oracle_exactly() {
+        let mut rng = Xoshiro256::seeded(2);
+        let vs = crate::sc::encode::encode_correlated(&[0.7, 0.25], LEN, &mut rng);
+        let nl = ops::abs_subtract();
+        let got =
+            eval_stochastic(&nl, &streams(&[("a", vs[0].clone()), ("b", vs[1].clone())]));
+        assert_eq!(got["out"], sc_ops::abs_subtract_correlated(&vs[0], &vs[1]));
+    }
+
+    #[test]
+    fn netlist_divide_matches_oracle_exactly() {
+        forall(0x91, 10, |g| {
+            let (pa, pb) = (g.f64_in(0.1, 0.9), g.f64_in(0.1, 0.9));
+            let mut rng = Xoshiro256::seeded(g.u64_below(1 << 62));
+            let a = Bitstream::sample(pa, LEN, &mut rng);
+            let b = Bitstream::sample(pb, LEN, &mut rng);
+            let nl = ops::scaled_divide();
+            let got = eval_stochastic(&nl, &streams(&[("a", a.clone()), ("b", b.clone())]));
+            assert_eq!(got["out"], sc_ops::scaled_divide(&a, &b));
+        });
+    }
+
+    #[test]
+    fn netlist_sqrt_converges() {
+        // Seeds differ between the oracle (raw ADDIE_SEED) and netlist
+        // (id-mixed), so compare values, not bits.
+        let mut rng = Xoshiro256::seeded(3);
+        let p = 0.6;
+        let a1 = Bitstream::sample(p, LEN, &mut rng);
+        let a2 = Bitstream::sample(p, LEN, &mut rng);
+        let nl = ops::square_root(10);
+        let got = eval_stochastic(&nl, &streams(&[("a1", a1), ("a2", a2)]));
+        assert!((got["out"].value() - p.sqrt()).abs() < 0.05);
+    }
+
+    #[test]
+    fn netlist_exponential_matches_oracle_value() {
+        let mut rng = Xoshiro256::seeded(4);
+        let p = 0.5;
+        let c = 0.8;
+        let a = sc_ops::independent_copies(p, LEN, &mut rng);
+        let cs = sc_ops::exp_constant_streams(c, LEN, &mut rng);
+        let nl = ops::exponential();
+        let mut inputs = HashMap::new();
+        for k in 0..5 {
+            inputs.insert(format!("a{}", k + 1), a[k].clone());
+            inputs.insert(format!("c{}", k + 1), cs[k].clone());
+        }
+        let got = eval_stochastic(&nl, &inputs);
+        assert_eq!(got["out"], sc_ops::exponential(&a, &cs));
+    }
+
+    #[test]
+    fn combinational_eval_simple() {
+        use crate::netlist::graph::{GateKind, InputClass, Netlist};
+        let mut nl = Netlist::new();
+        let a = nl.input("a", 0, 1, InputClass::BinaryBit);
+        let b = nl.input("b", 1, 1, InputClass::BinaryBit);
+        let g = nl.gate(GateKind::Nand, 0, vec![a, b]);
+        nl.mark_output("y", g);
+        for (va, vb) in [(false, false), (false, true), (true, false), (true, true)] {
+            let mut ins = HashMap::new();
+            ins.insert("a".to_string(), va);
+            ins.insert("b".to_string(), vb);
+            let out = eval_combinational(&nl, &ins);
+            assert_eq!(out["y"], !(va & vb));
+        }
+    }
+}

@@ -1,0 +1,404 @@
+//! Gate-level netlist IR consumed by Algorithm 1 (S7) and the functional
+//! evaluator (`eval.rs`).
+//!
+//! Conventions (paper §4.2, Fig 7):
+//! * **Rows are bit lanes.** A stochastic circuit replicated over a
+//!   q-bit sub-bitstream instantiates its gates once per lane; a binary
+//!   circuit places bit significance k in row k.
+//! * **Primary inputs are columns.** A PI with bit-width q occupies one
+//!   column across rows 1..q (Algorithm 1 lines 5–8). Gates read the PI
+//!   cell in their own row.
+//! * **Delay nodes** carry feedback state (scaled division's Q). They
+//!   break combinational cycles: `value(bit i) = input(bit i-1)`, with a
+//!   defined initial value. For scheduling they are state *cells*
+//!   (columns), not logic steps — see DESIGN.md §7 for the fidelity
+//!   discussion.
+//! * **Addie nodes** model the counter-based integrator of the square
+//!   root circuit (Fig 5e) as a macro with a documented column footprint.
+
+use std::collections::HashMap;
+
+pub type NodeId = usize;
+
+/// Primitive gates of the 2T-1MTJ method (§2.2). The paper's reliable
+/// subset for Stoch-IMC is {NOT, BUFF, NAND} (§5.1); the binary baseline
+/// additionally uses the inverted majority gates of the CRAM full adder.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum GateKind {
+    Buff,
+    Not,
+    And,
+    Nand,
+    Or,
+    Nor,
+    /// NOT(MAJ3(a,b,c)) — CRAM carry: C̄out = MAJ3̄(A,B,C).
+    Maj3Inv,
+    /// NOT(MAJ5(a..e)) — CRAM sum: S̄ = MAJ5̄(A,B,C,C̄out,C̄out); the paper
+    /// uses MAJ5 with the complemented carry twice, yielding S directly.
+    Maj5Inv,
+}
+
+impl GateKind {
+    pub fn arity(self) -> usize {
+        match self {
+            GateKind::Buff | GateKind::Not => 1,
+            GateKind::And | GateKind::Nand | GateKind::Or | GateKind::Nor => 2,
+            GateKind::Maj3Inv => 3,
+            GateKind::Maj5Inv => 5,
+        }
+    }
+
+    /// Truth function.
+    pub fn eval(self, ins: &[bool]) -> bool {
+        debug_assert_eq!(ins.len(), self.arity());
+        match self {
+            GateKind::Buff => ins[0],
+            GateKind::Not => !ins[0],
+            GateKind::And => ins[0] & ins[1],
+            GateKind::Nand => !(ins[0] & ins[1]),
+            GateKind::Or => ins[0] | ins[1],
+            GateKind::Nor => !(ins[0] | ins[1]),
+            GateKind::Maj3Inv => {
+                let c = ins.iter().filter(|&&b| b).count();
+                !(c >= 2)
+            }
+            GateKind::Maj5Inv => {
+                let c = ins.iter().filter(|&&b| b).count();
+                !(c >= 3)
+            }
+        }
+    }
+
+    /// Output-cell preset value required by the 2T-1MTJ method for this
+    /// gate ([3,8]: AND/NAND-family presets differ from OR-family).
+    pub fn preset_value(self) -> bool {
+        match self {
+            // AND-like gates preset the output to '1', OR-like to '0'
+            // (per the CRAM gate tables; NAND example in Fig 2 presets 0).
+            GateKind::And => true,
+            GateKind::Nand | GateKind::Buff => false,
+            GateKind::Or => false,
+            GateKind::Nor | GateKind::Not => true,
+            GateKind::Maj3Inv | GateKind::Maj5Inv => true,
+        }
+    }
+}
+
+/// How a primary input's bitstream is generated (drives energy accounting
+/// and the correlated-generation requirement of absolute-value subtract).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InputClass {
+    /// Independent stochastic draw of the input's value.
+    Stochastic,
+    /// Stochastic draw sharing uniforms with other inputs of the same
+    /// correlation group (abs-value subtraction needs SCC=+1).
+    Correlated(u32),
+    /// Constant-valued stream (e.g. S=0.5 in scaled addition, C_k in the
+    /// exponential). Still a stochastic write in-memory.
+    ConstStream,
+    /// Deterministic binary bit (binary-IMC baseline inputs).
+    BinaryBit,
+}
+
+#[derive(Debug, Clone)]
+pub enum Node {
+    /// Primary input occupying one column across `rows` rows
+    /// (rows == 1 for binary PIs placed at an explicit `row`).
+    Input {
+        name: String,
+        row: usize,
+        rows: usize,
+        class: InputClass,
+    },
+    /// A logic gate instance in row `row`.
+    Gate {
+        kind: GateKind,
+        row: usize,
+        ins: Vec<NodeId>,
+    },
+    /// Feedback state cell: value(bit i) = input(bit i−1), `init` at i=0.
+    Delay {
+        input: NodeId,
+        init: bool,
+        row: usize,
+    },
+    /// Counter-integrator macro (square root, Fig 5e). `x1`, `x2` are the
+    /// two independently generated copies of the operand; `cols` is the
+    /// documented cell footprint of the macro.
+    Addie {
+        x1: NodeId,
+        x2: NodeId,
+        counter_bits: u32,
+        cols: usize,
+        row: usize,
+    },
+}
+
+impl Node {
+    pub fn row(&self) -> usize {
+        match self {
+            Node::Input { row, .. }
+            | Node::Gate { row, .. }
+            | Node::Delay { row, .. }
+            | Node::Addie { row, .. } => *row,
+        }
+    }
+
+    pub fn inputs(&self) -> Vec<NodeId> {
+        match self {
+            Node::Input { .. } => vec![],
+            Node::Gate { ins, .. } => ins.clone(),
+            Node::Delay { input, .. } => vec![*input],
+            Node::Addie { x1, x2, .. } => vec![*x1, *x2],
+        }
+    }
+}
+
+/// A gate-level netlist with named outputs.
+#[derive(Debug, Clone, Default)]
+pub struct Netlist {
+    pub nodes: Vec<Node>,
+    pub outputs: Vec<(String, NodeId)>,
+}
+
+impl Netlist {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, node: Node) -> NodeId {
+        self.nodes.push(node);
+        self.nodes.len() - 1
+    }
+
+    pub fn input(&mut self, name: &str, row: usize, rows: usize, class: InputClass) -> NodeId {
+        self.add(Node::Input { name: name.into(), row, rows, class })
+    }
+
+    pub fn gate(&mut self, kind: GateKind, row: usize, ins: Vec<NodeId>) -> NodeId {
+        assert_eq!(ins.len(), kind.arity(), "arity mismatch for {kind:?}");
+        self.add(Node::Gate { kind, row, ins })
+    }
+
+    pub fn delay(&mut self, input: NodeId, init: bool, row: usize) -> NodeId {
+        self.add(Node::Delay { input, init, row })
+    }
+
+    pub fn mark_output(&mut self, name: &str, id: NodeId) {
+        self.outputs.push((name.into(), id));
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn gate_count(&self) -> usize {
+        self.nodes.iter().filter(|n| matches!(n, Node::Gate { .. })).count()
+    }
+
+    pub fn input_ids(&self) -> Vec<NodeId> {
+        (0..self.nodes.len())
+            .filter(|&i| matches!(self.nodes[i], Node::Input { .. }))
+            .collect()
+    }
+
+    /// Count gates per kind (energy model input).
+    pub fn gate_histogram(&self) -> HashMap<GateKind, usize> {
+        let mut h = HashMap::new();
+        for n in &self.nodes {
+            if let Node::Gate { kind, .. } = n {
+                *h.entry(*kind).or_insert(0) += 1;
+            }
+        }
+        h
+    }
+
+    /// Topological order over the *combinational* graph: `Delay` nodes
+    /// are sources (their value is previous-bit state), so feedback
+    /// through a Delay does not create a cycle. Panics on a true
+    /// combinational cycle.
+    pub fn topological_order(&self) -> Vec<NodeId> {
+        let n = self.nodes.len();
+        let mut indegree = vec![0usize; n];
+        let mut succs: Vec<Vec<NodeId>> = vec![Vec::new(); n];
+        for (id, node) in self.nodes.iter().enumerate() {
+            // Delay reads previous-bit state: no combinational dependency.
+            if matches!(node, Node::Delay { .. }) {
+                continue;
+            }
+            for dep in node.inputs() {
+                succs[dep].push(id);
+                indegree[id] += 1;
+            }
+        }
+        let mut queue: Vec<NodeId> =
+            (0..n).filter(|&i| indegree[i] == 0).collect();
+        let mut order = Vec::with_capacity(n);
+        let mut head = 0;
+        while head < queue.len() {
+            let u = queue[head];
+            head += 1;
+            order.push(u);
+            for &v in &succs[u] {
+                indegree[v] -= 1;
+                if indegree[v] == 0 {
+                    queue.push(v);
+                }
+            }
+        }
+        assert_eq!(order.len(), n, "combinational cycle in netlist");
+        order
+    }
+
+    /// Layer index per node: inputs/delays at 0, gates at
+    /// 1 + max(layer of combinational inputs). The netlist depth L of
+    /// Algorithm 1 line 2 is `max(layers) `.
+    pub fn layers(&self) -> Vec<usize> {
+        let order = self.topological_order();
+        let mut layer = vec![0usize; self.nodes.len()];
+        for &id in &order {
+            let node = &self.nodes[id];
+            if matches!(node, Node::Input { .. } | Node::Delay { .. }) {
+                continue;
+            }
+            layer[id] = node
+                .inputs()
+                .iter()
+                .map(|&d| {
+                    if matches!(self.nodes[d], Node::Delay { .. }) {
+                        0
+                    } else {
+                        layer[d]
+                    }
+                })
+                .max()
+                .map_or(1, |m| m + 1);
+        }
+        layer
+    }
+
+    /// Inverse topological order value: distance (in gate levels) from a
+    /// node to the farthest primary output it feeds. Algorithm 1 sorts
+    /// parallel subsets by the average of this (lines 12–13).
+    pub fn inverse_topo_order(&self) -> Vec<usize> {
+        let order = self.topological_order();
+        let mut dist = vec![0usize; self.nodes.len()];
+        for &id in order.iter().rev() {
+            let node = &self.nodes[id];
+            if matches!(node, Node::Delay { .. }) {
+                continue;
+            }
+            for dep in node.inputs() {
+                dist[dep] = dist[dep].max(dist[id] + 1);
+            }
+        }
+        dist
+    }
+
+    /// Netlist depth (number of gate layers).
+    pub fn depth(&self) -> usize {
+        self.layers().into_iter().max().unwrap_or(0)
+    }
+
+    /// Highest row index used + 1.
+    pub fn row_extent(&self) -> usize {
+        self.nodes
+            .iter()
+            .map(|n| match n {
+                Node::Input { row, rows, .. } => row + rows,
+                other => other.row() + 1,
+            })
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Netlist {
+        // out = NAND(NAND(a,b), NOT a), single lane.
+        let mut nl = Netlist::new();
+        let a = nl.input("a", 0, 1, InputClass::Stochastic);
+        let b = nl.input("b", 0, 1, InputClass::Stochastic);
+        let n1 = nl.gate(GateKind::Nand, 0, vec![a, b]);
+        let n2 = nl.gate(GateKind::Not, 0, vec![a]);
+        let out = nl.gate(GateKind::Nand, 0, vec![n1, n2]);
+        nl.mark_output("out", out);
+        nl
+    }
+
+    #[test]
+    fn topo_order_respects_deps() {
+        let nl = tiny();
+        let order = nl.topological_order();
+        let pos: Vec<usize> = {
+            let mut p = vec![0; nl.len()];
+            for (i, &id) in order.iter().enumerate() {
+                p[id] = i;
+            }
+            p
+        };
+        for (id, node) in nl.nodes.iter().enumerate() {
+            for dep in node.inputs() {
+                assert!(pos[dep] < pos[id], "dep {dep} after {id}");
+            }
+        }
+    }
+
+    #[test]
+    fn layers_and_depth() {
+        let nl = tiny();
+        let layers = nl.layers();
+        assert_eq!(layers[0], 0); // input a
+        assert_eq!(layers[2], 1); // NAND(a,b)
+        assert_eq!(layers[4], 2); // final NAND
+        assert_eq!(nl.depth(), 2);
+    }
+
+    #[test]
+    fn inverse_topo_distances() {
+        let nl = tiny();
+        let inv = nl.inverse_topo_order();
+        assert_eq!(inv[4], 0); // output gate
+        assert_eq!(inv[2], 1); // feeds output
+        assert_eq!(inv[0], 2); // a feeds NAND(a,b) at distance 2
+    }
+
+    #[test]
+    fn delay_breaks_cycles() {
+        // q' = NAND(a, delay(q')) — a feedback loop through Delay.
+        let mut nl = Netlist::new();
+        let a = nl.input("a", 0, 1, InputClass::Stochastic);
+        // Reserve the gate id by building with a placeholder then fixing:
+        let d = nl.add(Node::Delay { input: 0, init: false, row: 0 });
+        let q = nl.gate(GateKind::Nand, 0, vec![a, d]);
+        if let Node::Delay { input, .. } = &mut nl.nodes[d] {
+            *input = q;
+        }
+        nl.mark_output("q", q);
+        let order = nl.topological_order();
+        assert_eq!(order.len(), 3); // no panic, all nodes ordered
+    }
+
+    #[test]
+    fn maj_gates_truth() {
+        assert!(!GateKind::Maj3Inv.eval(&[true, true, false]));
+        assert!(GateKind::Maj3Inv.eval(&[true, false, false]));
+        assert!(!GateKind::Maj5Inv.eval(&[true, true, true, false, false]));
+        assert!(GateKind::Maj5Inv.eval(&[true, true, false, false, false]));
+    }
+
+    #[test]
+    fn gate_histogram_counts() {
+        let nl = tiny();
+        let h = nl.gate_histogram();
+        assert_eq!(h[&GateKind::Nand], 2);
+        assert_eq!(h[&GateKind::Not], 1);
+    }
+}

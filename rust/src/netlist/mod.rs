@@ -1,0 +1,22 @@
+//! S3/S4/S5 — gate-level netlist IR, the stochastic operation circuits
+//! (Fig 5), binary baseline circuits, lane replication, and functional
+//! evaluation.
+
+pub mod binary;
+pub mod eval;
+pub mod graph;
+pub mod ops;
+pub mod replicate;
+
+pub use graph::{GateKind, InputClass, Netlist, Node, NodeId};
+
+/// XOR over the reliable gate set at an explicit row (5 gates):
+/// NAND(NAND(a, NOT b), NAND(NOT a, b)). Used by binary circuits where
+/// gates are spread across rows by bit significance.
+pub fn ops_xor_at(nl: &mut Netlist, a: NodeId, b: NodeId, row: usize) -> NodeId {
+    let a_bar = nl.gate(GateKind::Not, row, vec![a]);
+    let b_bar = nl.gate(GateKind::Not, row, vec![b]);
+    let n1 = nl.gate(GateKind::Nand, row, vec![a, b_bar]);
+    let n2 = nl.gate(GateKind::Nand, row, vec![a_bar, b]);
+    nl.gate(GateKind::Nand, row, vec![n1, n2])
+}

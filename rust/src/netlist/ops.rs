@@ -1,0 +1,236 @@
+//! Gate-level netlist builders for the six stochastic arithmetic
+//! operations (paper Fig 5), restricted to the maximum-reliability gate
+//! subset {NOT, BUFF, NAND} the paper uses for Stoch-IMC (§5.1).
+//!
+//! All builders produce *single-lane* circuits (row 0): functionally a
+//! stochastic circuit is one sequential lane; bit-parallel replication
+//! across subarray rows is a mapping concern handled by
+//! [`super::replicate::replicate`] before scheduling.
+//!
+//! Gate-count identities used (derived in sc::ops):
+//! * multiply      = NOT(NAND(a,b))                             (2 gates)
+//! * scaled add    = NAND(NAND(s,a), NAND(NOT s, b))            (4 gates)
+//! * abs subtract  = NAND(NAND(a, NOT b), NAND(NOT a, b))       (5 gates)
+//! * scaled divide = JK: Q' = NAND(NAND(a, NOT Q), NAND(NOT b, Q))
+//!                   with Q a Delay cell                (5 gates + state)
+//! * square root   = ADDIE macro on two copies of A     (macro, 7 cells)
+//! * exponential   = 5-stage Horner of NAND/NOT                (13 gates)
+
+use super::graph::{GateKind, InputClass, Netlist, Node, NodeId};
+
+/// Footprint (columns) charged for the ADDIE macro, calibrated so the
+/// whole sqrt circuit occupies 10 columns per lane as in paper Table 2.
+pub const ADDIE_COLS: usize = 7;
+
+/// Default ADDIE integrator resolution for application bitstreams
+/// (BL=256): small enough to converge within the stream.
+pub const ADDIE_BITS_APP: u32 = 6;
+
+fn nand(nl: &mut Netlist, a: NodeId, b: NodeId) -> NodeId {
+    nl.gate(GateKind::Nand, 0, vec![a, b])
+}
+
+fn not(nl: &mut Netlist, a: NodeId) -> NodeId {
+    nl.gate(GateKind::Not, 0, vec![a])
+}
+
+/// AND via the reliable subset: NOT(NAND(a,b)).
+pub fn and_rel(nl: &mut Netlist, a: NodeId, b: NodeId) -> NodeId {
+    let n = nand(nl, a, b);
+    not(nl, n)
+}
+
+/// Multiplication: out = a·b.
+pub fn multiply() -> Netlist {
+    let mut nl = Netlist::new();
+    let a = nl.input("a", 0, 1, InputClass::Stochastic);
+    let b = nl.input("b", 0, 1, InputClass::Stochastic);
+    let out = and_rel(&mut nl, a, b);
+    nl.mark_output("out", out);
+    nl
+}
+
+/// Scaled addition: out = s·a + (1−s)·b (s defaults to a 0.5 stream).
+pub fn scaled_add() -> Netlist {
+    let mut nl = Netlist::new();
+    let a = nl.input("a", 0, 1, InputClass::Stochastic);
+    let b = nl.input("b", 0, 1, InputClass::Stochastic);
+    let s = nl.input("s", 0, 1, InputClass::ConstStream);
+    let out = mux_into(&mut nl, s, a, b);
+    nl.mark_output("out", out);
+    nl
+}
+
+/// MUX subcircuit: out = s·a + s̄·b = NAND(NAND(s,a), NAND(s̄,b)).
+pub fn mux_into(nl: &mut Netlist, s: NodeId, a: NodeId, b: NodeId) -> NodeId {
+    let s_bar = not(nl, s);
+    let n1 = nand(nl, s, a);
+    let n2 = nand(nl, s_bar, b);
+    nand(nl, n1, n2)
+}
+
+/// Absolute-value subtraction: out = |a−b| with *correlated* inputs
+/// (XOR = NAND(NAND(a, b̄), NAND(ā, b))).
+pub fn abs_subtract() -> Netlist {
+    let mut nl = Netlist::new();
+    let a = nl.input("a", 0, 1, InputClass::Correlated(0));
+    let b = nl.input("b", 0, 1, InputClass::Correlated(0));
+    let out = xor_into(&mut nl, a, b);
+    nl.mark_output("out", out);
+    nl
+}
+
+/// XOR subcircuit over the reliable set (5 gates).
+pub fn xor_into(nl: &mut Netlist, a: NodeId, b: NodeId) -> NodeId {
+    let a_bar = not(nl, a);
+    let b_bar = not(nl, b);
+    let n1 = nand(nl, a, b_bar);
+    let n2 = nand(nl, a_bar, b);
+    nand(nl, n1, n2)
+}
+
+/// Scaled division: out = a/(a+b) via the JK feedback circuit
+/// (Q' = a·Q̄ + b̄·Q, Q₀=0; output is Q).
+pub fn scaled_divide() -> Netlist {
+    let mut nl = Netlist::new();
+    let a = nl.input("a", 0, 1, InputClass::Stochastic);
+    let b = nl.input("b", 0, 1, InputClass::Stochastic);
+    let out = divide_into(&mut nl, a, b);
+    nl.mark_output("out", out);
+    nl
+}
+
+/// JK divider subcircuit; returns the Q (state) node = output.
+pub fn divide_into(nl: &mut Netlist, a: NodeId, b: NodeId) -> NodeId {
+    // Placeholder delay; re-pointed at q_next below.
+    let q = nl.add(Node::Delay { input: 0, init: false, row: 0 });
+    let q_bar = not(nl, q);
+    let b_bar = not(nl, b);
+    let n1 = nand(nl, a, q_bar);
+    let n2 = nand(nl, b_bar, q);
+    let q_next = nand(nl, n1, n2);
+    if let Node::Delay { input, .. } = &mut nl.nodes[q] {
+        *input = q_next;
+    }
+    q
+}
+
+/// Square root: out = √A from two independently generated copies of A
+/// (ADDIE macro; `counter_bits` trades convergence speed vs resolution).
+pub fn square_root(counter_bits: u32) -> Netlist {
+    let mut nl = Netlist::new();
+    let a1 = nl.input("a1", 0, 1, InputClass::Stochastic);
+    let a2 = nl.input("a2", 0, 1, InputClass::Stochastic);
+    let out = sqrt_into(&mut nl, a1, a2, counter_bits);
+    nl.mark_output("out", out);
+    nl
+}
+
+/// ADDIE sqrt macro node.
+pub fn sqrt_into(nl: &mut Netlist, x1: NodeId, x2: NodeId, counter_bits: u32) -> NodeId {
+    nl.add(Node::Addie { x1, x2, counter_bits, cols: ADDIE_COLS, row: 0 })
+}
+
+/// Exponential e^{−cA} (5th-order Maclaurin, Fig 5f). Inputs: five
+/// independent copies a1..a5 of A and five constant streams c1..c5 of
+/// value c/k.
+pub fn exponential() -> Netlist {
+    let mut nl = Netlist::new();
+    let a: Vec<NodeId> = (0..5)
+        .map(|k| nl.input(&format!("a{}", k + 1), 0, 1, InputClass::Stochastic))
+        .collect();
+    let c: Vec<NodeId> = (0..5)
+        .map(|k| nl.input(&format!("c{}", k + 1), 0, 1, InputClass::ConstStream))
+        .collect();
+    let out = exp_into(&mut nl, &a, &c);
+    nl.mark_output("out", out);
+    nl
+}
+
+/// Exponential subcircuit. `a[k]`/`c[k]` are the k-th independent copy /
+/// constant stream (k = 0..5). Horner from the innermost stage:
+/// acc₅ = NAND(a₅,c₅); acc_k = NAND(NOT(NAND(a_k,c_k)), acc_{k+1}).
+pub fn exp_into(nl: &mut Netlist, a: &[NodeId], c: &[NodeId]) -> NodeId {
+    assert_eq!(a.len(), 5);
+    assert_eq!(c.len(), 5);
+    // Innermost stage: 1 − u₅·1 = NOT(u₅) = NAND(a₅, c₅).
+    let mut acc = nand(nl, a[4], c[4]);
+    for k in (0..4).rev() {
+        let u = and_rel(nl, a[k], c[k]); // u_k = a_k·c_k
+        acc = nand(nl, u, acc); // 1 − u_k·acc
+    }
+    acc
+}
+
+/// Values of the exponential constant streams for a given c.
+pub fn exp_constants(c: f64) -> [f64; 5] {
+    std::array::from_fn(|k| c / (k as f64 + 1.0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netlist::graph::Node;
+
+    #[test]
+    fn multiply_shape() {
+        let nl = multiply();
+        assert_eq!(nl.gate_count(), 2); // NAND + NOT
+        assert_eq!(nl.len(), 4); // +2 inputs → Table 2 "1×4" per lane
+        assert_eq!(nl.depth(), 2);
+    }
+
+    #[test]
+    fn scaled_add_shape() {
+        let nl = scaled_add();
+        assert_eq!(nl.gate_count(), 4);
+        assert_eq!(nl.len(), 7); // Table 2 "1×7" per lane
+    }
+
+    #[test]
+    fn abs_subtract_shape() {
+        let nl = abs_subtract();
+        assert_eq!(nl.gate_count(), 5);
+        assert_eq!(nl.len(), 7);
+    }
+
+    #[test]
+    fn divide_has_feedback_state() {
+        let nl = scaled_divide();
+        assert_eq!(nl.gate_count(), 5);
+        let delays = nl.nodes.iter().filter(|n| matches!(n, Node::Delay { .. })).count();
+        assert_eq!(delays, 1);
+        // Topological order must still succeed (Delay breaks the cycle).
+        assert_eq!(nl.topological_order().len(), nl.len());
+    }
+
+    #[test]
+    fn sqrt_uses_addie_macro() {
+        let nl = square_root(10);
+        let addies = nl.nodes.iter().filter(|n| matches!(n, Node::Addie { .. })).count();
+        assert_eq!(addies, 1);
+        // 2 inputs + macro ⇒ 2 + ADDIE_COLS + output cell ≈ Table 2 "1×10".
+    }
+
+    #[test]
+    fn exponential_shape() {
+        let nl = exponential();
+        assert_eq!(nl.gate_count(), 13); // 1 + 4×3
+        assert_eq!(nl.len(), 23); // 10 inputs + 13 gates
+        assert_eq!(nl.depth(), 6);
+    }
+
+    #[test]
+    fn reliable_gate_subset_only() {
+        for nl in [multiply(), scaled_add(), abs_subtract(), scaled_divide(), exponential()] {
+            for node in &nl.nodes {
+                if let Node::Gate { kind, .. } = node {
+                    assert!(
+                        matches!(kind, GateKind::Nand | GateKind::Not | GateKind::Buff),
+                        "non-reliable gate {kind:?}"
+                    );
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,119 @@
+//! Bit-parallel lane replication (paper §4.1/Fig 7b).
+//!
+//! A stochastic circuit is authored single-lane (`row == 0` everywhere);
+//! to compute a q-bit sub-bitstream bit-parallel, the circuit's gates are
+//! instantiated once per lane (row), while each primary input becomes a
+//! single *column* spanning q rows — one stochastically-written cell per
+//! bit, exactly the vertical PI layout of Algorithm 1 lines 5–8.
+
+use super::graph::{Netlist, Node, NodeId};
+
+/// Replicate a single-lane netlist across `q` rows. Outputs are renamed
+/// `"<name>@<lane>"`. Input nodes are shared (one column, `rows = q`).
+pub fn replicate(nl: &Netlist, q: usize) -> Netlist {
+    assert!(q >= 1);
+    for node in &nl.nodes {
+        assert_eq!(node.row(), 0, "replicate() requires a single-lane netlist");
+    }
+    let mut out = Netlist::new();
+    // Shared PI columns spanning q rows.
+    let mut input_map: Vec<Option<NodeId>> = vec![None; nl.len()];
+    for (id, node) in nl.nodes.iter().enumerate() {
+        if let Node::Input { name, class, .. } = node {
+            input_map[id] = Some(out.input(name, 0, q, *class));
+        }
+    }
+    // Per-lane gate instances.
+    for lane in 0..q {
+        let mut lane_map: Vec<Option<NodeId>> = input_map.clone();
+        // Two passes: allocate ids for Delay placeholders first so
+        // feedback (which points forward) can resolve.
+        for (id, node) in nl.nodes.iter().enumerate() {
+            if let Node::Delay { init, .. } = node {
+                lane_map[id] =
+                    Some(out.add(Node::Delay { input: usize::MAX, init: *init, row: lane }));
+            }
+        }
+        for (id, node) in nl.nodes.iter().enumerate() {
+            match node {
+                Node::Input { .. } | Node::Delay { .. } => {}
+                Node::Gate { kind, ins, .. } => {
+                    let ins2 = ins.iter().map(|&i| lane_map[i].expect("fwd ref")).collect();
+                    lane_map[id] = Some(out.gate(*kind, lane, ins2));
+                }
+                Node::Addie { x1, x2, counter_bits, cols, .. } => {
+                    let id2 = out.add(Node::Addie {
+                        x1: lane_map[*x1].expect("addie x1"),
+                        x2: lane_map[*x2].expect("addie x2"),
+                        counter_bits: *counter_bits,
+                        cols: *cols,
+                        row: lane,
+                    });
+                    lane_map[id] = Some(id2);
+                }
+            }
+        }
+        // Resolve Delay feedback targets now that all lane nodes exist.
+        for (id, node) in nl.nodes.iter().enumerate() {
+            if let Node::Delay { input, .. } = node {
+                let new_id = lane_map[id].unwrap();
+                let target = lane_map[*input].expect("delay target");
+                if let Node::Delay { input: slot, .. } = &mut out.nodes[new_id] {
+                    *slot = target;
+                }
+            }
+        }
+        for (name, oid) in &nl.outputs {
+            let new_oid = lane_map[*oid].expect("output mapped");
+            out.mark_output(&format!("{name}@{lane}"), new_oid);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netlist::ops;
+
+    #[test]
+    fn replicate_multiply_shapes() {
+        let base = ops::multiply();
+        let q = 8;
+        let rep = replicate(&base, q);
+        assert_eq!(rep.gate_count(), base.gate_count() * q);
+        assert_eq!(rep.input_ids().len(), 2); // shared PI columns
+        assert_eq!(rep.outputs.len(), q);
+        assert_eq!(rep.row_extent(), q);
+    }
+
+    #[test]
+    fn replicate_divide_keeps_feedback_per_lane() {
+        let base = ops::scaled_divide();
+        let rep = replicate(&base, 4);
+        // Each lane owns a Delay; feedback resolves within the lane.
+        let delays: Vec<_> = rep
+            .nodes
+            .iter()
+            .enumerate()
+            .filter_map(|(i, n)| match n {
+                Node::Delay { input, row, .. } => Some((i, *input, *row)),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(delays.len(), 4);
+        for (_, input, row) in delays {
+            assert_ne!(input, usize::MAX);
+            assert_eq!(rep.nodes[input].row(), row, "feedback crosses lanes");
+        }
+        // Still topologically sortable.
+        assert_eq!(rep.topological_order().len(), rep.len());
+    }
+
+    #[test]
+    fn replicate_depth_unchanged() {
+        let base = ops::exponential();
+        let rep = replicate(&base, 16);
+        assert_eq!(rep.depth(), base.depth());
+    }
+}

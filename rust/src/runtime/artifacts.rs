@@ -1,0 +1,69 @@
+//! Artifact registry: the manifest written by `python -m compile.aot`
+//! (name, n_inputs, batch, bl per line) and artifact path resolution.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub n_inputs: usize,
+    pub batch: usize,
+    pub bl: usize,
+}
+
+impl ArtifactSpec {
+    pub fn path(&self, dir: &Path) -> PathBuf {
+        dir.join(format!("{}.hlo.txt", self.name))
+    }
+}
+
+/// Parse `manifest.txt` in `dir`.
+pub fn load_manifest(dir: &Path) -> Result<Vec<ArtifactSpec>> {
+    let path = dir.join("manifest.txt");
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+    let mut specs = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let parts: Vec<&str> = line.split_whitespace().collect();
+        if parts.len() != 4 {
+            bail!("manifest line {}: expected 4 fields, got {}", i + 1, parts.len());
+        }
+        specs.push(ArtifactSpec {
+            name: parts[0].to_string(),
+            n_inputs: parts[1].parse().context("n_inputs")?,
+            batch: parts[2].parse().context("batch")?,
+            bl: parts[3].parse().context("bl")?,
+        });
+    }
+    Ok(specs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_manifest_lines() {
+        let dir = std::env::temp_dir().join("stoch_imc_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.txt"), "op_multiply 2 64 256\napp_ol 6 64 256\n")
+            .unwrap();
+        let specs = load_manifest(&dir).unwrap();
+        assert_eq!(specs.len(), 2);
+        assert_eq!(specs[0].name, "op_multiply");
+        assert_eq!(specs[1].n_inputs, 6);
+        assert_eq!(specs[0].path(&dir).file_name().unwrap(), "op_multiply.hlo.txt");
+    }
+
+    #[test]
+    fn missing_manifest_is_informative() {
+        let err = load_manifest(Path::new("/nonexistent")).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

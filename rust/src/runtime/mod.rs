@@ -1,0 +1,27 @@
+//! S14 — PJRT runtime: artifact registry + execution engine.
+//!
+//! Pattern (see /opt/xla-example): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `compile` → `execute`. HLO *text*
+//! is the interchange format (64-bit-id proto incompatibility — see
+//! python/compile/aot.py).
+
+pub mod artifacts;
+pub mod client;
+
+pub use artifacts::{load_manifest, ArtifactSpec};
+pub use client::Engine;
+
+use anyhow::Result;
+
+/// Smoke helper kept for the round-trip integration test: loads a 2×2
+/// matmul HLO artifact and executes it.
+pub fn smoke(path: &str) -> Result<Vec<f32>> {
+    let client = xla::PjRtClient::cpu()?;
+    let proto = xla::HloModuleProto::from_text_file(path)?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    let exe = client.compile(&comp)?;
+    let x = xla::Literal::vec1(&[1f32, 2., 3., 4.]).reshape(&[2, 2])?;
+    let y = xla::Literal::vec1(&[1f32, 1., 1., 1.]).reshape(&[2, 2])?;
+    let result = exe.execute::<xla::Literal>(&[x, y])?[0][0].to_literal_sync()?;
+    Ok(result.to_tuple1()?.to_vec::<f32>()?)
+}

@@ -1,0 +1,303 @@
+//! Packed bitstream representation for stochastic numbers.
+//!
+//! A stochastic number (SN) in unipolar encoding is a bitstream whose
+//! fraction of 1s equals its value (§2.3). We pack 64 bits per word so
+//! the L3 functional simulator's logic ops run 64 lanes per instruction —
+//! this is the Rust-side analogue of the paper's bit-parallel subarrays
+//! and is the hot path of the fault-injection and accuracy experiments.
+
+use crate::util::prng::Xoshiro256;
+
+/// A fixed-length packed bitstream.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Bitstream {
+    len: usize,
+    words: Vec<u64>,
+}
+
+impl Bitstream {
+    /// All-zero bitstream of length `len`.
+    pub fn zeros(len: usize) -> Self {
+        Self { len, words: vec![0; len.div_ceil(64)] }
+    }
+
+    /// All-one bitstream of length `len`.
+    pub fn ones(len: usize) -> Self {
+        let mut bs = Self::zeros(len);
+        for w in bs.words.iter_mut() {
+            *w = u64::MAX;
+        }
+        bs.mask_tail();
+        bs
+    }
+
+    /// Build from a bool slice.
+    pub fn from_bits(bits: &[bool]) -> Self {
+        let mut bs = Self::zeros(bits.len());
+        for (i, &b) in bits.iter().enumerate() {
+            if b {
+                bs.set(i, true);
+            }
+        }
+        bs
+    }
+
+    /// Bernoulli-sample a bitstream of value `p` (this models the MTJ
+    /// stochastic write: each cell switches independently with P_sw = p).
+    pub fn sample(p: f64, len: usize, rng: &mut Xoshiro256) -> Self {
+        let mut bs = Self::zeros(len);
+        for i in 0..len {
+            if rng.bernoulli(p) {
+                bs.set(i, true);
+            }
+        }
+        bs
+    }
+
+    /// Sample using shared uniforms (for *correlated* bitstreams: two SNs
+    /// generated from the same uniform sequence have maximal positive
+    /// correlation, which the absolute-value subtractor requires, §4.1).
+    pub fn from_uniforms(p: f64, uniforms: &[f64]) -> Self {
+        let mut bs = Self::zeros(uniforms.len());
+        for (i, &u) in uniforms.iter().enumerate() {
+            if u < p {
+                bs.set(i, true);
+            }
+        }
+        bs
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        (self.words[i / 64] >> (i % 64)) & 1 == 1
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, v: bool) {
+        debug_assert!(i < self.len);
+        let (w, b) = (i / 64, i % 64);
+        if v {
+            self.words[w] |= 1u64 << b;
+        } else {
+            self.words[w] &= !(1u64 << b);
+        }
+    }
+
+    /// Flip bit `i` (used by the fault injector).
+    #[inline]
+    pub fn flip(&mut self, i: usize) {
+        debug_assert!(i < self.len);
+        self.words[i / 64] ^= 1u64 << (i % 64);
+    }
+
+    /// Number of 1s (the StoB conversion of §2.3 step 3).
+    pub fn popcount(&self) -> u64 {
+        self.words.iter().map(|w| w.count_ones() as u64).sum()
+    }
+
+    /// Unipolar value = popcount / len.
+    pub fn value(&self) -> f64 {
+        if self.len == 0 {
+            return 0.0;
+        }
+        self.popcount() as f64 / self.len as f64
+    }
+
+    /// Zero any bits beyond `len` in the last word (keeps popcount exact).
+    fn mask_tail(&mut self) {
+        let tail = self.len % 64;
+        if tail != 0 {
+            if let Some(last) = self.words.last_mut() {
+                *last &= (1u64 << tail) - 1;
+            }
+        }
+    }
+
+    fn zip_with(&self, other: &Self, f: impl Fn(u64, u64) -> u64) -> Self {
+        assert_eq!(self.len, other.len, "bitstream length mismatch");
+        let words = self
+            .words
+            .iter()
+            .zip(&other.words)
+            .map(|(&a, &b)| f(a, b))
+            .collect();
+        let mut out = Self { len: self.len, words };
+        out.mask_tail();
+        out
+    }
+
+    /// AND — stochastic multiplication of independent unipolar SNs.
+    pub fn and(&self, other: &Self) -> Self {
+        self.zip_with(other, |a, b| a & b)
+    }
+
+    /// OR.
+    pub fn or(&self, other: &Self) -> Self {
+        self.zip_with(other, |a, b| a | b)
+    }
+
+    /// XOR — absolute-value subtraction for *correlated* unipolar SNs.
+    pub fn xor(&self, other: &Self) -> Self {
+        self.zip_with(other, |a, b| a ^ b)
+    }
+
+    /// NAND.
+    pub fn nand(&self, other: &Self) -> Self {
+        let mut out = self.zip_with(other, |a, b| !(a & b));
+        out.mask_tail();
+        out
+    }
+
+    /// NOR.
+    pub fn nor(&self, other: &Self) -> Self {
+        let mut out = self.zip_with(other, |a, b| !(a | b));
+        out.mask_tail();
+        out
+    }
+
+    /// NOT — complement (1 - x in unipolar).
+    pub fn not(&self) -> Self {
+        let words = self.words.iter().map(|&a| !a).collect();
+        let mut out = Self { len: self.len, words };
+        out.mask_tail();
+        out
+    }
+
+    /// MUX(select, a, b) = select ? a : b — scaled addition
+    /// s·a + (1-s)·b when `select` is an SN of value s (§2.3 Fig 4a).
+    pub fn mux(select: &Self, a: &Self, b: &Self) -> Self {
+        assert_eq!(select.len, a.len);
+        assert_eq!(select.len, b.len);
+        let words = select
+            .words
+            .iter()
+            .zip(a.words.iter().zip(&b.words))
+            .map(|(&s, (&x, &y))| (s & x) | (!s & y))
+            .collect();
+        let mut out = Self { len: select.len, words };
+        out.mask_tail();
+        out
+    }
+
+    /// Iterate bits as bools (for scan-style sequential circuits).
+    pub fn iter_bits(&self) -> impl Iterator<Item = bool> + '_ {
+        (0..self.len).map(move |i| self.get(i))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::forall;
+
+    #[test]
+    fn zeros_ones_values() {
+        assert_eq!(Bitstream::zeros(100).value(), 0.0);
+        assert_eq!(Bitstream::ones(100).value(), 1.0);
+        assert_eq!(Bitstream::ones(100).popcount(), 100);
+    }
+
+    #[test]
+    fn tail_masking_exact() {
+        // Non-multiple-of-64 lengths must not leak tail bits.
+        for len in [1, 63, 64, 65, 127, 255, 256, 1000] {
+            let bs = Bitstream::ones(len);
+            assert_eq!(bs.popcount() as usize, len, "len={len}");
+            let notted = Bitstream::zeros(len).not();
+            assert_eq!(notted.popcount() as usize, len);
+        }
+    }
+
+    #[test]
+    fn set_get_flip_roundtrip() {
+        let mut bs = Bitstream::zeros(130);
+        bs.set(0, true);
+        bs.set(64, true);
+        bs.set(129, true);
+        assert!(bs.get(0) && bs.get(64) && bs.get(129));
+        assert_eq!(bs.popcount(), 3);
+        bs.flip(64);
+        assert!(!bs.get(64));
+        assert_eq!(bs.popcount(), 2);
+    }
+
+    #[test]
+    fn sample_value_close_to_p() {
+        let mut rng = Xoshiro256::seeded(17);
+        for &p in &[0.1, 0.5, 0.9] {
+            let bs = Bitstream::sample(p, 65536, &mut rng);
+            assert!((bs.value() - p).abs() < 0.01, "p={p} got={}", bs.value());
+        }
+    }
+
+    #[test]
+    fn and_multiplies_independent() {
+        forall(0xB17, 50, |g| {
+            let pa = g.f64_in(0.05, 0.95);
+            let pb = g.f64_in(0.05, 0.95);
+            let mut rng = Xoshiro256::seeded(g.u64_below(u64::MAX - 1));
+            let a = Bitstream::sample(pa, 32768, &mut rng);
+            let b = Bitstream::sample(pb, 32768, &mut rng);
+            let prod = a.and(&b).value();
+            assert!((prod - pa * pb).abs() < 0.02, "pa={pa} pb={pb} prod={prod}");
+        });
+    }
+
+    #[test]
+    fn xor_correlated_is_abs_difference() {
+        forall(0x5E1, 50, |g| {
+            let pa = g.f64_in(0.0, 1.0);
+            let pb = g.f64_in(0.0, 1.0);
+            let mut rng = Xoshiro256::seeded(g.u64_below(u64::MAX - 1));
+            let mut us = vec![0.0; 32768];
+            rng.fill_f64(&mut us);
+            let a = Bitstream::from_uniforms(pa, &us);
+            let b = Bitstream::from_uniforms(pb, &us);
+            let d = a.xor(&b).value();
+            assert!((d - (pa - pb).abs()).abs() < 0.02);
+        });
+    }
+
+    #[test]
+    fn mux_is_scaled_addition() {
+        forall(0x3A2, 50, |g| {
+            let pa = g.f64_in(0.0, 1.0);
+            let pb = g.f64_in(0.0, 1.0);
+            let mut rng = Xoshiro256::seeded(g.u64_below(u64::MAX - 1));
+            let s = Bitstream::sample(0.5, 32768, &mut rng);
+            let a = Bitstream::sample(pa, 32768, &mut rng);
+            let b = Bitstream::sample(pb, 32768, &mut rng);
+            let sum = Bitstream::mux(&s, &a, &b).value();
+            assert!((sum - 0.5 * (pa + pb)).abs() < 0.02);
+        });
+    }
+
+    #[test]
+    fn not_is_complement() {
+        let mut rng = Xoshiro256::seeded(23);
+        let a = Bitstream::sample(0.3, 32768, &mut rng);
+        assert!((a.not().value() - (1.0 - a.value())).abs() < 1e-12);
+    }
+
+    #[test]
+    fn demorgan_nand_nor() {
+        let mut rng = Xoshiro256::seeded(29);
+        let a = Bitstream::sample(0.4, 1024, &mut rng);
+        let b = Bitstream::sample(0.6, 1024, &mut rng);
+        assert_eq!(a.nand(&b), a.and(&b).not());
+        assert_eq!(a.nor(&b), a.or(&b).not());
+    }
+}

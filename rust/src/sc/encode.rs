@@ -1,0 +1,109 @@
+//! Binary ↔ stochastic conversion (steps 1 and 3 of an SC system, §2.3).
+//!
+//! Step 1 (BtoS) in Stoch-IMC is performed by the intrinsic stochastic
+//! switching of the MTJ: the bank's BtoS memory maps an 8-bit binary
+//! value to a (V_p, t_p) pulse whose switching probability equals the
+//! value (see `arch::btos`). Functionally that is a Bernoulli sample per
+//! cell, which is what [`encode`] does. Step 3 (StoB) is a popcount.
+
+use super::bitstream::Bitstream;
+use crate::util::prng::Xoshiro256;
+
+/// Quantize a real value in [0,1] to `resolution`-bit fixed point, the
+/// precision the paper's 8-bit binary baseline uses.
+pub fn quantize(value: f64, resolution: u32) -> f64 {
+    let steps = (1u64 << resolution) as f64;
+    (value.clamp(0.0, 1.0) * steps).round() / steps
+}
+
+/// Encode a value in [0,1] as an SN of length `len` (independent draw).
+pub fn encode(value: f64, len: usize, rng: &mut Xoshiro256) -> Bitstream {
+    Bitstream::sample(value.clamp(0.0, 1.0), len, rng)
+}
+
+/// Encode several values against a *shared* uniform sequence, producing
+/// maximally-correlated bitstreams (required by absolute-value
+/// subtraction, §4.1).
+pub fn encode_correlated(values: &[f64], len: usize, rng: &mut Xoshiro256) -> Vec<Bitstream> {
+    let mut us = vec![0.0; len];
+    rng.fill_f64(&mut us);
+    values
+        .iter()
+        .map(|&v| Bitstream::from_uniforms(v.clamp(0.0, 1.0), &us))
+        .collect()
+}
+
+/// StoB: decode an SN to its unipolar value (popcount / len).
+pub fn decode(bs: &Bitstream) -> f64 {
+    bs.value()
+}
+
+/// Stochastic correlation coefficient (SCC, Alaghi & Hayes) between two
+/// bitstreams — used by tests to verify correlated vs independent
+/// generation. SCC = +1 for maximally correlated, ~0 for independent.
+pub fn scc(a: &Bitstream, b: &Bitstream) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let n = a.len() as f64;
+    let p_a = a.value();
+    let p_b = b.value();
+    let p_ab = a.and(b).popcount() as f64 / n;
+    let delta = p_ab - p_a * p_b;
+    if delta.abs() < 1e-12 {
+        return 0.0;
+    }
+    if delta > 0.0 {
+        delta / (p_a.min(p_b) - p_a * p_b).max(1e-12)
+    } else {
+        delta / (p_a * p_b - (p_a + p_b - 1.0).max(0.0)).max(1e-12)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::forall;
+
+    #[test]
+    fn quantize_8bit() {
+        assert_eq!(quantize(0.5, 8), 0.5);
+        assert!((quantize(0.7, 8) - 0.69921875).abs() < 1e-9);
+        assert_eq!(quantize(-0.1, 8), 0.0);
+        assert_eq!(quantize(1.5, 8), 1.0);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_statistical() {
+        forall(0xE2C, 40, |g| {
+            let v = g.f64_in(0.0, 1.0);
+            let mut rng = Xoshiro256::seeded(g.u64_below(1 << 62));
+            let bs = encode(v, 65536, &mut rng);
+            assert!((decode(&bs) - v).abs() < 0.01);
+        });
+    }
+
+    #[test]
+    fn correlated_streams_have_scc_one() {
+        let mut rng = Xoshiro256::seeded(41);
+        let vs = encode_correlated(&[0.3, 0.7], 65536, &mut rng);
+        let s = scc(&vs[0], &vs[1]);
+        assert!(s > 0.95, "scc={s}");
+    }
+
+    #[test]
+    fn independent_streams_have_scc_near_zero() {
+        let mut rng = Xoshiro256::seeded(43);
+        let a = encode(0.5, 65536, &mut rng);
+        let b = encode(0.5, 65536, &mut rng);
+        let s = scc(&a, &b);
+        assert!(s.abs() < 0.05, "scc={s}");
+    }
+
+    #[test]
+    fn correlated_values_exact_ordering() {
+        // With shared uniforms, the smaller-valued stream is a subset of
+        // the larger one: AND(a,b) == min-stream exactly.
+        let mut rng = Xoshiro256::seeded(47);
+        let vs = encode_correlated(&[0.2, 0.9], 4096, &mut rng);
+        assert_eq!(vs[0].and(&vs[1]), vs[0]);
+    }
+}

@@ -1,0 +1,232 @@
+//! Functional (bitstream-level) models of the six stochastic arithmetic
+//! operations of paper Fig 4/Fig 5. These are the *oracles* for the
+//! in-memory implementations: the netlists of `netlist::ops` scheduled by
+//! Algorithm 1 and executed on the `imc` subarray simulator must produce
+//! the same values; the JAX/Pallas artifacts must agree too.
+//!
+//! Feed-forward ops are pure word-parallel bit ops. Scaled division and
+//! square root contain feedback (state across bit positions) and are
+//! evaluated bit-sequentially, exactly as `lax.scan` does on the L2 side.
+//!
+//! Divider derivation: a JK flip-flop with J=a_i, K=b_i has characteristic
+//! Q' = J·Q̄ + K̄·Q; its two-state Markov chain moves up from 0 w.p. P(a)
+//! and down from 1 w.p. P(b), so the stationary P(Q=1) = a/(a+b) — the
+//! scaled division the paper's HDP application needs (Eq 8).
+//!
+//! Square-root derivation (ADDIE, Gaines): integrator value v, output
+//! y_i ~ Bernoulli(v), update ΔC = x_i − y_i·y'_i with independent output
+//! samples y, y'; E[ΔC] = x − v² = 0 ⇒ v = √x. The paper's Fig 5e circuit
+//! (from [16,20]) uses two independently generated copies A1, A2 of x and
+//! two constant streams; we keep the same input signature.
+
+use super::bitstream::Bitstream;
+use crate::util::prng::Xoshiro256;
+
+/// Scaled addition (Fig 4a/5a): out = s·a + (1-s)·b via MUX.
+/// `s` is usually a 0.5-valued SN.
+pub fn scaled_add(a: &Bitstream, b: &Bitstream, s: &Bitstream) -> Bitstream {
+    Bitstream::mux(s, a, b)
+}
+
+/// Multiplication (Fig 4b/5b): AND of independent SNs.
+pub fn multiply(a: &Bitstream, b: &Bitstream) -> Bitstream {
+    a.and(b)
+}
+
+/// Absolute-value subtraction (Fig 4c/5c): XOR of *correlated* SNs.
+/// In the gate-level realization XOR = OR(AND(a, NOT b), AND(NOT a, b)).
+pub fn abs_subtract_correlated(a: &Bitstream, b: &Bitstream) -> Bitstream {
+    a.xor(b)
+}
+
+/// Scaled division (Fig 4d/5d): out = a/(a+b) via the JK feedback
+/// circuit, Q' = (a AND NOT Q) OR (NOT b AND Q), Q0 = 0 (the paper:
+/// "Q should be initially set to zero").
+pub fn scaled_divide(a: &Bitstream, b: &Bitstream) -> Bitstream {
+    assert_eq!(a.len(), b.len());
+    let mut q = false;
+    let mut out = Bitstream::zeros(a.len());
+    for i in 0..a.len() {
+        out.set(i, q);
+        q = (a.get(i) && !q) || (!b.get(i) && q);
+    }
+    out
+}
+
+/// ADDIE (adaptive digital element, Gaines): a saturating counter whose
+/// normalized value v is emitted as Bernoulli(v) samples. With the update
+/// ΔC = x − y·y′ it settles at v = √E[x]. Shared between the functional
+/// oracle below and the netlist evaluator's `Addie` macro node so both
+/// produce bit-identical outputs.
+#[derive(Debug, Clone)]
+pub struct Addie {
+    max: u64,
+    c: u64,
+    rng: Xoshiro256,
+}
+
+impl Addie {
+    pub fn new(counter_bits: u32, seed: u64) -> Self {
+        let max = 1u64 << counter_bits;
+        Self { max, c: max / 2, rng: Xoshiro256::seeded(seed) }
+    }
+
+    /// Feed one input bit, emit one output bit.
+    pub fn step(&mut self, x: bool) -> bool {
+        let y = self.rng.next_below(self.max) < self.c;
+        let y2 = self.rng.next_below(self.max) < self.c;
+        if x && self.c < self.max {
+            self.c += 1;
+        }
+        if y && y2 && self.c > 0 {
+            self.c -= 1;
+        }
+        y
+    }
+
+    /// Current integrator value in [0,1].
+    pub fn value(&self) -> f64 {
+        self.c as f64 / self.max as f64
+    }
+}
+
+/// Default ADDIE seed: keeps oracle and netlist evaluation bit-identical.
+pub const ADDIE_SEED: u64 = 0x5137_1A57;
+
+/// Square root (Fig 5e): out = sqrt(A) via an ADDIE integrator. `a1` and
+/// `a2` are two independently generated SNs of the same value (the
+/// paper's note on Fig 5e); the two copies are consumed alternately. The
+/// integrator resolution is `counter_bits` (10 via [`square_root`]).
+pub fn square_root_with(a1: &Bitstream, a2: &Bitstream, counter_bits: u32, seed: u64) -> Bitstream {
+    assert_eq!(a1.len(), a2.len());
+    let mut addie = Addie::new(counter_bits, seed);
+    let mut out = Bitstream::zeros(a1.len());
+    for i in 0..a1.len() {
+        let x = if i % 2 == 0 { a1.get(i) } else { a2.get(i) };
+        out.set(i, addie.step(x));
+    }
+    out
+}
+
+/// Square root with the default 10-bit integrator (deterministic seed).
+pub fn square_root(a1: &Bitstream, a2: &Bitstream) -> Bitstream {
+    square_root_with(a1, a2, 10, ADDIE_SEED)
+}
+
+/// Exponential e^{-cA}, 0 < c ≤ 1, via the 5th-order Maclaurin expansion
+/// (paper Fig 5f, citing [20]):
+///   e^{-cx} ≈ 1 - cx(1 - (cx/2)(1 - (cx/3)(1 - (cx/4)(1 - cx/5))))
+/// Each Horner stage is 1 - u·v = NOT(AND(u, v)) with independent
+/// streams. `a[k]` are five independent SNs of value A and `c_streams[k]`
+/// five independent SNs of value c/(k+1).
+pub fn exponential(a: &[Bitstream; 5], c_streams: &[Bitstream; 5]) -> Bitstream {
+    let len = a[0].len();
+    let mut acc = Bitstream::ones(len); // innermost "1"
+    for k in (0..5).rev() {
+        let cx = a[k].and(&c_streams[k]); // value = A·c/(k+1)
+        acc = cx.and(&acc).not(); // 1 - (A·c/(k+1))·acc
+    }
+    acc
+}
+
+/// Generate the five constant streams C_k = c/(k+1) for e^{-cA}.
+pub fn exp_constant_streams(c: f64, len: usize, rng: &mut Xoshiro256) -> [Bitstream; 5] {
+    std::array::from_fn(|k| Bitstream::sample(c / (k as f64 + 1.0), len, rng))
+}
+
+/// Five independent SNs of the same value (exponential inputs).
+pub fn independent_copies(p: f64, len: usize, rng: &mut Xoshiro256) -> [Bitstream; 5] {
+    std::array::from_fn(|_| Bitstream::sample(p, len, rng))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::forall;
+
+    const LEN: usize = 65536;
+
+    #[test]
+    fn scaled_add_converges() {
+        forall(0xADD, 30, |g| {
+            let (pa, pb) = (g.f64_in(0.0, 1.0), g.f64_in(0.0, 1.0));
+            let mut rng = Xoshiro256::seeded(g.u64_below(1 << 62));
+            let a = Bitstream::sample(pa, LEN, &mut rng);
+            let b = Bitstream::sample(pb, LEN, &mut rng);
+            let s = Bitstream::sample(0.5, LEN, &mut rng);
+            let got = scaled_add(&a, &b, &s).value();
+            assert!((got - 0.5 * (pa + pb)).abs() < 0.015);
+        });
+    }
+
+    #[test]
+    fn multiply_converges() {
+        forall(0x301, 30, |g| {
+            let (pa, pb) = (g.f64_in(0.0, 1.0), g.f64_in(0.0, 1.0));
+            let mut rng = Xoshiro256::seeded(g.u64_below(1 << 62));
+            let a = Bitstream::sample(pa, LEN, &mut rng);
+            let b = Bitstream::sample(pb, LEN, &mut rng);
+            assert!((multiply(&a, &b).value() - pa * pb).abs() < 0.015);
+        });
+    }
+
+    #[test]
+    fn divide_converges_to_a_over_a_plus_b() {
+        forall(0xD1, 30, |g| {
+            let pa = g.f64_in(0.05, 0.95);
+            let pb = g.f64_in(0.05, 0.95);
+            let mut rng = Xoshiro256::seeded(g.u64_below(1 << 62));
+            let a = Bitstream::sample(pa, LEN, &mut rng);
+            let b = Bitstream::sample(pb, LEN, &mut rng);
+            let got = scaled_divide(&a, &b).value();
+            let want = pa / (pa + pb);
+            assert!((got - want).abs() < 0.03, "pa={pa} pb={pb} got={got} want={want}");
+        });
+    }
+
+    #[test]
+    fn divide_symmetric_inputs_give_half() {
+        let mut rng = Xoshiro256::seeded(31);
+        let a = Bitstream::sample(0.8, LEN, &mut rng);
+        let b = Bitstream::sample(0.8, LEN, &mut rng);
+        assert!((scaled_divide(&a, &b).value() - 0.5).abs() < 0.02);
+    }
+
+    #[test]
+    fn sqrt_converges() {
+        forall(0x509, 30, |g| {
+            let p = g.f64_in(0.02, 0.98);
+            let mut rng = Xoshiro256::seeded(g.u64_below(1 << 62));
+            let a1 = Bitstream::sample(p, LEN, &mut rng);
+            let a2 = Bitstream::sample(p, LEN, &mut rng);
+            let got = square_root(&a1, &a2).value();
+            assert!((got - p.sqrt()).abs() < 0.05, "p={p} got={got} want={}", p.sqrt());
+        });
+    }
+
+    #[test]
+    fn exponential_converges() {
+        forall(0xE4, 30, |g| {
+            let p = g.f64_in(0.0, 1.0);
+            let c = g.f64_in(0.2, 1.0);
+            let mut rng = Xoshiro256::seeded(g.u64_below(1 << 62));
+            let a = independent_copies(p, LEN, &mut rng);
+            let cs = exp_constant_streams(c, LEN, &mut rng);
+            let got = exponential(&a, &cs).value();
+            let want = (-c * p).exp();
+            assert!((got - want).abs() < 0.03, "p={p} c={c} got={got} want={want}");
+        });
+    }
+
+    #[test]
+    fn exponential_maclaurin_truncation_behaviour() {
+        // At c=1, p=1 the 5th-order expansion overshoots e^{-1} slightly;
+        // check we match the *expansion*, not the true exponential.
+        let mut rng = Xoshiro256::seeded(77);
+        let a = independent_copies(1.0, LEN, &mut rng);
+        let cs = exp_constant_streams(1.0, LEN, &mut rng);
+        let got = exponential(&a, &cs).value();
+        let expansion = 1.0 - 1.0 * (1.0 - 0.5 * (1.0 - (1.0 / 3.0) * (1.0 - 0.25 * (1.0 - 0.2))));
+        assert!((got - expansion).abs() < 0.02, "got={got} want={expansion}");
+    }
+}

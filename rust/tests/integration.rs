@@ -1,0 +1,99 @@
+//! Cross-layer integration tests: coordinator → PJRT artifacts → values
+//! matching the L3 functional models, plus the full Algorithm-1 →
+//! subarray-execution → oracle chain on a workload.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use stoch_imc::coordinator::{BatcherConfig, Coordinator};
+use stoch_imc::netlist::{eval::eval_stochastic, ops, replicate::replicate};
+use stoch_imc::sc::bitstream::Bitstream;
+use stoch_imc::scheduler::algorithm1::{schedule, Options};
+use stoch_imc::scheduler::validate::validate;
+use stoch_imc::util::prng::Xoshiro256;
+
+fn subset_dir(names: &[&str]) -> Option<PathBuf> {
+    let src = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !src.join("manifest.txt").exists() {
+        return None; // artifacts not built — skip
+    }
+    let manifest = std::fs::read_to_string(src.join("manifest.txt")).ok()?;
+    let dir = std::env::temp_dir().join(format!("stoch_imc_it_{}", names.join("_")));
+    std::fs::create_dir_all(&dir).ok()?;
+    let mut lines = Vec::new();
+    for n in names {
+        let line = manifest.lines().find(|l| l.starts_with(n))?;
+        lines.push(line.to_string());
+        std::fs::copy(src.join(format!("{n}.hlo.txt")), dir.join(format!("{n}.hlo.txt"))).ok()?;
+    }
+    std::fs::write(dir.join("manifest.txt"), lines.join("\n") + "\n").ok()?;
+    Some(dir)
+}
+
+#[test]
+fn coordinator_ops_match_closed_forms() {
+    let Some(dir) = subset_dir(&["op_multiply", "op_scaled_add", "op_scaled_divide"]) else {
+        return;
+    };
+    let coord = Coordinator::start(&dir, BatcherConfig::default()).unwrap();
+    let pairs: Vec<Vec<f64>> = vec![
+        vec![0.2, 0.9],
+        vec![0.5, 0.5],
+        vec![0.8, 0.3],
+        vec![0.95, 0.95],
+    ];
+    let mul = coord.run_workload("op_multiply", &pairs).unwrap();
+    let add = coord.run_workload("op_scaled_add", &pairs).unwrap();
+    let div = coord.run_workload("op_scaled_divide", &pairs).unwrap();
+    for (i, p) in pairs.iter().enumerate() {
+        assert!((mul[i] - p[0] * p[1]).abs() < 0.07, "mul {i}: {}", mul[i]);
+        assert!((add[i] - (p[0] + p[1]) / 2.0).abs() < 0.07, "add {i}");
+        assert!((div[i] - p[0] / (p[0] + p[1])).abs() < 0.09, "div {i}: {}", div[i]);
+    }
+    // Batching metrics recorded.
+    let m = coord.metrics("op_multiply");
+    assert_eq!(m.requests, 4);
+    assert!(m.waves >= 1);
+}
+
+#[test]
+fn schedule_execute_oracle_chain_on_workload() {
+    // Algorithm 1 schedule → cell-level subarray execution → functional
+    // oracle, for a batch of multiply instances (bit-exact equality).
+    let mut rng = Xoshiro256::seeded(0xC0DE);
+    let base = ops::multiply();
+    let q = 64;
+    let rep = replicate(&base, q);
+    let sched = schedule(&rep, &Options::default());
+    assert!(validate(&rep, &sched, 256, 256).is_empty());
+    for case in 0..8 {
+        let a = 0.1 + 0.1 * case as f64;
+        let mut inputs = HashMap::new();
+        inputs.insert("a".to_string(), Bitstream::sample(a, 256, &mut rng));
+        inputs.insert("b".to_string(), Bitstream::sample(0.7, 256, &mut rng));
+        let mut array = stoch_imc::imc::Subarray::new(q, sched.cols_used);
+        let (got, _) = stoch_imc::imc::execute_replicated(
+            &base, &rep, &sched, &inputs, q, &mut array, &mut rng,
+        );
+        let want = eval_stochastic(&base, &inputs);
+        assert_eq!(got["out"], want["out"], "case {case}");
+    }
+}
+
+#[test]
+fn app_artifact_matches_l3_functional_model() {
+    use stoch_imc::apps::App;
+    let Some(dir) = subset_dir(&["app_ol"]) else { return };
+    let coord = Coordinator::start(&dir, BatcherConfig::default()).unwrap();
+    let app = stoch_imc::apps::ol::Ol::default();
+    let w = app.workload(32, 7);
+    let outs = coord.run_workload("app_ol", &w).unwrap();
+    let mut rng = Xoshiro256::seeded(3);
+    for (x, o) in w.iter().zip(&outs) {
+        let l3 = app.stoch_value(x, 4096, &mut rng, 0.0);
+        let float = app.float_ref(x);
+        // Both layers approximate the same function.
+        assert!((o - float).abs() < 0.08, "pjrt {o} vs float {float}");
+        assert!((l3 - float).abs() < 0.08, "l3 {l3} vs float {float}");
+    }
+}

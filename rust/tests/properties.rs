@@ -1,0 +1,141 @@
+//! Property-based tests on the coordinator-facing invariants: scheduler
+//! correctness over random netlists, value-model agreement, batcher
+//! conservation, and fault-injection monotonicity.
+
+use std::collections::HashMap;
+
+use stoch_imc::netlist::{
+    eval::eval_stochastic, graph::InputClass, ops, replicate::replicate, GateKind, Netlist,
+};
+use stoch_imc::sc::bitstream::Bitstream;
+use stoch_imc::scheduler::algorithm1::{schedule, Mode, Options};
+use stoch_imc::scheduler::validate::validate;
+use stoch_imc::util::check::{forall, Gen};
+use stoch_imc::util::prng::Xoshiro256;
+
+/// Random feed-forward netlist over the reliable gate set.
+fn random_netlist(g: &mut Gen) -> Netlist {
+    let mut nl = Netlist::new();
+    let n_inputs = g.usize_in(2, 6);
+    let mut pool: Vec<usize> = (0..n_inputs)
+        .map(|i| nl.input(&format!("x{i}"), 0, 1, InputClass::Stochastic))
+        .collect();
+    let n_gates = g.usize_in(3, 25);
+    for _ in 0..n_gates {
+        let a = *g.choose(&pool);
+        let kind = *g.choose(&[GateKind::Nand, GateKind::Not, GateKind::Buff]);
+        let id = match kind {
+            GateKind::Nand => {
+                let b = *g.choose(&pool);
+                if b == a {
+                    nl.gate(GateKind::Not, 0, vec![a]) // avoid same-cell NAND
+                } else {
+                    nl.gate(GateKind::Nand, 0, vec![a, b])
+                }
+            }
+            k => nl.gate(k, 0, vec![a]),
+        };
+        pool.push(id);
+    }
+    let out = *pool.last().unwrap();
+    nl.mark_output("out", out);
+    nl
+}
+
+#[test]
+fn prop_scheduler_valid_on_random_netlists() {
+    forall(0x5EED1, 60, |g| {
+        let base = random_netlist(g);
+        let q = g.usize_in(1, 32);
+        let rep = replicate(&base, q);
+        for mode in [Mode::Asap, Mode::LayerStrict] {
+            let s = schedule(&rep, &Options { mode });
+            let viol = validate(&rep, &s, 1 << 20, 1 << 20);
+            assert!(viol.is_empty(), "{mode:?}: {viol:?}");
+            assert_eq!(s.rows_used, q.max(1));
+        }
+    });
+}
+
+#[test]
+fn prop_array_execution_matches_eval_on_random_netlists() {
+    forall(0x5EED2, 25, |g| {
+        let base = random_netlist(g);
+        let q = g.usize_in(1, 16);
+        let rep = replicate(&base, q);
+        let s = schedule(&rep, &Options::default());
+        let mut rng = Xoshiro256::seeded(g.u64_below(1 << 62));
+        let mut inputs = HashMap::new();
+        for (_i, node) in base.nodes.iter().enumerate() {
+            if let stoch_imc::netlist::Node::Input { name, .. } = node {
+                inputs.insert(name.clone(), Bitstream::sample(rng.next_f64(), 64, &mut rng));
+            }
+        }
+        let mut array = stoch_imc::imc::Subarray::new(q, s.cols_used);
+        let (got, _) = stoch_imc::imc::execute_replicated(
+            &base, &rep, &s, &inputs, q, &mut array, &mut rng,
+        );
+        let want = eval_stochastic(&base, &inputs);
+        assert_eq!(got["out"], want["out"]);
+    });
+}
+
+#[test]
+fn prop_lane_count_never_changes_values() {
+    // Bit-parallelism is value-transparent: executing with q=1 or q=32
+    // lanes computes the same bitstream.
+    forall(0x5EED3, 20, |g| {
+        let base = ops::scaled_add();
+        let mut rng = Xoshiro256::seeded(g.u64_below(1 << 62));
+        let mut inputs = HashMap::new();
+        for n in ["a", "b", "s"] {
+            inputs.insert(n.to_string(), Bitstream::sample(rng.next_f64(), 128, &mut rng));
+        }
+        let mut outs = Vec::new();
+        for q in [1usize, 8, 32] {
+            let rep = replicate(&base, q);
+            let s = schedule(&rep, &Options::default());
+            let mut array = stoch_imc::imc::Subarray::new(q, s.cols_used);
+            let mut rng2 = Xoshiro256::seeded(1);
+            let (got, _) = stoch_imc::imc::execute_replicated(
+                &base, &rep, &s, &inputs, q, &mut array, &mut rng2,
+            );
+            outs.push(got["out"].clone());
+        }
+        assert_eq!(outs[0], outs[1]);
+        assert_eq!(outs[1], outs[2]);
+    });
+}
+
+#[test]
+fn prop_fault_rate_degrades_monotonically_on_average() {
+    // More injected faults ⇒ larger expected error (averaged over apps
+    // and instances; individual cases may fluctuate).
+    use stoch_imc::apps::{all_apps, output_error_pct};
+    let apps = all_apps();
+    for app in &apps {
+        let w = app.workload(12, 5);
+        let e0 = output_error_pct(app.as_ref(), &w, 256, 8, 0.0, true, 1);
+        let e20 = output_error_pct(app.as_ref(), &w, 256, 8, 0.20, true, 1);
+        // Stochastic error may stay FLAT (that is the robustness claim);
+        // it must not mysteriously shrink by more than noise.
+        assert!(
+            e20 + 2.0 > e0,
+            "{}: error shrank under faults ({e0:.2}% → {e20:.2}%)",
+            app.name()
+        );
+        // The paper's headline robustness: ≤ ~7% at 20% bitflips.
+        assert!(e20 < 16.0, "{}: stochastic error too large: {e20:.2}%", app.name());
+    }
+}
+
+#[test]
+fn prop_schedule_copy_count_zero_for_single_row_span_circuits() {
+    // Replicated single-lane circuits never need row-alignment copies.
+    forall(0x5EED4, 30, |g| {
+        let base = random_netlist(g);
+        let rep = replicate(&base, g.usize_in(1, 16));
+        let s = schedule(&rep, &Options::default());
+        assert_eq!(s.copy_count, 0);
+    });
+}

@@ -1,0 +1,5 @@
+#[test]
+fn hlo_roundtrip() {
+    let v = stoch_imc::runtime::smoke("artifacts/smoke.hlo.txt").unwrap();
+    assert_eq!(v, vec![5f32, 5., 9., 9.]);
+}
