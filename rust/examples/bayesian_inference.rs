@@ -7,7 +7,7 @@
 use stoch_imc::apps::{hdp::Hdp, ol::Ol, App};
 use stoch_imc::coordinator::{BatcherConfig, Coordinator};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> stoch_imc::error::Result<()> {
     let coord = Coordinator::start(std::path::Path::new("artifacts"), BatcherConfig::default())?;
 
     // --- Object location: evaluate p(x,y) over a sub-grid.
@@ -32,7 +32,7 @@ fn main() -> anyhow::Result<()> {
     let dist =
         (((bx as f64 - obj.0 as f64).powi(2) + (by as f64 - obj.1 as f64).powi(2)) as f64).sqrt();
     println!("true object at ({}, {}) — distance {dist:.1} cells", obj.0, obj.1);
-    anyhow::ensure!(dist <= 6.0, "stochastic localization strayed too far");
+    stoch_imc::ensure!(dist <= 6.0, "stochastic localization strayed too far");
 
     // --- Heart-disaster prediction: a batch of patients.
     let hdp = Hdp;
@@ -42,7 +42,7 @@ fn main() -> anyhow::Result<()> {
     for (i, (x, r)) in patients.iter().zip(&risks).enumerate() {
         let f = hdp.float_ref(x);
         println!("  patient {i:>2}: P(HD) = {r:.3} (ref {f:.3})");
-        anyhow::ensure!((r - f).abs() < 0.12, "patient {i} error too large");
+        stoch_imc::ensure!((r - f).abs() < 0.12, "patient {i} error too large");
     }
     println!("bayesian_inference OK");
     Ok(())

@@ -10,7 +10,7 @@ use stoch_imc::apps::{lit::Lit, App};
 use stoch_imc::coordinator::{BatcherConfig, Coordinator};
 use stoch_imc::util::stats::mean_error_pct;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> stoch_imc::error::Result<()> {
     let app = Lit::default();
     let windows = app.workload(app.eval_instances(), 0x570C41);
     println!(
@@ -56,7 +56,7 @@ fn main() -> anyhow::Result<()> {
             println!("{line}");
         }
     }
-    anyhow::ensure!(err < 20.0, "accuracy regression: {err:.2}%");
+    stoch_imc::ensure!(err < 20.0, "accuracy regression: {err:.2}%");
     println!("image_thresholding OK");
     Ok(())
 }

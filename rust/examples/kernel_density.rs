@@ -8,7 +8,7 @@ use stoch_imc::apps::{kde::Kde, App};
 use stoch_imc::coordinator::{BatcherConfig, Coordinator};
 use stoch_imc::util::stats::mean_error_pct;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> stoch_imc::error::Result<()> {
     let app = Kde::default();
     let pixels = app.workload(256, 0xCDE);
     let coord = Coordinator::start(std::path::Path::new("artifacts"), BatcherConfig::default())?;
@@ -34,7 +34,7 @@ fn main() -> anyhow::Result<()> {
         let drift = x[1..].iter().map(|v| (x[0] - v).abs()).sum::<f64>() / 8.0;
         println!("  pixel {i:>3}: pdf={:.3} (ref {:.3}) mean|Δ|={drift:.3}", pdfs[i], refs[i]);
     }
-    anyhow::ensure!(err < 12.0, "accuracy regression: {err:.2}%");
+    stoch_imc::ensure!(err < 12.0, "accuracy regression: {err:.2}%");
     println!("kernel_density OK");
     Ok(())
 }

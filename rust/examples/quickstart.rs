@@ -1,15 +1,17 @@
 //! Quickstart: the three-layer path in one page.
 //!
-//! 1. L3 loads the AOT artifacts (L2 JAX graphs embedding L1 Pallas
-//!    kernels, lowered to HLO text by `make artifacts`).
-//! 2. Requests flow through the coordinator's batcher to PJRT.
+//! 1. L3 loads the artifact registry (`artifacts/manifest.txt`); the
+//!    default backend is the pure-Rust interpreter, while
+//!    `STOCH_IMC_BACKEND=pjrt` (xla-runtime feature) runs the AOT HLO
+//!    artifacts instead.
+//! 2. Requests flow through the coordinator's batcher to the engine.
 //! 3. Results come back as binary values (StoB popcount done in-graph).
 //!
 //! Run: cargo run --release --example quickstart
 
 use stoch_imc::coordinator::{BatcherConfig, Coordinator};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> stoch_imc::error::Result<()> {
     let coord = Coordinator::start(std::path::Path::new("artifacts"), BatcherConfig::default())?;
     println!("artifacts: {:?}", coord.apps());
 

@@ -19,7 +19,8 @@ use crate::util::prng::Xoshiro256;
 
 pub struct Hdp;
 
-const NAMES: [&str; 8] = ["bp", "cp", "e", "d", "t_ed", "t_end", "t_ned", "t_nend"];
+/// HDP input order — shared with the interpreter backend's bindings.
+pub(crate) const NAMES: [&str; 8] = ["bp", "cp", "e", "d", "t_ed", "t_end", "t_ned", "t_nend"];
 
 impl App for Hdp {
     fn name(&self) -> &'static str {

@@ -1,10 +1,10 @@
 //! The coordinator proper: request intake → batcher → executor thread
-//! (owns the PJRT engine) → response fan-out.
+//! (owns the execution engine) → response fan-out.
 //!
 //! Thread topology: callers submit on a channel; one controller thread
-//! runs the batching loop per artifact and drives the engine (the PJRT
-//! CPU client parallelizes internally across the batch, like a subarray
-//! group firing all its rows in one cycle). `shutdown` drains cleanly.
+//! runs the batching loop per artifact and drives the [`Engine`] (a
+//! wave executes all batch rows like a subarray group firing all its
+//! rows in one cycle). `shutdown` drains cleanly.
 
 use std::collections::HashMap;
 use std::path::Path;
@@ -13,7 +13,8 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::error::{Context, Result};
 
 use super::batcher::{Batcher, BatcherConfig, Pending};
 use super::metrics::Metrics;
@@ -34,36 +35,40 @@ pub struct Coordinator {
 
 impl Coordinator {
     /// Load all artifacts from `dir` and start the controller thread.
-    /// The PJRT engine is constructed *inside* the controller thread —
-    /// the xla crate's handles are not `Send`.
+    /// The engine is constructed *inside* the controller thread — the
+    /// PJRT backend's xla handles are not `Send` (the interpreter would
+    /// not need this, but the topology is backend-agnostic).
     pub fn start(dir: &Path, cfg: BatcherConfig) -> Result<Self> {
-        let mut specs = HashMap::new();
-        for s in crate::runtime::load_manifest(dir)? {
-            specs.insert(s.name.clone(), (s.n_inputs, s.batch));
-        }
         let metrics: Arc<Mutex<HashMap<String, Metrics>>> = Arc::default();
         let (tx, rx): (Sender<Msg>, Receiver<Msg>) = channel();
-        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        // The manifest is parsed once, by the engine; the controller
+        // reports the resulting specs back so submit() validates
+        // against exactly what the engine will execute.
+        let (ready_tx, ready_rx) = channel::<Result<HashMap<String, (usize, usize)>>>();
         let m2 = Arc::clone(&metrics);
-        let specs2 = specs.clone();
         let dir2 = dir.to_path_buf();
         let handle = std::thread::Builder::new()
             .name("stoch-imc-controller".into())
             .spawn(move || {
                 let engine = match Engine::load(&dir2) {
-                    Ok(e) => {
-                        let _ = ready_tx.send(Ok(()));
-                        e
-                    }
+                    Ok(e) => e,
                     Err(e) => {
                         let _ = ready_tx.send(Err(e));
                         return;
                     }
                 };
-                controller_loop(engine, rx, m2, specs2, cfg)
+                let specs: HashMap<String, (usize, usize)> = engine
+                    .artifact_names()
+                    .into_iter()
+                    .filter_map(|n| {
+                        engine.spec(n).map(|s| (s.name.clone(), (s.n_inputs, s.batch)))
+                    })
+                    .collect();
+                let _ = ready_tx.send(Ok(specs.clone()));
+                controller_loop(engine, rx, m2, specs, cfg)
             })
             .context("spawning controller")?;
-        ready_rx.recv().context("controller died during load")??;
+        let specs = ready_rx.recv().context("controller died during load")??;
         Ok(Self { tx, handle: Some(handle), metrics, specs })
     }
 
@@ -187,7 +192,7 @@ fn execute_wave(
     let wave = b.drain();
     *seed = seed.wrapping_mul(0x343FD).wrapping_add(0x269EC3);
     let t0 = Instant::now();
-    match engine.execute(app, &wave.values, *seed) {
+    match engine.execute(app, &wave.values, *seed, wave.responders.len()) {
         Ok(outs) => {
             let dt = t0.elapsed();
             for (i, r) in wave.responders.iter().enumerate() {

@@ -1,5 +1,47 @@
-//! Stoch-IMC: bit-parallel stochastic in-memory computing (STT-MRAM).
+//! **Stoch-IMC** — a reproduction of *"Stoch-IMC: A Bit-Parallel
+//! Stochastic In-Memory Computing Architecture Based on STT-MRAM"*
+//! (cs.AR 2024), grown toward a production-scale simulator and serving
+//! stack.
+//!
+//! The crate models the paper's full stack, from the MTJ device physics
+//! up to a batched request coordinator:
+//!
+//! | Module | Purpose (paper section) |
+//! |---|---|
+//! | [`device`] | MTJ thermal-switching model, Eqs 1–2 / Table 1 (§2.1–2.3) |
+//! | [`sc`] | Packed bitstreams + the six stochastic arithmetic ops (Fig 4/5) |
+//! | [`netlist`] | Gate-level IR, op/binary circuit builders, functional eval |
+//! | [`scheduler`] | Algorithm 1 co-scheduling/mapping + ASAP refinement (§4.2) |
+//! | [`imc`] | Cycle-level 2T-1MTJ subarray simulator (§2.2) |
+//! | [`arch`] | BtoS memory, accumulator tree, `[n, m]` cost engine (§4.3) |
+//! | [`baseline`] | Binary-IMC circuits and the bit-serial SC-CRAM model (§5) |
+//! | [`energy`] | Energy model, Eqs 3–4 + SPICE constants (§5.1, Fig 10) |
+//! | [`lifetime`] | Endurance/lifetime model, Eq 11 (Fig 11) |
+//! | [`fault`] | Bitflip fault injection (Table 4) |
+//! | [`apps`] | The four evaluation applications: LIT, OL, HDP, KDE (Fig 9) |
+//! | [`config`] | TOML-subset config for architecture/device/energy (§5.1) |
+//! | [`runtime`] | Artifact registry + pluggable [`runtime::Engine`] backends |
+//! | [`coordinator`] | Request batcher, controller thread, metrics (§4.3 bank controller) |
+//! | [`report`] | Generators for the paper's tables/figures |
+//! | [`error`] | Dependency-free `anyhow`-style error type and macros |
+//! | [`util`] | PRNG (xoshiro256**), stats, property-test helper |
+//!
+//! # Backends
+//!
+//! The default build is dependency-free: the coordinator executes
+//! artifacts on the pure-Rust bit-plane interpreter
+//! ([`runtime::InterpEngine`]). The `xla-runtime` cargo feature gates
+//! the PJRT/XLA client for the AOT HLO artifacts; see `rust/Cargo.toml`
+//! for how to link it.
 #![allow(clippy::needless_range_loop)]
+// `xla_available` is a user-provided cfg (set via RUSTFLAGS when the
+// PJRT `xla` crate is vendored); silence check-cfg on toolchains that
+// know the lint, and the unknown-lint warning on those that don't.
+#![allow(unknown_lints)]
+#![allow(unexpected_cfgs)]
+
+pub mod error;
+
 pub mod device;
 pub mod netlist;
 pub mod runtime;

@@ -11,8 +11,9 @@
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Context, Result};
 use stoch_imc::apps::all_apps;
+use stoch_imc::bail;
+use stoch_imc::error::{Context, Error, Result};
 use stoch_imc::config::Config;
 use stoch_imc::coordinator::{BatcherConfig, Coordinator};
 use stoch_imc::report;
@@ -21,11 +22,11 @@ use stoch_imc::util::stats::mean_error_pct;
 fn load_config(args: &[String]) -> Result<Config> {
     if let Some(i) = args.iter().position(|a| a == "--config") {
         let path = args.get(i + 1).context("--config needs a path")?;
-        Config::from_file(Path::new(path)).map_err(|e| anyhow::anyhow!("{e}"))
+        Config::from_file(Path::new(path)).map_err(|e| Error::msg(e.to_string()))
     } else {
         let default = Path::new("configs/default.toml");
         if default.exists() {
-            Config::from_file(default).map_err(|e| anyhow::anyhow!("{e}"))
+            Config::from_file(default).map_err(|e| Error::msg(e.to_string()))
         } else {
             Ok(Config::default())
         }
@@ -238,7 +239,7 @@ fn cmd_run(cfg: &Config, args: &[String]) -> Result<()> {
         .with_context(|| format!("unknown app `{app_name}` (lit|ol|hdp|kde)"))?;
     let instances = app.workload(n, cfg.seed);
 
-    println!("loading artifacts + compiling PJRT executables…");
+    println!("loading artifacts + starting the coordinator (STOCH_IMC_BACKEND selects interp/pjrt)…");
     let coord = Coordinator::start(&artifact_dir(), BatcherConfig::default())?;
     let artifact = format!("app_{app_name}");
     let arity = coord.n_inputs(&artifact).context("artifact not found")?;

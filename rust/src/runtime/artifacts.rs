@@ -3,7 +3,8 @@
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::error::{Context, Result};
 
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ArtifactSpec {

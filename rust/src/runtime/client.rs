@@ -1,16 +1,18 @@
-//! PJRT execution engine: loads the AOT HLO-text artifacts and runs
-//! them on the CPU PJRT client. This is the only place the request path
-//! touches XLA; Python never runs at serving time.
+//! PJRT execution engine (`xla-runtime` feature + `--cfg xla_available`):
+//! loads the AOT HLO-text artifacts and runs them on the CPU PJRT
+//! client. This is the only place the request path touches XLA; Python
+//! never runs at serving time.
 
 use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::error::{Context, Result};
 
 use super::artifacts::{load_manifest, ArtifactSpec};
 
-pub struct Engine {
+pub struct PjrtEngine {
     client: xla::PjRtClient,
     dir: PathBuf,
     specs: HashMap<String, ArtifactSpec>,
@@ -19,7 +21,7 @@ pub struct Engine {
     compiled: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
 }
 
-impl Engine {
+impl PjrtEngine {
     /// Create a CPU PJRT client and register every artifact in `dir`.
     /// Compilation happens lazily on first execution per artifact.
     pub fn load(dir: &Path) -> Result<Self> {
@@ -64,8 +66,10 @@ impl Engine {
     }
 
     /// Execute one batch: `values` is row-major [batch, n_inputs]
-    /// (padded by the caller); returns the [batch] outputs.
-    pub fn execute(&self, name: &str, values: &[f32], seed: i32) -> Result<Vec<f32>> {
+    /// (padded by the caller); returns the [batch] outputs. `_live` is
+    /// ignored: the compiled executable has a fixed [batch, n] shape,
+    /// so padding rows are computed either way.
+    pub fn execute(&self, name: &str, values: &[f32], seed: i32, _live: usize) -> Result<Vec<f32>> {
         let Some(spec) = self.specs.get(name) else {
             bail!("unknown artifact `{name}`");
         };
@@ -79,13 +83,18 @@ impl Engine {
             );
         }
         let v = xla::Literal::vec1(values)
-            .reshape(&[spec.batch as i64, spec.n_inputs as i64])?;
+            .reshape(&[spec.batch as i64, spec.n_inputs as i64])
+            .context("reshaping batch")?;
         let s = xla::Literal::from(seed);
         let compiled = self.compiled.borrow();
         let exe = compiled.get(name).expect("compiled above");
-        let result = exe.execute::<xla::Literal>(&[v, s])?[0][0].to_literal_sync()?;
-        let out = result.to_tuple1()?;
-        Ok(out.to_vec::<f32>()?)
+        let result = exe
+            .execute::<xla::Literal>(&[v, s])
+            .context("executing")?[0][0]
+            .to_literal_sync()
+            .context("fetching result")?;
+        let out = result.to_tuple1().context("untupling result")?;
+        out.to_vec::<f32>().context("reading result")
     }
 }
 
@@ -97,7 +106,7 @@ mod tests {
     // single-artifact manifest so the test compiles one small HLO
     // module, not all ten; the integration suite and the examples
     // exercise the full registry.
-    fn engine_with_only(name: &str) -> Option<Engine> {
+    fn engine_with_only(name: &str) -> Option<PjrtEngine> {
         let src = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
         if !src.join("manifest.txt").exists() {
             return None;
@@ -112,7 +121,7 @@ mod tests {
             dir.join(format!("{name}.hlo.txt")),
         )
         .ok()?;
-        Some(Engine::load(&dir).expect("engine load"))
+        Some(PjrtEngine::load(&dir).expect("engine load"))
     }
 
     #[test]
@@ -124,16 +133,16 @@ mod tests {
         values[1] = 0.5;
         values[2] = 0.9;
         values[3] = 0.8;
-        let out = e.execute("op_multiply", &values, 42).unwrap();
+        let out = e.execute("op_multiply", &values, 42, spec.batch).unwrap();
         assert_eq!(out.len(), spec.batch);
         assert!((out[0] - 0.25).abs() < 0.06, "out[0]={}", out[0]);
         assert!((out[1] - 0.72).abs() < 0.07, "out[1]={}", out[1]);
         // Different seeds resample streams; values stay close.
-        let a = e.execute("op_multiply", &values, 1).unwrap();
-        let b = e.execute("op_multiply", &values, 2).unwrap();
+        let a = e.execute("op_multiply", &values, 1, spec.batch).unwrap();
+        let b = e.execute("op_multiply", &values, 2, spec.batch).unwrap();
         assert!((a[0] - b[0]).abs() < 0.15);
         // Wrong input size is rejected.
-        assert!(e.execute("op_multiply", &values[..2], 1).is_err());
-        assert!(e.execute("nope", &values, 1).is_err());
+        assert!(e.execute("op_multiply", &values[..2], 1, 2).is_err());
+        assert!(e.execute("nope", &values, 1, spec.batch).is_err());
     }
 }

@@ -1,0 +1,393 @@
+//! Pure-Rust bit-plane interpreter backend for the artifact registry.
+//!
+//! Executes the same `(values f32[B, n], seed i32) → f32[B]` contract as
+//! the PJRT backend, but with no external toolchain: each manifest entry
+//! is mapped to the crate's own circuit model and evaluated per batch
+//! row — SNG (stochastic number generation) → bit-level circuit →
+//! StoB popcount, exactly the wave one subarray group performs.
+//!
+//! * The six `op_*` artifacts and the single-stage apps (`app_ol`,
+//!   `app_hdp`) run their gate-level netlists through
+//!   [`crate::netlist::eval::eval_stochastic`] — the golden model the
+//!   scheduled in-memory execution is validated against.
+//! * The multi-stage apps (`app_lit`, `app_kde`) need StoB→BtoS stream
+//!   regeneration between stages (DESIGN/ARCHITECTURE notes), so they
+//!   run the staged bitstream evaluators in `apps::` (the same models
+//!   the L2 JAX graphs mirror).
+//!
+//! Only `manifest.txt` is required in the artifact directory; `.hlo.txt`
+//! files are ignored by this backend.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::apps::{hdp::Hdp, kde::Kde, lit::Lit, ol::Ol, App};
+use crate::bail;
+use crate::error::{Context, Result};
+use crate::netlist::eval::eval_stochastic;
+use crate::netlist::{ops, InputClass, Netlist, Node};
+use crate::sc::bitstream::Bitstream;
+use crate::util::prng::Xoshiro256;
+
+use super::artifacts::{load_manifest, ArtifactSpec};
+
+/// How one artifact is evaluated per batch row.
+enum Kernel {
+    /// Single-stage gate-level netlist with output `"out"`.
+    Netlist(Netlist),
+    /// Staged LIT pipeline (three in-memory stages + regeneration).
+    Lit(Lit),
+    /// Staged KDE pipeline (correlated XOR stage + exponential stage).
+    Kde(Kde),
+}
+
+/// The interpreter engine: artifact specs plus per-artifact kernels.
+pub struct InterpEngine {
+    specs: HashMap<String, ArtifactSpec>,
+    kernels: HashMap<String, Kernel>,
+}
+
+fn kernel_for(name: &str) -> Option<Kernel> {
+    Some(match name {
+        "op_multiply" => Kernel::Netlist(ops::multiply()),
+        "op_scaled_add" => Kernel::Netlist(ops::scaled_add()),
+        "op_abs_subtract" => Kernel::Netlist(ops::abs_subtract()),
+        "op_scaled_divide" => Kernel::Netlist(ops::scaled_divide()),
+        "op_square_root" => Kernel::Netlist(ops::square_root(ops::ADDIE_BITS_APP)),
+        "op_exponential" => Kernel::Netlist(ops::exponential()),
+        "app_ol" => Kernel::Netlist(Ol::default().stoch_cost_netlists().remove(0)),
+        "app_hdp" => Kernel::Netlist(Hdp.stoch_cost_netlists().remove(0)),
+        "app_lit" => Kernel::Lit(Lit::default()),
+        "app_kde" => Kernel::Kde(Kde::default()),
+        _ => return None,
+    })
+}
+
+/// Instance arity each kernel consumes (the artifact contract's `n`).
+/// Distinct from the netlist's input-node count: e.g. `op_square_root`
+/// has two netlist inputs (a1, a2) but a 1-value instance.
+fn expected_arity(name: &str) -> Option<usize> {
+    Some(match name {
+        "op_multiply" | "op_scaled_add" | "op_abs_subtract" | "op_scaled_divide" => 2,
+        "op_square_root" | "op_exponential" => 1,
+        "app_ol" => 2 * Ol::default().sensors,
+        "app_hdp" => crate::apps::hdp::NAMES.len(),
+        "app_lit" => Lit::default().pixels(),
+        "app_kde" => Kde::default().history + 1,
+        _ => return None,
+    })
+}
+
+/// The binary value driven onto one netlist primary input for one
+/// instance `x` of `artifact`. Input naming follows the netlist builders
+/// (`netlist::ops`, `apps::*::stoch_cost_netlists`).
+fn input_value(artifact: &str, input: &str, x: &[f64]) -> Option<f64> {
+    match artifact {
+        "op_multiply" | "op_scaled_divide" | "op_abs_subtract" => match input {
+            "a" => x.first().copied(),
+            "b" => x.get(1).copied(),
+            _ => None,
+        },
+        "op_scaled_add" => match input {
+            "a" => x.first().copied(),
+            "b" => x.get(1).copied(),
+            "s" => Some(0.5),
+            _ => None,
+        },
+        // Two independently generated copies of the same operand.
+        "op_square_root" => match input {
+            "a1" | "a2" => x.first().copied(),
+            _ => None,
+        },
+        // e^{-cA} with c = 1: a1..a5 are copies of A, c1..c5 carry c/k.
+        "op_exponential" => {
+            if let Some(k) = input.strip_prefix('a').and_then(|s| s.parse::<u32>().ok()) {
+                if (1..=5).contains(&k) {
+                    return x.first().copied();
+                }
+            }
+            if let Some(k) = input.strip_prefix('c').and_then(|s| s.parse::<usize>().ok()) {
+                if (1..=5).contains(&k) {
+                    return Some(ops::exp_constants(1.0)[k - 1]);
+                }
+            }
+            None
+        }
+        "app_ol" => input
+            .strip_prefix('p')
+            .and_then(|s| s.parse::<usize>().ok())
+            .and_then(|i| x.get(i).copied()),
+        "app_hdp" => crate::apps::hdp::NAMES
+            .iter()
+            .position(|n| *n == input)
+            .and_then(|i| x.get(i).copied()),
+        _ => None,
+    }
+}
+
+/// Deterministic per-row PRNG: mixes the wave seed, the artifact name,
+/// and the batch row so rows and artifacts draw independent streams and
+/// a different wave seed resamples everything.
+fn row_rng(seed: i32, name: &str, row: usize) -> Xoshiro256 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325; // FNV-1a
+    for b in name.bytes() {
+        h = (h ^ b as u64).wrapping_mul(0x100_0000_01b3);
+    }
+    Xoshiro256::seeded(h ^ (seed as u32 as u64) ^ ((row as u64) << 32))
+}
+
+impl InterpEngine {
+    /// Register every artifact listed in `dir/manifest.txt`. Names
+    /// without a built-in interpreter kernel, and names whose manifest
+    /// arity disagrees with the kernel's instance shape, are skipped
+    /// (with a warning) — callers, notably the coordinator, then reject
+    /// them at submit time instead of failing waves later, and the
+    /// interpreter can never silently compute over a different input
+    /// layout than the PJRT artifact of the same name.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let mut specs = HashMap::new();
+        let mut kernels = HashMap::new();
+        for spec in load_manifest(dir)? {
+            let Some(k) = kernel_for(&spec.name) else {
+                eprintln!(
+                    "interp backend: skipping artifact `{}` — no interpreter kernel \
+                     (build HLO artifacts and use the xla-runtime backend for custom graphs)",
+                    spec.name
+                );
+                continue;
+            };
+            let expected = expected_arity(&spec.name).expect("kernel implies known arity");
+            if spec.n_inputs != expected {
+                eprintln!(
+                    "interp backend: skipping artifact `{}` — manifest declares {} inputs \
+                     but the interpreter kernel expects {expected}",
+                    spec.name, spec.n_inputs
+                );
+                continue;
+            }
+            kernels.insert(spec.name.clone(), k);
+            specs.insert(spec.name.clone(), spec);
+        }
+        Ok(Self { specs, kernels })
+    }
+
+    pub fn platform(&self) -> String {
+        "interp".to_string()
+    }
+
+    pub fn artifact_names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.specs.keys().map(|s| s.as_str()).collect();
+        v.sort_unstable();
+        v
+    }
+
+    pub fn spec(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.specs.get(name)
+    }
+
+    /// Execute one batch: `values` is row-major [batch, n_inputs]
+    /// (padded by the caller); returns the [batch] outputs. Only the
+    /// first `live` rows are evaluated — padding rows (whose outputs
+    /// the caller discards) come back as 0.0 without paying for a
+    /// netlist evaluation.
+    pub fn execute(&self, name: &str, values: &[f32], seed: i32, live: usize) -> Result<Vec<f32>> {
+        let Some(spec) = self.specs.get(name) else {
+            bail!("unknown artifact `{name}`");
+        };
+        if values.len() != spec.batch * spec.n_inputs {
+            bail!(
+                "artifact `{name}` expects {}×{} values, got {}",
+                spec.batch,
+                spec.n_inputs,
+                values.len()
+            );
+        }
+        let kernel = self.kernels.get(name).with_context(|| {
+            format!("artifact `{name}` has no interpreter kernel (build HLO artifacts \
+                     and use the xla-runtime backend for custom graphs)")
+        })?;
+        // Arity consistency was enforced at load time, so every
+        // registered spec matches its kernel's instance shape here.
+        let bl = spec.bl.max(1);
+        let live = live.min(spec.batch);
+        let mut out = Vec::with_capacity(spec.batch);
+        for row in 0..live {
+            let x: Vec<f64> = values[row * spec.n_inputs..(row + 1) * spec.n_inputs]
+                .iter()
+                .map(|&v| (v as f64).clamp(0.0, 1.0))
+                .collect();
+            let mut rng = row_rng(seed, name, row);
+            let v = match kernel {
+                Kernel::Netlist(nl) => eval_netlist(name, nl, &x, bl, &mut rng)?,
+                Kernel::Lit(app) => app.stoch_value(&x, bl, &mut rng, 0.0),
+                Kernel::Kde(app) => app.stoch_value(&x, bl, &mut rng, 0.0),
+            };
+            out.push(v as f32);
+        }
+        out.resize(spec.batch, 0.0);
+        Ok(out)
+    }
+}
+
+/// Generate the input bitstreams for one instance per the netlist's
+/// input classes (independent, correlation-grouped, or constant
+/// streams) and evaluate functionally.
+fn eval_netlist(
+    artifact: &str,
+    nl: &Netlist,
+    x: &[f64],
+    bl: usize,
+    rng: &mut Xoshiro256,
+) -> Result<f64> {
+    let mut group_uniforms: HashMap<u32, Vec<f64>> = HashMap::new();
+    let mut inputs: HashMap<String, Bitstream> = HashMap::new();
+    for node in &nl.nodes {
+        if let Node::Input { name, class, .. } = node {
+            let Some(v) = input_value(artifact, name, x) else {
+                bail!("artifact `{artifact}`: no value binding for input `{name}`");
+            };
+            let v = v.clamp(0.0, 1.0);
+            let bs = match class {
+                InputClass::Correlated(g) => {
+                    let us = group_uniforms.entry(*g).or_insert_with(|| {
+                        let mut u = vec![0.0; bl];
+                        rng.fill_f64(&mut u);
+                        u
+                    });
+                    Bitstream::from_uniforms(v, us)
+                }
+                InputClass::BinaryBit => {
+                    bail!("artifact `{artifact}`: binary input `{name}` unsupported")
+                }
+                _ => Bitstream::sample(v, bl, rng),
+            };
+            inputs.insert(name.clone(), bs);
+        }
+    }
+    let outs = eval_stochastic(nl, &inputs);
+    let out = outs
+        .get("out")
+        .with_context(|| format!("artifact `{artifact}`: netlist has no `out` output"))?;
+    Ok(out.value())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engine_with(manifest: &str, tag: &str) -> InterpEngine {
+        let dir = std::env::temp_dir().join(format!("stoch_imc_interp_unit_{tag}"));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.txt"), manifest).unwrap();
+        InterpEngine::load(&dir).expect("engine load")
+    }
+
+    #[test]
+    fn multiply_values_and_seed_behaviour() {
+        let e = engine_with("op_multiply 2 4 4096\n", "mul");
+        let spec = e.spec("op_multiply").unwrap().clone();
+        let mut values = vec![0.0f32; spec.batch * 2];
+        values[0] = 0.5;
+        values[1] = 0.5;
+        values[2] = 0.9;
+        values[3] = 0.8;
+        let out = e.execute("op_multiply", &values, 42, spec.batch).unwrap();
+        assert_eq!(out.len(), spec.batch);
+        assert!((out[0] - 0.25).abs() < 0.04, "out[0]={}", out[0]);
+        assert!((out[1] - 0.72).abs() < 0.04, "out[1]={}", out[1]);
+        // Different seeds resample streams; values stay close.
+        let a = e.execute("op_multiply", &values, 1, spec.batch).unwrap();
+        let b = e.execute("op_multiply", &values, 2, spec.batch).unwrap();
+        assert_ne!(a, b, "seed must resample");
+        assert!((a[0] as f64 - b[0] as f64).abs() < 0.1);
+        // Same seed is bit-deterministic.
+        assert_eq!(a, e.execute("op_multiply", &values, 1, spec.batch).unwrap());
+        // Wrong input size / unknown artifact are rejected.
+        assert!(e.execute("op_multiply", &values[..2], 1, 2).is_err());
+        assert!(e.execute("nope", &values, 1, spec.batch).is_err());
+    }
+
+    #[test]
+    fn all_builtin_artifacts_close_to_reference() {
+        let e = engine_with(
+            "op_multiply 2 1 8192\nop_scaled_add 2 1 8192\nop_abs_subtract 2 1 8192\n\
+             op_scaled_divide 2 1 8192\nop_square_root 1 1 8192\nop_exponential 1 1 8192\n",
+            "ops",
+        );
+        let two = [0.7f32, 0.3];
+        let one = [0.6f32, 0.0];
+        let cases: [(&str, &[f32], usize, f64); 6] = [
+            ("op_multiply", &two, 2, 0.7 * 0.3),
+            ("op_scaled_add", &two, 2, 0.5 * (0.7 + 0.3)),
+            ("op_abs_subtract", &two, 2, 0.4),
+            ("op_scaled_divide", &two, 2, 0.7 / (0.7 + 0.3)),
+            ("op_square_root", &one[..1], 1, 0.6f64.sqrt()),
+            ("op_exponential", &one[..1], 1, (-0.6f64).exp()),
+        ];
+        for (name, vals, n, want) in cases {
+            let out = e.execute(name, &vals[..n], 7, 1).unwrap();
+            assert!(
+                (out[0] as f64 - want).abs() < 0.05,
+                "{name}: got {} want {want}",
+                out[0]
+            );
+        }
+    }
+
+    #[test]
+    fn app_netlists_match_float_reference() {
+        let e = engine_with("app_ol 6 2 4096\napp_hdp 8 2 16384\n", "apps");
+        let ol = Ol::default();
+        let w = ol.workload(2, 3);
+        let mut values = Vec::new();
+        for inst in &w {
+            values.extend(inst.iter().map(|&v| v as f32));
+        }
+        let out = e.execute("app_ol", &values, 11, 2).unwrap();
+        for (inst, o) in w.iter().zip(&out) {
+            let f = ol.float_ref(inst);
+            assert!((*o as f64 - f).abs() < 0.06, "ol got {o} want {f}");
+        }
+        let hdp = Hdp;
+        let w = hdp.workload(2, 5);
+        let mut values = Vec::new();
+        for inst in &w {
+            values.extend(inst.iter().map(|&v| v as f32));
+        }
+        let out = e.execute("app_hdp", &values, 13, 2).unwrap();
+        for (inst, o) in w.iter().zip(&out) {
+            let f = hdp.float_ref(inst);
+            // The N/(N+M) divider amplifies stream noise when N+M is
+            // small, hence the long streams and looser bound.
+            assert!((*o as f64 - f).abs() < 0.15, "hdp got {o} want {f}");
+        }
+    }
+
+    #[test]
+    fn artifacts_without_kernels_are_skipped_at_load() {
+        let e = engine_with("op_mystery 2 1 256\nop_multiply 2 1 256\n", "mystery");
+        // The unknown name is not registered, so the coordinator will
+        // reject submits against it up front; the known one survives.
+        assert!(e.spec("op_mystery").is_none());
+        assert_eq!(e.artifact_names(), vec!["op_multiply"]);
+        let err = e.execute("op_mystery", &[0.5, 0.5], 1, 1).unwrap_err();
+        assert!(format!("{err:#}").contains("unknown artifact"), "{err:#}");
+    }
+
+    #[test]
+    fn arity_mismatched_artifacts_are_skipped_at_load() {
+        // A wrong manifest arity must not silently compute over a
+        // different input layout than the PJRT artifact of the same
+        // name — such entries are not registered at all.
+        let e = engine_with(
+            "app_lit 32 1 256\napp_kde 4 1 256\nop_multiply 3 1 256\napp_ol 6 1 256\n",
+            "arity",
+        );
+        assert!(e.spec("app_lit").is_none());
+        assert!(e.spec("app_kde").is_none());
+        assert!(e.spec("op_multiply").is_none());
+        assert_eq!(e.artifact_names(), vec!["app_ol"]);
+        let err = e.execute("app_lit", &[0.5; 32], 1, 1).unwrap_err();
+        assert!(format!("{err:#}").contains("unknown artifact"), "{err:#}");
+    }
+}

@@ -1,27 +1,131 @@
-//! S14 — PJRT runtime: artifact registry + execution engine.
+//! S14 — execution runtime: artifact registry + pluggable execution
+//! engine.
 //!
-//! Pattern (see /opt/xla-example): `PjRtClient::cpu()` →
-//! `HloModuleProto::from_text_file` → `compile` → `execute`. HLO *text*
-//! is the interchange format (64-bit-id proto incompatibility — see
-//! python/compile/aot.py).
+//! [`Engine`] is the backend abstraction the coordinator drives. Two
+//! backends implement the same `(values f32[B, n], seed i32) → f32[B]`
+//! artifact contract:
+//!
+//! * **interp** (default, always available): the pure-Rust bit-plane
+//!   interpreter in [`interp`], which evaluates each artifact through
+//!   the crate's own netlist/bitstream models. Needs only
+//!   `manifest.txt`.
+//! * **pjrt** (`xla-runtime` feature + a vendored `xla` crate): the
+//!   PJRT client in `client`, executing the AOT HLO-text artifacts
+//!   produced by `python -m compile.aot`. Pattern:
+//!   `PjRtClient::cpu()` → `HloModuleProto::from_text_file` → `compile`
+//!   → `execute`; HLO *text* is the interchange format (64-bit-id proto
+//!   incompatibility — see python/compile/aot.py).
+//!
+//! Backend selection: `STOCH_IMC_BACKEND=interp|pjrt` (default
+//! `interp`).
 
 pub mod artifacts;
+pub mod interp;
+
+#[cfg(all(feature = "xla-runtime", xla_available))]
 pub mod client;
 
+// The `xla` crate is not vendored in this workspace, so the feature on
+// its own cannot link. Fail with one clear message instead of a cascade
+// of unresolved-crate errors.
+#[cfg(all(feature = "xla-runtime", not(xla_available)))]
+compile_error!(
+    "the `xla-runtime` feature needs the PJRT `xla` crate, which is not \
+     vendored in this workspace. Add `xla = { git = \"...\" }` (or a \
+     vendored path) to rust/Cargo.toml and build with \
+     RUSTFLAGS=\"--cfg xla_available\" --features xla-runtime. The \
+     default build uses the pure-Rust interpreter backend instead."
+);
+
 pub use artifacts::{load_manifest, ArtifactSpec};
-pub use client::Engine;
+pub use interp::InterpEngine;
 
-use anyhow::Result;
+use std::path::Path;
 
-/// Smoke helper kept for the round-trip integration test: loads a 2×2
-/// matmul HLO artifact and executes it.
+use crate::bail;
+use crate::error::Result;
+
+/// A loaded execution backend over one artifact directory.
+pub enum Engine {
+    Interp(InterpEngine),
+    #[cfg(all(feature = "xla-runtime", xla_available))]
+    Pjrt(client::PjrtEngine),
+}
+
+impl Engine {
+    /// Load the backend selected by `STOCH_IMC_BACKEND` (default: the
+    /// interpreter) over the artifacts in `dir`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let backend = std::env::var("STOCH_IMC_BACKEND").unwrap_or_default();
+        match backend.as_str() {
+            "" | "interp" => Ok(Engine::Interp(InterpEngine::load(dir)?)),
+            #[cfg(all(feature = "xla-runtime", xla_available))]
+            "pjrt" => Ok(Engine::Pjrt(client::PjrtEngine::load(dir)?)),
+            other => bail!(
+                "unknown STOCH_IMC_BACKEND `{other}` (have: interp{}){}",
+                if cfg!(all(feature = "xla-runtime", xla_available)) { ", pjrt" } else { "" },
+                if other == "pjrt" && !cfg!(all(feature = "xla-runtime", xla_available)) {
+                    " — rebuild with --features xla-runtime and a vendored xla crate"
+                } else {
+                    ""
+                }
+            ),
+        }
+    }
+
+    /// Backend/platform name (e.g. `interp`, `cpu`).
+    pub fn platform(&self) -> String {
+        match self {
+            Engine::Interp(e) => e.platform(),
+            #[cfg(all(feature = "xla-runtime", xla_available))]
+            Engine::Pjrt(e) => e.platform(),
+        }
+    }
+
+    /// Registered artifact names, sorted.
+    pub fn artifact_names(&self) -> Vec<&str> {
+        match self {
+            Engine::Interp(e) => e.artifact_names(),
+            #[cfg(all(feature = "xla-runtime", xla_available))]
+            Engine::Pjrt(e) => e.artifact_names(),
+        }
+    }
+
+    pub fn spec(&self, name: &str) -> Option<&ArtifactSpec> {
+        match self {
+            Engine::Interp(e) => e.spec(name),
+            #[cfg(all(feature = "xla-runtime", xla_available))]
+            Engine::Pjrt(e) => e.spec(name),
+        }
+    }
+
+    /// Execute one batch: `values` is row-major [batch, n_inputs]
+    /// (padded by the caller); returns the [batch] outputs. `live` is
+    /// the number of leading non-padding rows: the interpreter skips
+    /// the padding (returned as 0.0), while PJRT always runs the full
+    /// fixed-shape batch.
+    pub fn execute(&self, name: &str, values: &[f32], seed: i32, live: usize) -> Result<Vec<f32>> {
+        match self {
+            Engine::Interp(e) => e.execute(name, values, seed, live),
+            #[cfg(all(feature = "xla-runtime", xla_available))]
+            Engine::Pjrt(e) => e.execute(name, values, seed, live),
+        }
+    }
+}
+
+/// Smoke helper kept for the PJRT round-trip integration test: loads a
+/// 2×2 matmul HLO artifact and executes it.
+#[cfg(all(feature = "xla-runtime", xla_available))]
 pub fn smoke(path: &str) -> Result<Vec<f32>> {
-    let client = xla::PjRtClient::cpu()?;
-    let proto = xla::HloModuleProto::from_text_file(path)?;
+    use crate::error::Context;
+    let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+    let proto = xla::HloModuleProto::from_text_file(path).context("parsing HLO text")?;
     let comp = xla::XlaComputation::from_proto(&proto);
-    let exe = client.compile(&comp)?;
-    let x = xla::Literal::vec1(&[1f32, 2., 3., 4.]).reshape(&[2, 2])?;
-    let y = xla::Literal::vec1(&[1f32, 1., 1., 1.]).reshape(&[2, 2])?;
-    let result = exe.execute::<xla::Literal>(&[x, y])?[0][0].to_literal_sync()?;
-    Ok(result.to_tuple1()?.to_vec::<f32>()?)
+    let exe = client.compile(&comp).context("compiling")?;
+    let x = xla::Literal::vec1(&[1f32, 2., 3., 4.]).reshape(&[2, 2]).context("reshape x")?;
+    let y = xla::Literal::vec1(&[1f32, 1., 1., 1.]).reshape(&[2, 2]).context("reshape y")?;
+    let result = exe.execute::<xla::Literal>(&[x, y]).context("execute")?[0][0]
+        .to_literal_sync()
+        .context("fetch result")?;
+    result.to_tuple1().context("untuple")?.to_vec::<f32>().context("to_vec")
 }

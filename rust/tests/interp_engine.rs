@@ -1,0 +1,88 @@
+//! Interpreter-backend coverage: round-trip apps/ops through
+//! `Coordinator::start` → `submit`/`run_workload` → shutdown on the
+//! pure-Rust engine, asserting values against the float references and
+//! that the batching metrics are recorded.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use stoch_imc::apps::{ol::Ol, App};
+use stoch_imc::coordinator::{BatcherConfig, Coordinator};
+
+fn manifest_dir(tag: &str, lines: &str) -> PathBuf {
+    // Pin the default backend: a stray STOCH_IMC_BACKEND must not
+    // redirect these interpreter tests elsewhere. Safe here: every env
+    // access in this binary goes through std::env, which serializes
+    // internally; no foreign code calls getenv concurrently.
+    std::env::remove_var("STOCH_IMC_BACKEND");
+    let dir = std::env::temp_dir().join(format!("stoch_imc_it_interp_{tag}"));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.txt"), lines).unwrap();
+    dir
+}
+
+#[test]
+fn coordinator_round_trips_app_ol_and_records_metrics() {
+    let dir = manifest_dir("ol", "app_ol 6 8 2048\n");
+    let coord = Coordinator::start(&dir, BatcherConfig::default()).unwrap();
+    assert_eq!(coord.apps(), vec!["app_ol".to_string()]);
+    assert_eq!(coord.n_inputs("app_ol"), Some(6));
+
+    let app = Ol::default();
+    let w = app.workload(20, 7);
+    let outs = coord.run_workload("app_ol", &w).unwrap();
+    assert_eq!(outs.len(), 20);
+    for (x, o) in w.iter().zip(&outs) {
+        let f = app.float_ref(x);
+        assert!((o - f).abs() < 0.1, "interp {o} vs float {f}");
+    }
+
+    // Batching metrics: every request accounted, waves of 8, padding
+    // conserved (live + padded slots = waves × batch).
+    let m = coord.metrics("app_ol");
+    assert_eq!(m.requests, 20);
+    assert!(m.waves >= 3, "20 requests at batch 8 need ≥3 waves, got {}", m.waves);
+    assert_eq!(m.padded_slots, m.waves * 8 - 20);
+    assert!(m.latency_us(50.0) > 0);
+    assert!(m.throughput() > 0.0);
+    assert!(!m.summary().is_empty());
+
+    // Dropping the coordinator sends Shutdown and joins the controller.
+    drop(coord);
+}
+
+#[test]
+fn submit_then_shutdown_drains_pending_requests() {
+    // A partial wave left in the batcher must still be answered when the
+    // coordinator shuts down (drain-on-shutdown).
+    let dir = manifest_dir("drain", "op_multiply 2 64 1024\n");
+    let coord = Coordinator::start(
+        &dir,
+        BatcherConfig { batch: 64, max_wait: Duration::from_secs(600) },
+    )
+    .unwrap();
+    let rx = coord.submit("op_multiply", &[0.6, 0.7]).unwrap();
+    drop(coord); // Shutdown drains the partial wave.
+    let out = rx.recv().expect("pending request answered on shutdown") as f64;
+    assert!((out - 0.42).abs() < 0.1, "got {out}");
+}
+
+#[test]
+fn submit_rejects_bad_requests() {
+    let dir = manifest_dir("reject", "op_multiply 2 4 256\n");
+    let coord = Coordinator::start(&dir, BatcherConfig::default()).unwrap();
+    assert!(coord.submit("op_multiply", &[0.5]).is_err(), "wrong arity");
+    assert!(coord.submit("no_such_app", &[0.5, 0.5]).is_err(), "unknown app");
+    assert_eq!(coord.n_inputs("no_such_app"), None);
+}
+
+#[test]
+fn missing_manifest_fails_start_with_context() {
+    std::env::remove_var("STOCH_IMC_BACKEND");
+    let err = Coordinator::start(
+        std::path::Path::new("/nonexistent_stoch_imc"),
+        BatcherConfig::default(),
+    )
+    .unwrap_err();
+    assert!(format!("{err:#}").contains("manifest"), "{err:#}");
+}

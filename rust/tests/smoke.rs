@@ -1,3 +1,28 @@
+//! Tier-1 smoke: the default (interpreter) runtime path end-to-end,
+//! plus the PJRT HLO round-trip when the xla backend is linked.
+#![allow(unknown_lints)]
+#![allow(unexpected_cfgs)]
+
+#[test]
+fn interp_engine_smoke_multiply() {
+    std::env::remove_var("STOCH_IMC_BACKEND");
+    let dir = std::env::temp_dir().join("stoch_imc_smoke");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.txt"), "op_multiply 2 2 4096\n").unwrap();
+    let e = stoch_imc::runtime::Engine::load(&dir).unwrap();
+    assert_eq!(e.platform(), "interp");
+    assert_eq!(e.artifact_names(), vec!["op_multiply"]);
+    let spec = e.spec("op_multiply").unwrap();
+    assert_eq!((spec.n_inputs, spec.batch, spec.bl), (2, 2, 4096));
+    let out = e.execute("op_multiply", &[0.5, 0.5, 0.9, 0.8], 7, 2).unwrap();
+    assert_eq!(out.len(), 2);
+    assert!((out[0] - 0.25).abs() < 0.05, "{}", out[0]);
+    assert!((out[1] - 0.72).abs() < 0.05, "{}", out[1]);
+}
+
+// PJRT HLO round-trip: needs the xla crate linked (`xla-runtime` +
+// `--cfg xla_available`) and `artifacts/smoke.hlo.txt` built.
+#[cfg(all(feature = "xla-runtime", xla_available))]
 #[test]
 fn hlo_roundtrip() {
     let v = stoch_imc::runtime::smoke("artifacts/smoke.hlo.txt").unwrap();
