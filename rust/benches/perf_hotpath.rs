@@ -1,16 +1,18 @@
 //! E8 — §Perf: hot-path microbenchmarks for the three layers' L3-side
-//! components plus the end-to-end PJRT wave throughput.
+//! components plus the end-to-end coordinator wave throughput.
 //!
 //! L3 hot paths: packed-bitstream gate ops (64 lanes/word), the
 //! scheduler on large netlists, and the coordinator wave loop. Each is
 //! timed over enough iterations for stable numbers; results are logged
-//! in EXPERIMENTS.md §Perf (before/after the optimization pass).
-use std::collections::HashMap;
+//! in EXPERIMENTS.md §Perf and merged as ops/sec into
+//! `BENCH_serve.json` (shared with `serve_throughput`) so the perf
+//! trajectory is tracked across PRs.
 use std::time::Instant;
 
 use stoch_imc::netlist::{ops, replicate::replicate};
 use stoch_imc::sc::bitstream::Bitstream;
 use stoch_imc::scheduler::algorithm1::{schedule, Options};
+use stoch_imc::util::benchjson;
 use stoch_imc::util::prng::Xoshiro256;
 
 fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
@@ -30,6 +32,7 @@ fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
 fn main() {
     println!("# §Perf — hot-path microbenchmarks");
     let mut rng = Xoshiro256::seeded(1);
+    let mut results: Vec<(String, f64)> = Vec::new();
 
     // L3a: packed bitstream ops (the functional simulator's hot loop).
     let a = Bitstream::sample(0.5, 65536, &mut rng);
@@ -42,31 +45,36 @@ fn main() {
         "  → elementwise gate throughput",
         65536.0 / and_t / 1e9
     );
-    bench("bitstream popcount 64k bits", 10_000, || {
+    results.push(("hotpath_bitstream_and_64k_ops_per_s".to_string(), 1.0 / and_t));
+    let pop_t = bench("bitstream popcount 64k bits", 10_000, || {
         std::hint::black_box(a.popcount());
     });
-    bench("SNG sample 64k bits", 100, || {
+    results.push(("hotpath_popcount_64k_ops_per_s".to_string(), 1.0 / pop_t));
+    let sng_t = bench("SNG sample 64k bits", 100, || {
         std::hint::black_box(Bitstream::sample(0.5, 65536, &mut rng));
     });
+    results.push(("hotpath_sng_64k_ops_per_s".to_string(), 1.0 / sng_t));
 
     // L3b: scheduler on a large replicated netlist (exp × 256 lanes).
     let rep = replicate(&ops::exponential(), 256);
-    bench("Algorithm 1 (ASAP) exp×256 (3328 gates)", 20, || {
+    let sched_t = bench("Algorithm 1 (ASAP) exp×256 (3328 gates)", 20, || {
         std::hint::black_box(schedule(&rep, &Options::default()));
     });
+    results.push(("hotpath_schedule_exp256_ops_per_s".to_string(), 1.0 / sched_t));
 
     // L3c: sequential divider scan (the one bit-serial code path).
-    bench("JK divider scan 64k bits", 1_000, || {
+    let div_t = bench("JK divider scan 64k bits", 1_000, || {
         std::hint::black_box(stoch_imc::sc::ops::scaled_divide(&a, &b));
     });
+    results.push(("hotpath_jk_divider_64k_ops_per_s".to_string(), 1.0 / div_t));
 
-    // End-to-end: PJRT wave throughput per artifact (needs artifacts).
+    // End-to-end: coordinator wave throughput per artifact on whichever
+    // backend STOCH_IMC_BACKEND selects (needs artifacts/manifest.txt).
     let dir = std::path::Path::new("artifacts");
     if dir.join("manifest.txt").exists() {
         use stoch_imc::coordinator::{BatcherConfig, Coordinator};
-        println!("\n# end-to-end PJRT wave throughput (batch=64, BL=256)");
+        println!("\n# end-to-end coordinator wave throughput (batch=64)");
         let coord = Coordinator::start(dir, BatcherConfig::default()).expect("coordinator");
-        let mut results: HashMap<String, f64> = HashMap::new();
         // app_lit/app_kde excluded: their XLA compiles take minutes and
         // the examples cover them end-to-end (EXPERIMENTS.md).
         for (name, n_in, waves) in [
@@ -85,10 +93,18 @@ fn main() {
             }
             let dt = t0.elapsed().as_secs_f64();
             let inst_per_s = (waves * 64) as f64 / dt;
-            println!("{name:<18} {:>10.0} instances/s ({:.2} ms/wave)", inst_per_s, dt * 1e3 / waves as f64);
-            results.insert(name.to_string(), inst_per_s);
+            println!(
+                "{name:<18} {:>10.0} instances/s ({:.2} ms/wave)",
+                inst_per_s,
+                dt * 1e3 / waves as f64
+            );
+            results.push((format!("hotpath_e2e_{name}_inst_per_s"), inst_per_s));
         }
     } else {
-        println!("\n(artifacts not built — skipping end-to-end PJRT benches)");
+        println!("\n(artifacts not built — skipping end-to-end benches)");
     }
+
+    let out = std::path::Path::new(benchjson::BENCH_FILE);
+    benchjson::merge_and_write(out, &results).expect("writing bench json");
+    println!("\nwrote {} keys to {}", results.len(), out.display());
 }

@@ -1,0 +1,123 @@
+//! §Perf — serve-layer throughput: single-shard vs. multi-shard serving
+//! and sequential vs. row-parallel wave execution, on the committed
+//! artifact set. Emits machine-readable ops/sec into `BENCH_serve.json`
+//! (merged, so `perf_hotpath` numbers accumulate in the same file) for
+//! cross-PR perf tracking.
+//!
+//! Run: cargo bench --bench serve_throughput
+
+use std::path::Path;
+use std::time::Instant;
+
+use stoch_imc::coordinator::BatcherConfig;
+use stoch_imc::runtime::InterpEngine;
+use stoch_imc::serve::{Server, ServerConfig};
+use stoch_imc::util::benchjson;
+
+/// The mixed serving workload: two ops and two apps, exercising both
+/// cheap and heavy kernels (app_hdp runs BL=1024 per the manifest).
+const APPS: &[(&str, usize)] =
+    &[("op_multiply", 2), ("op_scaled_add", 2), ("app_ol", 6), ("app_hdp", 8)];
+
+fn workload(n_inputs: usize, n: usize) -> Vec<Vec<f64>> {
+    (0..n).map(|i| vec![0.15 + 0.05 * (i % 14) as f64; n_inputs]).collect()
+}
+
+/// Drive all four workloads through a server from one caller thread per
+/// app (the multi-bank serving pattern); returns aggregate instances/s.
+fn drive(server: &Server, per_app: usize) -> f64 {
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for &(name, n_inputs) in APPS {
+            s.spawn(move || {
+                let w = workload(n_inputs, per_app);
+                server.run_workload(name, &w).expect("workload");
+            });
+        }
+    });
+    (APPS.len() * per_app) as f64 / t0.elapsed().as_secs_f64()
+}
+
+fn server(shards: usize, row_threads: usize) -> Server {
+    Server::start(
+        Path::new("artifacts"),
+        ServerConfig {
+            shards,
+            row_threads,
+            batcher: BatcherConfig::default(),
+            ..ServerConfig::default()
+        },
+    )
+    .expect("server start")
+}
+
+fn main() {
+    if !Path::new("artifacts/manifest.txt").exists() {
+        println!("(artifacts not built — skipping serve benches)");
+        return;
+    }
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!("# §Perf — serve-layer throughput (cores={cores})");
+    let per_app = 512;
+    let mut results: Vec<(String, f64)> = Vec::new();
+
+    // The serving matrix: shards × row-parallelism. single+seq is the
+    // old Coordinator topology; multi+par is the full bank-parallel
+    // path. "auto" row workers resolve to cores ÷ shards inside the
+    // pool, so on few-core machines the multi-shard rows_par config
+    // degenerates to rows_seq by design (shard parallelism already
+    // covers the cores) — the single-shard pair isolates the row win.
+    for (label, shards, row_threads) in [
+        ("serve_single_shard_rows_seq", 1usize, 1usize),
+        ("serve_single_shard_rows_par", 1, 0),
+        ("serve_multi_shard_rows_seq", 0, 1),
+        ("serve_multi_shard_rows_par", 0, 0),
+    ] {
+        let srv = server(shards, row_threads);
+        drive(&srv, 64); // warmup
+        let ops = drive(&srv, per_app);
+        let rows = if row_threads == 0 { "auto".to_string() } else { row_threads.to_string() };
+        println!(
+            "{label:<30} shards={} rows={rows} {ops:>10.0} instances/s",
+            srv.n_shards(),
+        );
+        results.push((label.to_string(), ops));
+    }
+
+    // Row-parallel wave execution in isolation: one heavy wave (app_hdp,
+    // BL=1024, batch 64) on the bare interpreter — the acceptance check
+    // that the scoped row pool beats the sequential path.
+    let engine = InterpEngine::load(Path::new("artifacts")).expect("engine");
+    if let Some(spec) = engine.spec("app_hdp") {
+        let (batch, n_inputs) = (spec.batch, spec.n_inputs);
+        let values: Vec<f32> = (0..batch * n_inputs)
+            .map(|i| 0.2 + 0.05 * (i % 12) as f32)
+            .collect();
+        let reps = 24;
+        let mut per_cfg = Vec::new();
+        for (label, threads) in
+            [("interp_rows_seq_hdp_wave", 1usize), ("interp_rows_par_hdp_wave", 0)]
+        {
+            // Warmup.
+            engine.execute_rows("app_hdp", &values, 1, batch, threads).expect("wave");
+            let t0 = Instant::now();
+            for rep in 0..reps {
+                engine
+                    .execute_rows("app_hdp", &values, rep as i32, batch, threads)
+                    .expect("wave");
+            }
+            let rows_per_s = (reps * batch) as f64 / t0.elapsed().as_secs_f64();
+            println!("{label:<30} {rows_per_s:>10.0} rows/s");
+            per_cfg.push(rows_per_s);
+            results.push((label.to_string(), rows_per_s));
+        }
+        println!(
+            "row-parallel speedup on a {batch}-row wave: {:.2}x over sequential",
+            per_cfg[1] / per_cfg[0]
+        );
+    }
+
+    let out = Path::new(benchjson::BENCH_FILE);
+    benchjson::merge_and_write(out, &results).expect("writing bench json");
+    println!("wrote {} keys to {}", results.len(), out.display());
+}

@@ -125,6 +125,78 @@ mod tests {
     }
 
     #[test]
+    fn deadline_triggers_partial_drain_exactly_at_max_wait() {
+        // `ready` flips when the OLDEST pending request has waited
+        // `max_wait` — the deadline path that closes partial waves.
+        let wait = Duration::from_millis(5);
+        let mut b = Batcher::new(BatcherConfig { batch: 8, max_wait: wait }, 1);
+        let (p, _r) = pending(&[0.5]);
+        let enqueued = p.enqueued;
+        b.push(p);
+        assert!(!b.ready(enqueued), "fresh request must not close a wave");
+        assert!(!b.ready(enqueued + wait / 2), "before the deadline");
+        assert!(b.ready(enqueued + wait), "at the deadline");
+        assert!(b.ready(enqueued + wait * 2), "after the deadline");
+        let wave = b.drain();
+        assert_eq!(wave.responders.len(), 1);
+        assert_eq!(wave.padded, 7);
+        assert!(b.is_empty(), "deadline drain leaves the batcher empty");
+    }
+
+    #[test]
+    fn deadline_is_keyed_to_oldest_not_newest() {
+        let wait = Duration::from_millis(5);
+        let mut b = Batcher::new(BatcherConfig { batch: 8, max_wait: wait }, 1);
+        let (p1, _r1) = pending(&[0.1]);
+        let oldest = p1.enqueued;
+        b.push(p1);
+        // A second request arriving later must not reset the clock.
+        let (mut p2, _r2) = pending(&[0.2]);
+        p2.enqueued = oldest + wait; // newest is fresh at the deadline
+        b.push(p2);
+        assert!(b.ready(oldest + wait), "oldest request's wait governs");
+        let wave = b.drain();
+        assert_eq!(wave.responders.len(), 2, "the partial drain takes everything pending");
+    }
+
+    #[test]
+    fn empty_batcher_is_never_ready() {
+        let b = Batcher::new(BatcherConfig { batch: 4, max_wait: Duration::ZERO }, 1);
+        assert!(b.is_empty());
+        assert_eq!(b.len(), 0);
+        // Even with max_wait ZERO there is no oldest request to expire.
+        assert!(!b.ready(Instant::now()));
+    }
+
+    #[test]
+    fn drain_on_empty_yields_all_padding_wave() {
+        // Callers guard with is_empty(); if they don't, the wave is
+        // well-formed anyway: zero responders, full padding.
+        let mut b = Batcher::new(BatcherConfig { batch: 4, max_wait: Duration::ZERO }, 2);
+        let wave = b.drain();
+        assert!(wave.responders.is_empty());
+        assert_eq!(wave.padded, 4);
+        assert_eq!(wave.values, vec![0.0; 8]);
+    }
+
+    #[test]
+    fn ready_then_drain_cycle_after_refill() {
+        // The empty → push → drain → empty cycle leaves no stale state.
+        let mut b = Batcher::new(BatcherConfig { batch: 2, max_wait: Duration::ZERO }, 1);
+        for round in 0..3 {
+            assert!(!b.ready(Instant::now()), "round {round}: empty never ready");
+            let (p1, _r1) = pending(&[0.1]);
+            let (p2, _r2) = pending(&[0.2]);
+            b.push(p1);
+            b.push(p2);
+            assert!(b.ready(Instant::now()), "round {round}: full wave ready");
+            let wave = b.drain();
+            assert_eq!(wave.padded, 0, "round {round}");
+            assert!(b.is_empty(), "round {round}");
+        }
+    }
+
+    #[test]
     fn oversized_queue_drains_in_waves() {
         let mut b = Batcher::new(BatcherConfig { batch: 2, max_wait: Duration::ZERO }, 1);
         for i in 0..5 {

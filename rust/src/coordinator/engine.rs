@@ -1,214 +1,61 @@
-//! The coordinator proper: request intake → batcher → executor thread
-//! (owns the execution engine) → response fan-out.
+//! The coordinator: the original single-controller request path, now a
+//! thin single-shard wrapper over the bank-parallel serving subsystem
+//! ([`crate::serve::Server`]).
 //!
-//! Thread topology: callers submit on a channel; one controller thread
-//! runs the batching loop per artifact and drives the [`Engine`] (a
-//! wave executes all batch rows like a subarray group firing all its
-//! rows in one cycle). `shutdown` drains cleanly.
+//! Kept because its API is the simplest way to drive one artifact
+//! directory — one call site, blocking workloads, per-app metrics — and
+//! because the examples/tests that predate `serve::` use it. All the
+//! actual batching/execution machinery lives in `serve::shard`; the
+//! coordinator simply pins `shards = 1`, which reproduces the old
+//! topology exactly (one controller thread, per-app batchers, drain on
+//! shutdown).
 
-use std::collections::HashMap;
 use std::path::Path;
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
-use std::thread::JoinHandle;
-use std::time::Instant;
+use std::sync::mpsc::Receiver;
 
-use crate::bail;
-use crate::error::{Context, Result};
+use crate::error::Result;
+use crate::serve::{Server, ServerConfig};
 
-use super::batcher::{Batcher, BatcherConfig, Pending};
+use super::batcher::BatcherConfig;
 use super::metrics::Metrics;
-use crate::runtime::Engine;
 
-enum Msg {
-    Request { app: String, inputs: Vec<f32>, respond: Sender<f32> },
-    Flush,
-    Shutdown,
-}
-
+/// Single-shard serving front: submit / run_workload / metrics over one
+/// controller thread. See [`crate::serve`] for the sharded version.
 pub struct Coordinator {
-    tx: Sender<Msg>,
-    handle: Option<JoinHandle<()>>,
-    metrics: Arc<Mutex<HashMap<String, Metrics>>>,
-    specs: HashMap<String, (usize, usize)>, // name → (n_inputs, batch)
+    server: Server,
 }
 
 impl Coordinator {
-    /// Load all artifacts from `dir` and start the controller thread.
-    /// The engine is constructed *inside* the controller thread — the
-    /// PJRT backend's xla handles are not `Send` (the interpreter would
-    /// not need this, but the topology is backend-agnostic).
+    /// Load all artifacts from `dir` and start the (single) controller
+    /// shard. The engine is shared `Arc` with the shard thread — see
+    /// [`Server::start`] for the backend `Send + Sync` caveat.
     pub fn start(dir: &Path, cfg: BatcherConfig) -> Result<Self> {
-        let metrics: Arc<Mutex<HashMap<String, Metrics>>> = Arc::default();
-        let (tx, rx): (Sender<Msg>, Receiver<Msg>) = channel();
-        // The manifest is parsed once, by the engine; the controller
-        // reports the resulting specs back so submit() validates
-        // against exactly what the engine will execute.
-        let (ready_tx, ready_rx) = channel::<Result<HashMap<String, (usize, usize)>>>();
-        let m2 = Arc::clone(&metrics);
-        let dir2 = dir.to_path_buf();
-        let handle = std::thread::Builder::new()
-            .name("stoch-imc-controller".into())
-            .spawn(move || {
-                let engine = match Engine::load(&dir2) {
-                    Ok(e) => e,
-                    Err(e) => {
-                        let _ = ready_tx.send(Err(e));
-                        return;
-                    }
-                };
-                let specs: HashMap<String, (usize, usize)> = engine
-                    .artifact_names()
-                    .into_iter()
-                    .filter_map(|n| {
-                        engine.spec(n).map(|s| (s.name.clone(), (s.n_inputs, s.batch)))
-                    })
-                    .collect();
-                let _ = ready_tx.send(Ok(specs.clone()));
-                controller_loop(engine, rx, m2, specs, cfg)
-            })
-            .context("spawning controller")?;
-        let specs = ready_rx.recv().context("controller died during load")??;
-        Ok(Self { tx, handle: Some(handle), metrics, specs })
+        let server = Server::start(
+            dir,
+            ServerConfig { shards: 1, batcher: cfg, ..ServerConfig::default() },
+        )?;
+        Ok(Self { server })
     }
 
     pub fn apps(&self) -> Vec<String> {
-        let mut v: Vec<String> = self.specs.keys().cloned().collect();
-        v.sort();
-        v
+        self.server.apps()
     }
 
     pub fn n_inputs(&self, app: &str) -> Option<usize> {
-        self.specs.get(app).map(|(n, _)| *n)
+        self.server.n_inputs(app)
     }
 
     /// Submit one instance; returns the receiver for its result.
     pub fn submit(&self, app: &str, inputs: &[f64]) -> Result<Receiver<f32>> {
-        let Some(&(n, _)) = self.specs.get(app) else {
-            bail!("unknown app `{app}` (have: {:?})", self.apps());
-        };
-        if inputs.len() != n {
-            bail!("app `{app}` expects {n} inputs, got {}", inputs.len());
-        }
-        let (rtx, rrx) = channel();
-        self.tx
-            .send(Msg::Request {
-                app: app.to_string(),
-                inputs: inputs.iter().map(|&v| v as f32).collect(),
-                respond: rtx,
-            })
-            .ok()
-            .context("controller gone")?;
-        Ok(rrx)
+        self.server.submit(app, inputs)
     }
 
     /// Run a whole workload synchronously; returns outputs in order.
     pub fn run_workload(&self, app: &str, instances: &[Vec<f64>]) -> Result<Vec<f64>> {
-        let t0 = Instant::now();
-        let receivers: Result<Vec<Receiver<f32>>> =
-            instances.iter().map(|x| self.submit(app, x)).collect();
-        let receivers = receivers?;
-        self.tx.send(Msg::Flush).ok().context("controller gone")?;
-        let mut out = Vec::with_capacity(receivers.len());
-        for r in receivers {
-            out.push(r.recv().context("result dropped")? as f64);
-        }
-        if let Ok(mut m) = self.metrics.lock() {
-            m.entry(app.to_string()).or_default().total_time += t0.elapsed();
-        }
-        Ok(out)
+        self.server.run_workload(app, instances)
     }
 
     pub fn metrics(&self, app: &str) -> Metrics {
-        self.metrics.lock().unwrap().get(app).cloned().unwrap_or_default()
-    }
-}
-
-impl Drop for Coordinator {
-    fn drop(&mut self) {
-        let _ = self.tx.send(Msg::Shutdown);
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
-        }
-    }
-}
-
-fn controller_loop(
-    engine: Engine,
-    rx: Receiver<Msg>,
-    metrics: Arc<Mutex<HashMap<String, Metrics>>>,
-    specs: HashMap<String, (usize, usize)>,
-    cfg: BatcherConfig,
-) {
-    let mut batchers: HashMap<String, Batcher> = HashMap::new();
-    let mut seed: i32 = 0x5eed;
-    loop {
-        // Wait for work (bounded, so timeouts can close partial waves).
-        let msg = rx.recv_timeout(cfg.max_wait);
-        match msg {
-            Ok(Msg::Request { app, inputs, respond }) => {
-                let (n, batch) = specs[&app];
-                let b = batchers.entry(app.clone()).or_insert_with(|| {
-                    Batcher::new(BatcherConfig { batch, max_wait: cfg.max_wait }, n)
-                });
-                b.push(Pending { inputs, respond, enqueued: Instant::now() });
-            }
-            Ok(Msg::Flush) => {
-                for (app, b) in batchers.iter_mut() {
-                    while !b.is_empty() {
-                        execute_wave(&engine, app, b, &metrics, &mut seed);
-                    }
-                }
-                continue;
-            }
-            Ok(Msg::Shutdown) => {
-                for (app, b) in batchers.iter_mut() {
-                    while !b.is_empty() {
-                        execute_wave(&engine, app, b, &metrics, &mut seed);
-                    }
-                }
-                return;
-            }
-            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
-            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => return,
-        }
-        // Close any ready waves.
-        let now = Instant::now();
-        for (app, b) in batchers.iter_mut() {
-            while b.ready(now) {
-                execute_wave(&engine, app, b, &metrics, &mut seed);
-            }
-        }
-    }
-}
-
-fn execute_wave(
-    engine: &Engine,
-    app: &str,
-    b: &mut Batcher,
-    metrics: &Arc<Mutex<HashMap<String, Metrics>>>,
-    seed: &mut i32,
-) {
-    let wave = b.drain();
-    *seed = seed.wrapping_mul(0x343FD).wrapping_add(0x269EC3);
-    let t0 = Instant::now();
-    match engine.execute(app, &wave.values, *seed, wave.responders.len()) {
-        Ok(outs) => {
-            let dt = t0.elapsed();
-            for (i, r) in wave.responders.iter().enumerate() {
-                let _ = r.send(outs[i]);
-            }
-            if let Ok(mut m) = metrics.lock() {
-                let e = m.entry(app.to_string()).or_default();
-                e.record_wave(wave.responders.len(), wave.padded, dt);
-                for _ in 0..wave.responders.len() {
-                    e.record_latency(dt);
-                }
-            }
-        }
-        Err(err) => {
-            // Surface the failure by dropping responders (recv() errors).
-            eprintln!("wave execution failed for `{app}`: {err:#}");
-        }
+        self.server.metrics(app)
     }
 }

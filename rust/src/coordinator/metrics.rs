@@ -24,6 +24,19 @@ impl Metrics {
         self.latencies_us.push(d.as_micros() as u64);
     }
 
+    /// Fold another metrics snapshot into this one — the pool-wide
+    /// aggregation across apps/shards. Latency samples concatenate, so
+    /// percentiles stay exact; `total_time` sums wall-clock per app
+    /// (shards overlap in time, so the pool total is an upper bound).
+    pub fn merge(&mut self, other: &Metrics) {
+        self.requests += other.requests;
+        self.waves += other.waves;
+        self.padded_slots += other.padded_slots;
+        self.exec_time += other.exec_time;
+        self.total_time += other.total_time;
+        self.latencies_us.extend_from_slice(&other.latencies_us);
+    }
+
     /// Requests per second over the recorded total time.
     pub fn throughput(&self) -> f64 {
         if self.total_time.is_zero() {
@@ -90,5 +103,23 @@ mod tests {
     fn throughput_zero_without_time() {
         let m = Metrics::default();
         assert_eq!(m.throughput(), 0.0);
+    }
+
+    #[test]
+    fn merge_aggregates_counts_and_latencies() {
+        let mut a = Metrics::default();
+        a.record_wave(4, 0, Duration::from_millis(2));
+        a.record_latency(Duration::from_micros(100));
+        let mut b = Metrics::default();
+        b.record_wave(3, 1, Duration::from_millis(1));
+        b.record_latency(Duration::from_micros(300));
+        b.record_latency(Duration::from_micros(500));
+        a.merge(&b);
+        assert_eq!(a.requests, 7);
+        assert_eq!(a.waves, 2);
+        assert_eq!(a.padded_slots, 1);
+        assert_eq!(a.exec_time, Duration::from_millis(3));
+        assert_eq!(a.latency_us(100.0), 500);
+        assert_eq!(a.latency_us(0.0), 100);
     }
 }

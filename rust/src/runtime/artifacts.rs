@@ -1,5 +1,11 @@
 //! Artifact registry: the manifest written by `python -m compile.aot`
-//! (name, n_inputs, batch, bl per line) and artifact path resolution.
+//! (name, n_inputs, batch, bl per line; `#` comments and blank lines
+//! skipped) and artifact path resolution.
+//!
+//! `bl` is the per-artifact bitstream-length knob: the paper's default
+//! is 256 (§5.1), and artifacts whose circuits amplify stream noise
+//! (e.g. feedback dividers) can ask for longer streams individually —
+//! see the committed `artifacts/manifest.txt`.
 
 use std::path::{Path, PathBuf};
 
@@ -28,7 +34,7 @@ pub fn load_manifest(dir: &Path) -> Result<Vec<ArtifactSpec>> {
     let mut specs = Vec::new();
     for (i, line) in text.lines().enumerate() {
         let line = line.trim();
-        if line.is_empty() {
+        if line.is_empty() || line.starts_with('#') {
             continue;
         }
         let parts: Vec<&str> = line.split_whitespace().collect();
@@ -53,12 +59,18 @@ mod tests {
     fn parses_manifest_lines() {
         let dir = std::env::temp_dir().join("stoch_imc_manifest_test");
         std::fs::create_dir_all(&dir).unwrap();
-        std::fs::write(dir.join("manifest.txt"), "op_multiply 2 64 256\napp_ol 6 64 256\n")
-            .unwrap();
+        std::fs::write(
+            dir.join("manifest.txt"),
+            "# name n_inputs batch bl\nop_multiply 2 64 256\n\napp_ol 6 64 1024\n",
+        )
+        .unwrap();
         let specs = load_manifest(&dir).unwrap();
         assert_eq!(specs.len(), 2);
         assert_eq!(specs[0].name, "op_multiply");
         assert_eq!(specs[1].n_inputs, 6);
+        // BL is a per-artifact knob: each line carries its own value.
+        assert_eq!(specs[0].bl, 256);
+        assert_eq!(specs[1].bl, 1024);
         assert_eq!(specs[0].path(&dir).file_name().unwrap(), "op_multiply.hlo.txt");
     }
 

@@ -129,10 +129,7 @@ fn input_value(artifact: &str, input: &str, x: &[f64]) -> Option<f64> {
 /// and the batch row so rows and artifacts draw independent streams and
 /// a different wave seed resamples everything.
 fn row_rng(seed: i32, name: &str, row: usize) -> Xoshiro256 {
-    let mut h: u64 = 0xcbf2_9ce4_8422_2325; // FNV-1a
-    for b in name.bytes() {
-        h = (h ^ b as u64).wrapping_mul(0x100_0000_01b3);
-    }
+    let h = crate::util::prng::fnv1a(name);
     Xoshiro256::seeded(h ^ (seed as u32 as u64) ^ ((row as u64) << 32))
 }
 
@@ -189,8 +186,27 @@ impl InterpEngine {
     /// (padded by the caller); returns the [batch] outputs. Only the
     /// first `live` rows are evaluated — padding rows (whose outputs
     /// the caller discards) come back as 0.0 without paying for a
-    /// netlist evaluation.
+    /// netlist evaluation. Rows are split across the auto worker count
+    /// (see [`default_row_threads`]).
     pub fn execute(&self, name: &str, values: &[f32], seed: i32, live: usize) -> Result<Vec<f32>> {
+        self.execute_rows(name, values, seed, live, 0)
+    }
+
+    /// [`InterpEngine::execute`] with an explicit row-worker count:
+    /// the live rows of the wave are chunked across `threads` scoped
+    /// workers (`0` = auto via [`default_row_threads`], `1` = the
+    /// sequential path). Outputs are bit-identical for every worker
+    /// count — each row draws from its own [`row_rng`] stream, so the
+    /// split is purely a wall-clock optimization, the way a subarray
+    /// group fires all its rows in one cycle.
+    pub fn execute_rows(
+        &self,
+        name: &str,
+        values: &[f32],
+        seed: i32,
+        live: usize,
+        threads: usize,
+    ) -> Result<Vec<f32>> {
         let Some(spec) = self.specs.get(name) else {
             bail!("unknown artifact `{name}`");
         };
@@ -208,25 +224,93 @@ impl InterpEngine {
         })?;
         // Arity consistency was enforced at load time, so every
         // registered spec matches its kernel's instance shape here.
-        let bl = spec.bl.max(1);
         let live = live.min(spec.batch);
-        let mut out = Vec::with_capacity(spec.batch);
-        for row in 0..live {
-            let x: Vec<f64> = values[row * spec.n_inputs..(row + 1) * spec.n_inputs]
-                .iter()
-                .map(|&v| (v as f64).clamp(0.0, 1.0))
-                .collect();
-            let mut rng = row_rng(seed, name, row);
-            let v = match kernel {
-                Kernel::Netlist(nl) => eval_netlist(name, nl, &x, bl, &mut rng)?,
-                Kernel::Lit(app) => app.stoch_value(&x, bl, &mut rng, 0.0),
-                Kernel::Kde(app) => app.stoch_value(&x, bl, &mut rng, 0.0),
-            };
-            out.push(v as f32);
+        let threads = if threads == 0 { default_row_threads() } else { threads };
+        let workers = threads.min(live).max(1);
+        let mut out = vec![0.0f32; spec.batch];
+        if workers <= 1 {
+            for (row, slot) in out[..live].iter_mut().enumerate() {
+                *slot = self.eval_row(name, spec, kernel, values, seed, row)?;
+            }
+        } else {
+            let chunk = (live + workers - 1) / workers;
+            let results: Vec<Result<()>> = std::thread::scope(|s| {
+                let handles: Vec<_> = out[..live]
+                    .chunks_mut(chunk)
+                    .enumerate()
+                    .map(|(ci, chunk_out)| {
+                        s.spawn(move || -> Result<()> {
+                            for (j, slot) in chunk_out.iter_mut().enumerate() {
+                                let row = ci * chunk + j;
+                                *slot = self.eval_row(name, spec, kernel, values, seed, row)?;
+                            }
+                            Ok(())
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| {
+                        h.join().unwrap_or_else(|_| {
+                            Err(crate::error::Error::msg("row worker panicked"))
+                        })
+                    })
+                    .collect()
+            });
+            for r in results {
+                r?;
+            }
         }
-        out.resize(spec.batch, 0.0);
         Ok(out)
     }
+
+    /// One batch row: clamp the instance, derive its RNG stream, run the
+    /// kernel. Immutable over `&self`, hence safe to call from the
+    /// scoped row workers.
+    fn eval_row(
+        &self,
+        name: &str,
+        spec: &ArtifactSpec,
+        kernel: &Kernel,
+        values: &[f32],
+        seed: i32,
+        row: usize,
+    ) -> Result<f32> {
+        let bl = spec.bl.max(1);
+        let x: Vec<f64> = values[row * spec.n_inputs..(row + 1) * spec.n_inputs]
+            .iter()
+            .map(|&v| (v as f64).clamp(0.0, 1.0))
+            .collect();
+        let mut rng = row_rng(seed, name, row);
+        let v = match kernel {
+            Kernel::Netlist(nl) => eval_netlist(name, nl, &x, bl, &mut rng)?,
+            Kernel::Lit(app) => app.stoch_value(&x, bl, &mut rng, 0.0),
+            Kernel::Kde(app) => app.stoch_value(&x, bl, &mut rng, 0.0),
+        };
+        Ok(v as f32)
+    }
+}
+
+/// The explicit row-worker override from `STOCH_IMC_ROW_THREADS`:
+/// `None` when the var is unset — or unparseable, which warns and falls
+/// back to auto rather than silently pinning waves sequential.
+pub fn row_threads_override() -> Option<usize> {
+    let s = std::env::var("STOCH_IMC_ROW_THREADS").ok()?;
+    match s.trim().parse::<usize>() {
+        Ok(n) if n >= 1 => Some(n),
+        _ => {
+            eprintln!("STOCH_IMC_ROW_THREADS=`{s}` is not a positive integer; using auto");
+            None
+        }
+    }
+}
+
+/// The auto row-worker count: the `STOCH_IMC_ROW_THREADS` env var when
+/// set, else the machine's available parallelism. Benches pin this
+/// explicitly to compare the sequential and row-parallel paths.
+pub fn default_row_threads() -> usize {
+    row_threads_override()
+        .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
 }
 
 /// Generate the input bitstreams for one instance per the netlist's
@@ -305,6 +389,27 @@ mod tests {
         // Wrong input size / unknown artifact are rejected.
         assert!(e.execute("op_multiply", &values[..2], 1, 2).is_err());
         assert!(e.execute("nope", &values, 1, spec.batch).is_err());
+    }
+
+    #[test]
+    fn row_parallel_matches_sequential_bit_exactly() {
+        // Each row draws its own row_rng stream, so the worker split is
+        // invisible in the outputs — any thread count, same bits.
+        let e = engine_with("op_multiply 2 16 1024\n", "rowpar");
+        let mut values = vec![0.0f32; 16 * 2];
+        for i in 0..16 {
+            values[2 * i] = 0.05 * (i + 1) as f32;
+            values[2 * i + 1] = 0.5;
+        }
+        let seq = e.execute_rows("op_multiply", &values, 9, 16, 1).unwrap();
+        for t in [2usize, 3, 5, 16, 64] {
+            let par = e.execute_rows("op_multiply", &values, 9, 16, t).unwrap();
+            assert_eq!(seq, par, "threads={t}");
+        }
+        // Partial live prefix: padding rows stay 0.0 on every path.
+        let partial = e.execute_rows("op_multiply", &values, 9, 5, 4).unwrap();
+        assert_eq!(&partial[..5], &seq[..5]);
+        assert!(partial[5..].iter().all(|&v| v == 0.0));
     }
 
     #[test]

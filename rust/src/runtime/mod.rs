@@ -38,7 +38,7 @@ compile_error!(
 );
 
 pub use artifacts::{load_manifest, ArtifactSpec};
-pub use interp::InterpEngine;
+pub use interp::{default_row_threads, row_threads_override, InterpEngine};
 
 use std::path::Path;
 
@@ -109,6 +109,28 @@ impl Engine {
             Engine::Interp(e) => e.execute(name, values, seed, live),
             #[cfg(all(feature = "xla-runtime", xla_available))]
             Engine::Pjrt(e) => e.execute(name, values, seed, live),
+        }
+    }
+
+    /// [`Engine::execute`] with an explicit row-worker count (`0` =
+    /// auto, `1` = sequential). The interpreter splits the live batch
+    /// rows across scoped workers with bit-identical outputs; PJRT
+    /// always runs its fixed-shape batch and ignores the knob.
+    pub fn execute_rows(
+        &self,
+        name: &str,
+        values: &[f32],
+        seed: i32,
+        live: usize,
+        threads: usize,
+    ) -> Result<Vec<f32>> {
+        match self {
+            Engine::Interp(e) => e.execute_rows(name, values, seed, live, threads),
+            #[cfg(all(feature = "xla-runtime", xla_available))]
+            Engine::Pjrt(e) => {
+                let _ = threads;
+                e.execute(name, values, seed, live)
+            }
         }
     }
 }

@@ -1,0 +1,38 @@
+//! S16 — the sharded bank-parallel serving subsystem.
+//!
+//! The paper's headline win is *bit-parallel* execution across memory
+//! banks/subarray groups (§4, 135.7× over binary IMC): every bank owns a
+//! controller that fires whole subarray-group waves independently of the
+//! other banks. This module models that bank-level parallelism in the
+//! software serving path:
+//!
+//! * [`shard::Shard`] — one *bank controller*: a batcher + executor
+//!   thread behind a **bounded** admission queue. A shard owns the wave
+//!   loop for the artifacts routed to it, exactly like the single
+//!   controller the coordinator used to run for *all* apps.
+//! * [`BankPool`] — owns the N shards and the app → shard routing (one
+//!   shard per artifact by default, FNV-hashed when fewer shards than
+//!   apps are configured). All shards share one [`runtime::Engine`]
+//!   behind an `Arc`, the way banks share the chip's global periphery.
+//! * [`Server`] — the front door: `submit` / `try_submit` (admission
+//!   control with backpressure), `run_workload`, `drain`, and pool-wide
+//!   aggregated [`Metrics`].
+//!
+//! Row-level parallelism composes underneath: each wave is evaluated
+//! row-parallel by [`runtime::InterpEngine::execute_rows`] (a scoped
+//! worker pool), so shard-level (bank) and row-level (subarray row)
+//! parallelism mirror the paper's two-level hierarchy.
+//!
+//! `coordinator::Coordinator` is now a thin single-shard wrapper over
+//! [`Server`], kept for its simpler API and for backward compatibility.
+//!
+//! [`Metrics`]: crate::coordinator::Metrics
+//! [`runtime::Engine`]: crate::runtime::Engine
+//! [`runtime::InterpEngine::execute_rows`]: crate::runtime::InterpEngine::execute_rows
+
+pub mod pool;
+pub mod server;
+pub mod shard;
+
+pub use pool::BankPool;
+pub use server::{Server, ServerConfig};

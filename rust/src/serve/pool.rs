@@ -1,0 +1,191 @@
+//! The bank pool: N controller shards + the app → shard routing table.
+//!
+//! Routing mirrors the paper's bank assignment: with enough shards every
+//! artifact gets its own bank controller (the default), otherwise apps
+//! are FNV-hashed onto the available shards. Every shard shares one
+//! `Arc<Engine>` and one metrics map (each app lives on exactly one
+//! shard, so per-app metrics never contend across shards).
+
+use std::collections::HashMap;
+use std::sync::mpsc::channel;
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::batcher::BatcherConfig;
+use crate::coordinator::metrics::Metrics;
+use crate::error::Result;
+use crate::runtime::Engine;
+use crate::util::prng::fnv1a;
+
+use super::shard::{Shard, ShardMsg};
+
+/// Owns the shards; dropped last by [`super::Server`], which shuts every
+/// shard down (draining its partial waves) and joins the threads.
+pub struct BankPool {
+    shards: Vec<Shard>,
+    route: HashMap<String, usize>,
+    metrics: Arc<Mutex<HashMap<String, Metrics>>>,
+}
+
+/// App → shard assignment over sorted names: identity when every app can
+/// have its own shard, FNV-hashed otherwise. Returns the shard count
+/// actually needed and the routing table.
+pub(crate) fn route_apps(names: &[String], shards: usize) -> (usize, HashMap<String, usize>) {
+    let n_apps = names.len();
+    let n = if shards == 0 { n_apps.max(1) } else { shards.min(n_apps.max(1)) };
+    let mut route = HashMap::new();
+    for (i, name) in names.iter().enumerate() {
+        let idx = if n >= n_apps { i } else { (fnv1a(name) % n as u64) as usize };
+        route.insert(name.clone(), idx);
+    }
+    (n, route)
+}
+
+impl BankPool {
+    /// Spawn `n` shards over the shared engine. `specs` maps every
+    /// servable app to `(n_inputs, batch)`; `shards == 0` means one
+    /// shard per artifact.
+    pub(crate) fn start(
+        engine: Arc<Engine>,
+        specs: &HashMap<String, (usize, usize)>,
+        shards: usize,
+        cfg: &BatcherConfig,
+        queue_depth: usize,
+        row_threads: usize,
+    ) -> Result<Self> {
+        let mut names: Vec<String> = specs.keys().cloned().collect();
+        names.sort();
+        let (n, route) = route_apps(&names, shards);
+        // Resolve the auto row-worker count once, here, hoisting the env
+        // lookup off the per-wave path. An explicit STOCH_IMC_ROW_THREADS
+        // is honored as-is; only the cores *fallback* is divided across
+        // the shards (banks share the chip; N shards × full-core row
+        // pools would oversubscribe and thrash).
+        let row_threads = if row_threads == 0 {
+            crate::runtime::row_threads_override().unwrap_or_else(|| {
+                let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
+                (cores / n).max(1)
+            })
+        } else {
+            row_threads
+        };
+        let metrics: Arc<Mutex<HashMap<String, Metrics>>> = Arc::default();
+        let mut pool_shards = Vec::with_capacity(n);
+        for id in 0..n {
+            let shard_specs: HashMap<String, (usize, usize)> = route
+                .iter()
+                .filter(|(_, &s)| s == id)
+                .map(|(app, _)| (app.clone(), specs[app]))
+                .collect();
+            pool_shards.push(Shard::spawn(
+                id,
+                Arc::clone(&engine),
+                shard_specs,
+                cfg.clone(),
+                queue_depth,
+                row_threads,
+                Arc::clone(&metrics),
+            )?);
+        }
+        Ok(Self { shards: pool_shards, route, metrics })
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Which shard serves `app` (None for unknown apps).
+    pub fn shard_of(&self, app: &str) -> Option<usize> {
+        self.route.get(app).copied()
+    }
+
+    pub(crate) fn shard_for(&self, app: &str) -> Option<&Shard> {
+        self.shard_of(app).map(|i| &self.shards[i])
+    }
+
+    pub(crate) fn metrics_map(&self) -> &Arc<Mutex<HashMap<String, Metrics>>> {
+        &self.metrics
+    }
+
+    /// Per-app metrics snapshot.
+    pub fn metrics(&self, app: &str) -> Metrics {
+        self.metrics.lock().unwrap().get(app).cloned().unwrap_or_default()
+    }
+
+    /// Pool-wide aggregate across every app on every shard.
+    pub fn pool_metrics(&self) -> Metrics {
+        let mut total = Metrics::default();
+        if let Ok(m) = self.metrics.lock() {
+            for app in m.values() {
+                total.merge(app);
+            }
+        }
+        total
+    }
+
+    /// Flush every shard (close partial waves) and wait for the acks.
+    pub(crate) fn flush_all(&self) -> Result<()> {
+        let mut acks = Vec::with_capacity(self.shards.len());
+        for sh in &self.shards {
+            let (tx, rx) = channel();
+            sh.send(ShardMsg::Flush(tx))?;
+            acks.push(rx);
+        }
+        for rx in acks {
+            let _ = rx.recv();
+        }
+        Ok(())
+    }
+}
+
+impl Drop for BankPool {
+    fn drop(&mut self) {
+        // Signal every shard before joining any: the banks drain their
+        // remaining partial waves concurrently, not one after another.
+        for sh in &self.shards {
+            sh.request_shutdown();
+        }
+        for sh in &mut self.shards {
+            sh.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn names(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn one_shard_per_app_by_default() {
+        let (n, route) = route_apps(&names(&["a", "b", "c"]), 0);
+        assert_eq!(n, 3);
+        let mut shards: Vec<usize> = route.values().copied().collect();
+        shards.sort();
+        assert_eq!(shards, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn hashed_routing_when_fewer_shards() {
+        let apps = names(&["app_kde", "app_lit", "app_ol", "op_multiply"]);
+        let (n, route) = route_apps(&apps, 2);
+        assert_eq!(n, 2);
+        for app in &apps {
+            assert!(route[app] < 2, "{app} routed to shard {}", route[app]);
+        }
+        // Deterministic: same inputs, same table.
+        assert_eq!(route, route_apps(&apps, 2).1);
+    }
+
+    #[test]
+    fn shard_count_capped_at_app_count() {
+        let (n, _) = route_apps(&names(&["a", "b"]), 16);
+        assert_eq!(n, 2);
+        // Degenerate: no apps still yields one (idle) shard.
+        let (n, route) = route_apps(&[], 0);
+        assert_eq!(n, 1);
+        assert!(route.is_empty());
+    }
+}

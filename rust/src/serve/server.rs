@@ -1,0 +1,182 @@
+//! The serving front door: request validation, shard routing, admission
+//! control, synchronous workload driving, and pool-wide metrics.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Arc;
+use std::sync::mpsc::{channel, Receiver};
+use std::time::Instant;
+
+use crate::bail;
+use crate::coordinator::batcher::BatcherConfig;
+use crate::coordinator::metrics::Metrics;
+use crate::error::{Context, Result};
+use crate::runtime::Engine;
+
+use super::pool::BankPool;
+use super::shard::ShardMsg;
+
+/// Serving configuration: how many bank shards, how deep each shard's
+/// admission queue is, and how waves batch/execute.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Number of controller shards. `0` (default) = one per artifact;
+    /// smaller values hash apps onto the available shards; values above
+    /// the artifact count are capped.
+    pub shards: usize,
+    /// Bounded per-shard admission queue depth. `submit` blocks when the
+    /// queue is full (backpressure); `try_submit` errors instead.
+    pub queue_depth: usize,
+    /// Wave batching knobs (`batch` is taken from each artifact's
+    /// manifest spec; `max_wait` closes partial waves).
+    pub batcher: BatcherConfig,
+    /// Row-parallelism per wave: worker threads the interpreter splits
+    /// batch rows across. `0` (default) = auto — the
+    /// `STOCH_IMC_ROW_THREADS` env var if set (honored as-is), else the
+    /// machine's cores divided across the pool's shards. Resolved once
+    /// at start, so the per-wave path never touches the environment.
+    pub row_threads: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            shards: 0,
+            queue_depth: 1024,
+            batcher: BatcherConfig::default(),
+            row_threads: 0,
+        }
+    }
+}
+
+/// Multi-app serving front door over a [`BankPool`] of controller
+/// shards. Shareable across caller threads (`&Server` is enough to
+/// submit), like a bank-parallel chip serving many hosts.
+pub struct Server {
+    pool: BankPool,
+    specs: HashMap<String, (usize, usize)>, // name → (n_inputs, batch)
+}
+
+impl Server {
+    /// Load the artifacts in `dir` once, share the engine across the
+    /// pool, and start the shards.
+    ///
+    /// Unlike the old single-controller coordinator (which constructed
+    /// the engine *inside* its thread), the engine is built here and
+    /// shared `Arc<Engine>` — which requires the backend to be
+    /// `Send + Sync`. The default interpreter backend is; the PJRT
+    /// backend's handles are not, and that path cannot link without a
+    /// vendored `xla` crate anyway (see `runtime::mod`).
+    pub fn start(dir: &Path, cfg: ServerConfig) -> Result<Self> {
+        let engine = Arc::new(Engine::load(dir)?);
+        let specs: HashMap<String, (usize, usize)> = engine
+            .artifact_names()
+            .into_iter()
+            .filter_map(|n| engine.spec(n).map(|s| (s.name.clone(), (s.n_inputs, s.batch))))
+            .collect();
+        let pool = BankPool::start(
+            engine,
+            &specs,
+            cfg.shards,
+            &cfg.batcher,
+            cfg.queue_depth,
+            cfg.row_threads,
+        )?;
+        Ok(Self { pool, specs })
+    }
+
+    /// Servable artifact names, sorted.
+    pub fn apps(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.specs.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    pub fn n_inputs(&self, app: &str) -> Option<usize> {
+        self.specs.get(app).map(|(n, _)| *n)
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.pool.n_shards()
+    }
+
+    /// Which shard serves `app` (None for unknown apps).
+    pub fn shard_of(&self, app: &str) -> Option<usize> {
+        self.pool.shard_of(app)
+    }
+
+    /// Submit one instance; blocks while the owning shard's admission
+    /// queue is full (backpressure). Returns the result receiver.
+    pub fn submit(&self, app: &str, inputs: &[f64]) -> Result<Receiver<f32>> {
+        self.enqueue(app, inputs, true)
+    }
+
+    /// Non-blocking submit: errors immediately with a "queue full"
+    /// message when the shard is saturated, so callers can shed load.
+    pub fn try_submit(&self, app: &str, inputs: &[f64]) -> Result<Receiver<f32>> {
+        self.enqueue(app, inputs, false)
+    }
+
+    fn enqueue(&self, app: &str, inputs: &[f64], block: bool) -> Result<Receiver<f32>> {
+        let Some(&(n, _)) = self.specs.get(app) else {
+            bail!("unknown app `{app}` (have: {:?})", self.apps());
+        };
+        if inputs.len() != n {
+            bail!("app `{app}` expects {n} inputs, got {}", inputs.len());
+        }
+        let Some(shard) = self.pool.shard_for(app) else {
+            bail!("app `{app}` has no shard (pool misrouted)");
+        };
+        let (rtx, rrx) = channel();
+        let msg = ShardMsg::Request {
+            app: app.to_string(),
+            inputs: inputs.iter().map(|&v| v as f32).collect(),
+            respond: rtx,
+        };
+        if block {
+            shard.send(msg)?;
+        } else {
+            shard.try_send(msg)?;
+        }
+        Ok(rrx)
+    }
+
+    /// Run a whole workload synchronously; returns outputs in order.
+    /// Safe to call concurrently from multiple threads for different
+    /// (or the same) apps — that is the multi-bank serving path.
+    pub fn run_workload(&self, app: &str, instances: &[Vec<f64>]) -> Result<Vec<f64>> {
+        let t0 = Instant::now();
+        let receivers: Result<Vec<Receiver<f32>>> =
+            instances.iter().map(|x| self.submit(app, x)).collect();
+        let receivers = receivers?;
+        // Close the partial tail wave instead of waiting out max_wait.
+        if let Some(shard) = self.pool.shard_for(app) {
+            let (ack_tx, _ack_rx) = channel();
+            shard.send(ShardMsg::Flush(ack_tx))?;
+        }
+        let mut out = Vec::with_capacity(receivers.len());
+        for r in receivers {
+            out.push(r.recv().with_context(|| format!("result dropped for `{app}`"))? as f64);
+        }
+        if let Ok(mut m) = self.pool.metrics_map().lock() {
+            m.entry(app.to_string()).or_default().total_time += t0.elapsed();
+        }
+        Ok(out)
+    }
+
+    /// Block until every shard has executed everything admitted so far
+    /// (partial waves included).
+    pub fn drain(&self) -> Result<()> {
+        self.pool.flush_all()
+    }
+
+    /// Per-app metrics snapshot.
+    pub fn metrics(&self, app: &str) -> Metrics {
+        self.pool.metrics(app)
+    }
+
+    /// Aggregate metrics across all apps and shards.
+    pub fn pool_metrics(&self) -> Metrics {
+        self.pool.pool_metrics()
+    }
+}

@@ -1,0 +1,196 @@
+//! One bank-controller shard: bounded admission queue → per-app batcher
+//! → executor loop driving the shared engine.
+//!
+//! The shard thread is the only consumer of its queue; requests are
+//! grouped into artifact-sized waves (the subarray-group capacity) and
+//! executed row-parallel on the shared [`Engine`]. The queue is a
+//! `sync_channel` of depth `queue_depth`: when a shard falls behind,
+//! blocking submitters wait (backpressure) and `try_submit` callers get
+//! an immediate "queue full" error — the admission-control contract the
+//! front-door [`super::Server`] exposes.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::bail;
+use crate::coordinator::batcher::{Batcher, BatcherConfig, Pending};
+use crate::coordinator::metrics::Metrics;
+use crate::error::{Context, Result};
+use crate::runtime::Engine;
+
+/// Messages accepted by a shard's admission queue.
+pub(crate) enum ShardMsg {
+    Request { app: String, inputs: Vec<f32>, respond: Sender<f32> },
+    /// Drain every batcher (partial waves included), then ack.
+    Flush(Sender<()>),
+    Shutdown,
+}
+
+/// One controller shard: the handle side (queue sender + join handle).
+pub struct Shard {
+    id: usize,
+    tx: SyncSender<ShardMsg>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Shard {
+    /// Spawn the shard thread. `specs` maps each app routed to this
+    /// shard to its `(n_inputs, batch)`; the engine is shared across
+    /// shards (banks share the chip's periphery, each drives its own
+    /// subarray-group waves).
+    pub(crate) fn spawn(
+        id: usize,
+        engine: Arc<Engine>,
+        specs: HashMap<String, (usize, usize)>,
+        cfg: BatcherConfig,
+        queue_depth: usize,
+        row_threads: usize,
+        metrics: Arc<Mutex<HashMap<String, Metrics>>>,
+    ) -> Result<Self> {
+        let (tx, rx) = sync_channel(queue_depth.max(1));
+        let handle = std::thread::Builder::new()
+            .name(format!("stoch-imc-shard-{id}"))
+            .spawn(move || shard_loop(id, &engine, rx, &metrics, &specs, &cfg, row_threads))
+            .with_context(|| format!("spawning shard {id}"))?;
+        Ok(Self { id, tx, handle: Some(handle) })
+    }
+
+    pub fn id(&self) -> usize {
+        self.id
+    }
+
+    /// Blocking enqueue: waits when the admission queue is full
+    /// (backpressure) and errors only if the shard thread is gone.
+    pub(crate) fn send(&self, msg: ShardMsg) -> Result<()> {
+        self.tx.send(msg).ok().with_context(|| format!("shard {} gone", self.id))
+    }
+
+    /// Non-blocking enqueue: errors with a "queue full" message when the
+    /// bounded queue is at capacity.
+    pub(crate) fn try_send(&self, msg: ShardMsg) -> Result<()> {
+        match self.tx.try_send(msg) {
+            Ok(()) => Ok(()),
+            Err(TrySendError::Full(_)) => {
+                bail!("shard {} admission queue full (backpressure)", self.id)
+            }
+            Err(TrySendError::Disconnected(_)) => bail!("shard {} gone", self.id),
+        }
+    }
+
+    /// Ask the shard to exit; it drains pending waves first. Pair with
+    /// [`Shard::join`] — signalling every shard before joining any lets
+    /// the whole pool drain in parallel.
+    pub(crate) fn request_shutdown(&self) {
+        let _ = self.tx.send(ShardMsg::Shutdown);
+    }
+
+    pub(crate) fn join(&mut self) {
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// The executor loop: one per shard thread. Identical in shape to the
+/// old single-controller loop, but scoped to this shard's apps and
+/// executing waves row-parallel on the shared engine.
+fn shard_loop(
+    id: usize,
+    engine: &Engine,
+    rx: Receiver<ShardMsg>,
+    metrics: &Arc<Mutex<HashMap<String, Metrics>>>,
+    specs: &HashMap<String, (usize, usize)>,
+    cfg: &BatcherConfig,
+    row_threads: usize,
+) {
+    let mut batchers: HashMap<String, Batcher> = HashMap::new();
+    // Per-shard wave-seed stream: mixed with the shard id so two shards
+    // never replay each other's SNG draws.
+    let mut seed: i32 = 0x5eed ^ (id as i32).wrapping_mul(0x9E37_79B9_u32 as i32);
+    loop {
+        // Wait for work (bounded, so timeouts can close partial waves).
+        match rx.recv_timeout(cfg.max_wait) {
+            Ok(ShardMsg::Request { app, inputs, respond }) => {
+                let Some(&(n, batch)) = specs.get(&app) else {
+                    // The server validates routing before enqueueing;
+                    // drop the responder so the caller sees an error.
+                    eprintln!("shard {id}: request for unrouted app `{app}` dropped");
+                    continue;
+                };
+                let b = batchers.entry(app).or_insert_with(|| {
+                    Batcher::new(BatcherConfig { batch, max_wait: cfg.max_wait }, n)
+                });
+                b.push(Pending { inputs, respond, enqueued: Instant::now() });
+            }
+            Ok(ShardMsg::Flush(ack)) => {
+                drain_all(engine, &mut batchers, metrics, &mut seed, row_threads);
+                let _ = ack.send(());
+            }
+            Ok(ShardMsg::Shutdown) => {
+                drain_all(engine, &mut batchers, metrics, &mut seed, row_threads);
+                return;
+            }
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => {
+                drain_all(engine, &mut batchers, metrics, &mut seed, row_threads);
+                return;
+            }
+        }
+        // Close any ready waves (full, or past the batching deadline).
+        let now = Instant::now();
+        for (app, b) in batchers.iter_mut() {
+            while b.ready(now) {
+                execute_wave(engine, app, b, metrics, &mut seed, row_threads);
+            }
+        }
+    }
+}
+
+fn drain_all(
+    engine: &Engine,
+    batchers: &mut HashMap<String, Batcher>,
+    metrics: &Arc<Mutex<HashMap<String, Metrics>>>,
+    seed: &mut i32,
+    row_threads: usize,
+) {
+    for (app, b) in batchers.iter_mut() {
+        while !b.is_empty() {
+            execute_wave(engine, app, b, metrics, seed, row_threads);
+        }
+    }
+}
+
+fn execute_wave(
+    engine: &Engine,
+    app: &str,
+    b: &mut Batcher,
+    metrics: &Arc<Mutex<HashMap<String, Metrics>>>,
+    seed: &mut i32,
+    row_threads: usize,
+) {
+    let wave = b.drain();
+    *seed = seed.wrapping_mul(0x343FD).wrapping_add(0x269EC3);
+    let t0 = Instant::now();
+    match engine.execute_rows(app, &wave.values, *seed, wave.responders.len(), row_threads) {
+        Ok(outs) => {
+            let dt = t0.elapsed();
+            for (i, r) in wave.responders.iter().enumerate() {
+                let _ = r.send(outs[i]);
+            }
+            if let Ok(mut m) = metrics.lock() {
+                let e = m.entry(app.to_string()).or_default();
+                e.record_wave(wave.responders.len(), wave.padded, dt);
+                for _ in 0..wave.responders.len() {
+                    e.record_latency(dt);
+                }
+            }
+        }
+        Err(err) => {
+            // Surface the failure by dropping responders (recv() errors).
+            eprintln!("wave execution failed for `{app}`: {err:#}");
+        }
+    }
+}

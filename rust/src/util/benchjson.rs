@@ -1,0 +1,113 @@
+//! Machine-readable bench reporting without serde: a flat JSON object
+//! mapping configuration name → ops/sec, written to `BENCH_serve.json`.
+//!
+//! Each bench harness merges its own keys into the existing file, so one
+//! `cargo bench` pass accumulates the full perf picture and the perf
+//! trajectory can be diffed across PRs. The parser accepts exactly the
+//! flat `{ "key": number, ... }` shape [`render`] emits (the offline
+//! crate set has no serde; this is not a general JSON parser).
+
+use std::collections::BTreeMap;
+use std::io;
+use std::path::Path;
+
+/// The canonical bench-report file name, shared by the harnesses.
+pub const BENCH_FILE: &str = "BENCH_serve.json";
+
+/// Merge `entries` into the flat JSON object at `path` (created if
+/// missing, unreadable content treated as empty) and rewrite it with
+/// sorted keys.
+pub fn merge_and_write(path: &Path, entries: &[(String, f64)]) -> io::Result<()> {
+    let mut map: BTreeMap<String, f64> = match std::fs::read_to_string(path) {
+        Ok(text) => parse_flat(&text).into_iter().collect(),
+        Err(_) => BTreeMap::new(),
+    };
+    for (k, v) in entries {
+        map.insert(k.clone(), *v);
+    }
+    std::fs::write(path, render(&map))
+}
+
+/// Parse the flat `{ "key": number, ... }` shape. Unparseable values
+/// are skipped rather than failing the bench run.
+pub fn parse_flat(text: &str) -> Vec<(String, f64)> {
+    let mut out = Vec::new();
+    let mut rest = text;
+    while let Some(q0) = rest.find('"') {
+        let after_open = &rest[q0 + 1..];
+        let Some(q1) = after_open.find('"') else { break };
+        let key = &after_open[..q1];
+        let after_key = &after_open[q1 + 1..];
+        let Some(colon) = after_key.find(':') else { break };
+        let val_text = after_key[colon + 1..].trim_start();
+        let end = val_text
+            .find(|c: char| c == ',' || c == '}' || c == '\n')
+            .unwrap_or(val_text.len());
+        if let Ok(v) = val_text[..end].trim().parse::<f64>() {
+            out.push((key.to_string(), v));
+        }
+        rest = &val_text[end..];
+    }
+    out
+}
+
+/// Render the map as a stable, diff-friendly flat JSON object.
+pub fn render(map: &BTreeMap<String, f64>) -> String {
+    let mut s = String::from("{\n");
+    for (i, (k, v)) in map.iter().enumerate() {
+        let comma = if i + 1 < map.len() { "," } else { "" };
+        s.push_str(&format!("  \"{k}\": {v:.3}{comma}\n"));
+    }
+    s.push_str("}\n");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_then_parse_round_trips() {
+        let mut map = BTreeMap::new();
+        map.insert("serve_multi_shard".to_string(), 12345.678);
+        map.insert("hotpath_and64k".to_string(), 0.5);
+        let text = render(&map);
+        assert!(text.starts_with("{\n"), "{text}");
+        assert!(text.ends_with("}\n"), "{text}");
+        let parsed = parse_flat(&text);
+        assert_eq!(parsed.len(), 2);
+        assert_eq!(parsed[0].0, "hotpath_and64k"); // BTreeMap order
+        assert!((parsed[0].1 - 0.5).abs() < 1e-9);
+        assert!((parsed[1].1 - 12345.678).abs() < 1e-3);
+    }
+
+    #[test]
+    fn merge_updates_existing_file() {
+        let dir = std::env::temp_dir().join("stoch_imc_benchjson_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(BENCH_FILE);
+        let _ = std::fs::remove_file(&path);
+        merge_and_write(&path, &[("a".to_string(), 1.0), ("b".to_string(), 2.0)]).unwrap();
+        // Second harness overwrites one key, adds another, keeps the rest.
+        merge_and_write(&path, &[("b".to_string(), 3.0), ("c".to_string(), 4.0)]).unwrap();
+        let got: BTreeMap<String, f64> =
+            parse_flat(&std::fs::read_to_string(&path).unwrap()).into_iter().collect();
+        assert_eq!(got.len(), 3);
+        assert_eq!(got["a"], 1.0);
+        assert_eq!(got["b"], 3.0);
+        assert_eq!(got["c"], 4.0);
+    }
+
+    #[test]
+    fn parse_skips_garbage_values() {
+        let parsed = parse_flat("{\n  \"ok\": 1.5,\n  \"bad\": oops,\n  \"also_ok\": 2\n}\n");
+        assert_eq!(parsed, vec![("ok".to_string(), 1.5), ("also_ok".to_string(), 2.0)]);
+    }
+
+    #[test]
+    fn parse_empty_and_malformed() {
+        assert!(parse_flat("").is_empty());
+        assert!(parse_flat("{}").is_empty());
+        assert!(parse_flat("\"dangling").is_empty());
+    }
+}

@@ -1,6 +1,8 @@
 //! Shared utilities: deterministic PRNG, statistics, property-test helper,
-//! and a tiny wall-clock timer used by the bench harnesses.
+//! a tiny wall-clock timer, and the flat-JSON bench reporter used by the
+//! bench harnesses.
 
+pub mod benchjson;
 pub mod check;
 pub mod prng;
 pub mod stats;

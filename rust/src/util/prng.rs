@@ -9,6 +9,18 @@
 //! Determinism matters here: every experiment in EXPERIMENTS.md is keyed
 //! by an explicit seed so results are exactly reproducible.
 
+/// FNV-1a over a string: the repo's cheap *stable* hash for deriving
+/// seeds and routing keys from names. Stability matters — per-row seed
+/// derivation (`runtime::interp`) and app→shard routing (`serve::pool`)
+/// must not depend on `RandomState`.
+pub fn fnv1a(name: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in name.bytes() {
+        h = (h ^ b as u64).wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
 /// SplitMix64: used to expand a single `u64` seed into generator state.
 #[derive(Debug, Clone)]
 pub struct SplitMix64 {

@@ -52,10 +52,15 @@ fn coordinator_ops_match_closed_forms() {
     let mul = coord.run_workload("op_multiply", &pairs).unwrap();
     let add = coord.run_workload("op_scaled_add", &pairs).unwrap();
     let div = coord.run_workload("op_scaled_divide", &pairs).unwrap();
+    // Tolerances at the committed manifest's paper-default BL=256: a
+    // unipolar SN estimate has σ = sqrt(p(1-p)/BL) ≤ 0.032, so 0.12 is
+    // ≈4σ for the combinational ops. The JK feedback divider also pays
+    // a convergence transient over the first stream bits, hence its
+    // looser 0.20 bound (it was 0.09 when the manifest shipped BL=1024).
     for (i, p) in pairs.iter().enumerate() {
-        assert!((mul[i] - p[0] * p[1]).abs() < 0.07, "mul {i}: {}", mul[i]);
-        assert!((add[i] - (p[0] + p[1]) / 2.0).abs() < 0.07, "add {i}");
-        assert!((div[i] - p[0] / (p[0] + p[1])).abs() < 0.09, "div {i}: {}", div[i]);
+        assert!((mul[i] - p[0] * p[1]).abs() < 0.12, "mul {i}: {}", mul[i]);
+        assert!((add[i] - (p[0] + p[1]) / 2.0).abs() < 0.12, "add {i}");
+        assert!((div[i] - p[0] / (p[0] + p[1])).abs() < 0.20, "div {i}: {}", div[i]);
     }
     // Batching metrics recorded.
     let m = coord.metrics("op_multiply");
@@ -99,8 +104,11 @@ fn app_artifact_matches_l3_functional_model() {
     for (x, o) in w.iter().zip(&outs) {
         let l3 = app.stoch_value(x, 4096, &mut rng, 0.0);
         let float = app.float_ref(x);
-        // Both layers approximate the same function.
-        assert!((o - float).abs() < 0.08, "pjrt {o} vs float {float}");
+        // Both layers approximate the same function. The engine runs at
+        // the committed manifest BL=256 (σ ≈ 0.032 per stream, and 32
+        // instances are checked, so the bound sits at ≈5.5σ); the L3
+        // reference below runs at BL=4096 and keeps its tight bound.
+        assert!((o - float).abs() < 0.18, "engine {o} vs float {float}");
         assert!((l3 - float).abs() < 0.08, "l3 {l3} vs float {float}");
     }
 }

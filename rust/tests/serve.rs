@@ -1,0 +1,178 @@
+//! serve:: acceptance — the sharded bank-parallel serving subsystem:
+//! ≥2 distinct apps served concurrently through `serve::Server`, values
+//! matching the single-shard `Coordinator` on the same artifacts, plus
+//! admission control (bounded queues, backpressure) and drain semantics.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use stoch_imc::apps::{ol::Ol, App};
+use stoch_imc::coordinator::{BatcherConfig, Coordinator};
+use stoch_imc::serve::{Server, ServerConfig};
+
+fn manifest_dir(tag: &str, lines: &str) -> PathBuf {
+    // Pin the default backend (see tests/interp_engine.rs for why this
+    // is safe in this binary).
+    std::env::remove_var("STOCH_IMC_BACKEND");
+    let dir = std::env::temp_dir().join(format!("stoch_imc_it_serve_{tag}"));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.txt"), lines).unwrap();
+    dir
+}
+
+#[test]
+fn two_apps_concurrently_match_single_shard_coordinator() {
+    // BL=2048 keeps single-estimate stream noise at σ ≈ 0.011, so the
+    // serve-vs-coordinator comparison bound (two independent estimates)
+    // sits at ≈6σ·√2 and the closed-form bounds at ≈7σ.
+    let dir = manifest_dir("two", "op_multiply 2 8 2048\napp_ol 6 8 2048\n");
+    let server = Server::start(&dir, ServerConfig::default()).unwrap();
+    // Default config: one bank shard per artifact, distinct shards.
+    assert_eq!(server.n_shards(), 2);
+    assert_eq!(server.apps(), vec!["app_ol".to_string(), "op_multiply".to_string()]);
+    assert_ne!(server.shard_of("op_multiply"), server.shard_of("app_ol"));
+
+    let ol = Ol::default();
+    let ol_work = ol.workload(16, 7);
+    let pairs: Vec<Vec<f64>> = (0..16).map(|i| vec![(i as f64 + 1.0) / 20.0, 0.7]).collect();
+
+    // Both workloads in flight at once from two caller threads.
+    let (mul_out, ol_out) = std::thread::scope(|s| {
+        let srv = &server;
+        let (pairs, ol_work) = (&pairs, &ol_work);
+        let h_mul = s.spawn(move || srv.run_workload("op_multiply", pairs).unwrap());
+        let h_ol = s.spawn(move || srv.run_workload("app_ol", ol_work).unwrap());
+        (h_mul.join().unwrap(), h_ol.join().unwrap())
+    });
+
+    // Single-shard reference path over the same artifact dir.
+    let coord = Coordinator::start(&dir, BatcherConfig::default()).unwrap();
+    let mul_ref = coord.run_workload("op_multiply", &pairs).unwrap();
+    let ol_ref = coord.run_workload("app_ol", &ol_work).unwrap();
+
+    for (i, p) in pairs.iter().enumerate() {
+        let exact = p[0] * p[1];
+        assert!((mul_out[i] - exact).abs() < 0.08, "serve mul {i}: {} vs {exact}", mul_out[i]);
+        assert!(
+            (mul_out[i] - mul_ref[i]).abs() < 0.1,
+            "mul {i}: serve {} vs coordinator {}",
+            mul_out[i],
+            mul_ref[i]
+        );
+    }
+    for (i, x) in ol_work.iter().enumerate() {
+        let f = ol.float_ref(x);
+        assert!((ol_out[i] - f).abs() < 0.1, "serve ol {i}: {} vs float {f}", ol_out[i]);
+        assert!(
+            (ol_out[i] - ol_ref[i]).abs() < 0.12,
+            "ol {i}: serve {} vs coordinator {}",
+            ol_out[i],
+            ol_ref[i]
+        );
+    }
+
+    // Per-app metrics live on their shard; the pool aggregates both.
+    let m_mul = server.metrics("op_multiply");
+    let m_ol = server.metrics("app_ol");
+    assert_eq!(m_mul.requests, 16);
+    assert_eq!(m_ol.requests, 16);
+    let pool = server.pool_metrics();
+    assert_eq!(pool.requests, 32);
+    assert_eq!(pool.waves, m_mul.waves + m_ol.waves);
+    assert!(pool.throughput() > 0.0);
+}
+
+#[test]
+fn bounded_queue_sheds_load_then_drains() {
+    // batch=1 ⇒ every admitted request is its own wave, so the shard is
+    // almost always busy executing and a depth-1 admission queue must
+    // report backpressure to a fast try_submit loop.
+    let dir = manifest_dir("bp", "op_multiply 2 1 8192\n");
+    let server = Server::start(
+        &dir,
+        ServerConfig {
+            shards: 1,
+            queue_depth: 1,
+            batcher: BatcherConfig { batch: 1, max_wait: Duration::from_millis(2) },
+            row_threads: 1,
+        },
+    )
+    .unwrap();
+
+    let mut admitted = Vec::new();
+    let mut shed = 0usize;
+    for _ in 0..50_000 {
+        match server.try_submit("op_multiply", &[0.5, 0.5]) {
+            Ok(rx) => admitted.push(rx),
+            Err(e) => {
+                assert!(format!("{e:#}").contains("full"), "unexpected error: {e:#}");
+                shed += 1;
+                if shed >= 4 && !admitted.is_empty() {
+                    break;
+                }
+            }
+        }
+    }
+    assert!(shed > 0, "depth-1 queue never reported backpressure");
+    assert!(!admitted.is_empty(), "nothing admitted");
+
+    // drain() waits until every admitted request has executed; nothing
+    // admitted is ever dropped.
+    server.drain().unwrap();
+    for rx in admitted {
+        let v = rx.recv().expect("admitted request answered") as f64;
+        assert!((v - 0.25).abs() < 0.05, "got {v}");
+    }
+}
+
+#[test]
+fn hashed_routing_serves_all_apps_on_fewer_shards() {
+    let dir = manifest_dir(
+        "hash",
+        "op_multiply 2 4 4096\nop_scaled_add 2 4 4096\nop_square_root 1 4 4096\n",
+    );
+    let server = Server::start(&dir, ServerConfig { shards: 2, ..Default::default() }).unwrap();
+    assert_eq!(server.n_shards(), 2);
+    for app in server.apps() {
+        let shard = server.shard_of(&app).unwrap();
+        assert!(shard < 2, "{app} routed to shard {shard}");
+    }
+    // Every app still serves correctly wherever it hashed to.
+    let mul = server.run_workload("op_multiply", &[vec![0.6, 0.5]]).unwrap();
+    assert!((mul[0] - 0.30).abs() < 0.1, "mul got {}", mul[0]);
+    let add = server.run_workload("op_scaled_add", &[vec![0.2, 0.6]]).unwrap();
+    assert!((add[0] - 0.40).abs() < 0.1, "add got {}", add[0]);
+    let sqrt = server.run_workload("op_square_root", &[vec![0.49]]).unwrap();
+    assert!((sqrt[0] - 0.7).abs() < 0.12, "sqrt got {}", sqrt[0]);
+}
+
+#[test]
+fn submit_validation_and_unknown_apps() {
+    let dir = manifest_dir("valid", "op_multiply 2 4 1024\n");
+    let server = Server::start(&dir, ServerConfig::default()).unwrap();
+    assert!(server.submit("op_multiply", &[0.5]).is_err(), "wrong arity");
+    assert!(server.submit("nope", &[0.5, 0.5]).is_err(), "unknown app");
+    assert!(server.try_submit("nope", &[0.5, 0.5]).is_err(), "unknown app (try)");
+    assert_eq!(server.n_inputs("nope"), None);
+    assert_eq!(server.shard_of("nope"), None);
+    assert_eq!(server.n_inputs("op_multiply"), Some(2));
+}
+
+#[test]
+fn drop_drains_pending_partial_waves() {
+    // Same drain-on-shutdown contract the Coordinator has always had,
+    // now provided by the shard pool.
+    let dir = manifest_dir("drop", "op_multiply 2 64 2048\n");
+    let server = Server::start(
+        &dir,
+        ServerConfig {
+            batcher: BatcherConfig { batch: 64, max_wait: Duration::from_secs(600) },
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let rx = server.submit("op_multiply", &[0.6, 0.7]).unwrap();
+    drop(server);
+    let out = rx.recv().expect("pending request answered on shutdown") as f64;
+    assert!((out - 0.42).abs() < 0.1, "got {out}");
+}
