@@ -2,11 +2,13 @@
 //! components plus the end-to-end coordinator wave throughput.
 //!
 //! L3 hot paths: packed-bitstream gate ops (64 lanes/word), the
-//! scheduler on large netlists, and the coordinator wave loop. Each is
+//! scheduler on large netlists, scalar-vs-word-parallel netlist waves
+//! (the transposed lane-block engine), and the coordinator wave loop.
+//! Each is
 //! timed over enough iterations for stable numbers; results are logged
-//! in EXPERIMENTS.md §Perf and merged as ops/sec into
-//! `BENCH_serve.json` (shared with `serve_throughput`) so the perf
-//! trajectory is tracked across PRs.
+//! in EXPERIMENTS.md §Perf and merged into `BENCH_serve.json` (shared
+//! with `serve_throughput`; ops/sec per key, plus dimensionless
+//! `*_speedup` ratios) so the perf trajectory is tracked across PRs.
 use std::time::Instant;
 
 use stoch_imc::netlist::{ops, replicate::replicate};
@@ -67,6 +69,43 @@ fn main() {
         std::hint::black_box(stoch_imc::sc::ops::scaled_divide(&a, &b));
     });
     results.push(("hotpath_jk_divider_64k_ops_per_s".to_string(), 1.0 / div_t));
+
+    // L3d: scalar per-row vs word-parallel lane-block netlist waves —
+    // the acceptance lever for the transposed wave engine. Both paths
+    // run single-threaded so the ratio isolates 64-rows-per-word
+    // evaluation from thread parallelism; both include identical
+    // per-row SNG, so the speedup is what a serving wave actually sees.
+    {
+        use stoch_imc::runtime::InterpEngine;
+        let dir = std::env::temp_dir().join("stoch_imc_perf_wordpar");
+        std::fs::create_dir_all(&dir).expect("tmp dir");
+        std::fs::write(
+            dir.join("manifest.txt"),
+            "op_multiply 2 128 256\nop_exponential 1 128 256\napp_hdp 8 128 1024\n",
+        )
+        .expect("manifest");
+        let e = InterpEngine::load(&dir).expect("interp engine");
+        println!("\n# scalar vs word-parallel netlist waves (128 live rows, 1 thread)");
+        for (name, n_in, iters) in
+            [("op_multiply", 2usize, 40usize), ("op_exponential", 1, 30), ("app_hdp", 8, 10)]
+        {
+            let mut values = vec![0.0f32; 128 * n_in];
+            for (i, v) in values.iter_mut().enumerate() {
+                *v = 0.05 + 0.9 * ((i * 37) % 101) as f32 / 101.0;
+            }
+            let scalar_t = bench(&format!("{name} scalar wave (128 rows)"), iters, || {
+                std::hint::black_box(e.execute_rows_scalar(name, &values, 3, 128, 1).unwrap());
+            });
+            let word_t = bench(&format!("{name} word-parallel wave (128 rows)"), iters * 4, || {
+                std::hint::black_box(e.execute_rows(name, &values, 3, 128, 1).unwrap());
+            });
+            let speedup = scalar_t / word_t;
+            println!("{:<44} {:>11.2}x", format!("  → {name} word-parallel speedup"), speedup);
+            results.push((format!("hotpath_scalar_{name}_rows_per_s"), 128.0 / scalar_t));
+            results.push((format!("hotpath_wordpar_{name}_rows_per_s"), 128.0 / word_t));
+            results.push((format!("hotpath_wordpar_{name}_speedup"), speedup));
+        }
+    }
 
     // End-to-end: coordinator wave throughput per artifact on whichever
     // backend STOCH_IMC_BACKEND selects (needs artifacts/manifest.txt).

@@ -35,6 +35,9 @@ pub fn eval_stochastic(
 
     let order = nl.topological_order();
     let mut values = vec![false; nl.len()];
+    // Fixed gate-operand scratch: gates never exceed MAX_ARITY inputs,
+    // so the hot loop performs no per-gate allocation.
+    let mut scratch = [false; super::plan::MAX_ARITY];
     // Persistent state.
     let mut delay_state: HashMap<NodeId, bool> = HashMap::new();
     let mut addie_state: HashMap<NodeId, Addie> = HashMap::new();
@@ -65,8 +68,10 @@ pub fn eval_stochastic(
                     .unwrap_or_else(|| panic!("missing input '{name}'"))
                     .get(t),
                 Node::Gate { kind, ins, .. } => {
-                    let bits: Vec<bool> = ins.iter().map(|&i| values[i]).collect();
-                    kind.eval(&bits)
+                    for (s, &i) in scratch.iter_mut().zip(ins) {
+                        *s = values[i];
+                    }
+                    kind.eval(&scratch[..ins.len()])
                 }
                 Node::Delay { .. } => delay_state[&id],
                 Node::Addie { x1, x2, .. } => {
@@ -99,14 +104,17 @@ pub fn eval_combinational(
 ) -> HashMap<String, bool> {
     let order = nl.topological_order();
     let mut values = vec![false; nl.len()];
+    let mut scratch = [false; super::plan::MAX_ARITY];
     for &id in &order {
         values[id] = match &nl.nodes[id] {
             Node::Input { name, .. } => *inputs
                 .get(name)
                 .unwrap_or_else(|| panic!("missing input '{name}'")),
             Node::Gate { kind, ins, .. } => {
-                let bits: Vec<bool> = ins.iter().map(|&i| values[i]).collect();
-                kind.eval(&bits)
+                for (s, &i) in scratch.iter_mut().zip(ins) {
+                    *s = values[i];
+                }
+                kind.eval(&scratch[..ins.len()])
             }
             Node::Delay { .. } | Node::Addie { .. } => {
                 panic!("sequential node in combinational netlist")

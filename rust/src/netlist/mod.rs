@@ -1,14 +1,17 @@
 //! S3/S4/S5 — gate-level netlist IR, the stochastic operation circuits
-//! (Fig 5), binary baseline circuits, lane replication, and functional
-//! evaluation.
+//! (Fig 5), binary baseline circuits, lane replication, functional
+//! evaluation, and the compiled word-parallel gate programs (`plan`)
+//! the runtime's wave engine executes 64 batch rows at a time.
 
 pub mod binary;
 pub mod eval;
 pub mod graph;
 pub mod ops;
+pub mod plan;
 pub mod replicate;
 
 pub use graph::{GateKind, InputClass, Netlist, Node, NodeId};
+pub use plan::GatePlan;
 
 /// XOR over the reliable gate set at an explicit row (5 gates):
 /// NAND(NAND(a, NOT b), NAND(NOT a, b)). Used by binary circuits where

@@ -1,0 +1,438 @@
+//! Netlist → flat gate program compilation for word-parallel waves.
+//!
+//! [`eval_stochastic`](super::eval::eval_stochastic) is the golden
+//! model: one lane, one bit at a time, `HashMap` lookups per bit. This
+//! module compiles a [`Netlist`] once into a [`GatePlan`] — a
+//! topologically ordered, struct-of-arrays instruction list with
+//! pre-resolved value slots — and evaluates it over transposed
+//! [`LaneMatrix`] inputs, 64 batch rows per `u64` word per instruction.
+//!
+//! Time stays sequential (the outer loop walks bit positions), which is
+//! what keeps the stateful nodes exact:
+//!
+//! * **Delay** feedback latches one lane-word per node at the end of
+//!   each step, so every lane sees its own previous-bit state.
+//! * **ADDIE** runs as a per-lane scalar island (`AddieLanes`): the
+//!   scalar [`Addie`](crate::sc::ops::Addie) draws two `next_below`
+//!   samples per step from a seed that depends only on the node id —
+//!   never the batch row — and Lemire rejection consumes a
+//!   lane-independent number of raw draws, so all 64 lanes share one
+//!   RNG stream and differ only in their saturating counters. The
+//!   word-parallel output is bit-identical to 64 scalar evaluations.
+//!
+//! Combinational gates execute as single bitwise ops across all lanes;
+//! dead lanes (ragged `live % 64 != 0` blocks) compute garbage that is
+//! masked at the output boundary and can never contaminate live lanes
+//! (no instruction mixes lanes).
+
+use super::graph::{GateKind, Netlist, Node};
+use crate::sc::bitplane::{LaneMatrix, LANES};
+use crate::sc::ops::ADDIE_SEED;
+use crate::util::prng::Xoshiro256;
+
+/// Widest gate fan-in ([`GateKind::Maj5Inv`]).
+pub const MAX_ARITY: usize = 5;
+
+/// One word-parallel instruction opcode. Gate opcodes mirror
+/// [`GateKind`]; `Addie` dispatches into the plan's per-lane counter
+/// island.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Op {
+    Buff,
+    Not,
+    And,
+    Nand,
+    Or,
+    Nor,
+    Maj3Inv,
+    Maj5Inv,
+    /// Index into the plan's ADDIE table.
+    Addie(u32),
+}
+
+impl Op {
+    fn from_kind(kind: GateKind) -> Self {
+        match kind {
+            GateKind::Buff => Op::Buff,
+            GateKind::Not => Op::Not,
+            GateKind::And => Op::And,
+            GateKind::Nand => Op::Nand,
+            GateKind::Or => Op::Or,
+            GateKind::Nor => Op::Nor,
+            GateKind::Maj3Inv => Op::Maj3Inv,
+            GateKind::Maj5Inv => Op::Maj5Inv,
+        }
+    }
+}
+
+/// One instruction: opcode, fixed-width input slot array (no per-gate
+/// `Vec`), output slot. Slots index the flat value array.
+#[derive(Debug, Clone)]
+struct Instr {
+    op: Op,
+    out: u32,
+    ins: [u32; MAX_ARITY],
+}
+
+/// Delay feedback cell: `slot` reads last step's latch at the top of
+/// each step; `src` is latched at the bottom.
+#[derive(Debug, Clone)]
+struct DelaySlot {
+    slot: u32,
+    src: u32,
+    init: bool,
+}
+
+/// ADDIE macro instance: operand slots, counter resolution, and the
+/// node-id-mixed seed that matches the golden model exactly.
+#[derive(Debug, Clone)]
+struct AddieSlot {
+    counter_bits: u32,
+    seed: u64,
+}
+
+/// A compiled, reusable gate program. Compile once per kernel at load
+/// time, evaluate per 64-row lane block with no allocations or map
+/// lookups inside the time loop.
+#[derive(Debug, Clone)]
+pub struct GatePlan {
+    n_slots: usize,
+    instrs: Vec<Instr>,
+    /// Primary inputs as (name, slot), in netlist node-id order — the
+    /// same order the per-row SNG draws streams in, so callers can bind
+    /// generated streams positionally.
+    inputs: Vec<(String, u32)>,
+    outputs: Vec<(String, u32)>,
+    delays: Vec<DelaySlot>,
+    addies: Vec<AddieSlot>,
+}
+
+impl GatePlan {
+    /// Compile `nl` into a flat instruction list (topological order,
+    /// one value slot per node).
+    pub fn compile(nl: &Netlist) -> Self {
+        let mut inputs = Vec::new();
+        let mut delays = Vec::new();
+        for (id, node) in nl.nodes.iter().enumerate() {
+            match node {
+                Node::Input { name, .. } => inputs.push((name.clone(), id as u32)),
+                Node::Delay { input, init, .. } => delays.push(DelaySlot {
+                    slot: id as u32,
+                    src: *input as u32,
+                    init: *init,
+                }),
+                _ => {}
+            }
+        }
+        let mut instrs = Vec::with_capacity(nl.len());
+        let mut addies = Vec::new();
+        for id in nl.topological_order() {
+            match &nl.nodes[id] {
+                // Inputs and delays are loaded at the top of each time
+                // step, not executed as instructions.
+                Node::Input { .. } | Node::Delay { .. } => {}
+                Node::Gate { kind, ins, .. } => {
+                    let mut slots = [0u32; MAX_ARITY];
+                    for (s, &i) in slots.iter_mut().zip(ins) {
+                        *s = i as u32;
+                    }
+                    instrs.push(Instr { op: Op::from_kind(*kind), out: id as u32, ins: slots });
+                }
+                Node::Addie { x1, x2, counter_bits, .. } => {
+                    let idx = addies.len() as u32;
+                    addies.push(AddieSlot {
+                        counter_bits: *counter_bits,
+                        seed: ADDIE_SEED ^ id as u64,
+                    });
+                    let mut slots = [0u32; MAX_ARITY];
+                    slots[0] = *x1 as u32;
+                    slots[1] = *x2 as u32;
+                    instrs.push(Instr { op: Op::Addie(idx), out: id as u32, ins: slots });
+                }
+            }
+        }
+        let outputs =
+            nl.outputs.iter().map(|(name, id)| (name.clone(), *id as u32)).collect();
+        Self { n_slots: nl.len(), instrs, inputs, outputs, delays, addies }
+    }
+
+    /// Primary-input names in binding order (netlist node-id order).
+    pub fn input_names(&self) -> impl Iterator<Item = &str> {
+        self.inputs.iter().map(|(n, _)| n.as_str())
+    }
+
+    pub fn n_inputs(&self) -> usize {
+        self.inputs.len()
+    }
+
+    /// Index of output `name` into [`GatePlan::eval_lanes`]' result.
+    pub fn output_index(&self, name: &str) -> Option<usize> {
+        self.outputs.iter().position(|(n, _)| n == name)
+    }
+
+    /// Executed instructions per time step (gates + ADDIE macros).
+    pub fn instr_count(&self) -> usize {
+        self.instrs.len()
+    }
+
+    /// Evaluate all lanes of a block: `inputs[i]` is the transposed
+    /// stream block bound to `self.inputs[i]` (equal lengths, equal
+    /// lane counts). Returns one [`LaneMatrix`] per netlist output, in
+    /// netlist output order. Each lane's bits are identical to running
+    /// [`eval_stochastic`](super::eval::eval_stochastic) on that lane's
+    /// streams alone.
+    pub fn eval_lanes(&self, inputs: &[LaneMatrix]) -> Vec<LaneMatrix> {
+        assert_eq!(inputs.len(), self.inputs.len(), "input block count mismatch");
+        let len = inputs.first().map_or(0, |m| m.len());
+        let lanes = inputs.first().map_or(0, |m| m.lanes());
+        for m in inputs {
+            assert_eq!(m.len(), len, "input block length mismatch");
+            assert_eq!(m.lanes(), lanes, "input block lane-count mismatch");
+        }
+        let mut values = vec![0u64; self.n_slots];
+        let mut latches: Vec<u64> = self
+            .delays
+            .iter()
+            .map(|d| if d.init { u64::MAX } else { 0 })
+            .collect();
+        let mut addies: Vec<AddieLanes> = self.addies.iter().map(AddieLanes::new).collect();
+        let mut outs: Vec<LaneMatrix> =
+            self.outputs.iter().map(|_| LaneMatrix::zeros(len, lanes)).collect();
+        for t in 0..len {
+            for (m, (_, slot)) in inputs.iter().zip(&self.inputs) {
+                values[*slot as usize] = m.word(t);
+            }
+            for (latch, d) in latches.iter().zip(&self.delays) {
+                values[d.slot as usize] = *latch;
+            }
+            for instr in &self.instrs {
+                let a = values[instr.ins[0] as usize];
+                let v = match instr.op {
+                    Op::Buff => a,
+                    Op::Not => !a,
+                    Op::And => a & values[instr.ins[1] as usize],
+                    Op::Nand => !(a & values[instr.ins[1] as usize]),
+                    Op::Or => a | values[instr.ins[1] as usize],
+                    Op::Nor => !(a | values[instr.ins[1] as usize]),
+                    Op::Maj3Inv => {
+                        let b = values[instr.ins[1] as usize];
+                        let c = values[instr.ins[2] as usize];
+                        !((a & b) | (a & c) | (b & c))
+                    }
+                    Op::Maj5Inv => {
+                        // Bit-sliced count of five one-bit addends via a
+                        // two-full-adder chain: count = s + 2(c1 + c2).
+                        let b = values[instr.ins[1] as usize];
+                        let c = values[instr.ins[2] as usize];
+                        let d = values[instr.ins[3] as usize];
+                        let e = values[instr.ins[4] as usize];
+                        let s1 = a ^ b ^ c;
+                        let c1 = (a & b) | (c & (a ^ b));
+                        let s2 = s1 ^ d ^ e;
+                        let c2 = (s1 & d) | (e & (s1 ^ d));
+                        // count ≥ 3 ⇔ both carries, or one carry + sum.
+                        !((c1 & c2) | ((c1 | c2) & s2))
+                    }
+                    Op::Addie(k) => {
+                        let x = if t % 2 == 0 { a } else { values[instr.ins[1] as usize] };
+                        addies[k as usize].step(x)
+                    }
+                };
+                values[instr.out as usize] = v;
+            }
+            for (latch, d) in latches.iter_mut().zip(&self.delays) {
+                *latch = values[d.src as usize];
+            }
+            for (out, (_, slot)) in outs.iter_mut().zip(&self.outputs) {
+                out.set_word(t, values[*slot as usize]);
+            }
+        }
+        outs
+    }
+}
+
+/// 64 independent ADDIE counters sharing one RNG stream (see the module
+/// docs for why sharing is exact): per step, two `next_below` draws are
+/// compared against every lane's own counter.
+struct AddieLanes {
+    max: u64,
+    c: [u64; LANES],
+    rng: Xoshiro256,
+}
+
+impl AddieLanes {
+    fn new(spec: &AddieSlot) -> Self {
+        let max = 1u64 << spec.counter_bits;
+        Self { max, c: [max / 2; LANES], rng: Xoshiro256::seeded(spec.seed) }
+    }
+
+    /// One time step across all lanes: bit `l` of `x` is lane `l`'s
+    /// input; returns lane `l`'s output in bit `l`. Mirrors
+    /// [`Addie::step`](crate::sc::ops::Addie::step) per lane.
+    fn step(&mut self, x: u64) -> u64 {
+        let d1 = self.rng.next_below(self.max);
+        let d2 = self.rng.next_below(self.max);
+        let mut y = 0u64;
+        for (l, c) in self.c.iter_mut().enumerate() {
+            let y1 = d1 < *c;
+            let y2 = d2 < *c;
+            if (x >> l) & 1 == 1 && *c < self.max {
+                *c += 1;
+            }
+            if y1 && y2 && *c > 0 {
+                *c -= 1;
+            }
+            if y1 {
+                y |= 1u64 << l;
+            }
+        }
+        y
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::collections::HashMap;
+
+    use super::*;
+    use crate::netlist::eval::eval_stochastic;
+    use crate::netlist::graph::InputClass;
+    use crate::netlist::ops;
+    use crate::sc::bitstream::Bitstream;
+
+    const SEED_BASE: u64 = 0x9E37_79B9;
+
+    /// Run `nl` through both paths on random per-lane streams and
+    /// assert bit-exact equality lane by lane.
+    fn assert_paths_agree(nl: &Netlist, bl: usize, lanes: usize, seed: u64) {
+        let plan = GatePlan::compile(nl);
+        let mut rng = Xoshiro256::seeded(seed);
+        // PI specs in node-id order — the same binding order as
+        // `plan.inputs`.
+        let input_specs: Vec<(String, InputClass)> = nl
+            .nodes
+            .iter()
+            .filter_map(|n| match n {
+                Node::Input { name, class, .. } => Some((name.clone(), *class)),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(input_specs.len(), plan.n_inputs());
+        // Per-lane streams, generated lane-major so correlated groups
+        // can share uniforms within a lane.
+        let mut rows: Vec<Vec<Bitstream>> = vec![Vec::new(); input_specs.len()];
+        let mut lane_inputs: Vec<HashMap<String, Bitstream>> = Vec::new();
+        for _ in 0..lanes {
+            let mut by_name = HashMap::new();
+            let mut group_uniforms: HashMap<u32, Vec<f64>> = HashMap::new();
+            for (i, (name, class)) in input_specs.iter().enumerate() {
+                let p = 0.1 + 0.8 * rng.next_f64();
+                let bs = match class {
+                    InputClass::Correlated(g) => {
+                        let us = group_uniforms.entry(*g).or_insert_with(|| {
+                            let mut u = vec![0.0; bl];
+                            rng.fill_f64(&mut u);
+                            u
+                        });
+                        Bitstream::from_uniforms(p, us)
+                    }
+                    _ => Bitstream::sample(p, bl, &mut rng),
+                };
+                rows[i].push(bs.clone());
+                by_name.insert(name.clone(), bs);
+            }
+            lane_inputs.push(by_name);
+        }
+        let blocks: Vec<LaneMatrix> = rows.iter().map(|r| LaneMatrix::from_rows(r)).collect();
+        let outs = plan.eval_lanes(&blocks);
+        for (l, inputs) in lane_inputs.iter().enumerate() {
+            let golden = eval_stochastic(nl, inputs);
+            for (k, (name, _)) in nl.outputs.iter().enumerate() {
+                assert_eq!(
+                    outs[k].lane(l),
+                    golden[name],
+                    "output `{name}` lane {l} (bl={bl} lanes={lanes})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn all_op_netlists_match_golden_model() {
+        let cases: Vec<(&str, Netlist)> = vec![
+            ("multiply", ops::multiply()),
+            ("scaled_add", ops::scaled_add()),
+            ("abs_subtract", ops::abs_subtract()),
+            ("scaled_divide", ops::scaled_divide()),
+            ("square_root", ops::square_root(6)),
+            ("exponential", ops::exponential()),
+        ];
+        for (i, (name, nl)) in cases.iter().enumerate() {
+            for (j, &(bl, lanes)) in [(100usize, 64usize), (256, 17), (64, 1)].iter().enumerate() {
+                let seed = SEED_BASE ^ ((i * 8 + j) as u64);
+                eprintln!("case {name} bl={bl} lanes={lanes}");
+                assert_paths_agree(nl, bl, lanes, seed);
+            }
+        }
+    }
+
+    #[test]
+    fn maj_gates_match_golden_model() {
+        let mut nl = Netlist::new();
+        let ids: Vec<_> =
+            (0..5).map(|i| nl.input(&format!("i{i}"), 0, 1, InputClass::Stochastic)).collect();
+        let m3 = nl.gate(GateKind::Maj3Inv, 0, ids[..3].to_vec());
+        let m5 = nl.gate(GateKind::Maj5Inv, 0, ids.clone());
+        let both = nl.gate(GateKind::And, 0, vec![m3, m5]);
+        let or2 = nl.gate(GateKind::Or, 0, vec![ids[0], m5]);
+        let b = nl.gate(GateKind::Buff, 0, vec![or2]);
+        let nor2 = nl.gate(GateKind::Nor, 0, vec![b, m3]);
+        nl.mark_output("m3", m3);
+        nl.mark_output("m5", m5);
+        nl.mark_output("both", both);
+        nl.mark_output("nor", nor2);
+        assert_paths_agree(&nl, 200, 64, SEED_BASE ^ 1);
+        assert_paths_agree(&nl, 65, 33, SEED_BASE ^ 2);
+    }
+
+    #[test]
+    fn app_netlists_match_golden_model() {
+        use crate::apps::{hdp::Hdp, ol::Ol, App};
+        let ol = Ol::default().stoch_cost_netlists().remove(0);
+        let hdp = Hdp.stoch_cost_netlists().remove(0);
+        assert_paths_agree(&ol, 128, 64, SEED_BASE ^ 3);
+        assert_paths_agree(&hdp, 100, 63, SEED_BASE ^ 4);
+    }
+
+    #[test]
+    fn plan_shape_is_flat_and_complete() {
+        let nl = ops::exponential();
+        let plan = GatePlan::compile(&nl);
+        assert_eq!(plan.n_inputs(), 10); // a1..a5, c1..c5
+        assert_eq!(plan.instr_count(), nl.gate_count());
+        assert_eq!(plan.output_index("out"), Some(0));
+        assert_eq!(plan.output_index("nope"), None);
+        // Instructions are topologically ordered over slots: every
+        // operand is an input/delay slot or written earlier.
+        let mut written: Vec<bool> = vec![false; plan.n_slots];
+        for (_, slot) in &plan.inputs {
+            written[*slot as usize] = true;
+        }
+        for d in &plan.delays {
+            written[d.slot as usize] = true;
+        }
+        for instr in &plan.instrs {
+            let arity = match instr.op {
+                Op::Buff | Op::Not => 1,
+                Op::Maj3Inv => 3,
+                Op::Maj5Inv => 5,
+                _ => 2,
+            };
+            for &s in &instr.ins[..arity] {
+                assert!(written[s as usize], "slot {s} read before write");
+            }
+            written[instr.out as usize] = true;
+        }
+        assert!(written.iter().all(|&w| w));
+    }
+}

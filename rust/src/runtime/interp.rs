@@ -2,18 +2,26 @@
 //!
 //! Executes the same `(values f32[B, n], seed i32) → f32[B]` contract as
 //! the PJRT backend, but with no external toolchain: each manifest entry
-//! is mapped to the crate's own circuit model and evaluated per batch
-//! row — SNG (stochastic number generation) → bit-level circuit →
-//! StoB popcount, exactly the wave one subarray group performs.
+//! is mapped to the crate's own circuit model — SNG (stochastic number
+//! generation) → bit-level circuit → StoB popcount, exactly the wave
+//! one subarray group performs.
 //!
 //! * The six `op_*` artifacts and the single-stage apps (`app_ol`,
-//!   `app_hdp`) run their gate-level netlists through
-//!   [`crate::netlist::eval::eval_stochastic`] — the golden model the
-//!   scheduled in-memory execution is validated against.
+//!   `app_hdp`) are compiled once at load into a
+//!   [`GatePlan`](crate::netlist::GatePlan) and evaluated
+//!   **word-parallel**: batch rows are packed 64 per `u64` word
+//!   ([`LaneMatrix`](crate::sc::LaneMatrix)), so each gate instruction
+//!   executes 64 rows at once — the software realization of the paper's
+//!   bit-parallel subarray rows. Outputs are bit-identical to the
+//!   retained scalar golden path
+//!   ([`crate::netlist::eval::eval_stochastic`], reachable via
+//!   [`InterpEngine::execute_rows_scalar`]) because both paths draw the
+//!   same per-row SNG streams and the plan evaluates each lane exactly
+//!   as the golden model does.
 //! * The multi-stage apps (`app_lit`, `app_kde`) need StoB→BtoS stream
 //!   regeneration between stages (DESIGN/ARCHITECTURE notes), so they
-//!   run the staged bitstream evaluators in `apps::` (the same models
-//!   the L2 JAX graphs mirror).
+//!   run the staged bitstream evaluators in `apps::` per row (the same
+//!   models the L2 JAX graphs mirror).
 //!
 //! Only `manifest.txt` is required in the artifact directory; `.hlo.txt`
 //! files are ignored by this backend.
@@ -25,7 +33,8 @@ use crate::apps::{hdp::Hdp, kde::Kde, lit::Lit, ol::Ol, App};
 use crate::bail;
 use crate::error::{Context, Result};
 use crate::netlist::eval::eval_stochastic;
-use crate::netlist::{ops, InputClass, Netlist, Node};
+use crate::netlist::{ops, GatePlan, InputClass, Netlist, Node};
+use crate::sc::bitplane::{LaneMatrix, LANES};
 use crate::sc::bitstream::Bitstream;
 use crate::util::prng::Xoshiro256;
 
@@ -33,12 +42,24 @@ use super::artifacts::{load_manifest, ArtifactSpec};
 
 /// How one artifact is evaluated per batch row.
 enum Kernel {
-    /// Single-stage gate-level netlist with output `"out"`.
-    Netlist(Netlist),
+    /// Single-stage gate-level netlist with output `"out"`, plus its
+    /// compiled word-parallel gate program (built once at load).
+    Netlist { nl: Netlist, plan: GatePlan },
     /// Staged LIT pipeline (three in-memory stages + regeneration).
     Lit(Lit),
     /// Staged KDE pipeline (correlated XOR stage + exponential stage).
     Kde(Kde),
+}
+
+/// Everything one netlist wave needs, bundled so the block workers take
+/// a single shareable reference.
+struct NetlistWave<'a> {
+    name: &'a str,
+    spec: &'a ArtifactSpec,
+    nl: &'a Netlist,
+    plan: &'a GatePlan,
+    values: &'a [f32],
+    seed: i32,
 }
 
 /// The interpreter engine: artifact specs plus per-artifact kernels.
@@ -48,15 +69,21 @@ pub struct InterpEngine {
 }
 
 fn kernel_for(name: &str) -> Option<Kernel> {
+    // Compile the word-parallel gate program once per kernel at load;
+    // every wave reuses it.
+    fn netlist(nl: Netlist) -> Kernel {
+        let plan = GatePlan::compile(&nl);
+        Kernel::Netlist { nl, plan }
+    }
     Some(match name {
-        "op_multiply" => Kernel::Netlist(ops::multiply()),
-        "op_scaled_add" => Kernel::Netlist(ops::scaled_add()),
-        "op_abs_subtract" => Kernel::Netlist(ops::abs_subtract()),
-        "op_scaled_divide" => Kernel::Netlist(ops::scaled_divide()),
-        "op_square_root" => Kernel::Netlist(ops::square_root(ops::ADDIE_BITS_APP)),
-        "op_exponential" => Kernel::Netlist(ops::exponential()),
-        "app_ol" => Kernel::Netlist(Ol::default().stoch_cost_netlists().remove(0)),
-        "app_hdp" => Kernel::Netlist(Hdp.stoch_cost_netlists().remove(0)),
+        "op_multiply" => netlist(ops::multiply()),
+        "op_scaled_add" => netlist(ops::scaled_add()),
+        "op_abs_subtract" => netlist(ops::abs_subtract()),
+        "op_scaled_divide" => netlist(ops::scaled_divide()),
+        "op_square_root" => netlist(ops::square_root(ops::ADDIE_BITS_APP)),
+        "op_exponential" => netlist(ops::exponential()),
+        "app_ol" => netlist(Ol::default().stoch_cost_netlists().remove(0)),
+        "app_hdp" => netlist(Hdp.stoch_cost_netlists().remove(0)),
         "app_lit" => Kernel::Lit(Lit::default()),
         "app_kde" => Kernel::Kde(Kde::default()),
         _ => return None,
@@ -192,11 +219,16 @@ impl InterpEngine {
         self.execute_rows(name, values, seed, live, 0)
     }
 
-    /// [`InterpEngine::execute`] with an explicit row-worker count:
-    /// the live rows of the wave are chunked across `threads` scoped
-    /// workers (`0` = auto via [`default_row_threads`], `1` = the
-    /// sequential path). Outputs are bit-identical for every worker
-    /// count — each row draws from its own [`row_rng`] stream, so the
+    /// [`InterpEngine::execute`] with an explicit worker count (`0` =
+    /// auto via [`default_row_threads`]). Netlist kernels run the
+    /// **word-parallel** path: live rows are packed into 64-row lane
+    /// blocks (one row per bit lane of a `u64`) and the blocks are
+    /// split across `threads` scoped workers; each compiled gate
+    /// instruction then evaluates 64 rows at once. Staged kernels
+    /// (`app_lit`, `app_kde`) keep the per-row path. Outputs are
+    /// bit-identical for every worker count, block grouping, and path —
+    /// each row draws from its own [`row_rng`] stream and the plan
+    /// evaluates each lane exactly as the golden model does — so the
     /// split is purely a wall-clock optimization, the way a subarray
     /// group fires all its rows in one cycle.
     pub fn execute_rows(
@@ -206,6 +238,34 @@ impl InterpEngine {
         seed: i32,
         live: usize,
         threads: usize,
+    ) -> Result<Vec<f32>> {
+        self.execute_impl(name, values, seed, live, threads, true)
+    }
+
+    /// [`InterpEngine::execute_rows`] forced onto the scalar golden
+    /// path: every row is evaluated one bit at a time through
+    /// [`eval_stochastic`]. Kept public as the reference the
+    /// word-parallel path is differentially tested (and benchmarked)
+    /// against.
+    pub fn execute_rows_scalar(
+        &self,
+        name: &str,
+        values: &[f32],
+        seed: i32,
+        live: usize,
+        threads: usize,
+    ) -> Result<Vec<f32>> {
+        self.execute_impl(name, values, seed, live, threads, false)
+    }
+
+    fn execute_impl(
+        &self,
+        name: &str,
+        values: &[f32],
+        seed: i32,
+        live: usize,
+        threads: usize,
+        word_parallel: bool,
     ) -> Result<Vec<f32>> {
         let Some(spec) = self.specs.get(name) else {
             bail!("unknown artifact `{name}`");
@@ -226,42 +286,102 @@ impl InterpEngine {
         // registered spec matches its kernel's instance shape here.
         let live = live.min(spec.batch);
         let threads = if threads == 0 { default_row_threads() } else { threads };
-        let workers = threads.min(live).max(1);
         let mut out = vec![0.0f32; spec.batch];
-        if workers <= 1 {
-            for (row, slot) in out[..live].iter_mut().enumerate() {
-                *slot = self.eval_row(name, spec, kernel, values, seed, row)?;
+        match kernel {
+            Kernel::Netlist { nl, plan } if word_parallel => {
+                let wave = NetlistWave { name, spec, nl, plan, values, seed };
+                self.execute_blocks(&wave, &mut out[..live], threads)?;
             }
-        } else {
-            let chunk = (live + workers - 1) / workers;
-            let results: Vec<Result<()>> = std::thread::scope(|s| {
-                let handles: Vec<_> = out[..live]
-                    .chunks_mut(chunk)
-                    .enumerate()
-                    .map(|(ci, chunk_out)| {
-                        s.spawn(move || -> Result<()> {
-                            for (j, slot) in chunk_out.iter_mut().enumerate() {
-                                let row = ci * chunk + j;
-                                *slot = self.eval_row(name, spec, kernel, values, seed, row)?;
-                            }
-                            Ok(())
-                        })
-                    })
-                    .collect();
-                handles
-                    .into_iter()
-                    .map(|h| {
-                        h.join().unwrap_or_else(|_| {
-                            Err(crate::error::Error::msg("row worker panicked"))
-                        })
-                    })
-                    .collect()
-            });
-            for r in results {
-                r?;
-            }
+            _ => self.execute_scalar_rows(
+                name,
+                spec,
+                kernel,
+                values,
+                seed,
+                &mut out[..live],
+                threads,
+            )?,
         }
         Ok(out)
+    }
+
+    /// Word-parallel wave: split the live rows into 64-row lane blocks
+    /// and the blocks across scoped workers. Worker chunks are whole
+    /// multiples of [`LANES`] so block boundaries are identical for
+    /// every worker count (grouping is invisible in the outputs
+    /// regardless — each lane is evaluated independently).
+    fn execute_blocks(&self, wave: &NetlistWave, out: &mut [f32], threads: usize) -> Result<()> {
+        let live = out.len();
+        if live == 0 {
+            return Ok(());
+        }
+        let blocks = live.div_ceil(LANES);
+        let workers = threads.min(blocks).max(1);
+        parallel_chunks(out, workers, blocks.div_ceil(workers) * LANES, |start, sub| {
+            for (bj, block_out) in sub.chunks_mut(LANES).enumerate() {
+                self.eval_block(wave, start + bj * LANES, block_out)?;
+            }
+            Ok(())
+        })
+    }
+
+    /// One lane block (≤ 64 rows starting at `row0`): draw every row's
+    /// SNG streams from its own [`row_rng`] (identical to the scalar
+    /// path), transpose them into lane-major words, run the compiled
+    /// gate program once for all rows, and read each row's StoB value
+    /// off its lane.
+    fn eval_block(&self, w: &NetlistWave, row0: usize, out: &mut [f32]) -> Result<()> {
+        let bl = w.spec.bl.max(1);
+        let rows = out.len();
+        let mut lane_streams: Vec<Vec<Bitstream>> =
+            (0..w.plan.n_inputs()).map(|_| Vec::with_capacity(rows)).collect();
+        for r in 0..rows {
+            let row = row0 + r;
+            let x = clamp_instance(w.values, w.spec.n_inputs, row);
+            let mut rng = row_rng(w.seed, w.name, row);
+            let streams = generate_input_streams(w.name, w.nl, &x, bl, &mut rng)?;
+            for (lane, bs) in lane_streams.iter_mut().zip(streams) {
+                lane.push(bs);
+            }
+        }
+        let blocks: Vec<LaneMatrix> =
+            lane_streams.iter().map(|rows| LaneMatrix::from_rows(rows)).collect();
+        let outs = w.plan.eval_lanes(&blocks);
+        let oi = w.plan.output_index("out").with_context(|| {
+            format!("artifact `{}`: netlist has no `out` output", w.name)
+        })?;
+        // Transpose the output block back to one bitstream per row so
+        // the StoB popcount also runs 64 bits per word.
+        for (slot, row) in out.iter_mut().zip(outs[oi].to_rows()) {
+            *slot = row.value() as f32;
+        }
+        Ok(())
+    }
+
+    /// Scalar per-row wave (golden path, and the staged `app_lit` /
+    /// `app_kde` kernels): chunk the live rows across scoped workers.
+    #[allow(clippy::too_many_arguments)]
+    fn execute_scalar_rows(
+        &self,
+        name: &str,
+        spec: &ArtifactSpec,
+        kernel: &Kernel,
+        values: &[f32],
+        seed: i32,
+        out: &mut [f32],
+        threads: usize,
+    ) -> Result<()> {
+        let live = out.len();
+        if live == 0 {
+            return Ok(());
+        }
+        let workers = threads.min(live).max(1);
+        parallel_chunks(out, workers, live.div_ceil(workers), |start, sub| {
+            for (j, slot) in sub.iter_mut().enumerate() {
+                *slot = self.eval_row(name, spec, kernel, values, seed, start + j)?;
+            }
+            Ok(())
+        })
     }
 
     /// One batch row: clamp the instance, derive its RNG stream, run the
@@ -277,18 +397,58 @@ impl InterpEngine {
         row: usize,
     ) -> Result<f32> {
         let bl = spec.bl.max(1);
-        let x: Vec<f64> = values[row * spec.n_inputs..(row + 1) * spec.n_inputs]
-            .iter()
-            .map(|&v| (v as f64).clamp(0.0, 1.0))
-            .collect();
+        let x = clamp_instance(values, spec.n_inputs, row);
         let mut rng = row_rng(seed, name, row);
         let v = match kernel {
-            Kernel::Netlist(nl) => eval_netlist(name, nl, &x, bl, &mut rng)?,
+            Kernel::Netlist { nl, .. } => eval_netlist(name, nl, &x, bl, &mut rng)?,
             Kernel::Lit(app) => app.stoch_value(&x, bl, &mut rng, 0.0),
             Kernel::Kde(app) => app.stoch_value(&x, bl, &mut rng, 0.0),
         };
         Ok(v as f32)
     }
+}
+
+/// Run `body` over `out` split into `chunk`-sized sub-slices across
+/// scoped workers; `body` receives each sub-slice's starting row. Runs
+/// inline (no spawn) when one worker — or one chunk — covers
+/// everything. Shared by the lane-block and scalar wave paths so the
+/// spawn/join/panic-mapping scaffolding exists once.
+fn parallel_chunks<F>(out: &mut [f32], workers: usize, chunk: usize, body: F) -> Result<()>
+where
+    F: Fn(usize, &mut [f32]) -> Result<()> + Sync,
+{
+    if workers <= 1 || out.len() <= chunk {
+        return body(0, out);
+    }
+    let results: Vec<Result<()>> = std::thread::scope(|s| {
+        let handles: Vec<_> = out
+            .chunks_mut(chunk)
+            .enumerate()
+            .map(|(ci, sub)| {
+                let body = &body;
+                s.spawn(move || body(ci * chunk, sub))
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| {
+                h.join()
+                    .unwrap_or_else(|_| Err(crate::error::Error::msg("wave worker panicked")))
+            })
+            .collect()
+    });
+    for r in results {
+        r?;
+    }
+    Ok(())
+}
+
+/// One instance's inputs, clamped into the unipolar domain.
+fn clamp_instance(values: &[f32], n_inputs: usize, row: usize) -> Vec<f64> {
+    values[row * n_inputs..(row + 1) * n_inputs]
+        .iter()
+        .map(|&v| (v as f64).clamp(0.0, 1.0))
+        .collect()
 }
 
 /// The explicit row-worker override from `STOCH_IMC_ROW_THREADS`:
@@ -313,18 +473,22 @@ pub fn default_row_threads() -> usize {
         .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
 }
 
-/// Generate the input bitstreams for one instance per the netlist's
-/// input classes (independent, correlation-grouped, or constant
-/// streams) and evaluate functionally.
-fn eval_netlist(
+/// Generate one batch row's input bitstreams per the netlist's input
+/// classes (independent, correlation-grouped, or constant streams), in
+/// netlist Input-node (id) order — the binding order of
+/// [`GatePlan`]'s inputs. The RNG draw order, including the shared
+/// correlated-group uniforms, is part of the golden contract: the
+/// scalar and word-parallel paths both call this, so their streams are
+/// identical by construction.
+fn generate_input_streams(
     artifact: &str,
     nl: &Netlist,
     x: &[f64],
     bl: usize,
     rng: &mut Xoshiro256,
-) -> Result<f64> {
+) -> Result<Vec<Bitstream>> {
     let mut group_uniforms: HashMap<u32, Vec<f64>> = HashMap::new();
-    let mut inputs: HashMap<String, Bitstream> = HashMap::new();
+    let mut streams = Vec::new();
     for node in &nl.nodes {
         if let Node::Input { name, class, .. } = node {
             let Some(v) = input_value(artifact, name, x) else {
@@ -345,9 +509,27 @@ fn eval_netlist(
                 }
                 _ => Bitstream::sample(v, bl, rng),
             };
-            inputs.insert(name.clone(), bs);
+            streams.push(bs);
         }
     }
+    Ok(streams)
+}
+
+/// Generate the input bitstreams for one instance and evaluate through
+/// the scalar golden model.
+fn eval_netlist(
+    artifact: &str,
+    nl: &Netlist,
+    x: &[f64],
+    bl: usize,
+    rng: &mut Xoshiro256,
+) -> Result<f64> {
+    let streams = generate_input_streams(artifact, nl, x, bl, rng)?;
+    let names = nl.nodes.iter().filter_map(|n| match n {
+        Node::Input { name, .. } => Some(name.clone()),
+        _ => None,
+    });
+    let inputs: HashMap<String, Bitstream> = names.zip(streams).collect();
     let outs = eval_stochastic(nl, &inputs);
     let out = outs
         .get("out")
@@ -410,6 +592,27 @@ mod tests {
         let partial = e.execute_rows("op_multiply", &values, 9, 5, 4).unwrap();
         assert_eq!(&partial[..5], &seq[..5]);
         assert!(partial[5..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn word_parallel_matches_scalar_golden_path() {
+        // The word-parallel lane-block path must be bit-identical to
+        // the scalar golden path for ragged live counts (lane blocks of
+        // 64, 64, 12) and every thread count. BL=100 also exercises the
+        // ragged tail word (100 % 64 != 0).
+        let e = engine_with("op_scaled_divide 2 140 100\n", "wordpar");
+        let mut values = vec![0.0f32; 140 * 2];
+        for i in 0..140 {
+            values[2 * i] = 0.1 + 0.005 * i as f32;
+            values[2 * i + 1] = 0.9 - 0.005 * i as f32;
+        }
+        for live in [1usize, 63, 64, 65, 140] {
+            let golden = e.execute_rows_scalar("op_scaled_divide", &values, 21, live, 1).unwrap();
+            for t in [1usize, 2, 5] {
+                let word = e.execute_rows("op_scaled_divide", &values, 21, live, t).unwrap();
+                assert_eq!(golden, word, "live={live} threads={t}");
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,231 @@
+//! Transposed lane-major bit planes for word-parallel batch evaluation.
+//!
+//! [`Bitstream`] packs one stochastic number's *time* dimension 64 bits
+//! per word. That layout is ideal for the functional oracles (one SN,
+//! all bits at once) but wrong for the wave hot path, where up to 64
+//! *batch rows* run the same circuit in lock-step: there each time step
+//! needs one bit from every row. [`LaneMatrix`] stores the transposed
+//! layout — one `u64` per time step whose bit `l` is batch row `l`'s
+//! bit — so a single bitwise instruction evaluates one gate for 64 rows
+//! at once, the software analogue of a subarray group firing all its
+//! rows in one cycle (paper §4.1, Fig 7b).
+//!
+//! The row↔lane transposition itself is the classic 64×64 bit-matrix
+//! transpose (recursive masked block swaps, log₂ 64 passes), so moving a
+//! block between layouts costs O(64·log 64) word ops per 64 time steps —
+//! negligible next to gate evaluation.
+
+use super::bitstream::Bitstream;
+
+/// Number of batch rows one machine word carries, one per bit lane.
+pub const LANES: usize = 64;
+
+/// In-place 64×64 bit-matrix transpose over LSB-first words: afterwards
+/// bit `r` of `a[c]` is what bit `c` of `a[r]` was. Hacker's Delight
+/// §7-3 adapted to 64-bit words and LSB-first column numbering.
+pub fn transpose64(a: &mut [u64; 64]) {
+    let mut j: u32 = 32;
+    let mut m: u64 = 0x0000_0000_FFFF_FFFF;
+    while j != 0 {
+        let mut k: usize = 0;
+        while k < 64 {
+            let t = ((a[k] >> j) ^ a[k + j as usize]) & m;
+            a[k] ^= t << j;
+            a[k + j as usize] ^= t;
+            k = (k + j as usize + 1) & !(j as usize);
+        }
+        j >>= 1;
+        m ^= m << j;
+    }
+}
+
+/// Up to 64 batch rows of equal-length bitstreams in transposed,
+/// lane-major layout: `word(t)` holds time step `t` across all rows,
+/// row `l` in bit lane `l`. Lanes at index ≥ `lanes` are dead and
+/// always read 0 (writes are masked), so per-lane popcounts stay exact
+/// for ragged blocks (`live % 64 != 0`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LaneMatrix {
+    len: usize,
+    lanes: usize,
+    words: Vec<u64>,
+}
+
+impl LaneMatrix {
+    /// All-zero matrix of `len` time steps across `lanes` live rows.
+    pub fn zeros(len: usize, lanes: usize) -> Self {
+        assert!(lanes <= LANES, "at most {LANES} lanes per word");
+        Self { len, lanes, words: vec![0; len] }
+    }
+
+    /// Transpose `rows` (≤ 64 equal-length bitstreams) into lane-major
+    /// layout: lane `l` carries `rows[l]`.
+    pub fn from_rows(rows: &[Bitstream]) -> Self {
+        let lanes = rows.len();
+        assert!(lanes <= LANES, "at most {LANES} lanes per word");
+        let len = rows.first().map_or(0, |b| b.len());
+        for r in rows {
+            assert_eq!(r.len(), len, "row bitstream length mismatch");
+        }
+        let mut out = Self::zeros(len, lanes);
+        let mut block = [0u64; 64];
+        for chunk in 0..len.div_ceil(64) {
+            for (lane, row) in block.iter_mut().zip(rows) {
+                *lane = row.words()[chunk];
+            }
+            block[lanes..].fill(0);
+            transpose64(&mut block);
+            let base = chunk * 64;
+            let n = (len - base).min(64);
+            out.words[base..base + n].copy_from_slice(&block[..n]);
+        }
+        out
+    }
+
+    /// Time steps (the bitstream length BL).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Live rows in this block (≤ 64).
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// Mask with a 1 in every live lane.
+    #[inline]
+    pub fn lane_mask(&self) -> u64 {
+        if self.lanes == LANES {
+            u64::MAX
+        } else {
+            (1u64 << self.lanes) - 1
+        }
+    }
+
+    /// All live lanes' bits at time step `t`.
+    #[inline]
+    pub fn word(&self, t: usize) -> u64 {
+        self.words[t]
+    }
+
+    /// Store all lanes' bits for time step `t`; dead lanes are masked
+    /// off so popcounts never see garbage from word-wide gate ops.
+    #[inline]
+    pub fn set_word(&mut self, t: usize, w: u64) {
+        self.words[t] = w & self.lane_mask();
+    }
+
+    /// Transpose back into one time-major [`Bitstream`] per live lane —
+    /// the inverse of [`LaneMatrix::from_rows`], used to read a wave's
+    /// outputs row-wise (per-row StoB popcounts then run 64 bits per
+    /// `count_ones` instead of per-bit shift-and-sum).
+    pub fn to_rows(&self) -> Vec<Bitstream> {
+        let n_chunks = self.len.div_ceil(64);
+        let mut per_row: Vec<Vec<u64>> = vec![vec![0u64; n_chunks]; self.lanes];
+        let mut block = [0u64; 64];
+        for chunk in 0..n_chunks {
+            let base = chunk * 64;
+            let n = (self.len - base).min(64);
+            block[..n].copy_from_slice(&self.words[base..base + n]);
+            block[n..].fill(0);
+            transpose64(&mut block);
+            for (l, row) in per_row.iter_mut().enumerate() {
+                row[chunk] = block[l];
+            }
+        }
+        per_row.into_iter().map(|w| Bitstream::from_words(self.len, w)).collect()
+    }
+
+    /// Extract lane `l` back into time-major [`Bitstream`] layout
+    /// (differential tests and debugging; not on the wave hot path).
+    pub fn lane(&self, l: usize) -> Bitstream {
+        assert!(l < self.lanes, "lane {l} out of {}", self.lanes);
+        let bits: Vec<bool> = self.words.iter().map(|&w| (w >> l) & 1 == 1).collect();
+        Bitstream::from_bits(&bits)
+    }
+
+    /// Number of 1s in lane `l` — the per-row StoB popcount.
+    pub fn lane_popcount(&self, l: usize) -> u64 {
+        assert!(l < self.lanes, "lane {l} out of {}", self.lanes);
+        self.words.iter().map(|&w| (w >> l) & 1).sum()
+    }
+
+    /// Unipolar value of lane `l` = popcount / len, exactly matching
+    /// [`Bitstream::value`] on the same bits.
+    pub fn lane_value(&self, l: usize) -> f64 {
+        if self.len == 0 {
+            return 0.0;
+        }
+        self.lane_popcount(l) as f64 / self.len as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Xoshiro256;
+
+    #[test]
+    fn transpose64_matches_naive() {
+        let mut rng = Xoshiro256::seeded(0xBEEF);
+        for _ in 0..10 {
+            let orig: [u64; 64] = std::array::from_fn(|_| rng.next_u64());
+            let mut t = orig;
+            transpose64(&mut t);
+            for r in 0..64 {
+                for c in 0..64 {
+                    assert_eq!((t[c] >> r) & 1, (orig[r] >> c) & 1, "({r},{c})");
+                }
+            }
+            // Involution: transposing twice restores the input.
+            transpose64(&mut t);
+            assert_eq!(t, orig);
+        }
+    }
+
+    #[test]
+    fn from_rows_round_trips_every_lane() {
+        let mut rng = Xoshiro256::seeded(7);
+        for (len, lanes) in [(1, 1), (63, 5), (64, 64), (65, 63), (100, 17), (256, 64)] {
+            let rows: Vec<Bitstream> =
+                (0..lanes).map(|_| Bitstream::sample(0.4, len, &mut rng)).collect();
+            let m = LaneMatrix::from_rows(&rows);
+            assert_eq!(m.len(), len);
+            assert_eq!(m.lanes(), lanes);
+            assert_eq!(m.to_rows(), rows, "len={len} lanes={lanes}");
+            for (l, row) in rows.iter().enumerate() {
+                assert_eq!(&m.lane(l), row, "len={len} lanes={lanes} lane={l}");
+                assert_eq!(m.lane_popcount(l), row.popcount());
+                assert_eq!(m.lane_value(l), row.value());
+            }
+        }
+    }
+
+    #[test]
+    fn dead_lanes_stay_masked() {
+        let mut m = LaneMatrix::zeros(10, 3);
+        for t in 0..10 {
+            m.set_word(t, u64::MAX);
+        }
+        assert_eq!(m.word(0), 0b111);
+        for l in 0..3 {
+            assert_eq!(m.lane_popcount(l), 10);
+        }
+    }
+
+    #[test]
+    fn word_layout_is_lane_major() {
+        // Two rows: row 0 = 1010…, row 1 = all ones.
+        let r0 = Bitstream::from_bits(&[true, false, true, false]);
+        let r1 = Bitstream::from_bits(&[true, true, true, true]);
+        let m = LaneMatrix::from_rows(&[r0, r1]);
+        assert_eq!(m.word(0), 0b11);
+        assert_eq!(m.word(1), 0b10);
+        assert_eq!(m.word(2), 0b11);
+        assert_eq!(m.word(3), 0b10);
+    }
+}

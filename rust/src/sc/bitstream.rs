@@ -44,13 +44,33 @@ impl Bitstream {
 
     /// Bernoulli-sample a bitstream of value `p` (this models the MTJ
     /// stochastic write: each cell switches independently with P_sw = p).
+    /// Words are assembled in a register and stored once — same RNG call
+    /// sequence and same bits as the per-bit `set` formulation (pinned
+    /// by a test), without `len` read-modify-write round trips.
     pub fn sample(p: f64, len: usize, rng: &mut Xoshiro256) -> Self {
-        let mut bs = Self::zeros(len);
-        for i in 0..len {
-            if rng.bernoulli(p) {
-                bs.set(i, true);
+        let mut words = Vec::with_capacity(len.div_ceil(64));
+        let mut base = 0;
+        while base < len {
+            let n = (len - base).min(64);
+            let mut w = 0u64;
+            for b in 0..n {
+                if rng.bernoulli(p) {
+                    w |= 1u64 << b;
+                }
             }
+            words.push(w);
+            base += n;
         }
+        Self { len, words }
+    }
+
+    /// Build from pre-packed words (LSB-first within each word); tail
+    /// bits beyond `len` are masked off. Crate-internal: the lane
+    /// transposer (`sc::bitplane`) assembles rows word-wise.
+    pub(crate) fn from_words(len: usize, words: Vec<u64>) -> Self {
+        debug_assert_eq!(words.len(), len.div_ceil(64));
+        let mut bs = Self { len, words };
+        bs.mask_tail();
         bs
     }
 
@@ -154,18 +174,14 @@ impl Bitstream {
         self.zip_with(other, |a, b| a ^ b)
     }
 
-    /// NAND.
+    /// NAND (`zip_with` already masks the tail the complement sets).
     pub fn nand(&self, other: &Self) -> Self {
-        let mut out = self.zip_with(other, |a, b| !(a & b));
-        out.mask_tail();
-        out
+        self.zip_with(other, |a, b| !(a & b))
     }
 
-    /// NOR.
+    /// NOR (`zip_with` already masks the tail the complement sets).
     pub fn nor(&self, other: &Self) -> Self {
-        let mut out = self.zip_with(other, |a, b| !(a | b));
-        out.mask_tail();
-        out
+        self.zip_with(other, |a, b| !(a | b))
     }
 
     /// NOT — complement (1 - x in unipolar).
@@ -232,6 +248,29 @@ mod tests {
         bs.flip(64);
         assert!(!bs.get(64));
         assert_eq!(bs.popcount(), 2);
+    }
+
+    #[test]
+    fn sample_word_assembly_matches_per_bit_set() {
+        // `sample` builds each word in a register; this pins it against
+        // the original per-bit `set` formulation: same RNG call
+        // sequence, same bits, for ragged and word-aligned lengths.
+        for (seed, len, p) in
+            [(1u64, 1usize, 0.3), (2, 63, 0.5), (3, 64, 0.9), (4, 65, 0.1), (5, 1000, 0.7)]
+        {
+            let mut rng_a = Xoshiro256::seeded(seed);
+            let mut rng_b = rng_a.clone();
+            let fast = Bitstream::sample(p, len, &mut rng_a);
+            let mut slow = Bitstream::zeros(len);
+            for i in 0..len {
+                if rng_b.bernoulli(p) {
+                    slow.set(i, true);
+                }
+            }
+            assert_eq!(fast, slow, "len={len} p={p}");
+            // Both paths must leave the RNGs in the same state too.
+            assert_eq!(rng_a.next_u64(), rng_b.next_u64());
+        }
     }
 
     #[test]

@@ -1,13 +1,17 @@
 //! S2 — stochastic computing library.
 //!
 //! Unipolar-encoded stochastic numbers as packed bitstreams (§2.3),
-//! the six arithmetic operations (Fig 4/5), and binary↔stochastic
-//! conversion helpers. This is the bit-exact functional model that the
+//! the six arithmetic operations (Fig 4/5), binary↔stochastic
+//! conversion helpers, and the transposed lane-major bit planes
+//! (`bitplane`) the word-parallel wave engine evaluates 64 batch rows
+//! per word on. This is the bit-exact functional model that the
 //! in-memory implementations (S6/S7) and the JAX artifacts (S18) are
 //! validated against.
 
+pub mod bitplane;
 pub mod bitstream;
 pub mod encode;
 pub mod ops;
 
+pub use bitplane::LaneMatrix;
 pub use bitstream::Bitstream;

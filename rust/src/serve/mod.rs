@@ -19,9 +19,11 @@
 //!   aggregated [`Metrics`].
 //!
 //! Row-level parallelism composes underneath: each wave is evaluated
-//! row-parallel by [`runtime::InterpEngine::execute_rows`] (a scoped
-//! worker pool), so shard-level (bank) and row-level (subarray row)
-//! parallelism mirror the paper's two-level hierarchy.
+//! by the word-parallel engine via
+//! [`runtime::InterpEngine::execute_rows`] — netlist kernels pack 64
+//! batch rows per `u64` word and split the 64-row lane blocks across a
+//! scoped worker pool — so shard-level (bank) and row-level (subarray
+//! row) parallelism mirror the paper's two-level hierarchy.
 //!
 //! `coordinator::Coordinator` is now a thin single-shard wrapper over
 //! [`Server`], kept for its simpler API and for backward compatibility.

@@ -30,11 +30,15 @@ pub struct ServerConfig {
     /// Wave batching knobs (`batch` is taken from each artifact's
     /// manifest spec; `max_wait` closes partial waves).
     pub batcher: BatcherConfig,
-    /// Row-parallelism per wave: worker threads the interpreter splits
-    /// batch rows across. `0` (default) = auto — the
-    /// `STOCH_IMC_ROW_THREADS` env var if set (honored as-is), else the
-    /// machine's cores divided across the pool's shards. Resolved once
-    /// at start, so the per-wave path never touches the environment.
+    /// Wave-level parallelism: worker threads the interpreter splits a
+    /// wave across. Netlist kernels hand each worker 64-row lane
+    /// blocks (the word-parallel engine evaluates 64 batch rows per
+    /// u64 word); staged kernels hand out single rows. `0` (default) =
+    /// auto — the `STOCH_IMC_ROW_THREADS` env var if set (honored
+    /// as-is), else the machine's cores divided across the pool's
+    /// shards. Resolved once at start, so the per-wave path never
+    /// touches the environment. Outputs are bit-identical for every
+    /// value.
     pub row_threads: usize,
 }
 

@@ -1,5 +1,7 @@
 //! Machine-readable bench reporting without serde: a flat JSON object
-//! mapping configuration name → ops/sec, written to `BENCH_serve.json`.
+//! mapping configuration name → metric value (ops/sec for throughput
+//! keys, a dimensionless ratio for `*_speedup` keys), written to
+//! `BENCH_serve.json`.
 //!
 //! Each bench harness merges its own keys into the existing file, so one
 //! `cargo bench` pass accumulates the full perf picture and the perf
