@@ -57,6 +57,41 @@ fn main() {
     });
     results.push(("hotpath_sng_64k_ops_per_s".to_string(), 1.0 / sng_t));
 
+    // L3a': wave-shaped SNG — scalar per-row bitstreams (one PRNG per
+    // row, the pre-lane-major wave path) vs the lane-major RNG-bank
+    // path packing 256 rows into u64×4 lane words. Both generate the
+    // identical bits (each row's draw order is pinned by tests), so
+    // the ratio isolates generation cost — the dominant wave cost once
+    // gate eval is word-parallel.
+    {
+        use stoch_imc::sc::bitplane::LaneBlock;
+        use stoch_imc::sc::sng;
+        use stoch_imc::util::prng::{fnv1a, RngBank};
+        const ROWS: usize = 256;
+        const BL: usize = 256;
+        let h = fnv1a("bench_sng");
+        let vals: Vec<f64> = (0..ROWS).map(|i| 0.05 + 0.9 * (i as f64) / ROWS as f64).collect();
+        let sng_scalar_t = bench("SNG scalar 256 rows × BL=256", 1_000, || {
+            for (row, &v) in vals.iter().enumerate() {
+                let mut row_rng = Xoshiro256::seeded(h ^ ((row as u64) << 32));
+                std::hint::black_box(Bitstream::sample(v, BL, &mut row_rng));
+            }
+        });
+        let mut bank = RngBank::new();
+        let mut draws = Vec::new();
+        let mut block: LaneBlock<4> = LaneBlock::zeros(0, 0);
+        let sng_lane_t = bench("SNG lane-major 256 rows × BL=256", 1_000, || {
+            bank.reseed_with(ROWS, |l| h ^ ((l as u64) << 32));
+            sng::sample_block(&vals, BL, &mut bank, &mut draws, &mut block);
+            std::hint::black_box(block.word(BL - 1));
+        });
+        let sng_speedup = sng_scalar_t / sng_lane_t;
+        println!("{:<44} {:>11.2}x", "  → lane-major SNG speedup", sng_speedup);
+        results.push(("hotpath_sng_scalar_rows_per_s".to_string(), ROWS as f64 / sng_scalar_t));
+        results.push(("hotpath_sng_lanemajor_rows_per_s".to_string(), ROWS as f64 / sng_lane_t));
+        results.push(("hotpath_sng_lanemajor_speedup".to_string(), sng_speedup));
+    }
+
     // L3b: scheduler on a large replicated netlist (exp × 256 lanes).
     let rep = replicate(&ops::exponential(), 256);
     let sched_t = bench("Algorithm 1 (ASAP) exp×256 (3328 gates)", 20, || {
@@ -71,10 +106,11 @@ fn main() {
     results.push(("hotpath_jk_divider_64k_ops_per_s".to_string(), 1.0 / div_t));
 
     // L3d: scalar per-row vs word-parallel lane-block netlist waves —
-    // the acceptance lever for the transposed wave engine. Both paths
-    // run single-threaded so the ratio isolates 64-rows-per-word
-    // evaluation from thread parallelism; both include identical
-    // per-row SNG, so the speedup is what a serving wave actually sees.
+    // the acceptance lever for the lane-major wave engine. Both paths
+    // run single-threaded so the ratio isolates the lane pipeline
+    // (RNG-bank SNG → packed gate eval → vertical-counter StoB) from
+    // thread parallelism; both produce bit-identical outputs, so the
+    // speedup is what a serving wave actually sees.
     {
         use stoch_imc::runtime::InterpEngine;
         let dir = std::env::temp_dir().join("stoch_imc_perf_wordpar");

@@ -1,7 +1,8 @@
 //! S3/S4/S5 — gate-level netlist IR, the stochastic operation circuits
 //! (Fig 5), binary baseline circuits, lane replication, functional
 //! evaluation, and the compiled word-parallel gate programs (`plan`)
-//! the runtime's wave engine executes 64 batch rows at a time.
+//! the runtime's wave engine executes up to 256 batch rows at a time
+//! (`u64×W` lane words, W ∈ {1, 2, 4}).
 
 pub mod binary;
 pub mod eval;
@@ -11,7 +12,7 @@ pub mod plan;
 pub mod replicate;
 
 pub use graph::{GateKind, InputClass, Netlist, Node, NodeId};
-pub use plan::GatePlan;
+pub use plan::{GatePlan, PlanScratch};
 
 /// XOR over the reliable gate set at an explicit row (5 gates):
 /// NAND(NAND(a, NOT b), NAND(NOT a, b)). Used by binary circuits where

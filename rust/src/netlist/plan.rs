@@ -5,28 +5,37 @@
 //! module compiles a [`Netlist`] once into a [`GatePlan`] — a
 //! topologically ordered, struct-of-arrays instruction list with
 //! pre-resolved value slots — and evaluates it over transposed
-//! [`LaneMatrix`] inputs, 64 batch rows per `u64` word per instruction.
+//! [`LaneBlock`] inputs, up to `64·W` batch rows per `[u64; W]` lane
+//! word per instruction (`W ∈ {1, 2, 4}` → 64/128/256-row blocks; the
+//! per-instruction word loops are over contiguous fixed-size arrays,
+//! so they autovectorize).
 //!
 //! Time stays sequential (the outer loop walks bit positions), which is
 //! what keeps the stateful nodes exact:
 //!
-//! * **Delay** feedback latches one lane-word per node at the end of
+//! * **Delay** feedback latches one lane word per node at the end of
 //!   each step, so every lane sees its own previous-bit state.
 //! * **ADDIE** runs as a per-lane scalar island (`AddieLanes`): the
 //!   scalar [`Addie`](crate::sc::ops::Addie) draws two `next_below`
 //!   samples per step from a seed that depends only on the node id —
 //!   never the batch row — and Lemire rejection consumes a
-//!   lane-independent number of raw draws, so all 64 lanes share one
+//!   lane-independent number of raw draws, so all lanes share one
 //!   RNG stream and differ only in their saturating counters. The
-//!   word-parallel output is bit-identical to 64 scalar evaluations.
+//!   word-parallel output is bit-identical to `64·W` scalar ADDIEs.
 //!
 //! Combinational gates execute as single bitwise ops across all lanes;
-//! dead lanes (ragged `live % 64 != 0` blocks) compute garbage that is
-//! masked at the output boundary and can never contaminate live lanes
-//! (no instruction mixes lanes).
+//! dead lanes (ragged `live % (64·W) != 0` blocks) compute garbage that
+//! is masked at the output boundary and can never contaminate live
+//! lanes (no instruction mixes lanes).
+//!
+//! Evaluation scratch (slot values, delay latches, ADDIE counters,
+//! output blocks) lives in a caller-owned [`PlanScratch`], so a wave
+//! worker allocates once and reuses it for every lane block it
+//! evaluates ([`GatePlan::eval_lanes_into`]); [`GatePlan::eval_lanes`]
+//! is the allocating convenience wrapper.
 
 use super::graph::{GateKind, Netlist, Node};
-use crate::sc::bitplane::{LaneMatrix, LANES};
+use crate::sc::bitplane::{LaneBlock, LANES};
 use crate::sc::ops::ADDIE_SEED;
 use crate::util::prng::Xoshiro256;
 
@@ -91,9 +100,31 @@ struct AddieSlot {
     seed: u64,
 }
 
+/// Lane-word bitwise helpers: each is one bitwise op per `u64` of the
+/// lane word, over a fixed-size array the compiler unrolls/vectorizes.
+#[inline(always)]
+fn wand<const W: usize>(a: [u64; W], b: [u64; W]) -> [u64; W] {
+    std::array::from_fn(|k| a[k] & b[k])
+}
+
+#[inline(always)]
+fn wor<const W: usize>(a: [u64; W], b: [u64; W]) -> [u64; W] {
+    std::array::from_fn(|k| a[k] | b[k])
+}
+
+#[inline(always)]
+fn wxor<const W: usize>(a: [u64; W], b: [u64; W]) -> [u64; W] {
+    std::array::from_fn(|k| a[k] ^ b[k])
+}
+
+#[inline(always)]
+fn wnot<const W: usize>(a: [u64; W]) -> [u64; W] {
+    std::array::from_fn(|k| !a[k])
+}
+
 /// A compiled, reusable gate program. Compile once per kernel at load
-/// time, evaluate per 64-row lane block with no allocations or map
-/// lookups inside the time loop.
+/// time, evaluate per lane block with no allocations or map lookups
+/// inside the time loop.
 #[derive(Debug, Clone)]
 pub struct GatePlan {
     n_slots: usize,
@@ -105,6 +136,26 @@ pub struct GatePlan {
     outputs: Vec<(String, u32)>,
     delays: Vec<DelaySlot>,
     addies: Vec<AddieSlot>,
+}
+
+/// Caller-owned evaluation scratch for [`GatePlan::eval_lanes_into`]:
+/// slot values, delay latches, ADDIE islands, and the output blocks,
+/// all reusable across lane blocks (and cheap no-op resizes once
+/// warm). One instance per wave worker.
+#[derive(Debug, Default)]
+pub struct PlanScratch<const W: usize> {
+    values: Vec<[u64; W]>,
+    latches: Vec<[u64; W]>,
+    addies: Vec<AddieLanes<W>>,
+    outs: Vec<LaneBlock<W>>,
+}
+
+impl<const W: usize> PlanScratch<W> {
+    /// The output blocks of the most recent
+    /// [`GatePlan::eval_lanes_into`] call, in netlist output order.
+    pub fn outputs(&self) -> &[LaneBlock<W>] {
+        &self.outs
+    }
 }
 
 impl GatePlan {
@@ -165,7 +216,7 @@ impl GatePlan {
         self.inputs.len()
     }
 
-    /// Index of output `name` into [`GatePlan::eval_lanes`]' result.
+    /// Index of output `name` into the evaluated output blocks.
     pub fn output_index(&self, name: &str) -> Option<usize> {
         self.outputs.iter().position(|(n, _)| n == name)
     }
@@ -177,11 +228,26 @@ impl GatePlan {
 
     /// Evaluate all lanes of a block: `inputs[i]` is the transposed
     /// stream block bound to `self.inputs[i]` (equal lengths, equal
-    /// lane counts). Returns one [`LaneMatrix`] per netlist output, in
+    /// lane counts). Returns one [`LaneBlock`] per netlist output, in
     /// netlist output order. Each lane's bits are identical to running
     /// [`eval_stochastic`](super::eval::eval_stochastic) on that lane's
-    /// streams alone.
-    pub fn eval_lanes(&self, inputs: &[LaneMatrix]) -> Vec<LaneMatrix> {
+    /// streams alone. Allocating wrapper over
+    /// [`GatePlan::eval_lanes_into`].
+    pub fn eval_lanes<const W: usize>(&self, inputs: &[LaneBlock<W>]) -> Vec<LaneBlock<W>> {
+        let mut ws = PlanScratch::default();
+        self.eval_lanes_into(inputs, &mut ws);
+        ws.outs
+    }
+
+    /// [`GatePlan::eval_lanes`] into a caller-owned [`PlanScratch`]:
+    /// no allocations once the scratch is warm, so a wave worker can
+    /// evaluate many lane blocks back to back. Returns the output
+    /// blocks (also reachable via [`PlanScratch::outputs`]).
+    pub fn eval_lanes_into<'ws, const W: usize>(
+        &self,
+        inputs: &[LaneBlock<W>],
+        ws: &'ws mut PlanScratch<W>,
+    ) -> &'ws [LaneBlock<W>] {
         assert_eq!(inputs.len(), self.inputs.len(), "input block count mismatch");
         let len = inputs.first().map_or(0, |m| m.len());
         let lanes = inputs.first().map_or(0, |m| m.lanes());
@@ -189,101 +255,125 @@ impl GatePlan {
             assert_eq!(m.len(), len, "input block length mismatch");
             assert_eq!(m.lanes(), lanes, "input block lane-count mismatch");
         }
-        let mut values = vec![0u64; self.n_slots];
-        let mut latches: Vec<u64> = self
-            .delays
-            .iter()
-            .map(|d| if d.init { u64::MAX } else { 0 })
-            .collect();
-        let mut addies: Vec<AddieLanes> = self.addies.iter().map(AddieLanes::new).collect();
-        let mut outs: Vec<LaneMatrix> =
-            self.outputs.iter().map(|_| LaneMatrix::zeros(len, lanes)).collect();
+        // (Re)shape the scratch; every piece below is overwritten
+        // before it is read, so stale values from the previous block
+        // are harmless.
+        ws.values.resize(self.n_slots, [0u64; W]);
+        ws.latches.clear();
+        ws.latches
+            .extend(self.delays.iter().map(|d| if d.init { [u64::MAX; W] } else { [0u64; W] }));
+        if ws.addies.len() == self.addies.len() {
+            for (a, spec) in ws.addies.iter_mut().zip(&self.addies) {
+                a.reset(spec);
+            }
+        } else {
+            ws.addies.clear();
+            ws.addies.extend(self.addies.iter().map(AddieLanes::new));
+        }
+        if ws.outs.len() == self.outputs.len() {
+            for o in ws.outs.iter_mut() {
+                o.reset(len, lanes);
+            }
+        } else {
+            ws.outs.clear();
+            ws.outs.extend(self.outputs.iter().map(|_| LaneBlock::zeros(len, lanes)));
+        }
         for t in 0..len {
             for (m, (_, slot)) in inputs.iter().zip(&self.inputs) {
-                values[*slot as usize] = m.word(t);
+                ws.values[*slot as usize] = m.word(t);
             }
-            for (latch, d) in latches.iter().zip(&self.delays) {
-                values[d.slot as usize] = *latch;
+            for (latch, d) in ws.latches.iter().zip(&self.delays) {
+                ws.values[d.slot as usize] = *latch;
             }
             for instr in &self.instrs {
-                let a = values[instr.ins[0] as usize];
+                let a = ws.values[instr.ins[0] as usize];
                 let v = match instr.op {
                     Op::Buff => a,
-                    Op::Not => !a,
-                    Op::And => a & values[instr.ins[1] as usize],
-                    Op::Nand => !(a & values[instr.ins[1] as usize]),
-                    Op::Or => a | values[instr.ins[1] as usize],
-                    Op::Nor => !(a | values[instr.ins[1] as usize]),
+                    Op::Not => wnot(a),
+                    Op::And => wand(a, ws.values[instr.ins[1] as usize]),
+                    Op::Nand => wnot(wand(a, ws.values[instr.ins[1] as usize])),
+                    Op::Or => wor(a, ws.values[instr.ins[1] as usize]),
+                    Op::Nor => wnot(wor(a, ws.values[instr.ins[1] as usize])),
                     Op::Maj3Inv => {
-                        let b = values[instr.ins[1] as usize];
-                        let c = values[instr.ins[2] as usize];
-                        !((a & b) | (a & c) | (b & c))
+                        let b = ws.values[instr.ins[1] as usize];
+                        let c = ws.values[instr.ins[2] as usize];
+                        wnot(wor(wor(wand(a, b), wand(a, c)), wand(b, c)))
                     }
                     Op::Maj5Inv => {
                         // Bit-sliced count of five one-bit addends via a
                         // two-full-adder chain: count = s + 2(c1 + c2).
-                        let b = values[instr.ins[1] as usize];
-                        let c = values[instr.ins[2] as usize];
-                        let d = values[instr.ins[3] as usize];
-                        let e = values[instr.ins[4] as usize];
-                        let s1 = a ^ b ^ c;
-                        let c1 = (a & b) | (c & (a ^ b));
-                        let s2 = s1 ^ d ^ e;
-                        let c2 = (s1 & d) | (e & (s1 ^ d));
+                        let b = ws.values[instr.ins[1] as usize];
+                        let c = ws.values[instr.ins[2] as usize];
+                        let d = ws.values[instr.ins[3] as usize];
+                        let e = ws.values[instr.ins[4] as usize];
+                        let s1 = wxor(wxor(a, b), c);
+                        let c1 = wor(wand(a, b), wand(c, wxor(a, b)));
+                        let s2 = wxor(wxor(s1, d), e);
+                        let c2 = wor(wand(s1, d), wand(e, wxor(s1, d)));
                         // count ≥ 3 ⇔ both carries, or one carry + sum.
-                        !((c1 & c2) | ((c1 | c2) & s2))
+                        wnot(wor(wand(c1, c2), wand(wor(c1, c2), s2)))
                     }
                     Op::Addie(k) => {
-                        let x = if t % 2 == 0 { a } else { values[instr.ins[1] as usize] };
-                        addies[k as usize].step(x)
+                        let x = if t % 2 == 0 { a } else { ws.values[instr.ins[1] as usize] };
+                        ws.addies[k as usize].step(x)
                     }
                 };
-                values[instr.out as usize] = v;
+                ws.values[instr.out as usize] = v;
             }
-            for (latch, d) in latches.iter_mut().zip(&self.delays) {
-                *latch = values[d.src as usize];
+            for (latch, d) in ws.latches.iter_mut().zip(&self.delays) {
+                *latch = ws.values[d.src as usize];
             }
-            for (out, (_, slot)) in outs.iter_mut().zip(&self.outputs) {
-                out.set_word(t, values[*slot as usize]);
+            for (out, (_, slot)) in ws.outs.iter_mut().zip(&self.outputs) {
+                out.set_word(t, ws.values[*slot as usize]);
             }
         }
-        outs
+        &ws.outs
     }
 }
 
-/// 64 independent ADDIE counters sharing one RNG stream (see the module
-/// docs for why sharing is exact): per step, two `next_below` draws are
-/// compared against every lane's own counter.
-struct AddieLanes {
+/// `64·W` independent ADDIE counters sharing one RNG stream (see the
+/// module docs for why sharing is exact): per step, two `next_below`
+/// draws are compared against every lane's own counter.
+#[derive(Debug, Clone)]
+struct AddieLanes<const W: usize> {
     max: u64,
-    c: [u64; LANES],
+    c: Vec<u64>,
     rng: Xoshiro256,
 }
 
-impl AddieLanes {
+impl<const W: usize> AddieLanes<W> {
     fn new(spec: &AddieSlot) -> Self {
         let max = 1u64 << spec.counter_bits;
-        Self { max, c: [max / 2; LANES], rng: Xoshiro256::seeded(spec.seed) }
+        Self { max, c: vec![max / 2; W * LANES], rng: Xoshiro256::seeded(spec.seed) }
+    }
+
+    /// Rewind to the start-of-block state (counters at midpoint, RNG at
+    /// the node seed), reusing the counter allocation.
+    fn reset(&mut self, spec: &AddieSlot) {
+        self.max = 1u64 << spec.counter_bits;
+        self.c.clear();
+        self.c.resize(W * LANES, self.max / 2);
+        self.rng = Xoshiro256::seeded(spec.seed);
     }
 
     /// One time step across all lanes: bit `l` of `x` is lane `l`'s
     /// input; returns lane `l`'s output in bit `l`. Mirrors
     /// [`Addie::step`](crate::sc::ops::Addie::step) per lane.
-    fn step(&mut self, x: u64) -> u64 {
+    fn step(&mut self, x: [u64; W]) -> [u64; W] {
         let d1 = self.rng.next_below(self.max);
         let d2 = self.rng.next_below(self.max);
-        let mut y = 0u64;
+        let mut y = [0u64; W];
         for (l, c) in self.c.iter_mut().enumerate() {
             let y1 = d1 < *c;
             let y2 = d2 < *c;
-            if (x >> l) & 1 == 1 && *c < self.max {
+            if (x[l / LANES] >> (l % LANES)) & 1 == 1 && *c < self.max {
                 *c += 1;
             }
             if y1 && y2 && *c > 0 {
                 *c -= 1;
             }
             if y1 {
-                y |= 1u64 << l;
+                y[l / LANES] |= 1u64 << (l % LANES);
             }
         }
         y
@@ -303,8 +393,8 @@ mod tests {
     const SEED_BASE: u64 = 0x9E37_79B9;
 
     /// Run `nl` through both paths on random per-lane streams and
-    /// assert bit-exact equality lane by lane.
-    fn assert_paths_agree(nl: &Netlist, bl: usize, lanes: usize, seed: u64) {
+    /// assert bit-exact equality lane by lane, at lane width `W`.
+    fn assert_paths_agree_at<const W: usize>(nl: &Netlist, bl: usize, lanes: usize, seed: u64) {
         let plan = GatePlan::compile(nl);
         let mut rng = Xoshiro256::seeded(seed);
         // PI specs in node-id order — the same binding order as
@@ -343,18 +433,30 @@ mod tests {
             }
             lane_inputs.push(by_name);
         }
-        let blocks: Vec<LaneMatrix> = rows.iter().map(|r| LaneMatrix::from_rows(r)).collect();
-        let outs = plan.eval_lanes(&blocks);
+        let blocks: Vec<LaneBlock<W>> =
+            rows.iter().map(|r| LaneBlock::<W>::from_rows(r)).collect();
+        // Evaluate twice through one scratch: reuse must not leak state
+        // between blocks.
+        let mut ws = PlanScratch::default();
+        plan.eval_lanes_into(&blocks, &mut ws);
+        plan.eval_lanes_into(&blocks, &mut ws);
+        let outs = ws.outputs();
         for (l, inputs) in lane_inputs.iter().enumerate() {
             let golden = eval_stochastic(nl, inputs);
             for (k, (name, _)) in nl.outputs.iter().enumerate() {
                 assert_eq!(
                     outs[k].lane(l),
                     golden[name],
-                    "output `{name}` lane {l} (bl={bl} lanes={lanes})"
+                    "output `{name}` lane {l} (W={W} bl={bl} lanes={lanes})"
                 );
             }
         }
+    }
+
+    fn assert_paths_agree(nl: &Netlist, bl: usize, lanes: usize, seed: u64) {
+        assert_paths_agree_at::<1>(nl, bl, lanes.min(64), seed);
+        assert_paths_agree_at::<2>(nl, bl, lanes.min(128), seed ^ 0x2);
+        assert_paths_agree_at::<4>(nl, bl, lanes, seed ^ 0x4);
     }
 
     #[test]
@@ -377,6 +479,21 @@ mod tests {
     }
 
     #[test]
+    fn wide_lane_blocks_match_golden_model() {
+        // Lane counts past one word (65..256) exercise the multi-word
+        // paths: per-word masking, Maj5 slicing, ADDIE counters above
+        // lane 64, and ragged last words.
+        let div = ops::scaled_divide();
+        assert_paths_agree_at::<2>(&div, 100, 128, SEED_BASE ^ 0x10);
+        assert_paths_agree_at::<2>(&div, 65, 65, SEED_BASE ^ 0x11);
+        assert_paths_agree_at::<4>(&div, 100, 256, SEED_BASE ^ 0x12);
+        let sqrt = ops::square_root(6);
+        assert_paths_agree_at::<4>(&sqrt, 128, 200, SEED_BASE ^ 0x13);
+        let mul = ops::multiply();
+        assert_paths_agree_at::<4>(&mul, 256, 129, SEED_BASE ^ 0x14);
+    }
+
+    #[test]
     fn maj_gates_match_golden_model() {
         let mut nl = Netlist::new();
         let ids: Vec<_> =
@@ -393,6 +510,7 @@ mod tests {
         nl.mark_output("nor", nor2);
         assert_paths_agree(&nl, 200, 64, SEED_BASE ^ 1);
         assert_paths_agree(&nl, 65, 33, SEED_BASE ^ 2);
+        assert_paths_agree_at::<4>(&nl, 96, 250, SEED_BASE ^ 3);
     }
 
     #[test]
@@ -400,8 +518,9 @@ mod tests {
         use crate::apps::{hdp::Hdp, ol::Ol, App};
         let ol = Ol::default().stoch_cost_netlists().remove(0);
         let hdp = Hdp.stoch_cost_netlists().remove(0);
-        assert_paths_agree(&ol, 128, 64, SEED_BASE ^ 3);
-        assert_paths_agree(&hdp, 100, 63, SEED_BASE ^ 4);
+        assert_paths_agree(&ol, 128, 64, SEED_BASE ^ 4);
+        assert_paths_agree(&hdp, 100, 63, SEED_BASE ^ 5);
+        assert_paths_agree_at::<4>(&hdp, 100, 150, SEED_BASE ^ 6);
     }
 
     #[test]

@@ -9,15 +9,23 @@
 //! * The six `op_*` artifacts and the single-stage apps (`app_ol`,
 //!   `app_hdp`) are compiled once at load into a
 //!   [`GatePlan`](crate::netlist::GatePlan) and evaluated
-//!   **word-parallel**: batch rows are packed 64 per `u64` word
-//!   ([`LaneMatrix`](crate::sc::LaneMatrix)), so each gate instruction
-//!   executes 64 rows at once — the software realization of the paper's
-//!   bit-parallel subarray rows. Outputs are bit-identical to the
-//!   retained scalar golden path
+//!   **word-parallel** over a fully lane-major pipeline: a lockstep
+//!   [`RngBank`] seeds one PRNG stream per batch row, the lane-major
+//!   SNG ([`crate::sc::sng`]) packs each time step's comparison bits
+//!   straight into `u64×W` lane words
+//!   ([`LaneBlock`](crate::sc::LaneBlock), `W ∈ {1, 2, 4}` →
+//!   64/128/256 rows per block), the compiled gate program executes
+//!   every instruction for all lanes at once, and a vertical-counter
+//!   StoB readout produces every row's popcount without ever leaving
+//!   the lane domain — no per-row bitstreams, no transposes, the
+//!   software realization of the paper's bit-parallel subarray rows.
+//!   Outputs are bit-identical to the retained scalar golden path
 //!   ([`crate::netlist::eval::eval_stochastic`], reachable via
-//!   [`InterpEngine::execute_rows_scalar`]) because both paths draw the
-//!   same per-row SNG streams and the plan evaluates each lane exactly
-//!   as the golden model does.
+//!   [`InterpEngine::execute_rows_scalar`]) because each lane draws
+//!   the same per-row SNG stream in the same order and the plan
+//!   evaluates each lane exactly as the golden model does. Lane width
+//!   is auto-sized to the wave (or pinned via `STOCH_IMC_LANE_WIDTH` /
+//!   [`InterpEngine::execute_rows_wide`]).
 //! * The multi-stage apps (`app_lit`, `app_kde`) need StoB→BtoS stream
 //!   regeneration between stages (DESIGN/ARCHITECTURE notes), so they
 //!   run the staged bitstream evaluators in `apps::` per row (the same
@@ -33,10 +41,11 @@ use crate::apps::{hdp::Hdp, kde::Kde, lit::Lit, ol::Ol, App};
 use crate::bail;
 use crate::error::{Context, Result};
 use crate::netlist::eval::eval_stochastic;
-use crate::netlist::{ops, GatePlan, InputClass, Netlist, Node};
-use crate::sc::bitplane::{LaneMatrix, LANES};
+use crate::netlist::{ops, GatePlan, InputClass, Netlist, Node, PlanScratch};
+use crate::sc::bitplane::{LaneBlock, LANES};
 use crate::sc::bitstream::Bitstream;
-use crate::util::prng::Xoshiro256;
+use crate::sc::sng;
+use crate::util::prng::{fnv1a, RngBank, Xoshiro256};
 
 use super::artifacts::{load_manifest, ArtifactSpec};
 
@@ -152,12 +161,18 @@ fn input_value(artifact: &str, input: &str, x: &[f64]) -> Option<f64> {
     }
 }
 
-/// Deterministic per-row PRNG: mixes the wave seed, the artifact name,
-/// and the batch row so rows and artifacts draw independent streams and
-/// a different wave seed resamples everything.
+/// Seed of one batch row's PRNG stream: mixes the wave seed, the
+/// artifact-name hash, and the batch row so rows and artifacts draw
+/// independent streams and a different wave seed resamples everything.
+/// Shared by the scalar path ([`row_rng`]) and the lane-major
+/// [`RngBank`] seeding so both derive bit-identical streams.
+fn row_seed(seed: i32, name_hash: u64, row: usize) -> u64 {
+    name_hash ^ (seed as u32 as u64) ^ ((row as u64) << 32)
+}
+
+/// Deterministic per-row PRNG (the scalar golden path's generator).
 fn row_rng(seed: i32, name: &str, row: usize) -> Xoshiro256 {
-    let h = crate::util::prng::fnv1a(name);
-    Xoshiro256::seeded(h ^ (seed as u32 as u64) ^ ((row as u64) << 32))
+    Xoshiro256::seeded(row_seed(seed, fnv1a(name), row))
 }
 
 impl InterpEngine {
@@ -221,16 +236,17 @@ impl InterpEngine {
 
     /// [`InterpEngine::execute`] with an explicit worker count (`0` =
     /// auto via [`default_row_threads`]). Netlist kernels run the
-    /// **word-parallel** path: live rows are packed into 64-row lane
-    /// blocks (one row per bit lane of a `u64`) and the blocks are
-    /// split across `threads` scoped workers; each compiled gate
-    /// instruction then evaluates 64 rows at once. Staged kernels
-    /// (`app_lit`, `app_kde`) keep the per-row path. Outputs are
-    /// bit-identical for every worker count, block grouping, and path —
-    /// each row draws from its own [`row_rng`] stream and the plan
-    /// evaluates each lane exactly as the golden model does — so the
-    /// split is purely a wall-clock optimization, the way a subarray
-    /// group fires all its rows in one cycle.
+    /// **word-parallel** path: live rows are packed into lane blocks
+    /// (one row per bit lane of a `u64×W` lane word, auto-width) and
+    /// the blocks are split across `threads` scoped workers; each
+    /// compiled gate instruction then evaluates a whole block at once.
+    /// Staged kernels (`app_lit`, `app_kde`) keep the per-row path.
+    /// Outputs are bit-identical for every worker count, lane width,
+    /// block grouping, and path — each row draws from its own
+    /// [`row_rng`] stream and the plan evaluates each lane exactly as
+    /// the golden model does — so the split is purely a wall-clock
+    /// optimization, the way a subarray group fires all its rows in
+    /// one cycle.
     pub fn execute_rows(
         &self,
         name: &str,
@@ -239,7 +255,25 @@ impl InterpEngine {
         live: usize,
         threads: usize,
     ) -> Result<Vec<f32>> {
-        self.execute_impl(name, values, seed, live, threads, true)
+        self.execute_impl(name, values, seed, live, threads, 0, true)
+    }
+
+    /// [`InterpEngine::execute_rows`] with an explicit lane width:
+    /// `64`, `128`, or `256` rows per lane block (`u64×{1,2,4}` lane
+    /// words); `0` = auto (`STOCH_IMC_LANE_WIDTH` if set, else sized
+    /// to the wave and worker count — see `resolve_lane_width`). Any
+    /// other value falls back to auto. Purely a throughput knob —
+    /// outputs are bit-identical across widths.
+    pub fn execute_rows_wide(
+        &self,
+        name: &str,
+        values: &[f32],
+        seed: i32,
+        live: usize,
+        threads: usize,
+        lane_width: usize,
+    ) -> Result<Vec<f32>> {
+        self.execute_impl(name, values, seed, live, threads, lane_width, true)
     }
 
     /// [`InterpEngine::execute_rows`] forced onto the scalar golden
@@ -255,9 +289,10 @@ impl InterpEngine {
         live: usize,
         threads: usize,
     ) -> Result<Vec<f32>> {
-        self.execute_impl(name, values, seed, live, threads, false)
+        self.execute_impl(name, values, seed, live, threads, 0, false)
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn execute_impl(
         &self,
         name: &str,
@@ -265,6 +300,7 @@ impl InterpEngine {
         seed: i32,
         live: usize,
         threads: usize,
+        lane_width: usize,
         word_parallel: bool,
     ) -> Result<Vec<f32>> {
         let Some(spec) = self.specs.get(name) else {
@@ -290,7 +326,13 @@ impl InterpEngine {
         match kernel {
             Kernel::Netlist { nl, plan } if word_parallel => {
                 let wave = NetlistWave { name, spec, nl, plan, values, seed };
-                self.execute_blocks(&wave, &mut out[..live], threads)?;
+                // Monomorphized per lane width so every per-word loop
+                // runs over a compile-time-sized array.
+                match resolve_lane_width(lane_width, live, threads) {
+                    64 => self.execute_blocks::<1>(&wave, &mut out[..live], threads)?,
+                    128 => self.execute_blocks::<2>(&wave, &mut out[..live], threads)?,
+                    _ => self.execute_blocks::<4>(&wave, &mut out[..live], threads)?,
+                }
             }
             _ => self.execute_scalar_rows(
                 name,
@@ -305,55 +347,108 @@ impl InterpEngine {
         Ok(out)
     }
 
-    /// Word-parallel wave: split the live rows into 64-row lane blocks
-    /// and the blocks across scoped workers. Worker chunks are whole
-    /// multiples of [`LANES`] so block boundaries are identical for
-    /// every worker count (grouping is invisible in the outputs
-    /// regardless — each lane is evaluated independently).
-    fn execute_blocks(&self, wave: &NetlistWave, out: &mut [f32], threads: usize) -> Result<()> {
+    /// Word-parallel wave at lane width `W`: split the live rows into
+    /// `64·W`-row lane blocks and the blocks across scoped workers.
+    /// Worker chunks are whole multiples of the block size so block
+    /// boundaries are identical for every worker count (grouping is
+    /// invisible in the outputs regardless — each lane is evaluated
+    /// independently). Each worker owns one [`BlockWorkspace`] and
+    /// reuses it for every block it evaluates: zero heap allocations
+    /// per block once the workspace is warm.
+    fn execute_blocks<const W: usize>(
+        &self,
+        wave: &NetlistWave,
+        out: &mut [f32],
+        threads: usize,
+    ) -> Result<()> {
         let live = out.len();
         if live == 0 {
             return Ok(());
         }
-        let blocks = live.div_ceil(LANES);
+        let block_rows = W * LANES;
+        let blocks = live.div_ceil(block_rows);
         let workers = threads.min(blocks).max(1);
-        parallel_chunks(out, workers, blocks.div_ceil(workers) * LANES, |start, sub| {
-            for (bj, block_out) in sub.chunks_mut(LANES).enumerate() {
-                self.eval_block(wave, start + bj * LANES, block_out)?;
+        parallel_chunks(out, workers, blocks.div_ceil(workers) * block_rows, |start, sub| {
+            let mut ws = BlockWorkspace::<W>::default();
+            for (bj, block_out) in sub.chunks_mut(block_rows).enumerate() {
+                self.eval_block(wave, start + bj * block_rows, block_out, &mut ws)?;
             }
             Ok(())
         })
     }
 
-    /// One lane block (≤ 64 rows starting at `row0`): draw every row's
-    /// SNG streams from its own [`row_rng`] (identical to the scalar
-    /// path), transpose them into lane-major words, run the compiled
-    /// gate program once for all rows, and read each row's StoB value
-    /// off its lane.
-    fn eval_block(&self, w: &NetlistWave, row0: usize, out: &mut [f32]) -> Result<()> {
+    /// One lane block (≤ `64·W` rows starting at `row0`), fully
+    /// lane-major: seed one [`RngBank`] stream per row (bit-identical
+    /// to the scalar path's [`row_rng`]), generate every primary
+    /// input's block directly as packed lane words in netlist node-id
+    /// order (the scalar draw order), run the compiled gate program
+    /// once for all rows, and read every row's StoB count with the
+    /// vertical counter — no per-row bitstreams, no transposes, no
+    /// allocations beyond the reused workspace.
+    fn eval_block<const W: usize>(
+        &self,
+        w: &NetlistWave,
+        row0: usize,
+        out: &mut [f32],
+        ws: &mut BlockWorkspace<W>,
+    ) -> Result<()> {
         let bl = w.spec.bl.max(1);
-        let rows = out.len();
-        let mut lane_streams: Vec<Vec<Bitstream>> =
-            (0..w.plan.n_inputs()).map(|_| Vec::with_capacity(rows)).collect();
-        for r in 0..rows {
-            let row = row0 + r;
-            let x = clamp_instance(w.values, w.spec.n_inputs, row);
-            let mut rng = row_rng(w.seed, w.name, row);
-            let streams = generate_input_streams(w.name, w.nl, &x, bl, &mut rng)?;
-            for (lane, bs) in lane_streams.iter_mut().zip(streams) {
-                lane.push(bs);
-            }
+        let lanes = out.len();
+        let n = w.spec.n_inputs;
+        let name_hash = fnv1a(w.name);
+        ws.rngs.reseed_with(lanes, |l| row_seed(w.seed, name_hash, row0 + l));
+        // Clamped instance values, lane-major ([lane][input]).
+        ws.instances.clear();
+        ws.instances.extend(
+            w.values[row0 * n..(row0 + lanes) * n].iter().map(|&v| (v as f64).clamp(0.0, 1.0)),
+        );
+        // One lane-major block per primary input, generated in netlist
+        // node-id order — the plan's binding order and the exact RNG
+        // draw order of the scalar path's `generate_input_streams`.
+        if ws.inputs.len() != w.plan.n_inputs() {
+            ws.inputs.clear();
+            ws.inputs.resize_with(w.plan.n_inputs(), || LaneBlock::zeros(0, 0));
         }
-        let blocks: Vec<LaneMatrix> =
-            lane_streams.iter().map(|rows| LaneMatrix::from_rows(rows)).collect();
-        let outs = w.plan.eval_lanes(&blocks);
+        ws.filled_groups.clear();
+        let mut i = 0;
+        for node in &w.nl.nodes {
+            let Node::Input { name, class, .. } = node else { continue };
+            // Per-lane binding value for this input.
+            ws.vals.clear();
+            for l in 0..lanes {
+                let x = &ws.instances[l * n..(l + 1) * n];
+                let Some(v) = input_value(w.name, name, x) else {
+                    bail!("artifact `{}`: no value binding for input `{name}`", w.name);
+                };
+                ws.vals.push(v.clamp(0.0, 1.0));
+            }
+            let block = &mut ws.inputs[i];
+            match class {
+                InputClass::Correlated(g) => {
+                    let us = ws.uniforms.entry(*g).or_default();
+                    if !ws.filled_groups.contains(g) {
+                        sng::fill_uniform_block(lanes, bl, &mut ws.rngs, us);
+                        ws.filled_groups.push(*g);
+                    }
+                    sng::threshold_block(&ws.vals, bl, us.as_slice(), block);
+                }
+                InputClass::BinaryBit => {
+                    bail!("artifact `{}`: binary input `{name}` unsupported", w.name)
+                }
+                _ => sng::sample_block(&ws.vals, bl, &mut ws.rngs, &mut ws.draws, block),
+            }
+            i += 1;
+        }
+        let outs = w.plan.eval_lanes_into(&ws.inputs, &mut ws.plan);
         let oi = w.plan.output_index("out").with_context(|| {
             format!("artifact `{}`: netlist has no `out` output", w.name)
         })?;
-        // Transpose the output block back to one bitstream per row so
-        // the StoB popcount also runs 64 bits per word.
-        for (slot, row) in out.iter_mut().zip(outs[oi].to_rows()) {
-            *slot = row.value() as f32;
+        // Vertical-counter StoB readout: all lanes' popcounts without
+        // leaving the lane-major domain.
+        outs[oi].lane_popcounts_into(&mut ws.planes, &mut ws.counts);
+        for (slot, &count) in out.iter_mut().zip(&ws.counts) {
+            // Same arithmetic as Bitstream::value() as f32.
+            *slot = (count as f64 / bl as f64) as f32;
         }
         Ok(())
     }
@@ -405,6 +500,81 @@ impl InterpEngine {
             Kernel::Kde(app) => app.stoch_value(&x, bl, &mut rng, 0.0),
         };
         Ok(v as f32)
+    }
+}
+
+/// Per-worker scratch for the lane-major wave path, reused across
+/// every lane block the worker evaluates: the RNG bank, per-lane value
+/// bindings, the lane-major input blocks, the plan's evaluation
+/// scratch, and the vertical-counter readout buffers. A worker
+/// allocates once per wave; after the first block every buffer is a
+/// cheap reshape.
+#[derive(Default)]
+struct BlockWorkspace<const W: usize> {
+    /// One lockstep PRNG stream per live lane (reseeded per block).
+    rngs: RngBank,
+    /// One uniform per lane — `sng::sample_block`'s draw scratch.
+    draws: Vec<f64>,
+    /// Per-lane threshold for the input currently being generated.
+    vals: Vec<f64>,
+    /// Clamped instance values, lane-major `[lane][input]`.
+    instances: Vec<f64>,
+    /// Correlated-group uniforms, lane-major `[t · lanes + l]`.
+    uniforms: HashMap<u32, Vec<f64>>,
+    /// Groups already drawn for the current block (reset per block).
+    filled_groups: Vec<u32>,
+    /// One lane-major block per netlist primary input.
+    inputs: Vec<LaneBlock<W>>,
+    /// Slot values / latches / ADDIE islands / output blocks.
+    plan: PlanScratch<W>,
+    /// Carry-save counter planes for the StoB readout.
+    planes: Vec<[u64; W]>,
+    /// Per-lane popcounts from the vertical counter.
+    counts: Vec<u32>,
+}
+
+/// The explicit lane-width override from `STOCH_IMC_LANE_WIDTH`:
+/// `None` when the var is unset — or not one of 64/128/256, which
+/// warns and falls back to auto sizing.
+pub fn lane_width_override() -> Option<usize> {
+    let s = std::env::var("STOCH_IMC_LANE_WIDTH").ok()?;
+    match s.trim().parse::<usize>() {
+        Ok(w) if w == 64 || w == 128 || w == 256 => Some(w),
+        _ => {
+            eprintln!("STOCH_IMC_LANE_WIDTH=`{s}` is not one of 64|128|256; using auto");
+            None
+        }
+    }
+}
+
+/// Resolve the lane width for a wave of `live` rows on `threads`
+/// workers: an explicit argument wins, then the `STOCH_IMC_LANE_WIDTH`
+/// env var, then auto. Auto starts from the narrowest width that
+/// covers the wave (≤ 64 rows → 64, ≤ 128 → 128, else 256) — so small
+/// waves don't drag dead lane words through every gate — and then
+/// narrows while the wave would otherwise yield fewer lane blocks than
+/// workers: wider words amortize the instruction walk, but never at
+/// the price of idling the worker pool.
+fn resolve_lane_width(lane_width: usize, live: usize, threads: usize) -> usize {
+    let w = match lane_width {
+        64 | 128 | 256 => lane_width,
+        _ => lane_width_override().unwrap_or(0),
+    };
+    match w {
+        64 | 128 | 256 => w,
+        _ => {
+            let mut width = if live <= 64 {
+                64
+            } else if live <= 128 {
+                128
+            } else {
+                256
+            };
+            while width > 64 && live.div_ceil(width) < threads {
+                width /= 2;
+            }
+            width
+        }
     }
 }
 
@@ -611,6 +781,13 @@ mod tests {
             for t in [1usize, 2, 5] {
                 let word = e.execute_rows("op_scaled_divide", &values, 21, live, t).unwrap();
                 assert_eq!(golden, word, "live={live} threads={t}");
+            }
+            // Explicit lane widths must all match the golden path too:
+            // width only changes how many rows share a lane word.
+            for width in [64usize, 128, 256] {
+                let word =
+                    e.execute_rows_wide("op_scaled_divide", &values, 21, live, 2, width).unwrap();
+                assert_eq!(golden, word, "live={live} width={width}");
             }
         }
     }

@@ -38,7 +38,9 @@ compile_error!(
 );
 
 pub use artifacts::{load_manifest, ArtifactSpec};
-pub use interp::{default_row_threads, row_threads_override, InterpEngine};
+pub use interp::{
+    default_row_threads, lane_width_override, row_threads_override, InterpEngine,
+};
 
 use std::path::Path;
 
@@ -124,11 +126,28 @@ impl Engine {
         live: usize,
         threads: usize,
     ) -> Result<Vec<f32>> {
+        self.execute_rows_wide(name, values, seed, live, threads, 0)
+    }
+
+    /// [`Engine::execute_rows`] with an explicit lane width (rows per
+    /// lane block: 64, 128, or 256; `0` = auto). The interpreter
+    /// monomorphizes its wave over `u64×{1,2,4}` lane words with
+    /// bit-identical outputs at every width; PJRT always runs its
+    /// fixed-shape batch and ignores both knobs.
+    pub fn execute_rows_wide(
+        &self,
+        name: &str,
+        values: &[f32],
+        seed: i32,
+        live: usize,
+        threads: usize,
+        lane_width: usize,
+    ) -> Result<Vec<f32>> {
         match self {
-            Engine::Interp(e) => e.execute_rows(name, values, seed, live, threads),
+            Engine::Interp(e) => e.execute_rows_wide(name, values, seed, live, threads, lane_width),
             #[cfg(all(feature = "xla-runtime", xla_available))]
             Engine::Pjrt(e) => {
-                let _ = threads;
+                let _ = (threads, lane_width);
                 e.execute(name, values, seed, live)
             }
         }

@@ -2,23 +2,32 @@
 //!
 //! [`Bitstream`] packs one stochastic number's *time* dimension 64 bits
 //! per word. That layout is ideal for the functional oracles (one SN,
-//! all bits at once) but wrong for the wave hot path, where up to 64
-//! *batch rows* run the same circuit in lock-step: there each time step
-//! needs one bit from every row. [`LaneMatrix`] stores the transposed
-//! layout — one `u64` per time step whose bit `l` is batch row `l`'s
-//! bit — so a single bitwise instruction evaluates one gate for 64 rows
-//! at once, the software analogue of a subarray group firing all its
-//! rows in one cycle (paper §4.1, Fig 7b).
+//! all bits at once) but wrong for the wave hot path, where many *batch
+//! rows* run the same circuit in lock-step: there each time step needs
+//! one bit from every row. [`LaneBlock`] stores the transposed layout —
+//! one `[u64; W]` lane word per time step whose bit `l` is batch row
+//! `l`'s bit — so a single bitwise instruction (per word of the lane
+//! word) evaluates one gate for up to `64·W` rows at once, the software
+//! analogue of a subarray group firing all its rows in one cycle (paper
+//! §4.1, Fig 7b). `W ∈ {1, 2, 4}` widens the block to 64/128/256 rows;
+//! the words of one lane word are contiguous, so the per-instruction
+//! loops are autovectorizable.
 //!
-//! The row↔lane transposition itself is the classic 64×64 bit-matrix
-//! transpose (recursive masked block swaps, log₂ 64 passes), so moving a
-//! block between layouts costs O(64·log 64) word ops per 64 time steps —
-//! negligible next to gate evaluation.
+//! Since the lane-major SNG pipeline (`sc::sng`) generates input blocks
+//! directly in this layout and the vertical-counter readout
+//! ([`LaneBlock::lane_popcounts_into`]) converts outputs without
+//! leaving it, the row↔lane transposition ([`LaneBlock::from_rows`] /
+//! [`LaneBlock::to_rows`], the classic 64×64 bit-matrix transpose) is
+//! now a test/debug conversion only — the wave hot path never
+//! transposes.
 
 use super::bitstream::Bitstream;
 
-/// Number of batch rows one machine word carries, one per bit lane.
+/// Number of batch rows one `u64` of a lane word carries.
 pub const LANES: usize = 64;
+
+/// Widest supported lane word, in `u64`s (256 rows per block).
+pub const MAX_LANE_WORDS: usize = 4;
 
 /// In-place 64×64 bit-matrix transpose over LSB-first words: afterwards
 /// bit `r` of `a[c]` is what bit `c` of `a[r]` was. Hacker's Delight
@@ -39,45 +48,72 @@ pub fn transpose64(a: &mut [u64; 64]) {
     }
 }
 
-/// Up to 64 batch rows of equal-length bitstreams in transposed,
+/// Up to `64·W` batch rows of equal-length bitstreams in transposed,
 /// lane-major layout: `word(t)` holds time step `t` across all rows,
-/// row `l` in bit lane `l`. Lanes at index ≥ `lanes` are dead and
-/// always read 0 (writes are masked), so per-lane popcounts stay exact
-/// for ragged blocks (`live % 64 != 0`).
+/// row `l` in bit lane `l % 64` of word `l / 64`. Lanes at index ≥
+/// `lanes` are dead and always read 0 (writes are masked), so per-lane
+/// popcounts stay exact for ragged blocks (`live % (64·W) != 0`).
 #[derive(Debug, Clone, PartialEq, Eq)]
-pub struct LaneMatrix {
+pub struct LaneBlock<const W: usize> {
     len: usize,
     lanes: usize,
-    words: Vec<u64>,
+    words: Vec<[u64; W]>,
 }
 
-impl LaneMatrix {
-    /// All-zero matrix of `len` time steps across `lanes` live rows.
+/// The original single-word lane block (64 rows) — the default width,
+/// and the layout every pre-width API keeps using.
+pub type LaneMatrix = LaneBlock<1>;
+
+impl<const W: usize> LaneBlock<W> {
+    /// All-zero block of `len` time steps across `lanes` live rows.
     pub fn zeros(len: usize, lanes: usize) -> Self {
-        assert!(lanes <= LANES, "at most {LANES} lanes per word");
-        Self { len, lanes, words: vec![0; len] }
+        assert!(
+            (1..=MAX_LANE_WORDS).contains(&W),
+            "lane words per step must be in 1..={MAX_LANE_WORDS}"
+        );
+        assert!(lanes <= W * LANES, "at most {} lanes per block", W * LANES);
+        Self { len, lanes, words: vec![[0u64; W]; len] }
     }
 
-    /// Transpose `rows` (≤ 64 equal-length bitstreams) into lane-major
-    /// layout: lane `l` carries `rows[l]`.
+    /// Reshape in place to an all-zero `len × lanes` block, reusing the
+    /// word allocation — the workspace-reuse primitive the wave path
+    /// calls once per lane block instead of allocating a fresh block.
+    pub fn reset(&mut self, len: usize, lanes: usize) {
+        assert!(lanes <= W * LANES, "at most {} lanes per block", W * LANES);
+        self.len = len;
+        self.lanes = lanes;
+        self.words.clear();
+        self.words.resize(len, [0u64; W]);
+    }
+
+    /// Transpose `rows` (≤ `64·W` equal-length bitstreams) into
+    /// lane-major layout: lane `l` carries `rows[l]`. Test/debug
+    /// conversion — the wave hot path generates blocks directly via
+    /// `sc::sng`.
     pub fn from_rows(rows: &[Bitstream]) -> Self {
         let lanes = rows.len();
-        assert!(lanes <= LANES, "at most {LANES} lanes per word");
+        assert!(lanes <= W * LANES, "at most {} lanes per block", W * LANES);
         let len = rows.first().map_or(0, |b| b.len());
         for r in rows {
             assert_eq!(r.len(), len, "row bitstream length mismatch");
         }
         let mut out = Self::zeros(len, lanes);
         let mut block = [0u64; 64];
-        for chunk in 0..len.div_ceil(64) {
-            for (lane, row) in block.iter_mut().zip(rows) {
-                *lane = row.words()[chunk];
+        for g in 0..lanes.div_ceil(LANES) {
+            let g0 = g * LANES;
+            let g1 = (g0 + LANES).min(lanes);
+            for chunk in 0..len.div_ceil(64) {
+                for (lane, row) in block.iter_mut().zip(&rows[g0..g1]) {
+                    *lane = row.words()[chunk];
+                }
+                block[g1 - g0..].fill(0);
+                transpose64(&mut block);
+                let base = chunk * 64;
+                let n = (len - base).min(64);
+                for (t_off, &w) in block[..n].iter().enumerate() {
+                    out.words[base + t_off][g] = w;
+                }
             }
-            block[lanes..].fill(0);
-            transpose64(&mut block);
-            let base = chunk * 64;
-            let n = (len - base).min(64);
-            out.words[base..base + n].copy_from_slice(&block[..n]);
         }
         out
     }
@@ -91,50 +127,64 @@ impl LaneMatrix {
         self.len == 0
     }
 
-    /// Live rows in this block (≤ 64).
+    /// Live rows in this block (≤ `64·W`).
     pub fn lanes(&self) -> usize {
         self.lanes
     }
 
-    /// Mask with a 1 in every live lane.
+    /// Mask with a 1 in every live lane, per word of the lane word.
     #[inline]
-    pub fn lane_mask(&self) -> u64 {
-        if self.lanes == LANES {
-            u64::MAX
-        } else {
-            (1u64 << self.lanes) - 1
+    pub fn lane_mask(&self) -> [u64; W] {
+        let mut m = [0u64; W];
+        for (k, mk) in m.iter_mut().enumerate() {
+            let lo = k * LANES;
+            *mk = if self.lanes >= lo + LANES {
+                u64::MAX
+            } else if self.lanes > lo {
+                (1u64 << (self.lanes - lo)) - 1
+            } else {
+                0
+            };
         }
+        m
     }
 
     /// All live lanes' bits at time step `t`.
     #[inline]
-    pub fn word(&self, t: usize) -> u64 {
+    pub fn word(&self, t: usize) -> [u64; W] {
         self.words[t]
     }
 
     /// Store all lanes' bits for time step `t`; dead lanes are masked
     /// off so popcounts never see garbage from word-wide gate ops.
     #[inline]
-    pub fn set_word(&mut self, t: usize, w: u64) {
-        self.words[t] = w & self.lane_mask();
+    pub fn set_word(&mut self, t: usize, w: [u64; W]) {
+        let m = self.lane_mask();
+        self.words[t] = std::array::from_fn(|k| w[k] & m[k]);
     }
 
     /// Transpose back into one time-major [`Bitstream`] per live lane —
-    /// the inverse of [`LaneMatrix::from_rows`], used to read a wave's
-    /// outputs row-wise (per-row StoB popcounts then run 64 bits per
-    /// `count_ones` instead of per-bit shift-and-sum).
+    /// the inverse of [`LaneBlock::from_rows`]. Test/debug conversion;
+    /// the wave hot path reads outputs with the vertical counter
+    /// ([`LaneBlock::lane_popcounts_into`]) instead.
     pub fn to_rows(&self) -> Vec<Bitstream> {
         let n_chunks = self.len.div_ceil(64);
         let mut per_row: Vec<Vec<u64>> = vec![vec![0u64; n_chunks]; self.lanes];
         let mut block = [0u64; 64];
-        for chunk in 0..n_chunks {
-            let base = chunk * 64;
-            let n = (self.len - base).min(64);
-            block[..n].copy_from_slice(&self.words[base..base + n]);
-            block[n..].fill(0);
-            transpose64(&mut block);
-            for (l, row) in per_row.iter_mut().enumerate() {
-                row[chunk] = block[l];
+        for g in 0..self.lanes.div_ceil(LANES) {
+            let g0 = g * LANES;
+            let g1 = (g0 + LANES).min(self.lanes);
+            for chunk in 0..n_chunks {
+                let base = chunk * 64;
+                let n = (self.len - base).min(64);
+                for (t_off, slot) in block[..n].iter_mut().enumerate() {
+                    *slot = self.words[base + t_off][g];
+                }
+                block[n..].fill(0);
+                transpose64(&mut block);
+                for (l, row) in per_row[g0..g1].iter_mut().enumerate() {
+                    row[chunk] = block[l];
+                }
             }
         }
         per_row.into_iter().map(|w| Bitstream::from_words(self.len, w)).collect()
@@ -144,14 +194,16 @@ impl LaneMatrix {
     /// (differential tests and debugging; not on the wave hot path).
     pub fn lane(&self, l: usize) -> Bitstream {
         assert!(l < self.lanes, "lane {l} out of {}", self.lanes);
-        let bits: Vec<bool> = self.words.iter().map(|&w| (w >> l) & 1 == 1).collect();
+        let bits: Vec<bool> =
+            self.words.iter().map(|w| (w[l / LANES] >> (l % LANES)) & 1 == 1).collect();
         Bitstream::from_bits(&bits)
     }
 
-    /// Number of 1s in lane `l` — the per-row StoB popcount.
+    /// Number of 1s in lane `l` — one row's StoB popcount (test/debug;
+    /// the wave path uses the vertical counter for all lanes at once).
     pub fn lane_popcount(&self, l: usize) -> u64 {
         assert!(l < self.lanes, "lane {l} out of {}", self.lanes);
-        self.words.iter().map(|&w| (w >> l) & 1).sum()
+        self.words.iter().map(|w| (w[l / LANES] >> (l % LANES)) & 1).sum()
     }
 
     /// Unipolar value of lane `l` = popcount / len, exactly matching
@@ -161,6 +213,54 @@ impl LaneMatrix {
             return 0.0;
         }
         self.lane_popcount(l) as f64 / self.len as f64
+    }
+
+    /// Vertical-counter StoB readout: every live lane's popcount in one
+    /// pass, without transposing back to rows. `planes` is a carry-save
+    /// bit-sliced counter — `planes[k]` holds bit `k` of every lane's
+    /// running count — so adding one time step is a ripple-carry over at
+    /// most `log₂(len)+1` lane words, and the whole readout costs
+    /// O(len · log len) word ops *for all `64·W` lanes together*
+    /// (amortized ~2 plane updates per step), versus O(len) word ops
+    /// *per lane* for row-wise popcounts. Both scratch buffers are
+    /// caller-owned so repeated readouts reuse their allocations;
+    /// `counts` is resized to `lanes`.
+    pub fn lane_popcounts_into(&self, planes: &mut Vec<[u64; W]>, counts: &mut Vec<u32>) {
+        debug_assert!(self.len < (1 << 31), "lane counts overflow u32");
+        planes.clear();
+        for w in &self.words {
+            // Add the step's 1-bits into the counter: carry-save ripple.
+            let mut carry = *w;
+            let mut k = 0;
+            while carry != [0u64; W] {
+                if k == planes.len() {
+                    planes.push(carry);
+                    break;
+                }
+                let p = &mut planes[k];
+                let sum: [u64; W] = std::array::from_fn(|i| p[i] ^ carry[i]);
+                let next: [u64; W] = std::array::from_fn(|i| p[i] & carry[i]);
+                *p = sum;
+                carry = next;
+                k += 1;
+            }
+        }
+        counts.clear();
+        counts.resize(self.lanes, 0);
+        for (k, p) in planes.iter().enumerate() {
+            for (l, c) in counts.iter_mut().enumerate() {
+                *c += (((p[l / LANES] >> (l % LANES)) & 1) as u32) << k;
+            }
+        }
+    }
+
+    /// Allocating convenience wrapper over
+    /// [`LaneBlock::lane_popcounts_into`].
+    pub fn lane_popcounts(&self) -> Vec<u32> {
+        let mut planes = Vec::new();
+        let mut counts = Vec::new();
+        self.lane_popcounts_into(&mut planes, &mut counts);
+        counts
     }
 }
 
@@ -187,34 +287,61 @@ mod tests {
         }
     }
 
-    #[test]
-    fn from_rows_round_trips_every_lane() {
-        let mut rng = Xoshiro256::seeded(7);
-        for (len, lanes) in [(1, 1), (63, 5), (64, 64), (65, 63), (100, 17), (256, 64)] {
+    fn roundtrip_cases<const W: usize>(cases: &[(usize, usize)], seed: u64) {
+        let mut rng = Xoshiro256::seeded(seed);
+        for &(len, lanes) in cases {
             let rows: Vec<Bitstream> =
                 (0..lanes).map(|_| Bitstream::sample(0.4, len, &mut rng)).collect();
-            let m = LaneMatrix::from_rows(&rows);
+            let m = LaneBlock::<W>::from_rows(&rows);
             assert_eq!(m.len(), len);
             assert_eq!(m.lanes(), lanes);
-            assert_eq!(m.to_rows(), rows, "len={len} lanes={lanes}");
+            assert_eq!(m.to_rows(), rows, "W={W} len={len} lanes={lanes}");
             for (l, row) in rows.iter().enumerate() {
-                assert_eq!(&m.lane(l), row, "len={len} lanes={lanes} lane={l}");
+                assert_eq!(&m.lane(l), row, "W={W} len={len} lanes={lanes} lane={l}");
                 assert_eq!(m.lane_popcount(l), row.popcount());
                 assert_eq!(m.lane_value(l), row.value());
             }
+            // Vertical-counter readout equals the per-lane popcounts.
+            let counts = m.lane_popcounts();
+            assert_eq!(counts.len(), lanes);
+            for (l, row) in rows.iter().enumerate() {
+                assert_eq!(counts[l] as u64, row.popcount(), "W={W} lane {l}");
+            }
         }
+    }
+
+    #[test]
+    fn from_rows_round_trips_every_lane() {
+        roundtrip_cases::<1>(&[(1, 1), (63, 5), (64, 64), (65, 63), (100, 17), (256, 64)], 7);
+    }
+
+    #[test]
+    fn wide_blocks_round_trip_every_lane() {
+        // W = 2 and W = 4 with lane counts walking the per-word
+        // boundaries (64, 65, 128, 129, 200, 256) and ragged lengths.
+        roundtrip_cases::<2>(&[(100, 65), (64, 128), (65, 127), (1, 2)], 11);
+        roundtrip_cases::<4>(&[(100, 129), (256, 256), (63, 200), (65, 65)], 13);
     }
 
     #[test]
     fn dead_lanes_stay_masked() {
         let mut m = LaneMatrix::zeros(10, 3);
         for t in 0..10 {
-            m.set_word(t, u64::MAX);
+            m.set_word(t, [u64::MAX]);
         }
-        assert_eq!(m.word(0), 0b111);
+        assert_eq!(m.word(0), [0b111]);
         for l in 0..3 {
             assert_eq!(m.lane_popcount(l), 10);
         }
+        // Wide block: the mask covers partial words past the first.
+        let mut m = LaneBlock::<4>::zeros(5, 130);
+        for t in 0..5 {
+            m.set_word(t, [u64::MAX; 4]);
+        }
+        assert_eq!(m.word(0), [u64::MAX, u64::MAX, 0b11, 0]);
+        let counts = m.lane_popcounts();
+        assert_eq!(counts.len(), 130);
+        assert!(counts.iter().all(|&c| c == 5));
     }
 
     #[test]
@@ -223,9 +350,37 @@ mod tests {
         let r0 = Bitstream::from_bits(&[true, false, true, false]);
         let r1 = Bitstream::from_bits(&[true, true, true, true]);
         let m = LaneMatrix::from_rows(&[r0, r1]);
-        assert_eq!(m.word(0), 0b11);
-        assert_eq!(m.word(1), 0b10);
-        assert_eq!(m.word(2), 0b11);
-        assert_eq!(m.word(3), 0b10);
+        assert_eq!(m.word(0), [0b11]);
+        assert_eq!(m.word(1), [0b10]);
+        assert_eq!(m.word(2), [0b11]);
+        assert_eq!(m.word(3), [0b10]);
+    }
+
+    #[test]
+    fn reset_reuses_and_zeroes() {
+        let mut m = LaneBlock::<2>::zeros(4, 100);
+        m.set_word(0, [u64::MAX; 2]);
+        m.reset(6, 70);
+        assert_eq!(m.len(), 6);
+        assert_eq!(m.lanes(), 70);
+        for t in 0..6 {
+            assert_eq!(m.word(t), [0, 0], "stale bits at t={t}");
+        }
+        assert_eq!(m.lane_mask(), [u64::MAX, (1u64 << 6) - 1]);
+    }
+
+    #[test]
+    fn vertical_counter_matches_naive_on_random_blocks() {
+        let mut rng = Xoshiro256::seeded(0xC0DE);
+        for &(len, lanes) in &[(1usize, 1usize), (100, 100), (256, 256), (1023, 77)] {
+            let mut m = LaneBlock::<4>::zeros(len, lanes);
+            for t in 0..len {
+                m.set_word(t, std::array::from_fn(|_| rng.next_u64()));
+            }
+            let counts = m.lane_popcounts();
+            for l in 0..lanes {
+                assert_eq!(counts[l] as u64, m.lane_popcount(l), "len={len} lanes={lanes} l={l}");
+            }
+        }
     }
 }

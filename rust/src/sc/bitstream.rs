@@ -77,14 +77,19 @@ impl Bitstream {
     /// Sample using shared uniforms (for *correlated* bitstreams: two SNs
     /// generated from the same uniform sequence have maximal positive
     /// correlation, which the absolute-value subtractor requires, §4.1).
+    /// Words are assembled in a register like [`Bitstream::sample`]
+    /// (same bits as the per-bit `set` formulation, pinned by a test).
     pub fn from_uniforms(p: f64, uniforms: &[f64]) -> Self {
-        let mut bs = Self::zeros(uniforms.len());
-        for (i, &u) in uniforms.iter().enumerate() {
-            if u < p {
-                bs.set(i, true);
+        let len = uniforms.len();
+        let mut words = Vec::with_capacity(len.div_ceil(64));
+        for chunk in uniforms.chunks(64) {
+            let mut w = 0u64;
+            for (b, &u) in chunk.iter().enumerate() {
+                w |= ((u < p) as u64) << b;
             }
+            words.push(w);
         }
-        bs
+        Self { len, words }
     }
 
     pub fn len(&self) -> usize {
@@ -270,6 +275,28 @@ mod tests {
             assert_eq!(fast, slow, "len={len} p={p}");
             // Both paths must leave the RNGs in the same state too.
             assert_eq!(rng_a.next_u64(), rng_b.next_u64());
+        }
+    }
+
+    #[test]
+    fn from_uniforms_word_assembly_matches_per_bit_set() {
+        // `from_uniforms` builds each word in a register; this pins it
+        // against the per-bit `set` formulation for ragged and aligned
+        // lengths (and the empty stream).
+        let mut rng = Xoshiro256::seeded(0xF00D);
+        for len in [0usize, 1, 63, 64, 65, 1000] {
+            let mut us = vec![0.0; len];
+            rng.fill_f64(&mut us);
+            for p in [0.0, 0.3, 1.0] {
+                let fast = Bitstream::from_uniforms(p, &us);
+                let mut slow = Bitstream::zeros(len);
+                for (i, &u) in us.iter().enumerate() {
+                    if u < p {
+                        slow.set(i, true);
+                    }
+                }
+                assert_eq!(fast, slow, "len={len} p={p}");
+            }
         }
     }
 

@@ -2,16 +2,20 @@
 //!
 //! Unipolar-encoded stochastic numbers as packed bitstreams (§2.3),
 //! the six arithmetic operations (Fig 4/5), binary↔stochastic
-//! conversion helpers, and the transposed lane-major bit planes
-//! (`bitplane`) the word-parallel wave engine evaluates 64 batch rows
-//! per word on. This is the bit-exact functional model that the
-//! in-memory implementations (S6/S7) and the JAX artifacts (S18) are
-//! validated against.
+//! conversion helpers, the transposed lane-major bit planes
+//! (`bitplane`) the word-parallel wave engine evaluates up to 256
+//! batch rows per `u64×W` lane word on, and the lane-major SNG
+//! (`sng`) that generates those blocks directly from a lockstep RNG
+//! bank — the whole wave pipeline (generation → gates → StoB readout)
+//! stays in the parallel domain. This is the bit-exact functional
+//! model that the in-memory implementations (S6/S7) and the JAX
+//! artifacts (S18) are validated against.
 
 pub mod bitplane;
 pub mod bitstream;
 pub mod encode;
 pub mod ops;
+pub mod sng;
 
-pub use bitplane::LaneMatrix;
+pub use bitplane::{LaneBlock, LaneMatrix};
 pub use bitstream::Bitstream;

@@ -1,0 +1,184 @@
+//! Lane-major stochastic number generation (SNG).
+//!
+//! The scalar SNG samples one row at a time ([`Bitstream::sample`]):
+//! `bl` Bernoulli draws from that row's PRNG stream, packed along the
+//! *time* axis. The wave engine wants the transposed layout — for each
+//! time step, one packed lane word holding every row's bit — and it
+//! used to get there by generating per-row bitstreams and transposing.
+//! This module generates the lane-major words **directly**: an
+//! [`RngBank`] steps every row's PRNG in lockstep, each time step
+//! compares all lanes' uniforms against their per-lane thresholds, and
+//! the comparison bits are packed into one `[u64; W]` lane word — no
+//! per-row intermediates, no transpose.
+//!
+//! Draw-order contract (what keeps outputs bit-identical to the scalar
+//! path): lane `l` of the bank is seeded exactly like the scalar row
+//! PRNG, and each generation call consumes draws in the same order the
+//! scalar path would — [`sample_block`] draws `bl` uniforms per lane
+//! (like [`Bitstream::sample`]), [`fill_uniform_block`] draws the `bl`
+//! shared uniforms of a correlated group per lane (like
+//! `Xoshiro256::fill_f64`), and [`threshold_block`] draws nothing (like
+//! [`Bitstream::from_uniforms`]). Callers replay inputs in netlist
+//! node-id order, so the interleaving across inputs matches too.
+//!
+//! [`Bitstream::sample`]: crate::sc::bitstream::Bitstream::sample
+//! [`Bitstream::from_uniforms`]: crate::sc::bitstream::Bitstream::from_uniforms
+
+use super::bitplane::{LaneBlock, LANES};
+use crate::util::prng::RngBank;
+
+/// Pack one time step's comparison bits: bit `l` of the lane word is
+/// `draws[l] < values[l]` — the same strict `<` as `Xoshiro256::
+/// bernoulli` and `Bitstream::from_uniforms`.
+#[inline]
+fn pack_lt<const W: usize>(draws: &[f64], values: &[f64]) -> [u64; W] {
+    let mut w = [0u64; W];
+    for (l, (&u, &v)) in draws.iter().zip(values).enumerate() {
+        w[l / LANES] |= ((u < v) as u64) << (l % LANES);
+    }
+    w
+}
+
+/// Bernoulli-sample one lane-major input block: lane `l` compares its
+/// own stream's next `bl` uniforms against threshold `values[l]`
+/// (models the MTJ stochastic write, P_sw = value, across a whole
+/// subarray row group at once). The per-lane draw sequence is identical
+/// to `Bitstream::sample(values[l], bl, lane_rng)`.
+///
+/// `draws` is caller-owned scratch (resized to one uniform per lane);
+/// `out` is reshaped to `bl × values.len()` in place, reusing its
+/// allocation across blocks.
+pub fn sample_block<const W: usize>(
+    values: &[f64],
+    bl: usize,
+    rngs: &mut RngBank,
+    draws: &mut Vec<f64>,
+    out: &mut LaneBlock<W>,
+) {
+    let lanes = values.len();
+    assert_eq!(rngs.len(), lanes, "one RNG stream per lane");
+    out.reset(bl, lanes);
+    draws.clear();
+    draws.resize(lanes, 0.0);
+    for t in 0..bl {
+        rngs.next_f64_into(draws);
+        out.set_word(t, pack_lt(draws, values));
+    }
+}
+
+/// Draw a correlated group's shared uniforms for every lane, lane-major
+/// (`uniforms[t * lanes + l]` is lane `l`'s uniform at step `t`). Per
+/// lane this consumes exactly the `bl` draws the scalar path's
+/// `fill_f64` would, so later inputs of the group can threshold against
+/// the same numbers (maximal positive correlation, §4.1).
+pub fn fill_uniform_block(lanes: usize, bl: usize, rngs: &mut RngBank, uniforms: &mut Vec<f64>) {
+    assert_eq!(rngs.len(), lanes, "one RNG stream per lane");
+    uniforms.clear();
+    uniforms.resize(lanes * bl, 0.0);
+    for t in 0..bl {
+        rngs.next_f64_into(&mut uniforms[t * lanes..(t + 1) * lanes]);
+    }
+}
+
+/// Threshold a pre-drawn lane-major uniform block (from
+/// [`fill_uniform_block`]) against per-lane values — the correlated
+/// counterpart of [`sample_block`], consuming no RNG draws, exactly
+/// like `Bitstream::from_uniforms` per lane.
+pub fn threshold_block<const W: usize>(
+    values: &[f64],
+    bl: usize,
+    uniforms: &[f64],
+    out: &mut LaneBlock<W>,
+) {
+    let lanes = values.len();
+    assert_eq!(uniforms.len(), lanes * bl, "uniform block shape mismatch");
+    out.reset(bl, lanes);
+    for t in 0..bl {
+        out.set_word(t, pack_lt(&uniforms[t * lanes..(t + 1) * lanes], values));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sc::bitstream::Bitstream;
+    use crate::util::prng::Xoshiro256;
+
+    fn lane_seed(l: usize) -> u64 {
+        0x5135_u64 ^ ((l as u64) << 32) ^ (l as u64)
+    }
+
+    fn lane_values(lanes: usize) -> Vec<f64> {
+        (0..lanes).map(|l| (0.03 + 0.94 * l as f64 / lanes.max(1) as f64).clamp(0.0, 1.0)).collect()
+    }
+
+    #[test]
+    fn sample_block_matches_scalar_sng_per_lane() {
+        // Every lane of the packed block must equal Bitstream::sample
+        // run on a standalone PRNG with the same seed — including the
+        // RNG end state (same number of draws consumed).
+        for (lanes, bl) in [(1usize, 100usize), (63, 64), (64, 65), (130, 100), (256, 256)] {
+            let values = lane_values(lanes);
+            let mut bank = RngBank::new();
+            bank.reseed_with(lanes, lane_seed);
+            let mut draws = Vec::new();
+            let mut block: LaneBlock<4> = LaneBlock::zeros(0, 0);
+            sample_block(&values, bl, &mut bank, &mut draws, &mut block);
+            assert_eq!(block.len(), bl);
+            assert_eq!(block.lanes(), lanes);
+            let mut probe = vec![0u64; lanes];
+            bank.next_u64_into(&mut probe);
+            for l in 0..lanes {
+                let mut rng = Xoshiro256::seeded(lane_seed(l));
+                let want = Bitstream::sample(values[l], bl, &mut rng);
+                assert_eq!(block.lane(l), want, "lanes={lanes} bl={bl} lane={l}");
+                assert_eq!(probe[l], rng.next_u64(), "draw count differs at lane {l}");
+            }
+        }
+    }
+
+    #[test]
+    fn correlated_blocks_match_scalar_uniform_path() {
+        // fill + threshold must reproduce fill_f64 + from_uniforms per
+        // lane: same shared uniforms, different thresholds → maximally
+        // correlated streams, and no extra draws for later inputs.
+        let (lanes, bl) = (100usize, 128usize);
+        let va = lane_values(lanes);
+        let vb: Vec<f64> = va.iter().map(|v| 1.0 - *v).collect();
+        let mut bank = RngBank::new();
+        bank.reseed_with(lanes, lane_seed);
+        let mut uniforms = Vec::new();
+        fill_uniform_block(lanes, bl, &mut bank, &mut uniforms);
+        let mut a: LaneBlock<2> = LaneBlock::zeros(0, 0);
+        let mut b: LaneBlock<2> = LaneBlock::zeros(0, 0);
+        threshold_block(&va, bl, &uniforms, &mut a);
+        threshold_block(&vb, bl, &uniforms, &mut b);
+        let mut probe = vec![0u64; lanes];
+        bank.next_u64_into(&mut probe);
+        for l in 0..lanes {
+            let mut rng = Xoshiro256::seeded(lane_seed(l));
+            let mut us = vec![0.0; bl];
+            rng.fill_f64(&mut us);
+            assert_eq!(a.lane(l), Bitstream::from_uniforms(va[l], &us), "a lane {l}");
+            assert_eq!(b.lane(l), Bitstream::from_uniforms(vb[l], &us), "b lane {l}");
+            assert_eq!(probe[l], rng.next_u64(), "draw count differs at lane {l}");
+        }
+    }
+
+    #[test]
+    fn sample_block_reuses_buffers() {
+        // Back-to-back generations into the same scratch must not leak
+        // bits between blocks (reset() zeroes the reused words).
+        let mut bank = RngBank::new();
+        let mut draws = Vec::new();
+        let mut block: LaneBlock<1> = LaneBlock::zeros(0, 0);
+        bank.reseed_with(10, lane_seed);
+        sample_block(&[1.0; 10], 50, &mut bank, &mut draws, &mut block);
+        assert!((0..10).all(|l| block.lane_popcount(l) == 50));
+        bank.reseed_with(7, lane_seed);
+        sample_block(&[0.0; 7], 30, &mut bank, &mut draws, &mut block);
+        assert_eq!(block.len(), 30);
+        assert_eq!(block.lanes(), 7);
+        assert!((0..7).all(|l| block.lane_popcount(l) == 0));
+    }
+}

@@ -20,10 +20,14 @@
 //!
 //! Row-level parallelism composes underneath: each wave is evaluated
 //! by the word-parallel engine via
-//! [`runtime::InterpEngine::execute_rows`] — netlist kernels pack 64
-//! batch rows per `u64` word and split the 64-row lane blocks across a
-//! scoped worker pool — so shard-level (bank) and row-level (subarray
-//! row) parallelism mirror the paper's two-level hierarchy.
+//! [`runtime::InterpEngine::execute_rows`] — netlist kernels pack up
+//! to 256 batch rows per `u64×W` lane word (lane-major SNG → gate
+//! program → vertical-counter StoB, no per-row intermediates) and
+//! split the lane blocks across a scoped worker pool — so shard-level
+//! (bank) and row-level (subarray row) parallelism mirror the paper's
+//! two-level hierarchy. `ServerConfig::lane_width` /
+//! `STOCH_IMC_LANE_WIDTH` pins the block width (64/128/256; default
+//! auto-sizes per wave).
 //!
 //! `coordinator::Coordinator` is now a thin single-shard wrapper over
 //! [`Server`], kept for its simpler API and for backward compatibility.

@@ -16,7 +16,7 @@ use crate::error::Result;
 use crate::runtime::Engine;
 use crate::util::prng::fnv1a;
 
-use super::shard::{Shard, ShardMsg};
+use super::shard::{Shard, ShardMsg, WaveKnobs};
 
 /// Owns the shards; dropped last by [`super::Server`], which shuts every
 /// shard down (draining its partial waves) and joins the threads.
@@ -44,6 +44,7 @@ impl BankPool {
     /// Spawn `n` shards over the shared engine. `specs` maps every
     /// servable app to `(n_inputs, batch)`; `shards == 0` means one
     /// shard per artifact.
+    #[allow(clippy::too_many_arguments)]
     pub(crate) fn start(
         engine: Arc<Engine>,
         specs: &HashMap<String, (usize, usize)>,
@@ -51,6 +52,7 @@ impl BankPool {
         cfg: &BatcherConfig,
         queue_depth: usize,
         row_threads: usize,
+        lane_width: usize,
     ) -> Result<Self> {
         let mut names: Vec<String> = specs.keys().cloned().collect();
         names.sort();
@@ -68,6 +70,14 @@ impl BankPool {
         } else {
             row_threads
         };
+        // Same hoisting for the lane width: an explicit config value or
+        // STOCH_IMC_LANE_WIDTH pins every wave; otherwise 0 lets the
+        // engine auto-size each wave to its live row count.
+        let lane_width = match lane_width {
+            64 | 128 | 256 => lane_width,
+            _ => crate::runtime::lane_width_override().unwrap_or(0),
+        };
+        let knobs = WaveKnobs { row_threads, lane_width };
         let metrics: Arc<Mutex<HashMap<String, Metrics>>> = Arc::default();
         let mut pool_shards = Vec::with_capacity(n);
         for id in 0..n {
@@ -82,7 +92,7 @@ impl BankPool {
                 shard_specs,
                 cfg.clone(),
                 queue_depth,
-                row_threads,
+                knobs,
                 Arc::clone(&metrics),
             )?);
         }

@@ -31,15 +31,24 @@ pub struct ServerConfig {
     /// manifest spec; `max_wait` closes partial waves).
     pub batcher: BatcherConfig,
     /// Wave-level parallelism: worker threads the interpreter splits a
-    /// wave across. Netlist kernels hand each worker 64-row lane
-    /// blocks (the word-parallel engine evaluates 64 batch rows per
-    /// u64 word); staged kernels hand out single rows. `0` (default) =
-    /// auto — the `STOCH_IMC_ROW_THREADS` env var if set (honored
-    /// as-is), else the machine's cores divided across the pool's
-    /// shards. Resolved once at start, so the per-wave path never
-    /// touches the environment. Outputs are bit-identical for every
-    /// value.
+    /// wave across. Netlist kernels hand each worker whole lane blocks
+    /// (the word-parallel engine evaluates up to 256 batch rows per
+    /// `u64×W` lane word); staged kernels hand out single rows. `0`
+    /// (default) = auto — the `STOCH_IMC_ROW_THREADS` env var if set
+    /// (honored as-is), else the machine's cores divided across the
+    /// pool's shards. Resolved once at start, so the per-wave path
+    /// never touches the environment. Outputs are bit-identical for
+    /// every value.
     pub row_threads: usize,
+    /// Rows per lane block in the word-parallel engine: `64`, `128`,
+    /// or `256` (`u64×{1,2,4}` lane words). `0` (default) = auto —
+    /// the `STOCH_IMC_LANE_WIDTH` env var if set (resolved once at
+    /// pool start into a pinned width, like `row_threads`), else each
+    /// wave is auto-sized by the engine (narrowest covering block,
+    /// narrowed further only so every row worker keeps a block).
+    /// Purely a throughput knob: outputs are bit-identical at every
+    /// width.
+    pub lane_width: usize,
 }
 
 impl Default for ServerConfig {
@@ -49,6 +58,7 @@ impl Default for ServerConfig {
             queue_depth: 1024,
             batcher: BatcherConfig::default(),
             row_threads: 0,
+            lane_width: 0,
         }
     }
 }
@@ -85,6 +95,7 @@ impl Server {
             &cfg.batcher,
             cfg.queue_depth,
             cfg.row_threads,
+            cfg.lane_width,
         )?;
         Ok(Self { pool, specs })
     }

@@ -21,6 +21,16 @@ use crate::coordinator::metrics::Metrics;
 use crate::error::{Context, Result};
 use crate::runtime::Engine;
 
+/// Per-wave execution knobs, resolved once at pool start (env
+/// lookups included) so the wave path never touches the environment.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct WaveKnobs {
+    /// Worker threads a wave's rows/lane blocks are split across.
+    pub row_threads: usize,
+    /// Rows per lane block (64/128/256; 0 = auto per wave).
+    pub lane_width: usize,
+}
+
 /// Messages accepted by a shard's admission queue.
 pub(crate) enum ShardMsg {
     Request { app: String, inputs: Vec<f32>, respond: Sender<f32> },
@@ -47,13 +57,13 @@ impl Shard {
         specs: HashMap<String, (usize, usize)>,
         cfg: BatcherConfig,
         queue_depth: usize,
-        row_threads: usize,
+        knobs: WaveKnobs,
         metrics: Arc<Mutex<HashMap<String, Metrics>>>,
     ) -> Result<Self> {
         let (tx, rx) = sync_channel(queue_depth.max(1));
         let handle = std::thread::Builder::new()
             .name(format!("stoch-imc-shard-{id}"))
-            .spawn(move || shard_loop(id, &engine, rx, &metrics, &specs, &cfg, row_threads))
+            .spawn(move || shard_loop(id, &engine, rx, &metrics, &specs, &cfg, knobs))
             .with_context(|| format!("spawning shard {id}"))?;
         Ok(Self { id, tx, handle: Some(handle) })
     }
@@ -104,7 +114,7 @@ fn shard_loop(
     metrics: &Arc<Mutex<HashMap<String, Metrics>>>,
     specs: &HashMap<String, (usize, usize)>,
     cfg: &BatcherConfig,
-    row_threads: usize,
+    knobs: WaveKnobs,
 ) {
     let mut batchers: HashMap<String, Batcher> = HashMap::new();
     // Per-shard wave-seed stream: mixed with the shard id so two shards
@@ -126,16 +136,16 @@ fn shard_loop(
                 b.push(Pending { inputs, respond, enqueued: Instant::now() });
             }
             Ok(ShardMsg::Flush(ack)) => {
-                drain_all(engine, &mut batchers, metrics, &mut seed, row_threads);
+                drain_all(engine, &mut batchers, metrics, &mut seed, knobs);
                 let _ = ack.send(());
             }
             Ok(ShardMsg::Shutdown) => {
-                drain_all(engine, &mut batchers, metrics, &mut seed, row_threads);
+                drain_all(engine, &mut batchers, metrics, &mut seed, knobs);
                 return;
             }
             Err(RecvTimeoutError::Timeout) => {}
             Err(RecvTimeoutError::Disconnected) => {
-                drain_all(engine, &mut batchers, metrics, &mut seed, row_threads);
+                drain_all(engine, &mut batchers, metrics, &mut seed, knobs);
                 return;
             }
         }
@@ -143,7 +153,7 @@ fn shard_loop(
         let now = Instant::now();
         for (app, b) in batchers.iter_mut() {
             while b.ready(now) {
-                execute_wave(engine, app, b, metrics, &mut seed, row_threads);
+                execute_wave(engine, app, b, metrics, &mut seed, knobs);
             }
         }
     }
@@ -154,11 +164,11 @@ fn drain_all(
     batchers: &mut HashMap<String, Batcher>,
     metrics: &Arc<Mutex<HashMap<String, Metrics>>>,
     seed: &mut i32,
-    row_threads: usize,
+    knobs: WaveKnobs,
 ) {
     for (app, b) in batchers.iter_mut() {
         while !b.is_empty() {
-            execute_wave(engine, app, b, metrics, seed, row_threads);
+            execute_wave(engine, app, b, metrics, seed, knobs);
         }
     }
 }
@@ -169,12 +179,19 @@ fn execute_wave(
     b: &mut Batcher,
     metrics: &Arc<Mutex<HashMap<String, Metrics>>>,
     seed: &mut i32,
-    row_threads: usize,
+    knobs: WaveKnobs,
 ) {
     let wave = b.drain();
     *seed = seed.wrapping_mul(0x343FD).wrapping_add(0x269EC3);
     let t0 = Instant::now();
-    match engine.execute_rows(app, &wave.values, *seed, wave.responders.len(), row_threads) {
+    match engine.execute_rows_wide(
+        app,
+        &wave.values,
+        *seed,
+        wave.responders.len(),
+        knobs.row_threads,
+        knobs.lane_width,
+    ) {
         Ok(outs) => {
             let dt = t0.elapsed();
             for (i, r) in wave.responders.iter().enumerate() {

@@ -95,6 +95,7 @@ fn bounded_queue_sheds_load_then_drains() {
             queue_depth: 1,
             batcher: BatcherConfig { batch: 1, max_wait: Duration::from_millis(2) },
             row_threads: 1,
+            ..ServerConfig::default()
         },
     )
     .unwrap();

@@ -1,18 +1,23 @@
 //! Differential property suite for the word-parallel wave engine: every
 //! registered interpreter artifact must produce **bit-identical** outputs
 //! through the scalar golden path (`execute_rows_scalar`, one row at a
-//! time through `netlist::eval::eval_stochastic`) and the word-parallel
-//! lane-block path (`execute_rows`, 64 rows per `u64` word), across
-//! bitstream lengths (including BL % 64 != 0), ragged live-row counts
-//! (live % 64 != 0), worker counts, and seeds.
+//! time through `netlist::eval::eval_stochastic`) and the lane-major
+//! word-parallel path (`execute_rows` / `execute_rows_wide`, up to 256
+//! rows per `u64×W` lane word), across lane widths {64, 128, 256} and
+//! auto, bitstream lengths (including BL % 64 != 0), ragged live-row
+//! counts (live % width != 0), worker counts, and seeds.
 
 use stoch_imc::runtime::InterpEngine;
 use stoch_imc::util::prng::{fnv1a, Xoshiro256};
 
 /// Batch dimension for every artifact in the differential manifests —
-/// large enough for multi-block waves with a ragged tail: live=200
-/// splits into lane blocks of 64+64+64+8.
+/// large enough for multi-block waves with a ragged tail at every lane
+/// width: live=200 splits into 64-row blocks of 64+64+64+8, 128-row
+/// blocks of 128+72, and one ragged 256-row block.
 const BATCH: usize = 200;
+
+/// Every lane width the engine monomorphizes, plus 0 = auto sizing.
+const WIDTHS: [usize; 4] = [64, 128, 256, 0];
 
 const OPS: [&str; 6] = [
     "op_multiply",
@@ -45,25 +50,28 @@ fn values_for(e: &InterpEngine, name: &str, seed: i32) -> Vec<f32> {
 }
 
 /// Assert scalar and word-parallel outputs are bit-identical (exact f32
-/// equality, padding rows included) for every requested thread count.
+/// equality, padding rows included) for every lane width and requested
+/// thread count.
 fn assert_paths_equal(e: &InterpEngine, name: &str, bl: usize, live: usize, seed: i32) {
     let values = values_for(e, name, seed);
     let golden = e.execute_rows_scalar(name, &values, seed, live, 1).unwrap();
-    for threads in [1usize, 3, 16] {
-        let word = e.execute_rows(name, &values, seed, live, threads).unwrap();
-        assert_eq!(
-            golden, word,
-            "artifact={name} bl={bl} live={live} threads={threads} seed={seed}"
-        );
+    for width in WIDTHS {
+        for threads in [1usize, 3, 16] {
+            let word = e.execute_rows_wide(name, &values, seed, live, threads, width).unwrap();
+            assert_eq!(
+                golden, word,
+                "artifact={name} bl={bl} live={live} width={width} threads={threads} seed={seed}"
+            );
+        }
     }
 }
 
 #[test]
 fn ops_bit_identical_across_bl_and_ragged_live() {
     // Ragged and aligned BLs × ragged and aligned live prefixes. The
-    // live set walks the 64-lane block boundary (1, 63, 64, 65) and a
-    // multi-block wave with a ragged fourth block (200 = 64+64+64+8).
-    for (bl, lives) in [(100usize, &[1usize, 63, 200][..]), (256, &[64, 65][..])] {
+    // live set walks the lane-word boundaries (1, 63, 64, 65, 128) and
+    // a multi-block wave with a ragged tail at every width (200).
+    for (bl, lives) in [(100usize, &[1usize, 63, 200][..]), (256, &[64, 65, 128][..])] {
         let e = engine(bl, "ops");
         for (i, name) in OPS.iter().enumerate() {
             for (j, &live) in lives.iter().enumerate() {
@@ -78,10 +86,13 @@ fn ops_bit_identical_across_bl_and_ragged_live() {
 fn stateful_ops_bit_identical_at_long_bl() {
     // The feedback circuits (JK divider Delay state, ADDIE counters)
     // carry state across all 1024 bit positions; one drifted lane or a
-    // shared-RNG mismatch would diverge long before the stream ends.
+    // shared-RNG mismatch would diverge long before the stream ends —
+    // at every lane width (ADDIE counters above lane 64 included:
+    // live=129 puts rows in the third lane word at width 256).
     let e = engine(1024, "long");
     for (k, name) in ["op_scaled_divide", "op_square_root"].iter().enumerate() {
         assert_paths_equal(&e, name, 1024, 65, 7700 + k as i32);
+        assert_paths_equal(&e, name, 1024, 129, 7800 + k as i32);
     }
 }
 
@@ -89,11 +100,13 @@ fn stateful_ops_bit_identical_at_long_bl() {
 fn apps_bit_identical_through_both_paths() {
     // The netlist apps ride the word-parallel path; the staged apps
     // (app_lit, app_kde) run per-row on both, so equality pins that the
-    // engine routes them consistently too.
+    // engine routes them consistently too (and that lane width is a
+    // no-op for them).
     let e = engine(100, "apps");
     for (name, live, seed) in [
         ("app_ol", 65, 41),
         ("app_hdp", 63, 42),
+        ("app_hdp", 130, 45),
         ("app_lit", 65, 43),
         ("app_kde", 65, 44),
     ] {
@@ -116,5 +129,21 @@ fn seeds_resample_but_paths_stay_locked() {
             assert_ne!(prev, &word, "seed {seed} must resample streams");
         }
         last = Some(word);
+    }
+}
+
+#[test]
+fn widths_agree_with_each_other_on_full_batches() {
+    // Direct width-vs-width equality on a full multi-block wave (no
+    // scalar reference in the loop, so this also catches a bug that
+    // breaks scalar and word paths identically per width).
+    let e = engine(100, "widths");
+    for name in ["op_multiply", "op_scaled_divide", "app_ol"] {
+        let values = values_for(&e, name, 77);
+        let base = e.execute_rows_wide(name, &values, 77, BATCH, 2, 64).unwrap();
+        for width in [128usize, 256, 0] {
+            let other = e.execute_rows_wide(name, &values, 77, BATCH, 3, width).unwrap();
+            assert_eq!(base, other, "artifact={name} width={width}");
+        }
     }
 }
