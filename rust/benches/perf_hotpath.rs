@@ -78,11 +78,11 @@ fn main() {
             }
         });
         let mut bank = RngBank::new();
-        let mut draws = Vec::new();
+        let mut scratch = sng::SngScratch::default();
         let mut block: LaneBlock<4> = LaneBlock::zeros(0, 0);
         let sng_lane_t = bench("SNG lane-major 256 rows × BL=256", 1_000, || {
             bank.reseed_with(ROWS, |l| h ^ ((l as u64) << 32));
-            sng::sample_block(&vals, BL, &mut bank, &mut draws, &mut block);
+            sng::sample_block(&vals, BL, &mut bank, &mut scratch, &mut block);
             std::hint::black_box(block.word(BL - 1));
         });
         let sng_speedup = sng_scalar_t / sng_lane_t;
@@ -140,6 +140,40 @@ fn main() {
             results.push((format!("hotpath_scalar_{name}_rows_per_s"), 128.0 / scalar_t));
             results.push((format!("hotpath_wordpar_{name}_rows_per_s"), 128.0 / word_t));
             results.push((format!("hotpath_wordpar_{name}_speedup"), speedup));
+        }
+    }
+
+    // L3e: staged-app waves — the multi-stage pipelines (LIT: trees →
+    // correlated XOR → ADDIE √; KDE: correlated XORs → 5-stage
+    // exponential products) through the scalar staged reference vs the
+    // lane-major staged executor with in-lane StoB→BtoS regeneration.
+    // Single-threaded both ways, so the ratio isolates the staged lane
+    // pipeline; bit-identical outputs (tests/staged.rs), so the
+    // speedup is what a serving wave actually sees.
+    {
+        use stoch_imc::runtime::InterpEngine;
+        let dir = std::env::temp_dir().join("stoch_imc_perf_staged");
+        std::fs::create_dir_all(&dir).expect("tmp dir");
+        std::fs::write(dir.join("manifest.txt"), "app_lit 64 128 256\napp_kde 9 128 256\n")
+            .expect("manifest");
+        let e = InterpEngine::load(&dir).expect("interp engine");
+        println!("\n# scalar vs lane-major staged app waves (128 live rows, 1 thread)");
+        for (name, short, n_in) in [("app_lit", "lit", 64usize), ("app_kde", "kde", 9)] {
+            let mut values = vec![0.0f32; 128 * n_in];
+            for (i, v) in values.iter_mut().enumerate() {
+                *v = 0.05 + 0.9 * ((i * 41) % 103) as f32 / 103.0;
+            }
+            let scalar_t = bench(&format!("{name} scalar staged wave (128 rows)"), 3, || {
+                std::hint::black_box(e.execute_rows_scalar(name, &values, 5, 128, 1).unwrap());
+            });
+            let lane_t = bench(&format!("{name} lane-major staged wave (128 rows)"), 12, || {
+                std::hint::black_box(e.execute_rows(name, &values, 5, 128, 1).unwrap());
+            });
+            let speedup = scalar_t / lane_t;
+            println!("{:<44} {:>11.2}x", format!("  → {name} staged lane speedup"), speedup);
+            results.push((format!("hotpath_staged_{short}_scalar_rows_per_s"), 128.0 / scalar_t));
+            results.push((format!("hotpath_staged_{short}_lanemajor_rows_per_s"), 128.0 / lane_t));
+            results.push((format!("hotpath_staged_{short}_lanemajor_speedup"), speedup));
         }
     }
 

@@ -9,10 +9,10 @@
 //! independent copies of d_i, provided by StoB→BtoS regeneration
 //! (stage 2), as in LIT.
 
-use super::{bq, flip, mean_tree, App, Instance};
+use super::{bindings_from, bq, flip, mean_tree, out_idx, App, Instance};
 use crate::netlist::graph::InputClass;
-use crate::netlist::ops::{and_rel, exp_into, xor_into};
-use crate::netlist::Netlist;
+use crate::netlist::ops::{and_rel, exp_constants, exp_into, xor_into};
+use crate::netlist::{Binding, Netlist, StagedPlan};
 use crate::sc::bitstream::Bitstream;
 use crate::sc::encode::encode_correlated;
 use crate::sc::ops as sc_ops;
@@ -37,6 +37,64 @@ impl Kde {
     fn maclaurin(c: f64, x: f64) -> f64 {
         let u = c * x;
         1.0 - u * (1.0 - (u / 2.0) * (1.0 - (u / 3.0) * (1.0 - (u / 4.0) * (1.0 - u / 5.0))))
+    }
+
+    /// Compile the two-stage KDE pipeline into a [`StagedPlan`] the
+    /// word-parallel engine runs lane-major end to end. Stage 1 is the
+    /// pure in-array part: one correlated XOR per history frame
+    /// (d_i = |X_t − X_{t−i}|, groups 0..N−1 each sharing uniforms
+    /// between the X_t and X_{t−i} copies). Stage 2 regenerates five
+    /// independent copies of each d_i per exponential instance
+    /// (StoB→BtoS), feeds the 5-stage e^{−(c/5)d} Maclaurin product
+    /// chains, and means the N frames through the MUX tree. The value
+    /// model matches [`App::stoch_value`] statistically; the engine's
+    /// bit-level contract is the staged reference
+    /// ([`StagedPlan::eval_row_scalar`]) — `stoch_value` interleaves
+    /// its draws per frame, the staged pipeline per stage.
+    pub fn staged_plan(&self) -> StagedPlan {
+        let mut stages = self.stoch_cost_netlists();
+        let s2 = stages.pop().expect("KDE stage 2");
+        let s1 = stages.pop().expect("KDE stage 1");
+        let b1 = bindings_from(&s1, |name| {
+            if name.starts_with("xt_") {
+                Binding::Input(0)
+            } else if let Some(i) =
+                name.strip_prefix("xh_").and_then(|s| s.parse::<usize>().ok())
+            {
+                Binding::Input(i + 1)
+            } else {
+                unreachable!("unknown KDE stage-1 input `{name}`")
+            }
+        });
+        let consts = exp_constants(self.c / 5.0);
+        let d_out: Vec<usize> =
+            (0..self.history).map(|i| out_idx(&s1, &format!("d{i}"))).collect();
+        // Stage-2 names: d{i}_{s}_{k} = copy k of frame i's distance in
+        // exponential instance s; c{i}_{s}_{k} = the C_k constant;
+        // sel{j} = mean-tree selects.
+        let b2 = bindings_from(&s2, |name| {
+            if let Some(rest) = name.strip_prefix('d') {
+                let i = rest
+                    .split('_')
+                    .next()
+                    .and_then(|s| s.parse::<usize>().ok())
+                    .expect("frame index");
+                Binding::Regen { stage: 0, output: d_out[i] }
+            } else if name.starts_with("sel") {
+                Binding::Const(0.5)
+            } else if let Some(rest) = name.strip_prefix('c') {
+                let k = rest
+                    .rsplit('_')
+                    .next()
+                    .and_then(|s| s.parse::<usize>().ok())
+                    .expect("constant index");
+                Binding::Const(consts[k])
+            } else {
+                unreachable!("unknown KDE stage-2 input `{name}`")
+            }
+        });
+        StagedPlan::compile(self.history + 1, vec![(s1, b1), (s2, b2)], "pdf")
+            .expect("KDE staged plan compiles")
     }
 }
 
@@ -260,5 +318,40 @@ mod tests {
         assert_eq!(stages.len(), 2);
         // 8 frames × 5 exp instances × 13 gates + products + tree.
         assert!(stages[1].gate_count() > 500, "got {}", stages[1].gate_count());
+    }
+
+    #[test]
+    fn staged_plan_shape() {
+        let app = Kde::default();
+        let plan = app.staged_plan();
+        assert_eq!(plan.stages().len(), 2);
+        assert_eq!(plan.n_inputs(), app.history + 1);
+        // Stage 1: one correlated pair per frame; stage 2: 5 copies × 5
+        // exp instances per frame (regenerated) + 5×5 constants per
+        // frame + 7 tree selects.
+        assert_eq!(plan.stages()[0].bindings.len(), 2 * app.history);
+        let regen = plan.stages()[1]
+            .bindings
+            .iter()
+            .filter(|b| matches!(b, Binding::Regen { .. }))
+            .count();
+        assert_eq!(regen, app.history * 25);
+        assert_eq!(plan.stages()[1].bindings.len(), app.history * 50 + 7);
+    }
+
+    #[test]
+    fn staged_reference_tracks_float() {
+        // The staged-netlist scalar reference (the engine's bit-level
+        // contract) approximates the same PDF as stoch_value, just with
+        // the per-stage draw order.
+        let app = Kde::default();
+        let plan = app.staged_plan();
+        let insts = app.workload(2, 37);
+        for (k, x) in insts.iter().enumerate() {
+            let mut rng = Xoshiro256::seeded(51 + k as u64);
+            let s = plan.eval_row_scalar(x, 4096, &mut rng);
+            let f = app.float_ref(x);
+            assert!((s - f).abs() < 0.1, "instance {k}: staged={s} float={f}");
+        }
     }
 }

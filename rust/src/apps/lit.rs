@@ -16,10 +16,10 @@
 //!   stage 3: two independent regenerations → ADDIE √ → scaled-add with
 //!            the all-ones stream → AND with regenerated mean ⇒ T.
 
-use super::{bq, flip, mean_tree, mean_tree_netlist, App, Instance};
+use super::{bindings_from, bq, flip, mean_tree, mean_tree_netlist, out_idx, App, Instance};
 use crate::netlist::graph::InputClass;
 use crate::netlist::ops::{and_rel, mux_into, sqrt_into, xor_into, ADDIE_BITS_APP};
-use crate::netlist::Netlist;
+use crate::netlist::{Binding, Netlist, StagedPlan};
 use crate::sc::bitstream::Bitstream;
 use crate::sc::encode::encode_correlated;
 use crate::sc::ops as sc_ops;
@@ -72,6 +72,56 @@ impl Lit {
             }
         }
         img
+    }
+
+    /// Compile the three-stage LIT pipeline into a [`StagedPlan`] the
+    /// word-parallel engine runs lane-major end to end: the
+    /// [`App::stoch_cost_netlists`] stages wired through StoB→BtoS
+    /// regeneration edges. Stage 1 samples four independent copies of
+    /// every pixel (x/y for the two mean trees, u/v for the squares)
+    /// and accumulates mean, mean², and mean-of-squares; stage 2
+    /// regenerates the latter two *correlated* and XORs them into σ²;
+    /// stage 3 regenerates σ² twice for the ADDIE √, folds in the
+    /// all-ones stream via the (σ+1)/2 MUX, and ANDs with a
+    /// regenerated mean ⇒ T. All MUX selects are 0.5-valued constant
+    /// streams. The value model matches [`App::stoch_value`]
+    /// statistically (identical circuit structure); the bit-level
+    /// contract is the staged reference
+    /// ([`StagedPlan::eval_row_scalar`]).
+    pub fn staged_plan(&self) -> StagedPlan {
+        let mut stages = self.stoch_cost_netlists();
+        let s3 = stages.pop().expect("LIT stage 3");
+        let s2 = stages.pop().expect("LIT stage 2");
+        let s1 = stages.pop().expect("LIT stage 1");
+        // Stage-1 names: x/y/u/v{pixel} are the four independent pixel
+        // copies, s{k} the tree selects.
+        let b1 = bindings_from(&s1, |name| match name.as_bytes()[0] {
+            b'x' | b'y' | b'u' | b'v' => {
+                Binding::Input(name[1..].parse().expect("pixel index"))
+            }
+            b's' => Binding::Const(0.5),
+            // Mean-tree zero pads (only for non-power-of-two windows).
+            b'z' => Binding::Const(0.0),
+            _ => unreachable!("unknown LIT stage-1 input `{name}`"),
+        });
+        let mean = out_idx(&s1, "out");
+        let mean2sq = out_idx(&s1, "mean2sq");
+        let meansq = out_idx(&s1, "meansq");
+        let b2 = bindings_from(&s2, |name| match name {
+            "meansq" => Binding::Regen { stage: 0, output: meansq },
+            "mean2sq" => Binding::Regen { stage: 0, output: mean2sq },
+            _ => unreachable!("unknown LIT stage-2 input `{name}`"),
+        });
+        let var = out_idx(&s2, "var");
+        let b3 = bindings_from(&s3, |name| match name {
+            "var1" | "var2" => Binding::Regen { stage: 1, output: var },
+            "ones" => Binding::Const(1.0),
+            "sel" => Binding::Const(0.5),
+            "mean" => Binding::Regen { stage: 0, output: mean },
+            _ => unreachable!("unknown LIT stage-3 input `{name}`"),
+        });
+        StagedPlan::compile(self.pixels(), vec![(s1, b1), (s2, b2), (s3, b3)], "t")
+            .expect("LIT staged plan compiles")
     }
 }
 
@@ -348,5 +398,45 @@ mod tests {
         // Stage 1 dominates: two 64-input mean trees + 64 squares.
         assert!(stages[0].gate_count() > 400);
         assert_eq!(stages[1].gate_count(), 5); // XOR
+    }
+
+    #[test]
+    fn staged_plan_shape() {
+        let app = Lit::default();
+        let plan = app.staged_plan();
+        assert_eq!(plan.stages().len(), 3);
+        assert_eq!(plan.n_inputs(), app.pixels());
+        // Stage 1 binds four independent copies of every pixel plus the
+        // tree selects; stage 2 is the two regenerated correlated
+        // operands; stage 3 regenerates var twice and mean once.
+        assert!(plan.stages()[0].bindings.len() > 4 * app.pixels());
+        assert_eq!(plan.stages()[1].bindings.len(), 2);
+        assert_eq!(plan.stages()[2].bindings.len(), 5);
+        let regen = |s: usize| {
+            plan.stages()[s]
+                .bindings
+                .iter()
+                .filter(|b| matches!(b, Binding::Regen { .. }))
+                .count()
+        };
+        assert_eq!(regen(0), 0);
+        assert_eq!(regen(1), 2);
+        assert_eq!(regen(2), 3);
+    }
+
+    #[test]
+    fn staged_reference_tracks_float() {
+        // The staged-netlist scalar reference (the engine's bit-level
+        // contract) approximates the same Sauvola threshold as
+        // stoch_value, just with the netlist stage structure.
+        let app = Lit::default();
+        let plan = app.staged_plan();
+        let windows = app.workload(2, 17);
+        for (k, w) in windows.iter().enumerate() {
+            let mut rng = Xoshiro256::seeded(31 + k as u64);
+            let s = plan.eval_row_scalar(w, 4096, &mut rng);
+            let f = app.float_ref(w);
+            assert!((s - f).abs() < 0.1, "window {k}: staged={s} float={f}");
+        }
     }
 }

@@ -20,7 +20,7 @@ pub mod kde;
 pub mod lit;
 pub mod ol;
 
-use crate::netlist::Netlist;
+use crate::netlist::{Binding, Netlist, Node};
 use crate::sc::bitstream::Bitstream;
 use crate::util::prng::Xoshiro256;
 
@@ -124,6 +124,29 @@ pub(crate) fn mean_tree_netlist(n: usize) -> Netlist {
     let out = level.pop().unwrap();
     nl.mark_output("out", out);
     nl
+}
+
+/// Map every primary input of `nl`, in node-id (binding) order, through
+/// the app's name→[`Binding`] convention — the glue between an app's
+/// `stoch_cost_netlists` input naming and the runtime's compiled staged
+/// pipelines.
+pub(crate) fn bindings_from(nl: &Netlist, mut f: impl FnMut(&str) -> Binding) -> Vec<Binding> {
+    nl.nodes
+        .iter()
+        .filter_map(|n| match n {
+            Node::Input { name, .. } => Some(f(name)),
+            _ => None,
+        })
+        .collect()
+}
+
+/// Index of output `name` in `nl`'s output order (regeneration edges
+/// reference stage outputs positionally).
+pub(crate) fn out_idx(nl: &Netlist, name: &str) -> usize {
+    nl.outputs
+        .iter()
+        .position(|(n, _)| n == name)
+        .unwrap_or_else(|| panic!("netlist has no output `{name}`"))
 }
 
 /// Quantize + optionally node-level fault-inject a binary value.

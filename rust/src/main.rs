@@ -11,6 +11,8 @@
 //!                             sharded serve::Server (N instances per
 //!                             app; shards=0 ⇒ one per artifact)
 //!   schedule <op> [lanes]     show Algorithm 1 output for one op
+//!   bench-check [FILE]        CI sanity gate over BENCH_serve.json:
+//!                             log all keys, fail if any *_speedup < 1
 
 use std::path::{Path, PathBuf};
 
@@ -57,18 +59,58 @@ fn main() -> Result<()> {
         Some("run") => cmd_run(&cfg, &args[1..]),
         Some("serve") => cmd_serve(&cfg, &args[1..]),
         Some("schedule") => cmd_schedule(&args[1..]),
+        Some("bench-check") => cmd_bench_check(&args[1..]),
         other => {
             if let Some(o) = other {
                 eprintln!("unknown command `{o}`");
             }
             eprintln!(
                 "usage: stoch-imc \
-                 <info|fig3|fig7|table2|table3|table4|fig10|fig11|run|serve|schedule> \
+                 <info|fig3|fig7|table2|table3|table4|fig10|fig11|run|serve|schedule|bench-check> \
                  [--config FILE]"
             );
             std::process::exit(2);
         }
     }
+}
+
+/// CI bench sanity gate: parse a `BENCH_serve.json` snapshot, log every
+/// key (markdown, so `tee -a $GITHUB_STEP_SUMMARY` renders a table in
+/// the job summary), and fail when any `*_speedup` key is below 1.0 —
+/// a word/lane-parallel path slower than its scalar reference is a
+/// perf regression, not a tuning choice.
+fn cmd_bench_check(args: &[String]) -> Result<()> {
+    use stoch_imc::util::benchjson;
+    let path = args
+        .first()
+        .filter(|a| !a.starts_with("--"))
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from(benchjson::BENCH_FILE));
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading bench snapshot {}", path.display()))?;
+    let entries = benchjson::parse_flat(&text);
+    if entries.is_empty() {
+        bail!("bench snapshot {} has no keys", path.display());
+    }
+    println!("### Bench snapshot — {} keys ({})\n", entries.len(), path.display());
+    println!("| key | value |");
+    println!("|---|---|");
+    for (k, v) in &entries {
+        println!("| `{k}` | {v:.3} |");
+    }
+    let regressions: Vec<_> =
+        entries.iter().filter(|(k, v)| k.ends_with("_speedup") && *v < 1.0).collect();
+    if !regressions.is_empty() {
+        println!();
+        for (k, v) in &regressions {
+            println!(
+                "**REGRESSION** `{k}` = {v:.3} — parallel path slower than its scalar reference"
+            );
+        }
+        bail!("{} speedup key(s) below 1.0", regressions.len());
+    }
+    println!("\nAll `*_speedup` keys ≥ 1.0.");
+    Ok(())
 }
 
 fn cmd_info(cfg: &Config) -> Result<()> {

@@ -1,8 +1,9 @@
 //! S3/S4/S5 — gate-level netlist IR, the stochastic operation circuits
 //! (Fig 5), binary baseline circuits, lane replication, functional
-//! evaluation, and the compiled word-parallel gate programs (`plan`)
-//! the runtime's wave engine executes up to 256 batch rows at a time
-//! (`u64×W` lane words, W ∈ {1, 2, 4}).
+//! evaluation, the compiled word-parallel gate programs (`plan`) the
+//! runtime's wave engine executes up to 256 batch rows at a time
+//! (`u64×W` lane words, W ∈ {1, 2, 4}), and the staged pipelines
+//! (`staged`) chaining gate plans through StoB→BtoS regeneration.
 
 pub mod binary;
 pub mod eval;
@@ -10,9 +11,11 @@ pub mod graph;
 pub mod ops;
 pub mod plan;
 pub mod replicate;
+pub mod staged;
 
 pub use graph::{GateKind, InputClass, Netlist, Node, NodeId};
 pub use plan::{GatePlan, PlanScratch};
+pub use staged::{Binding, Stage, StagedPlan};
 
 /// XOR over the reliable gate set at an explicit row (5 gates):
 /// NAND(NAND(a, NOT b), NAND(NOT a, b)). Used by binary circuits where

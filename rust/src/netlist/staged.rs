@@ -1,0 +1,341 @@
+//! Staged gate-plan compilation: multi-stage stochastic pipelines with
+//! StoB→BtoS regeneration between stages (paper §5.3, Fig 9).
+//!
+//! The architecture never leaves the memory path between stages: stage
+//! k's output streams are accumulated by the StoB counters, the counts
+//! become binary values in the BtoS memory, and the BtoS write
+//! regenerates fresh (independent or correlated) streams for stage k+1
+//! in the same subarray rows. A [`StagedPlan`] is the compiled software
+//! analogue: a chain of [`GatePlan`] stages, each input carrying a
+//! [`Binding`] that says where its SNG threshold value comes from — a
+//! primary instance value, a compile-time constant, or the StoB value
+//! of an earlier stage's output (the regeneration edge).
+//!
+//! Single-stage kernels are the degenerate case ([`StagedPlan::single`]),
+//! so the runtime evaluates *every* artifact through one code path; the
+//! multi-stage apps (`app_lit`, `app_kde`) compile their
+//! `stoch_cost_netlists` stages into plans the word-parallel wave engine
+//! executes lane-major end to end.
+//!
+//! ## The staged-reference contract
+//!
+//! [`StagedPlan::eval_row_scalar`] is the scalar golden model of a
+//! staged pipeline: per stage, it binds every primary input in netlist
+//! node-id order (drawing `bl` uniforms per independent/const input,
+//! `bl` *shared* uniforms per correlated group at its first input),
+//! evaluates the stage through
+//! [`eval_stochastic`](super::eval::eval_stochastic), and reads every
+//! output's StoB value (`popcount / bl`), which later stages' `Regen`
+//! bindings consume as thresholds. The word-parallel staged executor
+//! (`runtime::interp`) replays exactly this draw order through the
+//! lockstep RNG bank, so its outputs are **bit-identical** per lane —
+//! the same contract the flat kernels have had since the word-parallel
+//! engine landed. (The staged apps' legacy per-row evaluators,
+//! `apps::{lit,kde}::stoch_value`, interleave their draws differently
+//! — per-frame for KDE — and remain as *statistical* references only;
+//! the bit-level reference for the engine is this staged-netlist
+//! model.)
+
+use std::collections::HashMap;
+
+use super::eval::eval_stochastic;
+use super::graph::{InputClass, Netlist, Node};
+use super::plan::GatePlan;
+use crate::bail;
+use crate::error::Result;
+use crate::sc::bitstream::Bitstream;
+use crate::util::prng::Xoshiro256;
+
+/// Where one primary input's SNG threshold value comes from.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Binding {
+    /// Index into the instance's input values (`x[i]`).
+    Input(usize),
+    /// Compile-time constant (MUX selects, exponential C_k streams,
+    /// the all-ones stream, …). Still generated as a stream in-memory.
+    Const(f64),
+    /// StoB value of output `output` of earlier stage `stage` — the
+    /// in-memory StoB→BtoS regeneration edge. Never produced for
+    /// single-stage plans.
+    Regen { stage: usize, output: usize },
+}
+
+/// One compiled pipeline stage: the source netlist (kept for the scalar
+/// golden evaluator and for the Input-node metadata), its compiled gate
+/// program, and one binding + input class per primary input, all in
+/// netlist node-id order (the SNG draw order).
+#[derive(Debug, Clone)]
+pub struct Stage {
+    /// Source netlist (scalar golden evaluation, input names).
+    pub nl: Netlist,
+    /// Compiled word-parallel gate program.
+    pub plan: GatePlan,
+    /// Per-input value bindings, in `plan` input (node-id) order.
+    pub bindings: Vec<Binding>,
+    /// Per-input generation classes, same order (precomputed so the
+    /// wave hot path never walks the node list).
+    pub classes: Vec<InputClass>,
+}
+
+/// A compiled staged pipeline: stages executed in order, values flowing
+/// through StoB→BtoS regeneration bindings, with a designated result
+/// output on the final stage.
+#[derive(Debug, Clone)]
+pub struct StagedPlan {
+    stages: Vec<Stage>,
+    /// `(stage, output)` of the pipeline result (stage is always the
+    /// last one).
+    result: (usize, usize),
+    /// Instance arity every `Binding::Input` index was validated
+    /// against.
+    n_inputs: usize,
+}
+
+impl StagedPlan {
+    /// Compile a pipeline from `(netlist, bindings)` stages. `n_inputs`
+    /// is the instance arity (`x.len()`) that `Binding::Input` indices
+    /// must stay below; `result` names the final stage's output that is
+    /// the pipeline value. Validates the whole regeneration graph up
+    /// front so the wave hot path can index without checks.
+    pub fn compile(
+        n_inputs: usize,
+        stages: Vec<(Netlist, Vec<Binding>)>,
+        result: &str,
+    ) -> Result<Self> {
+        if stages.is_empty() {
+            bail!("staged plan needs at least one stage");
+        }
+        let mut compiled: Vec<Stage> = Vec::with_capacity(stages.len());
+        for (si, (nl, bindings)) in stages.into_iter().enumerate() {
+            let plan = GatePlan::compile(&nl);
+            let classes: Vec<InputClass> = nl
+                .nodes
+                .iter()
+                .filter_map(|n| match n {
+                    Node::Input { class, .. } => Some(*class),
+                    _ => None,
+                })
+                .collect();
+            if classes.is_empty() {
+                bail!("stage {si}: netlist has no primary inputs");
+            }
+            if bindings.len() != plan.n_inputs() {
+                bail!(
+                    "stage {si}: {} bindings for {} netlist inputs",
+                    bindings.len(),
+                    plan.n_inputs()
+                );
+            }
+            for (i, (b, class)) in bindings.iter().zip(&classes).enumerate() {
+                if matches!(class, InputClass::BinaryBit) {
+                    bail!("stage {si} input {i}: binary inputs are not stochastic stages");
+                }
+                match *b {
+                    Binding::Input(ix) if ix >= n_inputs => {
+                        bail!("stage {si} input {i}: instance index {ix} out of {n_inputs}")
+                    }
+                    Binding::Regen { stage, output } => {
+                        if stage >= si {
+                            bail!(
+                                "stage {si} input {i}: regeneration from stage {stage} \
+                                 is not an earlier stage"
+                            );
+                        }
+                        let have = compiled[stage].nl.outputs.len();
+                        if output >= have {
+                            bail!(
+                                "stage {si} input {i}: stage {stage} has {have} outputs, \
+                                 regeneration asks for output {output}"
+                            );
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            compiled.push(Stage { nl, plan, bindings, classes });
+        }
+        let last = compiled.len() - 1;
+        let Some(out) = compiled[last].plan.output_index(result) else {
+            bail!("final stage has no output `{result}`");
+        };
+        Ok(Self { stages: compiled, result: (last, out), n_inputs })
+    }
+
+    /// The degenerate single-stage pipeline (the six `op_*` kernels and
+    /// the single-stage apps): one netlist, no regeneration edges.
+    pub fn single(
+        n_inputs: usize,
+        nl: Netlist,
+        bindings: Vec<Binding>,
+        result: &str,
+    ) -> Result<Self> {
+        Self::compile(n_inputs, vec![(nl, bindings)], result)
+    }
+
+    /// Stages in execution order.
+    pub fn stages(&self) -> &[Stage] {
+        &self.stages
+    }
+
+    /// `(stage, output)` of the pipeline result.
+    pub fn result(&self) -> (usize, usize) {
+        self.result
+    }
+
+    /// Instance arity the plan was compiled against.
+    pub fn n_inputs(&self) -> usize {
+        self.n_inputs
+    }
+
+    /// Total executed instructions per time step across all stages
+    /// (reporting only).
+    pub fn instr_count(&self) -> usize {
+        self.stages.iter().map(|s| s.plan.instr_count()).sum()
+    }
+
+    /// Scalar golden evaluation of one instance (see the module docs
+    /// for the staged-reference contract). `x` is the clamped instance
+    /// (`x.len() >= n_inputs`), `rng` the row's PRNG stream; returns
+    /// the result output's StoB value.
+    pub fn eval_row_scalar(&self, x: &[f64], bl: usize, rng: &mut Xoshiro256) -> f64 {
+        debug_assert!(x.len() >= self.n_inputs, "instance shorter than plan arity");
+        // Per stage: one StoB value per netlist output, in output order.
+        let mut stage_vals: Vec<Vec<f64>> = Vec::with_capacity(self.stages.len());
+        for stage in &self.stages {
+            let mut group_uniforms: HashMap<u32, Vec<f64>> = HashMap::new();
+            let mut inputs: HashMap<String, Bitstream> = HashMap::new();
+            let mut i = 0;
+            for node in &stage.nl.nodes {
+                let Node::Input { name, class, .. } = node else { continue };
+                let v = resolve(&stage.bindings[i], x, &stage_vals).clamp(0.0, 1.0);
+                let bs = match class {
+                    InputClass::Correlated(g) => {
+                        let us = group_uniforms.entry(*g).or_insert_with(|| {
+                            let mut u = vec![0.0; bl];
+                            rng.fill_f64(&mut u);
+                            u
+                        });
+                        Bitstream::from_uniforms(v, us)
+                    }
+                    // BinaryBit was rejected at compile time.
+                    _ => Bitstream::sample(v, bl, rng),
+                };
+                inputs.insert(name.clone(), bs);
+                i += 1;
+            }
+            let outs = eval_stochastic(&stage.nl, &inputs);
+            stage_vals
+                .push(stage.nl.outputs.iter().map(|(name, _)| outs[name].value()).collect());
+        }
+        let (s, o) = self.result;
+        stage_vals[s][o]
+    }
+}
+
+/// Resolve a binding against the instance and the already-computed
+/// stage values (`prior[stage][output]` layout for the scalar path).
+fn resolve(b: &Binding, x: &[f64], prior: &[Vec<f64>]) -> f64 {
+    match *b {
+        Binding::Input(i) => x[i],
+        Binding::Const(c) => c,
+        Binding::Regen { stage, output } => prior[stage][output],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netlist::ops;
+
+    const BL: usize = 16384;
+
+    /// multiply → sqrt over a regenerated intermediate: √(a·b).
+    fn mul_sqrt_plan() -> StagedPlan {
+        let s1 = ops::multiply();
+        let b1 = vec![Binding::Input(0), Binding::Input(1)];
+        let s2 = ops::square_root(ops::ADDIE_BITS_APP);
+        let b2 = vec![
+            Binding::Regen { stage: 0, output: 0 },
+            Binding::Regen { stage: 0, output: 0 },
+        ];
+        StagedPlan::compile(2, vec![(s1, b1), (s2, b2)], "out").expect("mul→sqrt plan")
+    }
+
+    #[test]
+    fn two_stage_regeneration_tracks_float() {
+        let plan = mul_sqrt_plan();
+        assert_eq!(plan.stages().len(), 2);
+        assert_eq!(plan.result(), (1, 0));
+        assert!(plan.instr_count() > 2);
+        let mut rng = Xoshiro256::seeded(11);
+        let got = plan.eval_row_scalar(&[0.6, 0.6], BL, &mut rng);
+        assert!((got - 0.6).abs() < 0.07, "√(0.36) got {got}");
+        let mut rng = Xoshiro256::seeded(12);
+        let got = plan.eval_row_scalar(&[0.9, 0.4], BL, &mut rng);
+        let want = (0.9f64 * 0.4).sqrt();
+        assert!((got - want).abs() < 0.07, "got {got} want {want}");
+    }
+
+    #[test]
+    fn correlated_regenerated_stage_is_exact_abs_difference() {
+        // Stage 2's correlated XOR consumes a regenerated value against
+        // a constant: |a·b − 0.25| with shared uniforms is exact up to
+        // stream noise on the regenerated operand.
+        let s1 = ops::multiply();
+        let b1 = vec![Binding::Input(0), Binding::Input(1)];
+        let s2 = ops::abs_subtract();
+        let b2 = vec![Binding::Regen { stage: 0, output: 0 }, Binding::Const(0.25)];
+        let plan = StagedPlan::compile(2, vec![(s1, b1), (s2, b2)], "out").unwrap();
+        let mut rng = Xoshiro256::seeded(21);
+        let got = plan.eval_row_scalar(&[0.9, 0.9], BL, &mut rng);
+        let want = (0.81f64 - 0.25).abs();
+        assert!((got - want).abs() < 0.03, "got {got} want {want}");
+    }
+
+    #[test]
+    fn scalar_reference_is_seed_deterministic() {
+        let plan = mul_sqrt_plan();
+        let a = plan.eval_row_scalar(&[0.5, 0.7], BL, &mut Xoshiro256::seeded(5));
+        let b = plan.eval_row_scalar(&[0.5, 0.7], BL, &mut Xoshiro256::seeded(5));
+        let c = plan.eval_row_scalar(&[0.5, 0.7], BL, &mut Xoshiro256::seeded(6));
+        assert_eq!(a, b, "same seed must replay the same bits");
+        assert_ne!(a, c, "different seed must resample");
+    }
+
+    #[test]
+    fn compile_rejects_malformed_pipelines() {
+        let two = || vec![Binding::Input(0), Binding::Input(1)];
+        // Binding count mismatch.
+        assert!(StagedPlan::compile(2, vec![(ops::multiply(), vec![Binding::Input(0)])], "out")
+            .is_err());
+        // Instance index out of arity.
+        assert!(StagedPlan::compile(
+            1,
+            vec![(ops::multiply(), vec![Binding::Input(0), Binding::Input(1)])],
+            "out"
+        )
+        .is_err());
+        // Regeneration from a non-earlier stage.
+        let self_regen = vec![Binding::Regen { stage: 0, output: 0 }, Binding::Input(1)];
+        assert!(StagedPlan::compile(2, vec![(ops::multiply(), self_regen)], "out").is_err());
+        // Regeneration output out of range.
+        assert!(StagedPlan::compile(
+            2,
+            vec![
+                (ops::multiply(), two()),
+                (
+                    ops::multiply(),
+                    vec![Binding::Regen { stage: 0, output: 3 }, Binding::Input(1)]
+                ),
+            ],
+            "out"
+        )
+        .is_err());
+        // Missing result output.
+        assert!(StagedPlan::compile(2, vec![(ops::multiply(), two())], "nope").is_err());
+        // Empty pipeline.
+        assert!(StagedPlan::compile(2, vec![], "out").is_err());
+        // A well-formed single stage compiles.
+        assert!(StagedPlan::single(2, ops::multiply(), two(), "out").is_ok());
+    }
+}

@@ -6,30 +6,38 @@
 //! generation) → bit-level circuit → StoB popcount, exactly the wave
 //! one subarray group performs.
 //!
-//! * The six `op_*` artifacts and the single-stage apps (`app_ol`,
-//!   `app_hdp`) are compiled once at load into a
-//!   [`GatePlan`](crate::netlist::GatePlan) and evaluated
-//!   **word-parallel** over a fully lane-major pipeline: a lockstep
-//!   [`RngBank`] seeds one PRNG stream per batch row, the lane-major
-//!   SNG ([`crate::sc::sng`]) packs each time step's comparison bits
-//!   straight into `u64×W` lane words
-//!   ([`LaneBlock`](crate::sc::LaneBlock), `W ∈ {1, 2, 4}` →
-//!   64/128/256 rows per block), the compiled gate program executes
-//!   every instruction for all lanes at once, and a vertical-counter
-//!   StoB readout produces every row's popcount without ever leaving
-//!   the lane domain — no per-row bitstreams, no transposes, the
-//!   software realization of the paper's bit-parallel subarray rows.
-//!   Outputs are bit-identical to the retained scalar golden path
-//!   ([`crate::netlist::eval::eval_stochastic`], reachable via
-//!   [`InterpEngine::execute_rows_scalar`]) because each lane draws
-//!   the same per-row SNG stream in the same order and the plan
-//!   evaluates each lane exactly as the golden model does. Lane width
-//!   is auto-sized to the wave (or pinned via `STOCH_IMC_LANE_WIDTH` /
-//!   [`InterpEngine::execute_rows_wide`]).
-//! * The multi-stage apps (`app_lit`, `app_kde`) need StoB→BtoS stream
-//!   regeneration between stages (DESIGN/ARCHITECTURE notes), so they
-//!   run the staged bitstream evaluators in `apps::` per row (the same
-//!   models the L2 JAX graphs mirror).
+//! Every artifact is compiled once at load into a
+//! [`StagedPlan`](crate::netlist::StagedPlan) — the six `op_*` kernels
+//! and the single-stage apps (`app_ol`, `app_hdp`) as one-stage plans,
+//! the multi-stage apps (`app_lit`, `app_kde`) as chains of gate plans
+//! wired through StoB→BtoS regeneration edges — and evaluated
+//! **word-parallel** over a fully lane-major pipeline: a lockstep
+//! [`RngBank`] seeds one PRNG stream per batch row, the lane-major SNG
+//! ([`crate::sc::sng`], integer-threshold comparisons) packs each time
+//! step's bits straight into `u64×W` lane words
+//! ([`LaneBlock`](crate::sc::LaneBlock), `W ∈ {1, 2, 4}` → 64/128/256
+//! rows per block), each stage's compiled gate program executes every
+//! instruction for all lanes at once, and the vertical-counter StoB
+//! readout produces every row's count without leaving the lane domain.
+//! Between stages the per-lane counts become the per-lane SNG
+//! thresholds of the next stage's regenerated inputs (correlated
+//! groups included) — the regeneration never leaves the lane domain
+//! either, so no per-row bitstreams and no transposes exist anywhere
+//! on the wave hot path: the software realization of the paper's
+//! bit-parallel subarray rows, staged applications included (§5.3).
+//!
+//! Outputs are bit-identical to the retained scalar golden path
+//! ([`StagedPlan::eval_row_scalar`], reachable via
+//! [`InterpEngine::execute_rows_scalar`]) because each lane draws the
+//! same per-row stream in the same per-stage order and the plans
+//! evaluate each lane exactly as the golden model does. For the flat
+//! kernels this is the same golden contract as before the staged
+//! engine; for `app_lit`/`app_kde` the bit-level reference is the
+//! staged-netlist model (see `netlist::staged` — the legacy
+//! `apps::{lit,kde}::stoch_value` evaluators interleave draws
+//! differently and remain statistical references only). Lane width is
+//! auto-sized to the wave (or pinned via `STOCH_IMC_LANE_WIDTH` /
+//! [`InterpEngine::execute_rows_wide`]).
 //!
 //! Only `manifest.txt` is required in the artifact directory; `.hlo.txt`
 //! files are ignored by this backend.
@@ -40,61 +48,109 @@ use std::path::Path;
 use crate::apps::{hdp::Hdp, kde::Kde, lit::Lit, ol::Ol, App};
 use crate::bail;
 use crate::error::{Context, Result};
-use crate::netlist::eval::eval_stochastic;
-use crate::netlist::{ops, GatePlan, InputClass, Netlist, Node, PlanScratch};
+use crate::netlist::{ops, Binding, InputClass, Netlist, PlanScratch, StagedPlan};
 use crate::sc::bitplane::{LaneBlock, LANES};
-use crate::sc::bitstream::Bitstream;
 use crate::sc::sng;
 use crate::util::prng::{fnv1a, RngBank, Xoshiro256};
 
 use super::artifacts::{load_manifest, ArtifactSpec};
 
-/// How one artifact is evaluated per batch row.
-enum Kernel {
-    /// Single-stage gate-level netlist with output `"out"`, plus its
-    /// compiled word-parallel gate program (built once at load).
-    Netlist { nl: Netlist, plan: GatePlan },
-    /// Staged LIT pipeline (three in-memory stages + regeneration).
-    Lit(Lit),
-    /// Staged KDE pipeline (correlated XOR stage + exponential stage).
-    Kde(Kde),
-}
-
-/// Everything one netlist wave needs, bundled so the block workers take
-/// a single shareable reference.
-struct NetlistWave<'a> {
+/// Everything one wave needs, bundled so the block workers take a
+/// single shareable reference.
+struct Wave<'a> {
     name: &'a str,
     spec: &'a ArtifactSpec,
-    nl: &'a Netlist,
-    plan: &'a GatePlan,
+    kernel: &'a StagedPlan,
     values: &'a [f32],
     seed: i32,
 }
 
-/// The interpreter engine: artifact specs plus per-artifact kernels.
+/// The interpreter engine: artifact specs plus per-artifact compiled
+/// staged plans.
 pub struct InterpEngine {
     specs: HashMap<String, ArtifactSpec>,
-    kernels: HashMap<String, Kernel>,
+    kernels: HashMap<String, StagedPlan>,
 }
 
-fn kernel_for(name: &str) -> Option<Kernel> {
-    // Compile the word-parallel gate program once per kernel at load;
+/// Compile-time value binding for one primary input of a single-stage
+/// kernel. Input naming follows the netlist builders (`netlist::ops`,
+/// `apps::*::stoch_cost_netlists`); the staged apps carry their own
+/// binding conventions (`Lit::staged_plan`, `Kde::staged_plan`).
+fn binding_for(artifact: &str, input: &str) -> Option<Binding> {
+    Some(match artifact {
+        "op_multiply" | "op_scaled_divide" | "op_abs_subtract" => match input {
+            "a" => Binding::Input(0),
+            "b" => Binding::Input(1),
+            _ => return None,
+        },
+        "op_scaled_add" => match input {
+            "a" => Binding::Input(0),
+            "b" => Binding::Input(1),
+            "s" => Binding::Const(0.5),
+            _ => return None,
+        },
+        // Two independently generated copies of the same operand.
+        "op_square_root" => match input {
+            "a1" | "a2" => Binding::Input(0),
+            _ => return None,
+        },
+        // e^{-cA} with c = 1: a1..a5 are copies of A, c1..c5 carry c/k.
+        "op_exponential" => {
+            if let Some(k) = input.strip_prefix('a').and_then(|s| s.parse::<u32>().ok()) {
+                if (1..=5).contains(&k) {
+                    return Some(Binding::Input(0));
+                }
+            }
+            if let Some(k) = input.strip_prefix('c').and_then(|s| s.parse::<usize>().ok()) {
+                if (1..=5).contains(&k) {
+                    return Some(Binding::Const(ops::exp_constants(1.0)[k - 1]));
+                }
+            }
+            return None;
+        }
+        "app_ol" => {
+            let i = input.strip_prefix('p').and_then(|s| s.parse::<usize>().ok())?;
+            Binding::Input(i)
+        }
+        "app_hdp" => {
+            let i = crate::apps::hdp::NAMES.iter().position(|n| *n == input)?;
+            Binding::Input(i)
+        }
+        _ => return None,
+    })
+}
+
+/// Resolve every primary input of a built-in single-stage kernel to its
+/// [`Binding`], once at load — the per-wave hot path never parses an
+/// input name again.
+fn compile_bindings(artifact: &str, nl: &Netlist) -> Vec<Binding> {
+    crate::apps::bindings_from(nl, |name| {
+        binding_for(artifact, name).unwrap_or_else(|| {
+            panic!("artifact `{artifact}`: no value binding for input `{name}`")
+        })
+    })
+}
+
+fn kernel_for(name: &str) -> Option<StagedPlan> {
+    // Compile the staged gate-plan pipeline once per kernel at load;
     // every wave reuses it.
-    fn netlist(nl: Netlist) -> Kernel {
-        let plan = GatePlan::compile(&nl);
-        Kernel::Netlist { nl, plan }
+    fn single(name: &str, nl: Netlist) -> StagedPlan {
+        let n = expected_arity(name).expect("built-in kernel has a known arity");
+        let bindings = compile_bindings(name, &nl);
+        StagedPlan::single(n, nl, bindings, "out")
+            .unwrap_or_else(|e| panic!("kernel `{name}`: {e}"))
     }
     Some(match name {
-        "op_multiply" => netlist(ops::multiply()),
-        "op_scaled_add" => netlist(ops::scaled_add()),
-        "op_abs_subtract" => netlist(ops::abs_subtract()),
-        "op_scaled_divide" => netlist(ops::scaled_divide()),
-        "op_square_root" => netlist(ops::square_root(ops::ADDIE_BITS_APP)),
-        "op_exponential" => netlist(ops::exponential()),
-        "app_ol" => netlist(Ol::default().stoch_cost_netlists().remove(0)),
-        "app_hdp" => netlist(Hdp.stoch_cost_netlists().remove(0)),
-        "app_lit" => Kernel::Lit(Lit::default()),
-        "app_kde" => Kernel::Kde(Kde::default()),
+        "op_multiply" => single(name, ops::multiply()),
+        "op_scaled_add" => single(name, ops::scaled_add()),
+        "op_abs_subtract" => single(name, ops::abs_subtract()),
+        "op_scaled_divide" => single(name, ops::scaled_divide()),
+        "op_square_root" => single(name, ops::square_root(ops::ADDIE_BITS_APP)),
+        "op_exponential" => single(name, ops::exponential()),
+        "app_ol" => single(name, Ol::default().stoch_cost_netlists().remove(0)),
+        "app_hdp" => single(name, Hdp.stoch_cost_netlists().remove(0)),
+        "app_lit" => Lit::default().staged_plan(),
+        "app_kde" => Kde::default().staged_plan(),
         _ => return None,
     })
 }
@@ -112,53 +168,6 @@ fn expected_arity(name: &str) -> Option<usize> {
         "app_kde" => Kde::default().history + 1,
         _ => return None,
     })
-}
-
-/// The binary value driven onto one netlist primary input for one
-/// instance `x` of `artifact`. Input naming follows the netlist builders
-/// (`netlist::ops`, `apps::*::stoch_cost_netlists`).
-fn input_value(artifact: &str, input: &str, x: &[f64]) -> Option<f64> {
-    match artifact {
-        "op_multiply" | "op_scaled_divide" | "op_abs_subtract" => match input {
-            "a" => x.first().copied(),
-            "b" => x.get(1).copied(),
-            _ => None,
-        },
-        "op_scaled_add" => match input {
-            "a" => x.first().copied(),
-            "b" => x.get(1).copied(),
-            "s" => Some(0.5),
-            _ => None,
-        },
-        // Two independently generated copies of the same operand.
-        "op_square_root" => match input {
-            "a1" | "a2" => x.first().copied(),
-            _ => None,
-        },
-        // e^{-cA} with c = 1: a1..a5 are copies of A, c1..c5 carry c/k.
-        "op_exponential" => {
-            if let Some(k) = input.strip_prefix('a').and_then(|s| s.parse::<u32>().ok()) {
-                if (1..=5).contains(&k) {
-                    return x.first().copied();
-                }
-            }
-            if let Some(k) = input.strip_prefix('c').and_then(|s| s.parse::<usize>().ok()) {
-                if (1..=5).contains(&k) {
-                    return Some(ops::exp_constants(1.0)[k - 1]);
-                }
-            }
-            None
-        }
-        "app_ol" => input
-            .strip_prefix('p')
-            .and_then(|s| s.parse::<usize>().ok())
-            .and_then(|i| x.get(i).copied()),
-        "app_hdp" => crate::apps::hdp::NAMES
-            .iter()
-            .position(|n| *n == input)
-            .and_then(|i| x.get(i).copied()),
-        _ => None,
-    }
 }
 
 /// Seed of one batch row's PRNG stream: mixes the wave seed, the
@@ -235,15 +244,15 @@ impl InterpEngine {
     }
 
     /// [`InterpEngine::execute`] with an explicit worker count (`0` =
-    /// auto via [`default_row_threads`]). Netlist kernels run the
-    /// **word-parallel** path: live rows are packed into lane blocks
-    /// (one row per bit lane of a `u64×W` lane word, auto-width) and
-    /// the blocks are split across `threads` scoped workers; each
-    /// compiled gate instruction then evaluates a whole block at once.
-    /// Staged kernels (`app_lit`, `app_kde`) keep the per-row path.
-    /// Outputs are bit-identical for every worker count, lane width,
-    /// block grouping, and path — each row draws from its own
-    /// [`row_rng`] stream and the plan evaluates each lane exactly as
+    /// auto via [`default_row_threads`]). Every kernel — staged apps
+    /// included — runs the **word-parallel** path: live rows are packed
+    /// into lane blocks (one row per bit lane of a `u64×W` lane word,
+    /// auto-width) and the blocks are split across `threads` scoped
+    /// workers; each compiled gate instruction then evaluates a whole
+    /// block at once, and staged kernels regenerate between stages
+    /// in-lane. Outputs are bit-identical for every worker count, lane
+    /// width, block grouping, and path — each row draws from its own
+    /// [`row_rng`] stream and the plans evaluate each lane exactly as
     /// the golden model does — so the split is purely a wall-clock
     /// optimization, the way a subarray group fires all its rows in
     /// one cycle.
@@ -278,9 +287,10 @@ impl InterpEngine {
 
     /// [`InterpEngine::execute_rows`] forced onto the scalar golden
     /// path: every row is evaluated one bit at a time through
-    /// [`eval_stochastic`]. Kept public as the reference the
-    /// word-parallel path is differentially tested (and benchmarked)
-    /// against.
+    /// [`StagedPlan::eval_row_scalar`] (per stage,
+    /// `netlist::eval::eval_stochastic` over per-row bitstreams). Kept
+    /// public as the reference the word-parallel path is differentially
+    /// tested (and benchmarked) against.
     pub fn execute_rows_scalar(
         &self,
         name: &str,
@@ -323,26 +333,17 @@ impl InterpEngine {
         let live = live.min(spec.batch);
         let threads = if threads == 0 { default_row_threads() } else { threads };
         let mut out = vec![0.0f32; spec.batch];
-        match kernel {
-            Kernel::Netlist { nl, plan } if word_parallel => {
-                let wave = NetlistWave { name, spec, nl, plan, values, seed };
-                // Monomorphized per lane width so every per-word loop
-                // runs over a compile-time-sized array.
-                match resolve_lane_width(lane_width, live, threads) {
-                    64 => self.execute_blocks::<1>(&wave, &mut out[..live], threads)?,
-                    128 => self.execute_blocks::<2>(&wave, &mut out[..live], threads)?,
-                    _ => self.execute_blocks::<4>(&wave, &mut out[..live], threads)?,
-                }
+        if word_parallel {
+            let wave = Wave { name, spec, kernel, values, seed };
+            // Monomorphized per lane width so every per-word loop
+            // runs over a compile-time-sized array.
+            match resolve_lane_width(lane_width, live, threads) {
+                64 => self.execute_blocks::<1>(&wave, &mut out[..live], threads)?,
+                128 => self.execute_blocks::<2>(&wave, &mut out[..live], threads)?,
+                _ => self.execute_blocks::<4>(&wave, &mut out[..live], threads)?,
             }
-            _ => self.execute_scalar_rows(
-                name,
-                spec,
-                kernel,
-                values,
-                seed,
-                &mut out[..live],
-                threads,
-            )?,
+        } else {
+            self.execute_scalar_rows(name, spec, kernel, values, seed, &mut out[..live], threads)?;
         }
         Ok(out)
     }
@@ -357,7 +358,7 @@ impl InterpEngine {
     /// per block once the workspace is warm.
     fn execute_blocks<const W: usize>(
         &self,
-        wave: &NetlistWave,
+        wave: &Wave,
         out: &mut [f32],
         threads: usize,
     ) -> Result<()> {
@@ -371,96 +372,131 @@ impl InterpEngine {
         parallel_chunks(out, workers, blocks.div_ceil(workers) * block_rows, |start, sub| {
             let mut ws = BlockWorkspace::<W>::default();
             for (bj, block_out) in sub.chunks_mut(block_rows).enumerate() {
-                self.eval_block(wave, start + bj * block_rows, block_out, &mut ws)?;
+                self.eval_block(wave, start + bj * block_rows, block_out, &mut ws);
             }
             Ok(())
         })
     }
 
     /// One lane block (≤ `64·W` rows starting at `row0`), fully
-    /// lane-major: seed one [`RngBank`] stream per row (bit-identical
-    /// to the scalar path's [`row_rng`]), generate every primary
-    /// input's block directly as packed lane words in netlist node-id
-    /// order (the scalar draw order), run the compiled gate program
-    /// once for all rows, and read every row's StoB count with the
-    /// vertical counter — no per-row bitstreams, no transposes, no
-    /// allocations beyond the reused workspace.
+    /// lane-major through every stage: seed one [`RngBank`] stream per
+    /// row (bit-identical to the scalar path's [`row_rng`]), then per
+    /// stage generate every primary input's block directly as packed
+    /// lane words in netlist node-id order (the staged reference's
+    /// draw order), run the stage's compiled gate program once for all
+    /// rows, and read every output's StoB count with the vertical
+    /// counter. The per-lane counts become the per-lane SNG thresholds
+    /// of later stages' `Regen` bindings — in-lane StoB→BtoS
+    /// regeneration, never leaving the lane domain. No per-row
+    /// bitstreams, no transposes, no allocations beyond the reused
+    /// workspace.
     fn eval_block<const W: usize>(
         &self,
-        w: &NetlistWave,
+        w: &Wave,
         row0: usize,
         out: &mut [f32],
         ws: &mut BlockWorkspace<W>,
-    ) -> Result<()> {
+    ) {
+        let BlockWorkspace {
+            rngs,
+            sng: sng_ws,
+            vals,
+            instances,
+            uniforms,
+            filled_groups,
+            inputs,
+            stage_vals,
+            plans,
+            planes,
+            counts,
+        } = ws;
         let bl = w.spec.bl.max(1);
         let lanes = out.len();
         let n = w.spec.n_inputs;
         let name_hash = fnv1a(w.name);
-        ws.rngs.reseed_with(lanes, |l| row_seed(w.seed, name_hash, row0 + l));
+        rngs.reseed_with(lanes, |l| row_seed(w.seed, name_hash, row0 + l));
         // Clamped instance values, lane-major ([lane][input]).
-        ws.instances.clear();
-        ws.instances.extend(
+        instances.clear();
+        instances.extend(
             w.values[row0 * n..(row0 + lanes) * n].iter().map(|&v| (v as f64).clamp(0.0, 1.0)),
         );
-        // One lane-major block per primary input, generated in netlist
-        // node-id order — the plan's binding order and the exact RNG
-        // draw order of the scalar path's `generate_input_streams`.
-        if ws.inputs.len() != w.plan.n_inputs() {
-            ws.inputs.clear();
-            ws.inputs.resize_with(w.plan.n_inputs(), || LaneBlock::zeros(0, 0));
+        let stages = w.kernel.stages();
+        if stage_vals.len() != stages.len() {
+            stage_vals.clear();
+            stage_vals.resize_with(stages.len(), Vec::new);
         }
-        ws.filled_groups.clear();
-        let mut i = 0;
-        for node in &w.nl.nodes {
-            let Node::Input { name, class, .. } = node else { continue };
-            // Per-lane binding value for this input.
-            ws.vals.clear();
-            for l in 0..lanes {
-                let x = &ws.instances[l * n..(l + 1) * n];
-                let Some(v) = input_value(w.name, name, x) else {
-                    bail!("artifact `{}`: no value binding for input `{name}`", w.name);
-                };
-                ws.vals.push(v.clamp(0.0, 1.0));
+        if plans.len() != stages.len() {
+            plans.clear();
+            plans.resize_with(stages.len(), PlanScratch::default);
+        }
+        for (si, stage) in stages.iter().enumerate() {
+            // One lane-major block per primary input, generated in
+            // netlist node-id order — the binding order of the stage's
+            // plan and the exact draw order of the staged reference.
+            // The block pool only grows: stages of different widths
+            // reuse the same `LaneBlock` allocations.
+            if inputs.len() < stage.plan.n_inputs() {
+                inputs.resize_with(stage.plan.n_inputs(), || LaneBlock::zeros(0, 0));
             }
-            let block = &mut ws.inputs[i];
-            match class {
-                InputClass::Correlated(g) => {
-                    let us = ws.uniforms.entry(*g).or_default();
-                    if !ws.filled_groups.contains(g) {
-                        sng::fill_uniform_block(lanes, bl, &mut ws.rngs, us);
-                        ws.filled_groups.push(*g);
+            filled_groups.clear();
+            for (i, (binding, class)) in stage.bindings.iter().zip(&stage.classes).enumerate() {
+                // Per-lane threshold value for this input.
+                vals.clear();
+                match *binding {
+                    Binding::Input(ix) => {
+                        vals.extend((0..lanes).map(|l| instances[l * n + ix]));
                     }
-                    sng::threshold_block(&ws.vals, bl, us.as_slice(), block);
+                    Binding::Const(c) => {
+                        vals.resize(lanes, c.clamp(0.0, 1.0));
+                    }
+                    // In-lane regeneration: the StoB values of an
+                    // earlier stage's output are this input's per-lane
+                    // thresholds.
+                    Binding::Regen { stage: s, output: o } => {
+                        vals.extend_from_slice(&stage_vals[s][o * lanes..(o + 1) * lanes]);
+                    }
                 }
-                InputClass::BinaryBit => {
-                    bail!("artifact `{}`: binary input `{name}` unsupported", w.name)
+                let block = &mut inputs[i];
+                match class {
+                    InputClass::Correlated(g) => {
+                        let us = uniforms.entry(*g).or_default();
+                        if !filled_groups.contains(g) {
+                            sng::fill_draw_block(lanes, bl, rngs, us);
+                            filled_groups.push(*g);
+                        }
+                        sng::threshold_block(vals, bl, us.as_slice(), sng_ws, block);
+                    }
+                    // BinaryBit inputs are rejected at plan compile.
+                    _ => sng::sample_block(vals, bl, rngs, sng_ws, block),
                 }
-                _ => sng::sample_block(&ws.vals, bl, &mut ws.rngs, &mut ws.draws, block),
             }
-            i += 1;
+            let outs = stage.plan.eval_lanes_into(&inputs[..stage.plan.n_inputs()], &mut plans[si]);
+            // Vertical-counter StoB readout for every stage output:
+            // all lanes' counts without leaving the lane-major domain.
+            let sv = &mut stage_vals[si];
+            sv.clear();
+            for ob in outs {
+                ob.lane_popcounts_into(planes, counts);
+                // Same arithmetic as Bitstream::value().
+                sv.extend(counts.iter().map(|&c| c as f64 / bl as f64));
+            }
         }
-        let outs = w.plan.eval_lanes_into(&ws.inputs, &mut ws.plan);
-        let oi = w.plan.output_index("out").with_context(|| {
-            format!("artifact `{}`: netlist has no `out` output", w.name)
-        })?;
-        // Vertical-counter StoB readout: all lanes' popcounts without
-        // leaving the lane-major domain.
-        outs[oi].lane_popcounts_into(&mut ws.planes, &mut ws.counts);
-        for (slot, &count) in out.iter_mut().zip(&ws.counts) {
-            // Same arithmetic as Bitstream::value() as f32.
-            *slot = (count as f64 / bl as f64) as f32;
+        let (rs, ro) = w.kernel.result();
+        let sv = &stage_vals[rs];
+        for (l, slot) in out.iter_mut().enumerate() {
+            *slot = sv[ro * lanes + l] as f32;
         }
-        Ok(())
     }
 
-    /// Scalar per-row wave (golden path, and the staged `app_lit` /
-    /// `app_kde` kernels): chunk the live rows across scoped workers.
+    /// Scalar per-row wave (the golden staged-reference path): chunk
+    /// the live rows across scoped workers; each worker reuses one
+    /// instance buffer for all its rows.
     #[allow(clippy::too_many_arguments)]
     fn execute_scalar_rows(
         &self,
         name: &str,
         spec: &ArtifactSpec,
-        kernel: &Kernel,
+        kernel: &StagedPlan,
         values: &[f32],
         seed: i32,
         out: &mut [f32],
@@ -470,63 +506,50 @@ impl InterpEngine {
         if live == 0 {
             return Ok(());
         }
+        let bl = spec.bl.max(1);
         let workers = threads.min(live).max(1);
         parallel_chunks(out, workers, live.div_ceil(workers), |start, sub| {
+            let mut x = Vec::with_capacity(spec.n_inputs);
             for (j, slot) in sub.iter_mut().enumerate() {
-                *slot = self.eval_row(name, spec, kernel, values, seed, start + j)?;
+                let row = start + j;
+                clamp_instance_into(values, spec.n_inputs, row, &mut x);
+                let mut rng = row_rng(seed, name, row);
+                *slot = kernel.eval_row_scalar(&x, bl, &mut rng) as f32;
             }
             Ok(())
         })
     }
-
-    /// One batch row: clamp the instance, derive its RNG stream, run the
-    /// kernel. Immutable over `&self`, hence safe to call from the
-    /// scoped row workers.
-    fn eval_row(
-        &self,
-        name: &str,
-        spec: &ArtifactSpec,
-        kernel: &Kernel,
-        values: &[f32],
-        seed: i32,
-        row: usize,
-    ) -> Result<f32> {
-        let bl = spec.bl.max(1);
-        let x = clamp_instance(values, spec.n_inputs, row);
-        let mut rng = row_rng(seed, name, row);
-        let v = match kernel {
-            Kernel::Netlist { nl, .. } => eval_netlist(name, nl, &x, bl, &mut rng)?,
-            Kernel::Lit(app) => app.stoch_value(&x, bl, &mut rng, 0.0),
-            Kernel::Kde(app) => app.stoch_value(&x, bl, &mut rng, 0.0),
-        };
-        Ok(v as f32)
-    }
 }
 
 /// Per-worker scratch for the lane-major wave path, reused across
-/// every lane block the worker evaluates: the RNG bank, per-lane value
-/// bindings, the lane-major input blocks, the plan's evaluation
-/// scratch, and the vertical-counter readout buffers. A worker
-/// allocates once per wave; after the first block every buffer is a
-/// cheap reshape.
+/// every lane block the worker evaluates: the RNG bank, the SNG draw /
+/// cutoff scratch, per-lane value bindings, the lane-major input
+/// blocks, per-stage StoB values, the plan's evaluation scratch, and
+/// the vertical-counter readout buffers. A worker allocates once per
+/// wave; after the first block every buffer is a cheap reshape.
 #[derive(Default)]
 struct BlockWorkspace<const W: usize> {
     /// One lockstep PRNG stream per live lane (reseeded per block).
     rngs: RngBank,
-    /// One uniform per lane — `sng::sample_block`'s draw scratch.
-    draws: Vec<f64>,
+    /// Raw-draw and integer-cutoff scratch for the lane-major SNG.
+    sng: sng::SngScratch,
     /// Per-lane threshold for the input currently being generated.
     vals: Vec<f64>,
     /// Clamped instance values, lane-major `[lane][input]`.
     instances: Vec<f64>,
-    /// Correlated-group uniforms, lane-major `[t · lanes + l]`.
-    uniforms: HashMap<u32, Vec<f64>>,
-    /// Groups already drawn for the current block (reset per block).
+    /// Correlated-group raw draws, lane-major `[t · lanes + l]`.
+    uniforms: HashMap<u32, Vec<u64>>,
+    /// Groups already drawn for the current stage (reset per stage).
     filled_groups: Vec<u32>,
-    /// One lane-major block per netlist primary input.
+    /// One lane-major block per netlist primary input (pool shared by
+    /// all stages; only grows).
     inputs: Vec<LaneBlock<W>>,
-    /// Slot values / latches / ADDIE islands / output blocks.
-    plan: PlanScratch<W>,
+    /// Per-stage StoB values, `[stage][output · lanes + lane]` — the
+    /// in-lane regeneration sources.
+    stage_vals: Vec<Vec<f64>>,
+    /// Slot values / latches / ADDIE islands / output blocks, one
+    /// scratch per stage so alternating stage shapes never reallocate.
+    plans: Vec<PlanScratch<W>>,
     /// Carry-save counter planes for the StoB readout.
     planes: Vec<[u64; W]>,
     /// Per-lane popcounts from the vertical counter.
@@ -613,12 +636,16 @@ where
     Ok(())
 }
 
-/// One instance's inputs, clamped into the unipolar domain.
-fn clamp_instance(values: &[f32], n_inputs: usize, row: usize) -> Vec<f64> {
-    values[row * n_inputs..(row + 1) * n_inputs]
-        .iter()
-        .map(|&v| (v as f64).clamp(0.0, 1.0))
-        .collect()
+/// One instance's inputs, clamped into the unipolar domain, written
+/// into a caller-reused buffer (no per-row allocation on the scalar
+/// path).
+fn clamp_instance_into(values: &[f32], n_inputs: usize, row: usize, out: &mut Vec<f64>) {
+    out.clear();
+    out.extend(
+        values[row * n_inputs..(row + 1) * n_inputs]
+            .iter()
+            .map(|&v| (v as f64).clamp(0.0, 1.0)),
+    );
 }
 
 /// The explicit row-worker override from `STOCH_IMC_ROW_THREADS`:
@@ -641,70 +668,6 @@ pub fn row_threads_override() -> Option<usize> {
 pub fn default_row_threads() -> usize {
     row_threads_override()
         .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
-}
-
-/// Generate one batch row's input bitstreams per the netlist's input
-/// classes (independent, correlation-grouped, or constant streams), in
-/// netlist Input-node (id) order — the binding order of
-/// [`GatePlan`]'s inputs. The RNG draw order, including the shared
-/// correlated-group uniforms, is part of the golden contract: the
-/// scalar and word-parallel paths both call this, so their streams are
-/// identical by construction.
-fn generate_input_streams(
-    artifact: &str,
-    nl: &Netlist,
-    x: &[f64],
-    bl: usize,
-    rng: &mut Xoshiro256,
-) -> Result<Vec<Bitstream>> {
-    let mut group_uniforms: HashMap<u32, Vec<f64>> = HashMap::new();
-    let mut streams = Vec::new();
-    for node in &nl.nodes {
-        if let Node::Input { name, class, .. } = node {
-            let Some(v) = input_value(artifact, name, x) else {
-                bail!("artifact `{artifact}`: no value binding for input `{name}`");
-            };
-            let v = v.clamp(0.0, 1.0);
-            let bs = match class {
-                InputClass::Correlated(g) => {
-                    let us = group_uniforms.entry(*g).or_insert_with(|| {
-                        let mut u = vec![0.0; bl];
-                        rng.fill_f64(&mut u);
-                        u
-                    });
-                    Bitstream::from_uniforms(v, us)
-                }
-                InputClass::BinaryBit => {
-                    bail!("artifact `{artifact}`: binary input `{name}` unsupported")
-                }
-                _ => Bitstream::sample(v, bl, rng),
-            };
-            streams.push(bs);
-        }
-    }
-    Ok(streams)
-}
-
-/// Generate the input bitstreams for one instance and evaluate through
-/// the scalar golden model.
-fn eval_netlist(
-    artifact: &str,
-    nl: &Netlist,
-    x: &[f64],
-    bl: usize,
-    rng: &mut Xoshiro256,
-) -> Result<f64> {
-    let streams = generate_input_streams(artifact, nl, x, bl, rng)?;
-    let names = nl.nodes.iter().filter_map(|n| match n {
-        Node::Input { name, .. } => Some(name.clone()),
-        _ => None,
-    });
-    let inputs: HashMap<String, Bitstream> = names.zip(streams).collect();
-    let outs = eval_stochastic(nl, &inputs);
-    let out = outs
-        .get("out")
-        .with_context(|| format!("artifact `{artifact}`: netlist has no `out` output"))?;
-    Ok(out.value())
 }
 
 #[cfg(test)]
@@ -790,6 +753,29 @@ mod tests {
                 assert_eq!(golden, word, "live={live} width={width}");
             }
         }
+    }
+
+    #[test]
+    fn staged_app_rides_lane_blocks_and_matches_scalar_reference() {
+        // The staged KDE pipeline must be bit-identical between the
+        // per-row staged reference and the lane-major staged executor
+        // for a ragged two-block wave (the full matrix lives in
+        // tests/staged.rs; this is the fast in-crate sentinel).
+        let e = engine_with("app_kde 9 70 64\n", "staged");
+        let mut values = vec![0.0f32; 70 * 9];
+        for (i, v) in values.iter_mut().enumerate() {
+            *v = 0.05 + 0.9 * ((i * 29) % 97) as f32 / 97.0;
+        }
+        let golden = e.execute_rows_scalar("app_kde", &values, 17, 70, 1).unwrap();
+        for (threads, width) in [(1usize, 64usize), (3, 128), (2, 0)] {
+            let word = e.execute_rows_wide("app_kde", &values, 17, 70, threads, width).unwrap();
+            assert_eq!(golden, word, "threads={threads} width={width}");
+        }
+        // Determinism + reseeding on the staged path.
+        let again = e.execute_rows("app_kde", &values, 17, 70, 2).unwrap();
+        assert_eq!(golden, again);
+        let other = e.execute_rows("app_kde", &values, 18, 70, 2).unwrap();
+        assert_ne!(golden, other, "seed must resample staged waves");
     }
 
     #[test]

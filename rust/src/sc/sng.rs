@@ -7,17 +7,26 @@
 //! used to get there by generating per-row bitstreams and transposing.
 //! This module generates the lane-major words **directly**: an
 //! [`RngBank`] steps every row's PRNG in lockstep, each time step
-//! compares all lanes' uniforms against their per-lane thresholds, and
+//! compares all lanes' raw draws against their per-lane thresholds, and
 //! the comparison bits are packed into one `[u64; W]` lane word — no
 //! per-row intermediates, no transpose.
+//!
+//! Comparisons are **integer**: the scalar path's Bernoulli test
+//! `next_f64() < v` is `(x >> 11)·2⁻⁵³ < v` for the raw draw `x`,
+//! which is equivalent to the pure-integer `(x >> 11) < ⌈v·2⁵³⌉`
+//! (see [`cutoff`]). The per-lane cutoffs are computed **once per
+//! input block** instead of converting every draw of every lane to
+//! `f64`, and bit-identity with the scalar comparison is pinned by
+//! tests below.
 //!
 //! Draw-order contract (what keeps outputs bit-identical to the scalar
 //! path): lane `l` of the bank is seeded exactly like the scalar row
 //! PRNG, and each generation call consumes draws in the same order the
-//! scalar path would — [`sample_block`] draws `bl` uniforms per lane
-//! (like [`Bitstream::sample`]), [`fill_uniform_block`] draws the `bl`
-//! shared uniforms of a correlated group per lane (like
-//! `Xoshiro256::fill_f64`), and [`threshold_block`] draws nothing (like
+//! scalar path would — [`sample_block`] draws `bl` raw u64s per lane
+//! (like [`Bitstream::sample`]'s `bl` `next_f64` calls),
+//! [`fill_draw_block`] draws the `bl` shared raws of a correlated
+//! group per lane (like `Xoshiro256::fill_f64`), and
+//! [`threshold_block`] draws nothing (like
 //! [`Bitstream::from_uniforms`]). Callers replay inputs in netlist
 //! node-id order, so the interleaving across inputs matches too.
 //!
@@ -27,74 +36,109 @@
 use super::bitplane::{LaneBlock, LANES};
 use crate::util::prng::RngBank;
 
-/// Pack one time step's comparison bits: bit `l` of the lane word is
-/// `draws[l] < values[l]` — the same strict `<` as `Xoshiro256::
-/// bernoulli` and `Bitstream::from_uniforms`.
+/// Integer SNG threshold of value `v`: the smallest `n` such that
+/// `(x >> 11) < n ⇔ (x >> 11)·2⁻⁵³ < v` for every raw draw `x`.
+///
+/// Exactness: `next_f64` is `k·2⁻⁵³` with `k = x >> 11 < 2⁵³`, so
+/// `k·2⁻⁵³ < v ⇔ k < v·2⁵³` over the reals. `v·2⁵³` is computed
+/// exactly in f64 (a power-of-two scale never rounds), `ceil` of an
+/// exact f64 is exact, and for integer `k`, `k < y ⇔ k < ⌈y⌉`. The
+/// result fits u64 for `v ≤ 1` (`⌈1·2⁵³⌉ = 2⁵³`); the saturating
+/// `as u64` maps negative/NaN inputs to 0 (a never-firing threshold),
+/// matching the clamped domain callers feed in.
 #[inline]
-fn pack_lt<const W: usize>(draws: &[f64], values: &[f64]) -> [u64; W] {
+pub fn cutoff(v: f64) -> u64 {
+    (v * (1u64 << 53) as f64).ceil() as u64
+}
+
+/// Reusable scratch for lane-major SNG generation: one raw draw and one
+/// integer cutoff per lane. Caller-owned so a wave worker allocates
+/// once and reuses it for every input block of every lane block.
+#[derive(Debug, Default)]
+pub struct SngScratch {
+    /// One raw u64 draw per lane ([`sample_block`]'s per-step scratch).
+    draws: Vec<u64>,
+    /// Per-lane integer thresholds for the input being generated.
+    cutoffs: Vec<u64>,
+}
+
+/// Load every lane's integer threshold (one [`cutoff`] per value).
+fn load_cutoffs(values: &[f64], cutoffs: &mut Vec<u64>) {
+    cutoffs.clear();
+    cutoffs.extend(values.iter().map(|&v| cutoff(v)));
+}
+
+/// Pack one time step's comparison bits: bit `l` of the lane word is
+/// `(draws[l] >> 11) < cutoffs[l]` — the integer form of the strict
+/// `u < v` in `Xoshiro256::bernoulli` and `Bitstream::from_uniforms`.
+#[inline]
+fn pack_lt<const W: usize>(draws: &[u64], cutoffs: &[u64]) -> [u64; W] {
     let mut w = [0u64; W];
-    for (l, (&u, &v)) in draws.iter().zip(values).enumerate() {
-        w[l / LANES] |= ((u < v) as u64) << (l % LANES);
+    for (l, (&x, &c)) in draws.iter().zip(cutoffs).enumerate() {
+        w[l / LANES] |= (((x >> 11) < c) as u64) << (l % LANES);
     }
     w
 }
 
 /// Bernoulli-sample one lane-major input block: lane `l` compares its
-/// own stream's next `bl` uniforms against threshold `values[l]`
-/// (models the MTJ stochastic write, P_sw = value, across a whole
-/// subarray row group at once). The per-lane draw sequence is identical
-/// to `Bitstream::sample(values[l], bl, lane_rng)`.
+/// own stream's next `bl` draws against threshold `values[l]` (models
+/// the MTJ stochastic write, P_sw = value, across a whole subarray row
+/// group at once). The per-lane bit sequence — and the number of draws
+/// consumed — is identical to `Bitstream::sample(values[l], bl,
+/// lane_rng)`.
 ///
-/// `draws` is caller-owned scratch (resized to one uniform per lane);
 /// `out` is reshaped to `bl × values.len()` in place, reusing its
-/// allocation across blocks.
+/// allocation across blocks; `scratch` likewise.
 pub fn sample_block<const W: usize>(
     values: &[f64],
     bl: usize,
     rngs: &mut RngBank,
-    draws: &mut Vec<f64>,
+    scratch: &mut SngScratch,
     out: &mut LaneBlock<W>,
 ) {
     let lanes = values.len();
     assert_eq!(rngs.len(), lanes, "one RNG stream per lane");
+    load_cutoffs(values, &mut scratch.cutoffs);
     out.reset(bl, lanes);
-    draws.clear();
-    draws.resize(lanes, 0.0);
+    scratch.draws.clear();
+    scratch.draws.resize(lanes, 0);
     for t in 0..bl {
-        rngs.next_f64_into(draws);
-        out.set_word(t, pack_lt(draws, values));
+        rngs.next_u64_into(&mut scratch.draws);
+        out.set_word(t, pack_lt(&scratch.draws, &scratch.cutoffs));
     }
 }
 
-/// Draw a correlated group's shared uniforms for every lane, lane-major
-/// (`uniforms[t * lanes + l]` is lane `l`'s uniform at step `t`). Per
-/// lane this consumes exactly the `bl` draws the scalar path's
+/// Draw a correlated group's shared raw draws for every lane,
+/// lane-major (`draws[t * lanes + l]` is lane `l`'s draw at step `t`).
+/// Per lane this consumes exactly the `bl` draws the scalar path's
 /// `fill_f64` would, so later inputs of the group can threshold against
 /// the same numbers (maximal positive correlation, §4.1).
-pub fn fill_uniform_block(lanes: usize, bl: usize, rngs: &mut RngBank, uniforms: &mut Vec<f64>) {
+pub fn fill_draw_block(lanes: usize, bl: usize, rngs: &mut RngBank, draws: &mut Vec<u64>) {
     assert_eq!(rngs.len(), lanes, "one RNG stream per lane");
-    uniforms.clear();
-    uniforms.resize(lanes * bl, 0.0);
+    draws.clear();
+    draws.resize(lanes * bl, 0);
     for t in 0..bl {
-        rngs.next_f64_into(&mut uniforms[t * lanes..(t + 1) * lanes]);
+        rngs.next_u64_into(&mut draws[t * lanes..(t + 1) * lanes]);
     }
 }
 
-/// Threshold a pre-drawn lane-major uniform block (from
-/// [`fill_uniform_block`]) against per-lane values — the correlated
+/// Threshold a pre-drawn lane-major raw-draw block (from
+/// [`fill_draw_block`]) against per-lane values — the correlated
 /// counterpart of [`sample_block`], consuming no RNG draws, exactly
 /// like `Bitstream::from_uniforms` per lane.
 pub fn threshold_block<const W: usize>(
     values: &[f64],
     bl: usize,
-    uniforms: &[f64],
+    draws: &[u64],
+    scratch: &mut SngScratch,
     out: &mut LaneBlock<W>,
 ) {
     let lanes = values.len();
-    assert_eq!(uniforms.len(), lanes * bl, "uniform block shape mismatch");
+    assert_eq!(draws.len(), lanes * bl, "draw block shape mismatch");
+    load_cutoffs(values, &mut scratch.cutoffs);
     out.reset(bl, lanes);
     for t in 0..bl {
-        out.set_word(t, pack_lt(&uniforms[t * lanes..(t + 1) * lanes], values));
+        out.set_word(t, pack_lt(&draws[t * lanes..(t + 1) * lanes], &scratch.cutoffs));
     }
 }
 
@@ -113,6 +157,46 @@ mod tests {
     }
 
     #[test]
+    fn integer_cutoff_matches_f64_comparison() {
+        // The satellite contract: for every threshold v and every
+        // possible shifted draw k, (k < cutoff(v)) == (k·2⁻⁵³ < v).
+        // Walk k across the cutoff boundary for awkward v's (f32
+        // artifacts, thirds, denormal-ish, exact endpoints).
+        let scale = 1.0 / (1u64 << 53) as f64;
+        let vs = [
+            0.0,
+            1.0,
+            0.5,
+            1.0 / 3.0,
+            0.3f32 as f64,
+            0.7f32 as f64,
+            1e-18,
+            1.0 - f64::EPSILON,
+            f64::EPSILON,
+            0.999_999_999,
+        ];
+        for &v in &vs {
+            let c = cutoff(v);
+            assert!(c <= 1u64 << 53, "cutoff({v}) = {c} out of range");
+            for k in [c.saturating_sub(2), c.saturating_sub(1), c, c + 1, 0, (1 << 53) - 1] {
+                let k = k.min((1 << 53) - 1);
+                assert_eq!(k < c, (k as f64 * scale) < v, "v={v} k={k} cutoff={c}");
+            }
+        }
+        // Degenerate inputs saturate to a never-firing threshold.
+        assert_eq!(cutoff(-0.5), 0);
+        assert_eq!(cutoff(f64::NAN), 0);
+        // Random draws against random thresholds, full-width check.
+        let mut rng = Xoshiro256::seeded(0x51C0);
+        for _ in 0..2000 {
+            let v = rng.next_f64();
+            let x = rng.next_u64();
+            let k = x >> 11;
+            assert_eq!(k < cutoff(v), (k as f64 * scale) < v, "v={v} x={x}");
+        }
+    }
+
+    #[test]
     fn sample_block_matches_scalar_sng_per_lane() {
         // Every lane of the packed block must equal Bitstream::sample
         // run on a standalone PRNG with the same seed — including the
@@ -121,9 +205,9 @@ mod tests {
             let values = lane_values(lanes);
             let mut bank = RngBank::new();
             bank.reseed_with(lanes, lane_seed);
-            let mut draws = Vec::new();
+            let mut scratch = SngScratch::default();
             let mut block: LaneBlock<4> = LaneBlock::zeros(0, 0);
-            sample_block(&values, bl, &mut bank, &mut draws, &mut block);
+            sample_block(&values, bl, &mut bank, &mut scratch, &mut block);
             assert_eq!(block.len(), bl);
             assert_eq!(block.lanes(), lanes);
             let mut probe = vec![0u64; lanes];
@@ -140,19 +224,20 @@ mod tests {
     #[test]
     fn correlated_blocks_match_scalar_uniform_path() {
         // fill + threshold must reproduce fill_f64 + from_uniforms per
-        // lane: same shared uniforms, different thresholds → maximally
+        // lane: same shared draws, different thresholds → maximally
         // correlated streams, and no extra draws for later inputs.
         let (lanes, bl) = (100usize, 128usize);
         let va = lane_values(lanes);
         let vb: Vec<f64> = va.iter().map(|v| 1.0 - *v).collect();
         let mut bank = RngBank::new();
         bank.reseed_with(lanes, lane_seed);
-        let mut uniforms = Vec::new();
-        fill_uniform_block(lanes, bl, &mut bank, &mut uniforms);
+        let mut draws = Vec::new();
+        fill_draw_block(lanes, bl, &mut bank, &mut draws);
+        let mut scratch = SngScratch::default();
         let mut a: LaneBlock<2> = LaneBlock::zeros(0, 0);
         let mut b: LaneBlock<2> = LaneBlock::zeros(0, 0);
-        threshold_block(&va, bl, &uniforms, &mut a);
-        threshold_block(&vb, bl, &uniforms, &mut b);
+        threshold_block(&va, bl, &draws, &mut scratch, &mut a);
+        threshold_block(&vb, bl, &draws, &mut scratch, &mut b);
         let mut probe = vec![0u64; lanes];
         bank.next_u64_into(&mut probe);
         for l in 0..lanes {
@@ -170,13 +255,13 @@ mod tests {
         // Back-to-back generations into the same scratch must not leak
         // bits between blocks (reset() zeroes the reused words).
         let mut bank = RngBank::new();
-        let mut draws = Vec::new();
+        let mut scratch = SngScratch::default();
         let mut block: LaneBlock<1> = LaneBlock::zeros(0, 0);
         bank.reseed_with(10, lane_seed);
-        sample_block(&[1.0; 10], 50, &mut bank, &mut draws, &mut block);
+        sample_block(&[1.0; 10], 50, &mut bank, &mut scratch, &mut block);
         assert!((0..10).all(|l| block.lane_popcount(l) == 50));
         bank.reseed_with(7, lane_seed);
-        sample_block(&[0.0; 7], 30, &mut bank, &mut draws, &mut block);
+        sample_block(&[0.0; 7], 30, &mut bank, &mut scratch, &mut block);
         assert_eq!(block.len(), 30);
         assert_eq!(block.lanes(), 7);
         assert!((0..7).all(|l| block.lane_popcount(l) == 0));

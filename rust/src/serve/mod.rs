@@ -20,9 +20,10 @@
 //!
 //! Row-level parallelism composes underneath: each wave is evaluated
 //! by the word-parallel engine via
-//! [`runtime::InterpEngine::execute_rows`] — netlist kernels pack up
-//! to 256 batch rows per `u64×W` lane word (lane-major SNG → gate
-//! program → vertical-counter StoB, no per-row intermediates) and
+//! [`runtime::InterpEngine::execute_rows`] — every kernel packs up
+//! to 256 batch rows per `u64×W` lane word (lane-major SNG → staged
+//! gate plans with in-lane StoB→BtoS regeneration → vertical-counter
+//! StoB, no per-row intermediates) and
 //! split the lane blocks across a scoped worker pool — so shard-level
 //! (bank) and row-level (subarray row) parallelism mirror the paper's
 //! two-level hierarchy. `ServerConfig::lane_width` /

@@ -31,9 +31,9 @@ pub struct ServerConfig {
     /// manifest spec; `max_wait` closes partial waves).
     pub batcher: BatcherConfig,
     /// Wave-level parallelism: worker threads the interpreter splits a
-    /// wave across. Netlist kernels hand each worker whole lane blocks
-    /// (the word-parallel engine evaluates up to 256 batch rows per
-    /// `u64×W` lane word); staged kernels hand out single rows. `0`
+    /// wave across. Every kernel — staged apps included — hands each
+    /// worker whole lane blocks (the word-parallel engine evaluates up
+    /// to 256 batch rows per `u64×W` lane word). `0`
     /// (default) = auto — the `STOCH_IMC_ROW_THREADS` env var if set
     /// (honored as-is), else the machine's cores divided across the
     /// pool's shards. Resolved once at start, so the per-wave path

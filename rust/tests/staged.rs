@@ -1,0 +1,145 @@
+//! Differential + statistical suite for the staged lane-major pipeline:
+//! `app_lit` and `app_kde` (the multi-stage StoB→BtoS regeneration
+//! apps) must produce **bit-identical** outputs through the scalar
+//! staged reference (`execute_rows_scalar` →
+//! `StagedPlan::eval_row_scalar`, one row at a time through
+//! `eval_stochastic` per stage) and the lane-major staged executor
+//! (`execute_rows` / `execute_rows_wide`, in-lane regeneration between
+//! stages), across lane widths {64, 128, 256, auto}, thread counts,
+//! ragged live-row counts, and seeds — the same contract the flat
+//! kernels have in `tests/wordparallel.rs` — and must track the float
+//! references statistically.
+
+use stoch_imc::apps::{kde::Kde, lit::Lit, App};
+use stoch_imc::runtime::InterpEngine;
+use stoch_imc::util::prng::{fnv1a, Xoshiro256};
+
+/// Batch dimension: 200 keeps a ragged tail at every lane width
+/// (64-row blocks of 64+64+64+8, 128-row blocks of 128+72, one ragged
+/// 256-row block).
+const BATCH: usize = 200;
+
+/// Every lane width the engine monomorphizes, plus 0 = auto sizing.
+const WIDTHS: [usize; 4] = [64, 128, 256, 0];
+
+const APPS: [&str; 2] = ["app_lit", "app_kde"];
+
+fn engine(bl: usize, tag: &str) -> InterpEngine {
+    let dir = std::env::temp_dir().join(format!("stoch_imc_staged_{tag}_{bl}"));
+    std::fs::create_dir_all(&dir).unwrap();
+    let manifest = format!("app_lit 64 {b} {bl}\napp_kde 9 {b} {bl}\n", b = BATCH);
+    std::fs::write(dir.join("manifest.txt"), manifest).unwrap();
+    InterpEngine::load(&dir).expect("staged engine load")
+}
+
+/// Random full-batch instance values for `name`, deterministic per
+/// (artifact, seed) so failures reproduce.
+fn values_for(e: &InterpEngine, name: &str, seed: i32) -> Vec<f32> {
+    let n = e.spec(name).unwrap().n_inputs;
+    let mut rng = Xoshiro256::seeded(fnv1a(name) ^ seed as u32 as u64);
+    (0..BATCH * n).map(|_| rng.next_f64() as f32).collect()
+}
+
+#[test]
+fn staged_apps_bit_identical_across_widths_threads_and_ragged_live() {
+    // The acceptance matrix: every lane width × thread count against
+    // the scalar staged reference, at live counts walking the
+    // lane-word boundaries (1, one short of a word, into the third
+    // word at width 256). BL=100 also exercises the ragged tail word
+    // of every stream (100 % 64 != 0).
+    let bl = 100usize;
+    let e = engine(bl, "matrix");
+    for (a, name) in APPS.iter().enumerate() {
+        for (j, &live) in [1usize, 63, 130].iter().enumerate() {
+            let seed = (a * 17 + j * 5 + 1) as i32;
+            let values = values_for(&e, name, seed);
+            let golden = e.execute_rows_scalar(name, &values, seed, live, 1).unwrap();
+            for width in WIDTHS {
+                for threads in [1usize, 3, 16] {
+                    let word =
+                        e.execute_rows_wide(name, &values, seed, live, threads, width).unwrap();
+                    assert_eq!(
+                        golden, word,
+                        "artifact={name} live={live} width={width} threads={threads}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn staged_apps_bit_identical_on_full_multiblock_waves() {
+    // Full 200-row waves: multi-block at every width with a ragged
+    // tail block, and a scalar reference computed multi-threaded (the
+    // scalar split must be invisible too).
+    let bl = 64usize;
+    let e = engine(bl, "full");
+    for (a, name) in APPS.iter().enumerate() {
+        let seed = 900 + a as i32;
+        let values = values_for(&e, name, seed);
+        let golden = e.execute_rows_scalar(name, &values, seed, BATCH, 3).unwrap();
+        for (width, threads) in [(64usize, 16usize), (128, 3), (256, 1), (0, 4)] {
+            let word = e.execute_rows_wide(name, &values, seed, BATCH, threads, width).unwrap();
+            assert_eq!(golden, word, "artifact={name} width={width} threads={threads}");
+        }
+    }
+}
+
+#[test]
+fn staged_seeds_resample_but_paths_stay_locked() {
+    let bl = 64usize;
+    let e = engine(bl, "seeds");
+    let values = values_for(&e, "app_kde", 5);
+    let mut last: Option<Vec<f32>> = None;
+    for seed in [1, 2, 999] {
+        let golden = e.execute_rows_scalar("app_kde", &values, seed, 70, 1).unwrap();
+        let word = e.execute_rows("app_kde", &values, seed, 70, 4).unwrap();
+        assert_eq!(golden, word, "seed={seed}");
+        if let Some(prev) = &last {
+            assert_ne!(prev, &word, "seed {seed} must resample staged streams");
+        }
+        last = Some(word);
+    }
+}
+
+#[test]
+fn staged_lane_pipeline_tracks_float_references() {
+    // The engine's staged outputs must approximate the float models —
+    // the statistical half of the staged-reference contract (the
+    // bit-level half is the differential tests above). BL=1024 keeps
+    // per-stream noise ≈ sqrt(p(1-p)/1024) ≤ 0.016; the staged
+    // pipelines chain a handful of streams plus the ADDIE √ (LIT) and
+    // the Maclaurin truncation (KDE), hence the wider bounds.
+    let dir = std::env::temp_dir().join("stoch_imc_staged_float");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.txt"), "app_lit 64 8 1024\napp_kde 9 8 1024\n").unwrap();
+    let e = InterpEngine::load(&dir).expect("staged float engine");
+
+    let lit = Lit::default();
+    let w = lit.workload(8, 23);
+    let mut values = Vec::new();
+    for inst in &w {
+        values.extend(inst.iter().map(|&v| v as f32));
+    }
+    let out = e.execute("app_lit", &values, 7, 8).unwrap();
+    let mut worst = 0.0f64;
+    for (inst, o) in w.iter().zip(&out) {
+        let f = lit.float_ref(inst);
+        worst = worst.max((*o as f64 - f).abs());
+        assert!((*o as f64 - f).abs() < 0.2, "lit got {o} want {f}");
+    }
+    assert!(worst < 0.2, "lit worst error {worst}");
+
+    let kde = Kde::default();
+    let w = kde.workload(8, 29);
+    let mut values = Vec::new();
+    for inst in &w {
+        values.extend(inst.iter().map(|&v| v as f32));
+    }
+    let out = e.execute("app_kde", &values, 9, 8).unwrap();
+    for (inst, o) in w.iter().zip(&out) {
+        let f = kde.float_ref(inst);
+        assert!((*o as f64 - f).abs() < 0.2, "kde got {o} want {f}");
+    }
+}

@@ -1,11 +1,13 @@
 //! Differential property suite for the word-parallel wave engine: every
 //! registered interpreter artifact must produce **bit-identical** outputs
 //! through the scalar golden path (`execute_rows_scalar`, one row at a
-//! time through `netlist::eval::eval_stochastic`) and the lane-major
+//! time through the staged reference `StagedPlan::eval_row_scalar` →
+//! `netlist::eval::eval_stochastic` per stage) and the lane-major
 //! word-parallel path (`execute_rows` / `execute_rows_wide`, up to 256
 //! rows per `u64×W` lane word), across lane widths {64, 128, 256} and
 //! auto, bitstream lengths (including BL % 64 != 0), ragged live-row
-//! counts (live % width != 0), worker counts, and seeds.
+//! counts (live % width != 0), worker counts, and seeds. The staged
+//! apps' dedicated matrix lives in `tests/staged.rs`.
 
 use stoch_imc::runtime::InterpEngine;
 use stoch_imc::util::prng::{fnv1a, Xoshiro256};
@@ -98,10 +100,10 @@ fn stateful_ops_bit_identical_at_long_bl() {
 
 #[test]
 fn apps_bit_identical_through_both_paths() {
-    // The netlist apps ride the word-parallel path; the staged apps
-    // (app_lit, app_kde) run per-row on both, so equality pins that the
-    // engine routes them consistently too (and that lane width is a
-    // no-op for them).
+    // All four apps ride the word-parallel path now — the single-stage
+    // netlists (app_ol, app_hdp) and the staged pipelines (app_lit,
+    // app_kde, in-lane StoB→BtoS regeneration between stages); each
+    // must match its scalar staged reference bit for bit.
     let e = engine(100, "apps");
     for (name, live, seed) in [
         ("app_ol", 65, 41),
