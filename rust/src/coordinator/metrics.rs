@@ -1,6 +1,12 @@
-//! Coordinator metrics: waves, padding waste, latency and throughput.
+//! Coordinator metrics: waves, padding waste, latency and throughput —
+//! plus the reliability instrumentation the executor streams back per
+//! wave (Eq 4 operation counters, Eq 11 wear).
 
 use std::time::Duration;
+
+use crate::energy::{EnergyBreakdown, EnergyParams, OpCounters};
+use crate::lifetime::WearProfile;
+use crate::runtime::WaveStats;
 
 #[derive(Debug, Clone, Default)]
 pub struct Metrics {
@@ -9,6 +15,11 @@ pub struct Metrics {
     pub padded_slots: u64,
     pub exec_time: Duration,
     pub total_time: Duration,
+    /// Eq 4 operation counters summed over every wave recorded here
+    /// (price with [`Metrics::energy`]).
+    pub ops: OpCounters,
+    /// Eq 11 wear of the subarray rows these waves kept re-writing.
+    pub wear: WearProfile,
     latencies_us: Vec<u64>,
 }
 
@@ -24,17 +35,34 @@ impl Metrics {
         self.latencies_us.push(d.as_micros() as u64);
     }
 
+    /// Fold one executed wave's instrumentation in: counters sum; wear
+    /// *absorbs* — every wave of the same app re-writes the same
+    /// subarray rows, so capacity is a max while traffic accumulates.
+    pub fn record_stats(&mut self, stats: &WaveStats) {
+        self.ops.add(&stats.ops);
+        self.wear.absorb_wave(&stats.wear);
+    }
+
     /// Fold another metrics snapshot into this one — the pool-wide
     /// aggregation across apps/shards. Latency samples concatenate, so
     /// percentiles stay exact; `total_time` sums wall-clock per app
     /// (shards overlap in time, so the pool total is an upper bound).
+    /// Wear merges as *disjoint* banks: capacity and traffic sum, the
+    /// pool's hottest cell is the max of the parts.
     pub fn merge(&mut self, other: &Metrics) {
         self.requests += other.requests;
         self.waves += other.waves;
         self.padded_slots += other.padded_slots;
         self.exec_time += other.exec_time;
         self.total_time += other.total_time;
+        self.ops.add(&other.ops);
+        self.wear.merge(&other.wear);
         self.latencies_us.extend_from_slice(&other.latencies_us);
+    }
+
+    /// Executor-side Eq 4 energy of everything recorded here.
+    pub fn energy(&self, params: &EnergyParams) -> EnergyBreakdown {
+        self.ops.energy(params)
     }
 
     /// Requests per second over the recorded total time.
@@ -103,6 +131,28 @@ mod tests {
     fn throughput_zero_without_time() {
         let m = Metrics::default();
         assert_eq!(m.throughput(), 0.0);
+    }
+
+    #[test]
+    fn wave_stats_absorb_per_app_and_merge_disjoint() {
+        let stats = WaveStats {
+            ops: OpCounters { sbg_writes: 10, presets: 10, ..OpCounters::default() },
+            wear: WearProfile { used_cells: 8, writes: 20, max_cell_writes: 4 },
+        };
+        // Two waves of the same app: ops sum, cells re-written (max),
+        // hottest cell accumulates.
+        let mut a = Metrics::default();
+        a.record_stats(&stats);
+        a.record_stats(&stats);
+        assert_eq!(a.ops.sbg_writes, 20);
+        assert_eq!(a.wear, WearProfile { used_cells: 8, writes: 40, max_cell_writes: 8 });
+        // Another app's bank merges disjointly: capacity sums, the
+        // pool's hottest cell is the max of the parts.
+        let mut b = Metrics::default();
+        b.record_stats(&stats);
+        a.merge(&b);
+        assert_eq!(a.ops.sbg_writes, 30);
+        assert_eq!(a.wear, WearProfile { used_cells: 16, writes: 60, max_cell_writes: 8 });
     }
 
     #[test]

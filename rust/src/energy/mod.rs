@@ -123,6 +123,70 @@ impl EnergyBreakdown {
     }
 }
 
+/// Dynamic operation counters accumulated by the lane-major executor as
+/// a wave runs — Eq 4's `N_*` terms counted at *firing* granularity
+/// (one firing = one gate evaluation / cell write on one lane at one
+/// bit position). The static model (`computation_energy`, below) counts
+/// the same quantities from a `scheduler::Schedule`; the cross-check
+/// test in `tests/fault.rs` keeps the two from drifting.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct OpCounters {
+    /// Gate firings, indexed by [`GateKind::index`].
+    pub gates: [u64; GateKind::COUNT],
+    /// ADDIE integrator steps (one per square-root lane per bit). Like
+    /// the static model, these are *not* charged as logic energy — the
+    /// ADDIE macro is charged at readout via the accumulator path — but
+    /// they are write traffic, so the wear model counts them.
+    pub addie_steps: u64,
+    /// Output-cell presets (one per gate firing plus one per SBG write
+    /// — the 2T-1MTJ destructive-logic preset of Eq 4).
+    pub presets: u64,
+    /// Stochastic input-bit writes (SBG firings, one per generated
+    /// input-stream bit).
+    pub sbg_writes: u64,
+    /// StoB conversions through the accumulator path (one per stage
+    /// output per lane — §4.3's local-accumulator readout).
+    pub stob_reads: u64,
+}
+
+impl OpCounters {
+    pub fn add(&mut self, other: &OpCounters) {
+        for (a, b) in self.gates.iter_mut().zip(&other.gates) {
+            *a += b;
+        }
+        self.addie_steps += other.addie_steps;
+        self.presets += other.presets;
+        self.sbg_writes += other.sbg_writes;
+        self.stob_reads += other.stob_reads;
+    }
+
+    /// Total gate firings across every kind (ADDIE steps excluded).
+    pub fn gate_total(&self) -> u64 {
+        self.gates.iter().sum()
+    }
+
+    /// Total cell-write traffic: the wear model's `B` contribution of
+    /// these counters (gates + presets + SBG + ADDIE steps).
+    pub fn write_total(&self) -> u64 {
+        self.gate_total() + self.presets + self.sbg_writes + self.addie_steps
+    }
+
+    /// Price the counters with Eq 4 (+ the accumulator readout as the
+    /// peripheral share): the executor-side energy breakdown.
+    pub fn energy(&self, params: &EnergyParams) -> EnergyBreakdown {
+        let mut logic = 0.0;
+        for kind in GateKind::ALL {
+            logic += params.gate_energy(kind) * self.gates[kind.index()] as f64;
+        }
+        EnergyBreakdown {
+            logic,
+            preset: self.presets as f64 * params.e_preset,
+            input_init: self.sbg_writes as f64 * (params.e_sbg + params.e_btos_lookup),
+            peripheral: self.stob_reads as f64 * params.e_acc_local,
+        }
+    }
+}
+
 /// Computation-phase energy of a schedule execution (`passes` passes of
 /// the scheduled sub-bitstream — Eq 3's BL multiplier appears through
 /// the pass count × per-pass op counts).
@@ -218,6 +282,27 @@ mod tests {
         assert!(b.logic > 0.0 && b.preset > 0.0 && b.input_init > 0.0);
         let pct = b.percentages();
         assert!((pct.iter().sum::<f64>() - 100.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn op_counters_price_like_eq4() {
+        let p = EnergyParams::default();
+        let mut gates = [0u64; GateKind::COUNT];
+        gates[GateKind::Nand.index()] = 10;
+        gates[GateKind::Not.index()] = 4;
+        // addie_steps are wear-only traffic — they must not change energy.
+        let c = OpCounters { gates, addie_steps: 100, presets: 14, sbg_writes: 6, stob_reads: 2 };
+        let e = c.energy(&p);
+        assert!((e.logic - (10.0 * p.e_nand + 4.0 * p.e_not)).abs() < 1e-30);
+        assert!((e.preset - 14.0 * p.e_preset).abs() < 1e-30);
+        assert!((e.input_init - 6.0 * (p.e_sbg + p.e_btos_lookup)).abs() < 1e-30);
+        assert!((e.peripheral - 2.0 * p.e_acc_local).abs() < 1e-30);
+        assert_eq!(c.gate_total(), 14);
+        assert_eq!(c.write_total(), 14 + 14 + 6 + 100);
+        let mut d = c;
+        d.add(&c);
+        assert_eq!(d.gate_total(), 28);
+        assert_eq!(d.addie_steps, 200);
     }
 
     #[test]

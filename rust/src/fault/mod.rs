@@ -6,9 +6,182 @@
 //! baseline each of the 8 bits of a value flips with probability
 //! `rate` (bit significance makes the damage asymmetric — the effect
 //! Table 4 demonstrates).
+//!
+//! Two generations of models live here:
+//!
+//! * the scalar-model injectors below (`inject_*`), used by the apps'
+//!   `stoch_value`/`binary_value` Table 4 evaluation;
+//! * [`FaultPlan`], the lane-engine fault model: a *stateless*,
+//!   counter-based mask source addressed by `(site, row, t)`. Because a
+//!   mask bit is a pure function of its coordinates (one SplitMix64
+//!   finalizer evaluation, thresholded exactly like the integer SNG in
+//!   `sc::sng`), the gate-major scalar reference path and the
+//!   time-major lane-word path compute *identical* masks in any
+//!   evaluation order, and the fault source never perturbs the SNG
+//!   draw order — the property the differential suite in
+//!   `tests/fault.rs` pins.
 
 use crate::sc::bitstream::Bitstream;
+use crate::sc::sng::cutoff;
 use crate::util::prng::Xoshiro256;
+
+// ---- lane-engine fault model -------------------------------------------
+
+/// Injection-site classes of the lane engine (packed into the high bits
+/// of a [`site`] id).
+const CLASS_SNG: u64 = 1;
+const CLASS_GATE: u64 = 2;
+const CLASS_STOB: u64 = 3;
+
+/// Odd multiplier keys decorrelating the three mask coordinates before
+/// the finalizer (same constant family as `util::prng::SplitMix64`).
+const K_SITE: u64 = 0x9E37_79B9_7F4A_7C15;
+const K_ROW: u64 = 0xBF58_476D_1CE4_E5B9;
+const K_T: u64 = 0x94D0_49BB_1331_11EB;
+
+/// SplitMix64 finalizer: a bijective avalanche mix of the combined
+/// coordinate word. Statistical quality is pinned by
+/// `tests/fault.rs::mask_flip_rate_matches_configured_rate`.
+#[inline]
+fn mix(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Pack an injection site id from (class, stage, index). 20 stage bits
+/// and 40 index bits — far beyond any compiled pipeline.
+#[inline]
+fn site(class: u64, stage: usize, index: usize) -> u64 {
+    (class << 60) | ((stage as u64) << 40) | index as u64
+}
+
+/// Per-wave fault-injection plan for the lane-major engine: independent
+/// per-bit flip probabilities at the three insertion points of a staged
+/// wave (SNG output streams, gate-instruction outputs, StoB readout
+/// streams), plus the mask seed. `Copy` so it travels inside the serve
+/// layer's `WaveKnobs` without allocation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultPlan {
+    /// Per-bit flip probability on every generated SNG input stream.
+    pub sng_rate: f64,
+    /// Per-bit flip probability on every gate (and ADDIE) output.
+    pub gate_rate: f64,
+    /// Per-bit flip probability on every stage-output stream as it is
+    /// read out by the StoB vertical counter.
+    pub stob_rate: f64,
+    /// Mask seed; independent of the wave's SNG seed.
+    pub seed: u64,
+}
+
+impl FaultPlan {
+    /// Same flip rate at every insertion point.
+    pub fn uniform(rate: f64, seed: u64) -> Self {
+        Self { sng_rate: rate, gate_rate: rate, stob_rate: rate, seed }
+    }
+
+    /// True when every rate thresholds to a zero cutoff — the plan can
+    /// never flip a bit (rate-0.0 instrumentation).
+    pub fn is_noop(&self) -> bool {
+        let c = self.cutoffs();
+        c.sng == 0 && c.gate == 0 && c.stob == 0
+    }
+
+    /// Resolve the rates into integer SNG-style cutoffs once per wave.
+    pub fn cutoffs(&self) -> FaultCutoffs {
+        FaultCutoffs {
+            seed: self.seed,
+            sng: cutoff(self.sng_rate),
+            gate: cutoff(self.gate_rate),
+            stob: cutoff(self.stob_rate),
+        }
+    }
+}
+
+/// A [`FaultPlan`] with its rates pre-thresholded to the integer
+/// cutoffs the mask generator compares against (`flip ⇔ (mix(..) >> 11)
+/// < cutoff`, exactly the `sc::sng` comparison, so a rate maps to the
+/// same flip probability an SNG input of that value would have).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultCutoffs {
+    pub seed: u64,
+    pub sng: u64,
+    pub gate: u64,
+    pub stob: u64,
+}
+
+impl FaultCutoffs {
+    #[inline]
+    pub fn sng_site(&self, stage: usize, input: usize) -> u64 {
+        site(CLASS_SNG, stage, input)
+    }
+
+    #[inline]
+    pub fn gate_site(&self, stage: usize, slot: usize) -> u64 {
+        site(CLASS_GATE, stage, slot)
+    }
+
+    #[inline]
+    pub fn stob_site(&self, stage: usize, output: usize) -> u64 {
+        site(CLASS_STOB, stage, output)
+    }
+
+    /// The mask bit for one `(site, row, t)` coordinate: a pure
+    /// function, identical no matter which engine path asks.
+    #[inline]
+    pub fn mask_bit(&self, cutoff: u64, site: u64, row: u64, t: u64) -> bool {
+        if cutoff == 0 {
+            return false;
+        }
+        let z = self.seed
+            ^ site.wrapping_mul(K_SITE)
+            ^ row.wrapping_mul(K_ROW)
+            ^ t.wrapping_mul(K_T);
+        (mix(z) >> 11) < cutoff
+    }
+
+    /// Lane-word masks for one time step of a `u64×W` lane block: bit
+    /// `l-64w` of word `w` is the mask bit of block lane `l` (global
+    /// row `row0 + l`). Dead lanes (`l >= lanes`) stay zero.
+    #[inline]
+    pub fn mask_words<const W: usize>(
+        &self,
+        cutoff: u64,
+        site: u64,
+        row0: usize,
+        lanes: usize,
+        t: usize,
+    ) -> [u64; W] {
+        let mut out = [0u64; W];
+        if cutoff == 0 {
+            return out;
+        }
+        for (w, word) in out.iter_mut().enumerate() {
+            let lo = w * 64;
+            for l in lo..lanes.min(lo + 64) {
+                if self.mask_bit(cutoff, site, (row0 + l) as u64, t as u64) {
+                    *word |= 1u64 << (l - lo);
+                }
+            }
+        }
+        out
+    }
+
+    /// Flip the masked bits of a scalar-path stream in place (the
+    /// scalar reference's counterpart of the lane-word XOR).
+    pub fn apply_to_stream(&self, bs: &mut Bitstream, cutoff: u64, site: u64, row: u64) {
+        if cutoff == 0 {
+            return;
+        }
+        for t in 0..bs.len() {
+            if self.mask_bit(cutoff, site, row, t as u64) {
+                bs.flip(t);
+            }
+        }
+    }
+}
+
+// ---- scalar-model injectors (Table 4 node-level model) ------------------
 
 /// Node-level fault model (the Table 4 interpretation): with probability
 /// `rate`, the node's stored value suffers ONE random bitflip. For a
@@ -104,6 +277,64 @@ mod tests {
             worst = worst.max(v);
         }
         assert!(worst >= 0.5, "worst={worst}");
+    }
+}
+
+#[cfg(test)]
+mod plan_tests {
+    use super::*;
+
+    #[test]
+    fn zero_rate_plan_is_noop_and_all_masks_zero() {
+        let p = FaultPlan::uniform(0.0, 0xDEAD);
+        assert!(p.is_noop());
+        let c = p.cutoffs();
+        assert_eq!((c.sng, c.gate, c.stob), (0, 0, 0));
+        let w: [u64; 4] = c.mask_words(c.sng, c.sng_site(0, 0), 0, 256, 7);
+        assert_eq!(w, [0u64; 4]);
+        // Negative and NaN rates saturate to cutoff 0 too (sng::cutoff).
+        assert!(FaultPlan::uniform(-1.0, 1).is_noop());
+        assert!(FaultPlan::uniform(f64::NAN, 1).is_noop());
+    }
+
+    #[test]
+    fn lane_words_agree_with_scalar_mask_bits() {
+        // The lane-word builder must pack exactly the per-(row, t)
+        // scalar mask bits — the property that makes the faulty lane
+        // path and faulty scalar reference bit-identical.
+        let c = FaultPlan::uniform(0.25, 99).cutoffs();
+        let site = c.gate_site(2, 5);
+        let (row0, lanes) = (64usize, 130usize);
+        for t in 0..32usize {
+            let words: [u64; 4] = c.mask_words(c.gate, site, row0, lanes, t);
+            for l in 0..256usize {
+                let want = l < lanes && c.mask_bit(c.gate, site, (row0 + l) as u64, t as u64);
+                let got = (words[l / 64] >> (l % 64)) & 1 == 1;
+                assert_eq!(got, want, "t={t} l={l}");
+            }
+        }
+    }
+
+    #[test]
+    fn sites_and_seeds_decorrelate_masks() {
+        let c = FaultPlan::uniform(0.5, 7).cutoffs();
+        let c2 = FaultPlan::uniform(0.5, 8).cutoffs();
+        let a: [u64; 1] = c.mask_words(c.sng, c.sng_site(0, 0), 0, 64, 0);
+        let b: [u64; 1] = c.mask_words(c.sng, c.sng_site(0, 1), 0, 64, 0);
+        let d: [u64; 1] = c2.mask_words(c2.sng, c2.sng_site(0, 0), 0, 64, 0);
+        assert_ne!(a, b, "site must change the mask");
+        assert_ne!(a, d, "seed must change the mask");
+    }
+
+    #[test]
+    fn apply_to_stream_matches_mask_bits() {
+        let c = FaultPlan::uniform(0.3, 41).cutoffs();
+        let site = c.stob_site(1, 0);
+        let mut bs = Bitstream::zeros(200);
+        c.apply_to_stream(&mut bs, c.stob, site, 9);
+        for t in 0..200usize {
+            assert_eq!(bs.get(t), c.mask_bit(c.stob, site, 9, t as u64), "t={t}");
+        }
     }
 }
 

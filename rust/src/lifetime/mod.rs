@@ -9,7 +9,7 @@
 //! so relative lifetime = (C₁/B₁)/(C₂/B₂).
 
 /// Write-traffic + capacity summary of one method executing one workload.
-#[derive(Debug, Clone, Copy, PartialEq)]
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct WearProfile {
     /// Cells ever written (utilized capacity C).
     pub used_cells: u64,
@@ -22,9 +22,14 @@ pub struct WearProfile {
 
 impl WearProfile {
     /// Lifetime figure-of-merit C/B (unitless; relative use only).
-    pub fn merit(&self) -> f64 {
-        assert!(self.writes > 0, "no writes recorded");
-        self.used_cells as f64 / self.writes as f64
+    /// `None` when no writes were recorded — an empty profile has no
+    /// lifetime to speak of (used to panic; serving-layer profiles are
+    /// legitimately empty before the first wave).
+    pub fn merit(&self) -> Option<f64> {
+        if self.writes == 0 {
+            return None;
+        }
+        Some(self.used_cells as f64 / self.writes as f64)
     }
 
     /// A stricter merit using the hottest cell: C / (max_cell_writes ×
@@ -32,20 +37,43 @@ impl WearProfile {
     /// The paper's Eq 11 assumes uniform distribution over used cells;
     /// the hot-spot variant is reported alongside (Fig 11 discussion
     /// attributes [22]'s deficiency to "access stress" on certain cells).
-    pub fn hotspot_merit(&self) -> f64 {
-        assert!(self.max_cell_writes > 0);
-        1.0 / self.max_cell_writes as f64
+    /// `None` when no cell was ever written.
+    pub fn hotspot_merit(&self) -> Option<f64> {
+        if self.max_cell_writes == 0 {
+            return None;
+        }
+        Some(1.0 / self.max_cell_writes as f64)
+    }
+
+    /// Fold one more wave of the *same* workload into this profile: the
+    /// wave re-writes the same subarray cells, so capacity is the max,
+    /// traffic sums, and the hottest cell keeps accumulating.
+    pub fn absorb_wave(&mut self, wave: &WearProfile) {
+        self.used_cells = self.used_cells.max(wave.used_cells);
+        self.writes += wave.writes;
+        self.max_cell_writes += wave.max_cell_writes;
+    }
+
+    /// Fold a profile of *disjoint* cells (another app / another bank)
+    /// into this one: capacity and traffic sum; the pool's hottest cell
+    /// is the max of the parts.
+    pub fn merge(&mut self, other: &WearProfile) {
+        self.used_cells += other.used_cells;
+        self.writes += other.writes;
+        self.max_cell_writes = self.max_cell_writes.max(other.max_cell_writes);
     }
 }
 
-/// Relative lifetime improvement of `a` over `b` (Eq 11 ratio).
-pub fn improvement(a: &WearProfile, b: &WearProfile) -> f64 {
-    a.merit() / b.merit()
+/// Relative lifetime improvement of `a` over `b` (Eq 11 ratio); `None`
+/// if either profile recorded no writes.
+pub fn improvement(a: &WearProfile, b: &WearProfile) -> Option<f64> {
+    Some(a.merit()? / b.merit()?)
 }
 
-/// Hot-spot (first-death) lifetime improvement of `a` over `b`.
-pub fn hotspot_improvement(a: &WearProfile, b: &WearProfile) -> f64 {
-    a.hotspot_merit() / b.hotspot_merit()
+/// Hot-spot (first-death) lifetime improvement of `a` over `b`; `None`
+/// if either profile never wrote a cell.
+pub fn hotspot_improvement(a: &WearProfile, b: &WearProfile) -> Option<f64> {
+    Some(a.hotspot_merit()? / b.hotspot_merit()?)
 }
 
 #[cfg(test)]
@@ -56,8 +84,8 @@ mod tests {
     fn merit_ratio() {
         let a = WearProfile { used_cells: 1000, writes: 100, max_cell_writes: 1 };
         let b = WearProfile { used_cells: 100, writes: 1000, max_cell_writes: 100 };
-        assert!((improvement(&a, &b) - 100.0).abs() < 1e-12);
-        assert!((hotspot_improvement(&a, &b) - 100.0).abs() < 1e-12);
+        assert!((improvement(&a, &b).unwrap() - 100.0).abs() < 1e-12);
+        assert!((hotspot_improvement(&a, &b).unwrap() - 100.0).abs() < 1e-12);
     }
 
     #[test]
@@ -66,7 +94,43 @@ mod tests {
         // hot-spot metric.
         let spread = WearProfile { used_cells: 256, writes: 1024, max_cell_writes: 4 };
         let hot = WearProfile { used_cells: 256, writes: 1024, max_cell_writes: 512 };
-        assert_eq!(improvement(&spread, &hot), 1.0);
-        assert!(hotspot_improvement(&spread, &hot) > 100.0);
+        assert_eq!(improvement(&spread, &hot), Some(1.0));
+        assert!(hotspot_improvement(&spread, &hot).unwrap() > 100.0);
+    }
+
+    #[test]
+    fn empty_profiles_yield_none_not_panics() {
+        // The zero-write / zero-cell edges (a serving profile before its
+        // first wave) must be `None`, not an assert.
+        let empty = WearProfile::default();
+        assert_eq!(empty.merit(), None);
+        assert_eq!(empty.hotspot_merit(), None);
+        let live = WearProfile { used_cells: 8, writes: 2, max_cell_writes: 1 };
+        assert_eq!(improvement(&live, &empty), None);
+        assert_eq!(improvement(&empty, &live), None);
+        assert_eq!(hotspot_improvement(&empty, &live), None);
+        // Zero writes but nonzero capacity is still merit-less.
+        let unused = WearProfile { used_cells: 64, writes: 0, max_cell_writes: 0 };
+        assert_eq!(unused.merit(), None);
+    }
+
+    #[test]
+    fn wave_absorb_vs_disjoint_merge() {
+        // Absorbing a second wave of the same app: same cells (max),
+        // summed traffic, hottest cell accumulates.
+        let wave = WearProfile { used_cells: 128, writes: 1000, max_cell_writes: 512 };
+        let mut app = WearProfile::default();
+        app.absorb_wave(&wave);
+        app.absorb_wave(&wave);
+        assert_eq!(app, WearProfile { used_cells: 128, writes: 2000, max_cell_writes: 1024 });
+        // Merging another app's (disjoint) cells: capacity sums, the
+        // pool's hottest cell is the max of the parts.
+        let mut pool = WearProfile::default();
+        pool.merge(&app);
+        pool.merge(&WearProfile { used_cells: 64, writes: 100, max_cell_writes: 9999 });
+        assert_eq!(
+            pool,
+            WearProfile { used_cells: 192, writes: 2100, max_cell_writes: 9999 }
+        );
     }
 }

@@ -11,6 +11,10 @@
 //!                             sharded serve::Server (N instances per
 //!                             app; shards=0 ⇒ one per artifact)
 //!   schedule <op> [lanes]     show Algorithm 1 output for one op
+//!   faults [APP] [RATES..]    Table-4-style accuracy-vs-flip-rate
+//!                             campaign through the full serve::Server
+//!                             with fault injection live in the lane
+//!                             engine; writes a flat-JSON snapshot
 //!   bench-check [FILE]        CI sanity gate over BENCH_serve.json:
 //!                             log all keys, fail if any *_speedup < 1
 
@@ -59,6 +63,7 @@ fn main() -> Result<()> {
         Some("run") => cmd_run(&cfg, &args[1..]),
         Some("serve") => cmd_serve(&cfg, &args[1..]),
         Some("schedule") => cmd_schedule(&args[1..]),
+        Some("faults") => cmd_faults(&cfg, &args[1..]),
         Some("bench-check") => cmd_bench_check(&args[1..]),
         other => {
             if let Some(o) = other {
@@ -66,8 +71,8 @@ fn main() -> Result<()> {
             }
             eprintln!(
                 "usage: stoch-imc \
-                 <info|fig3|fig7|table2|table3|table4|fig10|fig11|run|serve|schedule|bench-check> \
-                 [--config FILE]"
+                 <info|fig3|fig7|table2|table3|table4|fig10|fig11|run|serve|schedule|faults|\
+                 bench-check> [--config FILE]"
             );
             std::process::exit(2);
         }
@@ -402,6 +407,141 @@ fn cmd_serve(cfg: &Config, args: &[String]) -> Result<()> {
         total as f64 / dt.as_secs_f64(),
         server.pool_metrics().summary()
     );
+    Ok(())
+}
+
+/// Table-4-style reliability campaign through the full serving stack:
+/// for each flip rate, start a `serve::Server` whose every wave executes
+/// under a uniform [`FaultPlan`](stoch_imc::fault::FaultPlan) — stateless
+/// masks XORed into the lane words at the SNG/gate/StoB sites — measure
+/// each app's output error against its float reference, and put the
+/// 8-bit binary-IMC baseline under the same flip rate next to it. Also
+/// reports the executor-side Eq 4 energy and Eq 11 wear the campaign's
+/// waves accumulated, and writes everything as a flat-JSON snapshot
+/// (`STOCH_IMC_FAULTS_OUT`, else `docs/experiments/faults-campaign.json`
+/// when that directory exists, else `FAULTS_campaign.json`).
+fn cmd_faults(cfg: &Config, args: &[String]) -> Result<()> {
+    use stoch_imc::fault::FaultPlan;
+    use stoch_imc::serve::{Server, ServerConfig};
+    use stoch_imc::util::benchjson;
+    use stoch_imc::util::stats::range_error_pct;
+
+    let mut names: Vec<String> = Vec::new();
+    let mut rates: Vec<f64> = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        if args[i] == "--config" {
+            i += 2;
+            continue;
+        }
+        if let Ok(r) = args[i].parse::<f64>() {
+            if !(0.0..=1.0).contains(&r) {
+                bail!("flip rate {r} outside [0, 1]");
+            }
+            rates.push(r);
+        } else {
+            names.push(args[i].trim_start_matches("app_").to_string());
+        }
+        i += 1;
+    }
+    if rates.is_empty() {
+        rates = vec![0.0, 0.05, 0.10, 0.15, 0.20];
+    }
+    let all = all_apps();
+    let apps: Vec<_> = all
+        .iter()
+        .filter(|a| names.is_empty() || names.iter().any(|n| n == a.name()))
+        .collect();
+    if apps.is_empty() {
+        bail!("no such app (have lit|ol|hdp|kde)");
+    }
+    let n = 64usize;
+    let dir = artifact_dir();
+
+    println!("# faults — output error (%) through the serving stack under injected bitflips");
+    println!("rates {rates:?}, {n} instances per app, seed {}", cfg.seed);
+    let mut entries: Vec<(String, f64)> = Vec::new();
+    // Per app: (name, binary errors per rate, stochastic errors per rate).
+    let mut table: Vec<(String, Vec<f64>, Vec<f64>)> =
+        apps.iter().map(|a| (a.name().to_string(), Vec::new(), Vec::new())).collect();
+    for (ri, &rate) in rates.iter().enumerate() {
+        // One server per rate: every wave of every app runs under the
+        // same uniform plan, through the full shard/batcher path.
+        let server = Server::start(
+            &dir,
+            ServerConfig {
+                fault: Some(FaultPlan::uniform(rate, cfg.seed ^ 0xFA)),
+                ..ServerConfig::default()
+            },
+        )?;
+        for (ai, app) in apps.iter().enumerate() {
+            let artifact = format!("app_{}", app.name());
+            let Some(arity) = server.n_inputs(&artifact) else {
+                if ri == 0 {
+                    eprintln!("skipping `{artifact}` — not in the artifact manifest");
+                }
+                continue;
+            };
+            let instances = app.workload(n, cfg.seed);
+            let padded: Vec<Vec<f64>> = instances
+                .iter()
+                .map(|x| {
+                    let mut v = x.clone();
+                    v.resize(arity, 0.0);
+                    v
+                })
+                .collect();
+            let outs = server.run_workload(&artifact, &padded)?;
+            let refs: Vec<f64> = instances.iter().map(|x| app.float_ref(x)).collect();
+            let stoch = range_error_pct(&refs, &outs);
+            // The 8-bit binary-IMC baseline under the same flip rate —
+            // the Table 4 comparison column (MSB-exposed, so it
+            // collapses where the stochastic path degrades gracefully).
+            let binary = stoch_imc::apps::output_error_pct(
+                app.as_ref(),
+                &instances,
+                cfg.arch.bitstream_len,
+                cfg.arch.resolution,
+                rate,
+                false,
+                cfg.seed ^ 0xB1,
+            );
+            table[ai].1.push(binary);
+            table[ai].2.push(stoch);
+            entries.push((format!("faults_{}_rate_{rate}_binary_err_pct", app.name()), binary));
+            entries.push((format!("faults_{}_rate_{rate}_stoch_err_pct", app.name()), stoch));
+            if ri == 0 {
+                // Executor-side Eq 4 / Eq 11 instrumentation from this
+                // rate's waves (counters are rate-independent).
+                let m = server.metrics(&artifact);
+                entries.push((
+                    format!("faults_{}_energy_pj", app.name()),
+                    m.energy(&cfg.energy).total() * 1e12,
+                ));
+                entries
+                    .push((format!("faults_{}_wear_writes", app.name()), m.wear.writes as f64));
+                if let Some(merit) = m.wear.merit() {
+                    entries.push((format!("faults_{}_wear_merit", app.name()), merit));
+                }
+            }
+        }
+    }
+    let fmt = |v: &[f64]| v.iter().map(|x| format!("{x:7.2}")).collect::<Vec<_>>().join(" ");
+    println!("\n{:<6} | binary-IMC | Stoch-IMC   (per rate)", "app");
+    for (name, b, s) in &table {
+        println!("{name:<6} | {} | {}", fmt(b), fmt(s));
+    }
+    let out = std::env::var("STOCH_IMC_FAULTS_OUT").map(PathBuf::from).unwrap_or_else(|_| {
+        let d = Path::new("docs/experiments");
+        if d.is_dir() {
+            d.join("faults-campaign.json")
+        } else {
+            PathBuf::from("FAULTS_campaign.json")
+        }
+    });
+    benchjson::merge_and_write(&out, &entries)
+        .with_context(|| format!("writing {}", out.display()))?;
+    println!("\nwrote {} keys to {}", entries.len(), out.display());
     Ok(())
 }
 

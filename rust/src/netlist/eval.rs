@@ -14,6 +14,7 @@
 use std::collections::HashMap;
 
 use super::graph::{Netlist, Node, NodeId};
+use crate::fault::FaultCutoffs;
 use crate::sc::bitstream::Bitstream;
 use crate::sc::ops::{Addie, ADDIE_SEED};
 
@@ -23,6 +24,31 @@ use crate::sc::ops::{Addie, ADDIE_SEED};
 pub fn eval_stochastic(
     nl: &Netlist,
     inputs: &HashMap<String, Bitstream>,
+) -> HashMap<String, Bitstream> {
+    eval_stochastic_core(nl, inputs, None)
+}
+
+/// [`eval_stochastic`] with gate-site fault injection: every gate and
+/// ADDIE node's value is XORed with its stateless mask bit right after
+/// evaluation, so downstream gates, delay latches, and outputs see the
+/// faulted value — the scalar reference of the lane engine's
+/// `GatePlan::eval_lanes_fault_into`. Node ids are the mask site
+/// indices (they equal the lane path's instruction output slots).
+/// `row` is the wave-global batch row this lane evaluates.
+pub fn eval_stochastic_fault(
+    nl: &Netlist,
+    inputs: &HashMap<String, Bitstream>,
+    cuts: &FaultCutoffs,
+    stage: usize,
+    row: u64,
+) -> HashMap<String, Bitstream> {
+    eval_stochastic_core(nl, inputs, Some((cuts, stage, row)))
+}
+
+fn eval_stochastic_core(
+    nl: &Netlist,
+    inputs: &HashMap<String, Bitstream>,
+    fault: Option<(&FaultCutoffs, usize, u64)>,
 ) -> HashMap<String, Bitstream> {
     let len = inputs
         .values()
@@ -62,7 +88,7 @@ pub fn eval_stochastic(
     for t in 0..len {
         // Phase 1: combinational evaluation in topological order.
         for &id in &order {
-            values[id] = match &nl.nodes[id] {
+            let mut v = match &nl.nodes[id] {
                 Node::Input { name, .. } => inputs
                     .get(name)
                     .unwrap_or_else(|| panic!("missing input '{name}'"))
@@ -81,6 +107,16 @@ pub fn eval_stochastic(
                     addie_state.get_mut(&id).unwrap().step(x)
                 }
             };
+            // Gate-site fault: only computing nodes flip (inputs carry
+            // SNG-site faults; delays latch already-faulted sources).
+            if let Some((cuts, stage, row)) = fault {
+                if matches!(&nl.nodes[id], Node::Gate { .. } | Node::Addie { .. })
+                    && cuts.mask_bit(cuts.gate, cuts.gate_site(stage, id), row, t as u64)
+                {
+                    v = !v;
+                }
+            }
+            values[id] = v;
         }
         // Phase 2: latch delay state from this bit's combinational values.
         for (&id, state) in delay_state.iter_mut() {

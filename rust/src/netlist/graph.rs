@@ -39,6 +39,37 @@ pub enum GateKind {
 }
 
 impl GateKind {
+    /// Every gate kind, in [`GateKind::index`] order — lets counters use
+    /// flat arrays instead of `HashMap<GateKind, _>` on hot-ish paths
+    /// (the executor's energy accounting, `energy::OpCounters`).
+    pub const ALL: [GateKind; GateKind::COUNT] = [
+        GateKind::Buff,
+        GateKind::Not,
+        GateKind::And,
+        GateKind::Nand,
+        GateKind::Or,
+        GateKind::Nor,
+        GateKind::Maj3Inv,
+        GateKind::Maj5Inv,
+    ];
+
+    /// Number of gate kinds (length of [`GateKind::ALL`]).
+    pub const COUNT: usize = 8;
+
+    /// Dense index of this kind into [`GateKind::ALL`].
+    pub fn index(self) -> usize {
+        match self {
+            GateKind::Buff => 0,
+            GateKind::Not => 1,
+            GateKind::And => 2,
+            GateKind::Nand => 3,
+            GateKind::Or => 4,
+            GateKind::Nor => 5,
+            GateKind::Maj3Inv => 6,
+            GateKind::Maj5Inv => 7,
+        }
+    }
+
     pub fn arity(self) -> usize {
         match self {
             GateKind::Buff | GateKind::Not => 1,

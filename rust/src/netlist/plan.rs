@@ -35,6 +35,7 @@
 //! is the allocating convenience wrapper.
 
 use super::graph::{GateKind, Netlist, Node};
+use crate::fault::FaultCutoffs;
 use crate::sc::bitplane::{LaneBlock, LANES};
 use crate::sc::ops::ADDIE_SEED;
 use crate::util::prng::Xoshiro256;
@@ -226,6 +227,45 @@ impl GatePlan {
         self.instrs.len()
     }
 
+    /// Value slots (== netlist nodes): the per-lane cell footprint the
+    /// wear model charges as utilized capacity.
+    pub fn n_slots(&self) -> usize {
+        self.n_slots
+    }
+
+    /// Output streams this plan produces (StoB conversions per lane).
+    pub fn n_outputs(&self) -> usize {
+        self.outputs.len()
+    }
+
+    /// ADDIE macro instances (counter islands) in this plan.
+    pub fn addie_count(&self) -> usize {
+        self.addies.len()
+    }
+
+    /// Per-kind gate-instruction counts (ADDIE macros excluded — they
+    /// are counted by [`GatePlan::addie_count`]). One firing per
+    /// instruction per lane per bit, which is what the executor's
+    /// `energy::OpCounters` accumulates.
+    pub fn gate_histogram(&self) -> [u64; GateKind::COUNT] {
+        let mut hist = [0u64; GateKind::COUNT];
+        for instr in &self.instrs {
+            let kind = match instr.op {
+                Op::Buff => GateKind::Buff,
+                Op::Not => GateKind::Not,
+                Op::And => GateKind::And,
+                Op::Nand => GateKind::Nand,
+                Op::Or => GateKind::Or,
+                Op::Nor => GateKind::Nor,
+                Op::Maj3Inv => GateKind::Maj3Inv,
+                Op::Maj5Inv => GateKind::Maj5Inv,
+                Op::Addie(_) => continue,
+            };
+            hist[kind.index()] += 1;
+        }
+        hist
+    }
+
     /// Evaluate all lanes of a block: `inputs[i]` is the transposed
     /// stream block bound to `self.inputs[i]` (equal lengths, equal
     /// lane counts). Returns one [`LaneBlock`] per netlist output, in
@@ -247,6 +287,35 @@ impl GatePlan {
         &self,
         inputs: &[LaneBlock<W>],
         ws: &'ws mut PlanScratch<W>,
+    ) -> &'ws [LaneBlock<W>] {
+        // `FAULTY = false` compiles to exactly the pre-instrumentation
+        // hot loop: the fault branches are `if false` and fold away.
+        self.eval_core::<W, false>(inputs, ws, None)
+    }
+
+    /// Fault-instrumented [`GatePlan::eval_lanes_into`]: after every
+    /// gate/ADDIE instruction the stage's gate-site mask is XORed into
+    /// the produced lane word (so downstream gates, delay latches, and
+    /// outputs all see the faulted value — same visibility as the
+    /// scalar reference), and every output stream is XORed with its
+    /// StoB-site mask as it is read out. `stage`/`row0` locate this
+    /// evaluation inside the wave for the stateless mask source.
+    pub fn eval_lanes_fault_into<'ws, const W: usize>(
+        &self,
+        inputs: &[LaneBlock<W>],
+        ws: &'ws mut PlanScratch<W>,
+        cuts: &FaultCutoffs,
+        stage: usize,
+        row0: usize,
+    ) -> &'ws [LaneBlock<W>] {
+        self.eval_core::<W, true>(inputs, ws, Some((cuts, stage, row0)))
+    }
+
+    fn eval_core<'ws, const W: usize, const FAULTY: bool>(
+        &self,
+        inputs: &[LaneBlock<W>],
+        ws: &'ws mut PlanScratch<W>,
+        fault: Option<(&FaultCutoffs, usize, usize)>,
     ) -> &'ws [LaneBlock<W>] {
         assert_eq!(inputs.len(), self.inputs.len(), "input block count mismatch");
         let len = inputs.first().map_or(0, |m| m.len());
@@ -318,13 +387,25 @@ impl GatePlan {
                         ws.addies[k as usize].step(x)
                     }
                 };
+                let v = if FAULTY {
+                    let (cuts, stage, row0) = fault.expect("fault context");
+                    let site = cuts.gate_site(stage, instr.out as usize);
+                    wxor(v, cuts.mask_words::<W>(cuts.gate, site, row0, lanes, t))
+                } else {
+                    v
+                };
                 ws.values[instr.out as usize] = v;
             }
             for (latch, d) in ws.latches.iter_mut().zip(&self.delays) {
                 *latch = ws.values[d.src as usize];
             }
-            for (out, (_, slot)) in ws.outs.iter_mut().zip(&self.outputs) {
+            for (o, (out, (_, slot))) in ws.outs.iter_mut().zip(&self.outputs).enumerate() {
                 out.set_word(t, ws.values[*slot as usize]);
+                if FAULTY {
+                    let (cuts, stage, row0) = fault.expect("fault context");
+                    let site = cuts.stob_site(stage, o);
+                    out.xor_word(t, cuts.mask_words::<W>(cuts.stob, site, row0, lanes, t));
+                }
             }
         }
         &ws.outs

@@ -38,11 +38,12 @@
 
 use std::collections::HashMap;
 
-use super::eval::eval_stochastic;
+use super::eval::{eval_stochastic, eval_stochastic_fault};
 use super::graph::{InputClass, Netlist, Node};
 use super::plan::GatePlan;
 use crate::bail;
 use crate::error::Result;
+use crate::fault::FaultCutoffs;
 use crate::sc::bitstream::Bitstream;
 use crate::util::prng::Xoshiro256;
 
@@ -193,22 +194,59 @@ impl StagedPlan {
         self.stages.iter().map(|s| s.plan.instr_count()).sum()
     }
 
+    /// Total value slots (subarray rows touched per lane) across all
+    /// stages — the per-lane utilized-capacity term of the Eq 11 wear
+    /// model.
+    pub fn n_slots_total(&self) -> usize {
+        self.stages.iter().map(|s| s.plan.n_slots()).sum()
+    }
+
     /// Scalar golden evaluation of one instance (see the module docs
     /// for the staged-reference contract). `x` is the clamped instance
     /// (`x.len() >= n_inputs`), `rng` the row's PRNG stream; returns
     /// the result output's StoB value.
     pub fn eval_row_scalar(&self, x: &[f64], bl: usize, rng: &mut Xoshiro256) -> f64 {
+        self.eval_row_scalar_core(x, bl, rng, None)
+    }
+
+    /// [`eval_row_scalar`] under fault injection — the scalar golden
+    /// model of the instrumented lane path. The RNG draw order is
+    /// *identical* to the clean evaluator (fault masks are stateless and
+    /// consume no draws), so a rate-0 plan reproduces `eval_row_scalar`
+    /// bit for bit. Faults hit the three paper sites: SNG output (each
+    /// generated input stream, by binding position), gate output (every
+    /// gate/ADDIE node inside [`eval_stochastic_fault`]), and StoB read
+    /// (each output stream, by output position, before its count is
+    /// taken). `row` is the wave-global batch row of this instance.
+    pub fn eval_row_scalar_fault(
+        &self,
+        x: &[f64],
+        bl: usize,
+        rng: &mut Xoshiro256,
+        cuts: &FaultCutoffs,
+        row: u64,
+    ) -> f64 {
+        self.eval_row_scalar_core(x, bl, rng, Some((cuts, row)))
+    }
+
+    fn eval_row_scalar_core(
+        &self,
+        x: &[f64],
+        bl: usize,
+        rng: &mut Xoshiro256,
+        fault: Option<(&FaultCutoffs, u64)>,
+    ) -> f64 {
         debug_assert!(x.len() >= self.n_inputs, "instance shorter than plan arity");
         // Per stage: one StoB value per netlist output, in output order.
         let mut stage_vals: Vec<Vec<f64>> = Vec::with_capacity(self.stages.len());
-        for stage in &self.stages {
+        for (si, stage) in self.stages.iter().enumerate() {
             let mut group_uniforms: HashMap<u32, Vec<f64>> = HashMap::new();
             let mut inputs: HashMap<String, Bitstream> = HashMap::new();
             let mut i = 0;
             for node in &stage.nl.nodes {
                 let Node::Input { name, class, .. } = node else { continue };
                 let v = resolve(&stage.bindings[i], x, &stage_vals).clamp(0.0, 1.0);
-                let bs = match class {
+                let mut bs = match class {
                     InputClass::Correlated(g) => {
                         let us = group_uniforms.entry(*g).or_insert_with(|| {
                             let mut u = vec![0.0; bl];
@@ -220,12 +258,31 @@ impl StagedPlan {
                     // BinaryBit was rejected at compile time.
                     _ => Bitstream::sample(v, bl, rng),
                 };
+                if let Some((cuts, row)) = fault {
+                    cuts.apply_to_stream(&mut bs, cuts.sng, cuts.sng_site(si, i), row);
+                }
                 inputs.insert(name.clone(), bs);
                 i += 1;
             }
-            let outs = eval_stochastic(&stage.nl, &inputs);
-            stage_vals
-                .push(stage.nl.outputs.iter().map(|(name, _)| outs[name].value()).collect());
+            let mut outs = match fault {
+                Some((cuts, row)) => eval_stochastic_fault(&stage.nl, &inputs, cuts, si, row),
+                None => eval_stochastic(&stage.nl, &inputs),
+            };
+            stage_vals.push(
+                stage
+                    .nl
+                    .outputs
+                    .iter()
+                    .enumerate()
+                    .map(|(o, (name, _))| {
+                        let bs = outs.get_mut(name).expect("stage output stream");
+                        if let Some((cuts, row)) = fault {
+                            cuts.apply_to_stream(bs, cuts.stob, cuts.stob_site(si, o), row);
+                        }
+                        bs.value()
+                    })
+                    .collect(),
+            );
         }
         let (s, o) = self.result;
         stage_vals[s][o]

@@ -263,10 +263,14 @@ pub fn table4(
 pub fn fig11(rows: &[Table3Row]) -> Vec<(&'static str, f64, f64)> {
     rows.iter()
         .map(|r| {
+            // Table 3 profiles always record writes; NaN (never silently
+            // plausible) would surface a broken cost model downstream.
             (
                 r.app,
-                crate::lifetime::improvement(&r.stoch_wear, &r.binary_wear),
-                crate::lifetime::improvement(&r.sc_cram_wear, &r.binary_wear),
+                crate::lifetime::improvement(&r.stoch_wear, &r.binary_wear)
+                    .unwrap_or(f64::NAN),
+                crate::lifetime::improvement(&r.sc_cram_wear, &r.binary_wear)
+                    .unwrap_or(f64::NAN),
             )
         })
         .collect()

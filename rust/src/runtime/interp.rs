@@ -44,10 +44,14 @@
 
 use std::collections::HashMap;
 use std::path::Path;
+use std::sync::Mutex;
 
 use crate::apps::{hdp::Hdp, kde::Kde, lit::Lit, ol::Ol, App};
 use crate::bail;
+use crate::energy::OpCounters;
 use crate::error::{Context, Result};
+use crate::fault::{FaultCutoffs, FaultPlan};
+use crate::lifetime::WearProfile;
 use crate::netlist::{ops, Binding, InputClass, Netlist, PlanScratch, StagedPlan};
 use crate::sc::bitplane::{LaneBlock, LANES};
 use crate::sc::sng;
@@ -63,6 +67,28 @@ struct Wave<'a> {
     kernel: &'a StagedPlan,
     values: &'a [f32],
     seed: i32,
+    /// Precomputed fault-mask cutoffs when this wave is fault-injected
+    /// (`None` for clean waves and no-op plans — the hot path then
+    /// compiles to the uninstrumented loops).
+    fault: Option<&'a FaultCutoffs>,
+}
+
+/// Per-wave instrumentation the executor accumulates *as it runs*: the
+/// Eq 4 operation counters (price them with
+/// [`OpCounters::energy`](crate::energy::OpCounters::energy)) and the
+/// Eq 11 wear profile of the subarray rows the wave touched. Returned
+/// by [`InterpEngine::execute_rows_instrumented`]; the serving layer
+/// folds one of these per wave into its per-shard
+/// [`Metrics`](crate::coordinator::Metrics).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct WaveStats {
+    /// Gate fires, presets, SBG writes, StoB reads, ADDIE steps.
+    pub ops: OpCounters,
+    /// One wave's write traffic over the rows it utilized: `used_cells`
+    /// is slots × live lanes, `writes` is the Eq 4 write total, and the
+    /// hottest cell takes one preset + one write per time step
+    /// (`2 × BL`).
+    pub wear: WearProfile,
 }
 
 /// The interpreter engine: artifact specs plus per-artifact compiled
@@ -264,7 +290,7 @@ impl InterpEngine {
         live: usize,
         threads: usize,
     ) -> Result<Vec<f32>> {
-        self.execute_impl(name, values, seed, live, threads, 0, true)
+        Ok(self.execute_impl(name, values, seed, live, threads, 0, true, None)?.0)
     }
 
     /// [`InterpEngine::execute_rows`] with an explicit lane width:
@@ -282,7 +308,28 @@ impl InterpEngine {
         threads: usize,
         lane_width: usize,
     ) -> Result<Vec<f32>> {
-        self.execute_impl(name, values, seed, live, threads, lane_width, true)
+        Ok(self.execute_impl(name, values, seed, live, threads, lane_width, true, None)?.0)
+    }
+
+    /// [`InterpEngine::execute_rows_wide`] with the paper's reliability
+    /// instrumentation: an optional [`FaultPlan`] XORs stateless fault
+    /// masks into the lane words at the three paper sites (SNG output,
+    /// gate output, StoB read), and the returned [`WaveStats`] carries
+    /// the Eq 4 operation counters and Eq 11 wear the wave accumulated
+    /// while executing. A `None` (or all-zero-rate) plan takes exactly
+    /// the uninstrumented hot path.
+    #[allow(clippy::too_many_arguments)]
+    pub fn execute_rows_instrumented(
+        &self,
+        name: &str,
+        values: &[f32],
+        seed: i32,
+        live: usize,
+        threads: usize,
+        lane_width: usize,
+        fault: Option<&FaultPlan>,
+    ) -> Result<(Vec<f32>, WaveStats)> {
+        self.execute_impl(name, values, seed, live, threads, lane_width, true, fault)
     }
 
     /// [`InterpEngine::execute_rows`] forced onto the scalar golden
@@ -299,7 +346,25 @@ impl InterpEngine {
         live: usize,
         threads: usize,
     ) -> Result<Vec<f32>> {
-        self.execute_impl(name, values, seed, live, threads, 0, false)
+        Ok(self.execute_impl(name, values, seed, live, threads, 0, false, None)?.0)
+    }
+
+    /// [`InterpEngine::execute_rows_scalar`] under fault injection —
+    /// the scalar golden reference of the instrumented lane path
+    /// ([`StagedPlan::eval_row_scalar_fault`] per row). The
+    /// differential fault suite pins
+    /// [`execute_rows_instrumented`](InterpEngine::execute_rows_instrumented)
+    /// bit-identical against this for the same plan and seed.
+    pub fn execute_rows_scalar_fault(
+        &self,
+        name: &str,
+        values: &[f32],
+        seed: i32,
+        live: usize,
+        threads: usize,
+        fault: &FaultPlan,
+    ) -> Result<Vec<f32>> {
+        Ok(self.execute_impl(name, values, seed, live, threads, 0, false, Some(fault))?.0)
     }
 
     #[allow(clippy::too_many_arguments)]
@@ -312,7 +377,8 @@ impl InterpEngine {
         threads: usize,
         lane_width: usize,
         word_parallel: bool,
-    ) -> Result<Vec<f32>> {
+        fault: Option<&FaultPlan>,
+    ) -> Result<(Vec<f32>, WaveStats)> {
         let Some(spec) = self.specs.get(name) else {
             bail!("unknown artifact `{name}`");
         };
@@ -332,20 +398,45 @@ impl InterpEngine {
         // registered spec matches its kernel's instance shape here.
         let live = live.min(spec.batch);
         let threads = if threads == 0 { default_row_threads() } else { threads };
+        // A no-op plan (all rates 0) degrades to the clean path: same
+        // bits by construction *and* zero instrumentation overhead.
+        let cuts = fault.and_then(|p| if p.is_noop() { None } else { Some(p.cutoffs()) });
         let mut out = vec![0.0f32; spec.batch];
+        let mut stats = WaveStats::default();
         if word_parallel {
-            let wave = Wave { name, spec, kernel, values, seed };
+            let wave = Wave { name, spec, kernel, values, seed, fault: cuts.as_ref() };
+            let ops = Mutex::new(OpCounters::default());
             // Monomorphized per lane width so every per-word loop
             // runs over a compile-time-sized array.
             match resolve_lane_width(lane_width, live, threads) {
-                64 => self.execute_blocks::<1>(&wave, &mut out[..live], threads)?,
-                128 => self.execute_blocks::<2>(&wave, &mut out[..live], threads)?,
-                _ => self.execute_blocks::<4>(&wave, &mut out[..live], threads)?,
+                64 => self.execute_blocks::<1>(&wave, &mut out[..live], threads, &ops)?,
+                128 => self.execute_blocks::<2>(&wave, &mut out[..live], threads, &ops)?,
+                _ => self.execute_blocks::<4>(&wave, &mut out[..live], threads, &ops)?,
+            }
+            stats.ops = ops.into_inner().expect("ops mutex poisoned");
+            if live > 0 {
+                // Eq 11 terms for this wave: every stage slot of every
+                // live lane is a utilized subarray row; the hottest
+                // cell takes one preset + one write per time step.
+                stats.wear = WearProfile {
+                    used_cells: (kernel.n_slots_total() * live) as u64,
+                    writes: stats.ops.write_total(),
+                    max_cell_writes: 2 * spec.bl.max(1) as u64,
+                };
             }
         } else {
-            self.execute_scalar_rows(name, spec, kernel, values, seed, &mut out[..live], threads)?;
+            self.execute_scalar_rows(
+                name,
+                spec,
+                kernel,
+                values,
+                seed,
+                &mut out[..live],
+                threads,
+                cuts.as_ref(),
+            )?;
         }
-        Ok(out)
+        Ok((out, stats))
     }
 
     /// Word-parallel wave at lane width `W`: split the live rows into
@@ -361,6 +452,7 @@ impl InterpEngine {
         wave: &Wave,
         out: &mut [f32],
         threads: usize,
+        ops: &Mutex<OpCounters>,
     ) -> Result<()> {
         let live = out.len();
         if live == 0 {
@@ -371,9 +463,14 @@ impl InterpEngine {
         let workers = threads.min(blocks).max(1);
         parallel_chunks(out, workers, blocks.div_ceil(workers) * block_rows, |start, sub| {
             let mut ws = BlockWorkspace::<W>::default();
+            // Worker-local Eq 4 counters, folded into the wave total
+            // once per worker — the per-block hot path never touches
+            // the mutex.
+            let mut local = OpCounters::default();
             for (bj, block_out) in sub.chunks_mut(block_rows).enumerate() {
-                self.eval_block(wave, start + bj * block_rows, block_out, &mut ws);
+                self.eval_block(wave, start + bj * block_rows, block_out, &mut ws, &mut local);
             }
+            ops.lock().expect("ops mutex poisoned").add(&local);
             Ok(())
         })
     }
@@ -396,6 +493,7 @@ impl InterpEngine {
         row0: usize,
         out: &mut [f32],
         ws: &mut BlockWorkspace<W>,
+        ops: &mut OpCounters,
     ) {
         let BlockWorkspace {
             rngs,
@@ -469,8 +567,42 @@ impl InterpEngine {
                     // BinaryBit inputs are rejected at plan compile.
                     _ => sng::sample_block(vals, bl, rngs, sng_ws, block),
                 }
+                // SNG-output fault site: flip the freshly generated
+                // stream's lane words in place, so the faulted bits
+                // feed the gates *and* any correlated reuse exactly as
+                // a flipped SBG cell would. Fault masks are stateless
+                // (no RNG draws), so the draw order above is untouched.
+                if let Some(cuts) = w.fault {
+                    let site = cuts.sng_site(si, i);
+                    for t in 0..bl {
+                        block.xor_word(t, cuts.mask_words::<W>(cuts.sng, site, row0, lanes, t));
+                    }
+                }
+                // Eq 4: one preset + one SBG write per generated cell
+                // (every live lane × every time step of this input).
+                ops.sbg_writes += (lanes * bl) as u64;
+                ops.presets += (lanes * bl) as u64;
             }
-            let outs = stage.plan.eval_lanes_into(&inputs[..stage.plan.n_inputs()], &mut plans[si]);
+            let outs = match w.fault {
+                Some(cuts) => stage.plan.eval_lanes_fault_into(
+                    &inputs[..stage.plan.n_inputs()],
+                    &mut plans[si],
+                    cuts,
+                    si,
+                    row0,
+                ),
+                None => stage.plan.eval_lanes_into(&inputs[..stage.plan.n_inputs()], &mut plans[si]),
+            };
+            // Eq 4: each instruction fires once per lane per time step
+            // — a preset of its output row, then the bitline-computed
+            // write — and each ADDIE island steps its accumulator.
+            let lane_bits = (lanes * bl) as u64;
+            let hist = stage.plan.gate_histogram();
+            for (g, h) in ops.gates.iter_mut().zip(hist) {
+                *g += h * lane_bits;
+            }
+            ops.presets += hist.iter().sum::<u64>() * lane_bits;
+            ops.addie_steps += stage.plan.addie_count() as u64 * lane_bits;
             // Vertical-counter StoB readout for every stage output:
             // all lanes' counts without leaving the lane-major domain.
             let sv = &mut stage_vals[si];
@@ -479,6 +611,7 @@ impl InterpEngine {
                 ob.lane_popcounts_into(planes, counts);
                 // Same arithmetic as Bitstream::value().
                 sv.extend(counts.iter().map(|&c| c as f64 / bl as f64));
+                ops.stob_reads += lane_bits;
             }
         }
         let (rs, ro) = w.kernel.result();
@@ -501,6 +634,7 @@ impl InterpEngine {
         seed: i32,
         out: &mut [f32],
         threads: usize,
+        fault: Option<&FaultCutoffs>,
     ) -> Result<()> {
         let live = out.len();
         if live == 0 {
@@ -514,7 +648,12 @@ impl InterpEngine {
                 let row = start + j;
                 clamp_instance_into(values, spec.n_inputs, row, &mut x);
                 let mut rng = row_rng(seed, name, row);
-                *slot = kernel.eval_row_scalar(&x, bl, &mut rng) as f32;
+                *slot = match fault {
+                    Some(cuts) => {
+                        kernel.eval_row_scalar_fault(&x, bl, &mut rng, cuts, row as u64) as f32
+                    }
+                    None => kernel.eval_row_scalar(&x, bl, &mut rng) as f32,
+                };
             }
             Ok(())
         })
@@ -832,6 +971,51 @@ mod tests {
             // small, hence the long streams and looser bound.
             assert!((*o as f64 - f).abs() < 0.15, "hdp got {o} want {f}");
         }
+    }
+
+    #[test]
+    fn instrumented_wave_counts_ops_and_matches_clean_bits() {
+        // op_multiply is one AND over two generated inputs: per live
+        // lane per time step that is 2 SBG writes, 1 gate fire, 1 StoB
+        // read, and 3 presets — exact Eq 4 counters for the wave.
+        let e = engine_with("op_multiply 2 70 512\n", "instr");
+        let mut values = vec![0.0f32; 70 * 2];
+        for (i, v) in values.iter_mut().enumerate() {
+            *v = 0.05 + 0.9 * ((i * 37) % 89) as f32 / 89.0;
+        }
+        let clean = e.execute_rows("op_multiply", &values, 5, 70, 2).unwrap();
+        // A rate-0 plan degrades to the clean path bit for bit — but
+        // the counters still run.
+        let zero = FaultPlan::uniform(0.0, 9);
+        let (out, stats) = e
+            .execute_rows_instrumented("op_multiply", &values, 5, 70, 2, 0, Some(&zero))
+            .unwrap();
+        assert_eq!(clean, out, "rate-0 plan must not disturb the wave");
+        let lb = 70u64 * 512;
+        assert_eq!(stats.ops.sbg_writes, 2 * lb);
+        assert_eq!(stats.ops.gate_total(), lb);
+        assert_eq!(stats.ops.stob_reads, lb);
+        assert_eq!(stats.ops.presets, 3 * lb);
+        assert_eq!(stats.ops.addie_steps, 0);
+        assert_eq!(stats.wear.writes, stats.ops.write_total());
+        assert_eq!(stats.wear.max_cell_writes, 2 * 512);
+        assert!(stats.wear.used_cells >= 3 * 70, "≥ one slot per node per lane");
+        // Counters are wave-invariants: same totals for any worker
+        // split or lane width.
+        let (_, again) = e
+            .execute_rows_instrumented("op_multiply", &values, 5, 70, 5, 64, None)
+            .unwrap();
+        assert_eq!(stats, again);
+        // A live plan flips bits — and the faulted lane path stays
+        // bit-identical to the faulted scalar golden reference.
+        let plan = FaultPlan::uniform(0.05, 9);
+        let (faulty, _) = e
+            .execute_rows_instrumented("op_multiply", &values, 5, 70, 2, 0, Some(&plan))
+            .unwrap();
+        assert_ne!(clean, faulty, "5% flips must disturb outputs");
+        let golden =
+            e.execute_rows_scalar_fault("op_multiply", &values, 5, 70, 1, &plan).unwrap();
+        assert_eq!(faulty, golden, "faulty lane path vs faulty scalar reference");
     }
 
     #[test]

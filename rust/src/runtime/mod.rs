@@ -39,13 +39,14 @@ compile_error!(
 
 pub use artifacts::{load_manifest, ArtifactSpec};
 pub use interp::{
-    default_row_threads, lane_width_override, row_threads_override, InterpEngine,
+    default_row_threads, lane_width_override, row_threads_override, InterpEngine, WaveStats,
 };
 
 use std::path::Path;
 
 use crate::bail;
 use crate::error::Result;
+use crate::fault::FaultPlan;
 
 /// A loaded execution backend over one artifact directory.
 pub enum Engine {
@@ -149,6 +150,34 @@ impl Engine {
             Engine::Pjrt(e) => {
                 let _ = (threads, lane_width);
                 e.execute(name, values, seed, live)
+            }
+        }
+    }
+
+    /// [`Engine::execute_rows_wide`] with reliability instrumentation:
+    /// the interpreter injects the optional [`FaultPlan`]'s stateless
+    /// masks at the paper's SNG/gate/StoB sites and returns the wave's
+    /// Eq 4 / Eq 11 [`WaveStats`] alongside the outputs. PJRT executes
+    /// clean and reports empty stats (no circuit model to instrument).
+    #[allow(clippy::too_many_arguments)]
+    pub fn execute_rows_instrumented(
+        &self,
+        name: &str,
+        values: &[f32],
+        seed: i32,
+        live: usize,
+        threads: usize,
+        lane_width: usize,
+        fault: Option<&FaultPlan>,
+    ) -> Result<(Vec<f32>, WaveStats)> {
+        match self {
+            Engine::Interp(e) => {
+                e.execute_rows_instrumented(name, values, seed, live, threads, lane_width, fault)
+            }
+            #[cfg(all(feature = "xla-runtime", xla_available))]
+            Engine::Pjrt(e) => {
+                let _ = (threads, lane_width, fault);
+                Ok((e.execute(name, values, seed, live)?, WaveStats::default()))
             }
         }
     }

@@ -163,6 +163,19 @@ impl<const W: usize> LaneBlock<W> {
         self.words[t] = std::array::from_fn(|k| w[k] & m[k]);
     }
 
+    /// XOR a fault mask into time step `t`, masked to live lanes — the
+    /// lane-word fault-injection primitive (`fault::FaultCutoffs`
+    /// builds `mask`; dead lanes must stay zero for exact ragged-block
+    /// popcounts, so the mask is clipped like [`LaneBlock::set_word`]).
+    #[inline]
+    pub fn xor_word(&mut self, t: usize, mask: [u64; W]) {
+        let m = self.lane_mask();
+        let w = &mut self.words[t];
+        for k in 0..W {
+            w[k] ^= mask[k] & m[k];
+        }
+    }
+
     /// Transpose back into one time-major [`Bitstream`] per live lane —
     /// the inverse of [`LaneBlock::from_rows`]. Test/debug conversion;
     /// the wave hot path reads outputs with the vertical counter
@@ -342,6 +355,18 @@ mod tests {
         let counts = m.lane_popcounts();
         assert_eq!(counts.len(), 130);
         assert!(counts.iter().all(|&c| c == 5));
+    }
+
+    #[test]
+    fn xor_word_flips_live_lanes_only() {
+        let mut m = LaneBlock::<2>::zeros(3, 70);
+        m.set_word(1, [u64::MAX; 2]);
+        m.xor_word(1, [0b101, u64::MAX]);
+        // Live lanes flipped; dead lanes (≥70) stayed zero.
+        assert_eq!(m.word(1), [u64::MAX ^ 0b101, 0]);
+        m.xor_word(0, [u64::MAX; 2]);
+        assert_eq!(m.word(0), [u64::MAX, (1u64 << 6) - 1]);
+        assert_eq!(m.lane_popcount(69), 1);
     }
 
     #[test]

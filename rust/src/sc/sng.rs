@@ -30,6 +30,13 @@
 //! [`Bitstream::from_uniforms`]). Callers replay inputs in netlist
 //! node-id order, so the interleaving across inputs matches too.
 //!
+//! Fault injection (the paper's SNG-output flip site) happens strictly
+//! *downstream* of this module: the executor XORs stateless
+//! [`FaultCutoffs`](crate::fault::FaultCutoffs) masks into the
+//! generated lane words after the comparison, so a faulty campaign
+//! consumes the exact same PRNG draws as a clean one and the draw-order
+//! contract above is never disturbed.
+//!
 //! [`Bitstream::sample`]: crate::sc::bitstream::Bitstream::sample
 //! [`Bitstream::from_uniforms`]: crate::sc::bitstream::Bitstream::from_uniforms
 

@@ -13,6 +13,7 @@ use std::sync::{Arc, Mutex};
 use crate::coordinator::batcher::BatcherConfig;
 use crate::coordinator::metrics::Metrics;
 use crate::error::Result;
+use crate::fault::FaultPlan;
 use crate::runtime::Engine;
 use crate::util::prng::fnv1a;
 
@@ -53,6 +54,7 @@ impl BankPool {
         queue_depth: usize,
         row_threads: usize,
         lane_width: usize,
+        fault: Option<FaultPlan>,
     ) -> Result<Self> {
         let mut names: Vec<String> = specs.keys().cloned().collect();
         names.sort();
@@ -77,7 +79,7 @@ impl BankPool {
             64 | 128 | 256 => lane_width,
             _ => crate::runtime::lane_width_override().unwrap_or(0),
         };
-        let knobs = WaveKnobs { row_threads, lane_width };
+        let knobs = WaveKnobs { row_threads, lane_width, fault };
         let metrics: Arc<Mutex<HashMap<String, Metrics>>> = Arc::default();
         let mut pool_shards = Vec::with_capacity(n);
         for id in 0..n {

@@ -11,6 +11,7 @@ use crate::bail;
 use crate::coordinator::batcher::BatcherConfig;
 use crate::coordinator::metrics::Metrics;
 use crate::error::{Context, Result};
+use crate::fault::FaultPlan;
 use crate::runtime::Engine;
 
 use super::pool::BankPool;
@@ -49,6 +50,13 @@ pub struct ServerConfig {
     /// Purely a throughput knob: outputs are bit-identical at every
     /// width.
     pub lane_width: usize,
+    /// Fault-injection plan every wave executes under (`None` = clean
+    /// serving, the default). With a live plan the executor XORs
+    /// stateless fault masks into the lane words at the paper's three
+    /// sites (SNG output, gate output, StoB read) — the `faults`
+    /// campaign drives Table-4-style accuracy-vs-flip-rate sweeps
+    /// through the full serving stack with this knob.
+    pub fault: Option<FaultPlan>,
 }
 
 impl Default for ServerConfig {
@@ -59,6 +67,7 @@ impl Default for ServerConfig {
             batcher: BatcherConfig::default(),
             row_threads: 0,
             lane_width: 0,
+            fault: None,
         }
     }
 }
@@ -96,6 +105,7 @@ impl Server {
             cfg.queue_depth,
             cfg.row_threads,
             cfg.lane_width,
+            cfg.fault,
         )?;
         Ok(Self { pool, specs })
     }

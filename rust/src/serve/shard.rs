@@ -19,6 +19,7 @@ use crate::bail;
 use crate::coordinator::batcher::{Batcher, BatcherConfig, Pending};
 use crate::coordinator::metrics::Metrics;
 use crate::error::{Context, Result};
+use crate::fault::FaultPlan;
 use crate::runtime::Engine;
 
 /// Per-wave execution knobs, resolved once at pool start (env
@@ -29,6 +30,9 @@ pub(crate) struct WaveKnobs {
     pub row_threads: usize,
     /// Rows per lane block (64/128/256; 0 = auto per wave).
     pub lane_width: usize,
+    /// Fault-injection plan applied to every wave (`None` = clean
+    /// serving; a no-op plan is equally free).
+    pub fault: Option<FaultPlan>,
 }
 
 /// Messages accepted by a shard's admission queue.
@@ -184,15 +188,16 @@ fn execute_wave(
     let wave = b.drain();
     *seed = seed.wrapping_mul(0x343FD).wrapping_add(0x269EC3);
     let t0 = Instant::now();
-    match engine.execute_rows_wide(
+    match engine.execute_rows_instrumented(
         app,
         &wave.values,
         *seed,
         wave.responders.len(),
         knobs.row_threads,
         knobs.lane_width,
+        knobs.fault.as_ref(),
     ) {
-        Ok(outs) => {
+        Ok((outs, stats)) => {
             let dt = t0.elapsed();
             for (i, r) in wave.responders.iter().enumerate() {
                 let _ = r.send(outs[i]);
@@ -200,6 +205,7 @@ fn execute_wave(
             if let Ok(mut m) = metrics.lock() {
                 let e = m.entry(app.to_string()).or_default();
                 e.record_wave(wave.responders.len(), wave.padded, dt);
+                e.record_stats(&stats);
                 for _ in 0..wave.responders.len() {
                     e.record_latency(dt);
                 }

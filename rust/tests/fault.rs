@@ -1,0 +1,262 @@
+//! Differential reliability suite for the instrumented lane-major
+//! engine: the fault/energy/wear models must never perturb clean
+//! execution and must agree exactly between the scalar golden path and
+//! the word-parallel path.
+//!
+//! Four pins, one per satellite of the reliability PR:
+//!
+//! * A rate-0.0 [`FaultPlan`] is **bit-identical** to the uninstrumented
+//!   paths for every registered artifact, lane width, and worker count
+//!   (the plan degrades to the literal clean code path via `is_noop`).
+//! * A live plan through the lane engine matches the faulty scalar
+//!   reference exactly at a fixed seed — the stateless counter-based
+//!   masks are order-independent, so the gate-major scalar evaluator
+//!   and the time-major lane evaluator flip the same bits.
+//! * The mask generator is statistically honest: empirical flip rates
+//!   track the configured per-bit rate within a derived sigma bound,
+//!   and the word generator agrees bit-for-bit with the scalar one.
+//! * The executor's dynamic `OpCounters` reproduce the static
+//!   `scheduler::Schedule` firing counts (Eq 4) for the six
+//!   single-stage ops: same gates, same SBG writes, same presets —
+//!   modulo the alignment copies only the spatial scheduler inserts.
+
+use std::collections::HashMap;
+
+use stoch_imc::energy::EnergyParams;
+use stoch_imc::fault::FaultPlan;
+use stoch_imc::netlist::{ops, GateKind, Netlist};
+use stoch_imc::runtime::InterpEngine;
+use stoch_imc::scheduler::{schedule, Options};
+use stoch_imc::util::prng::{fnv1a, Xoshiro256};
+
+/// Batch dimension for every artifact — large enough for multi-block
+/// waves with a ragged tail at every lane width (see
+/// `tests/wordparallel.rs`).
+const BATCH: usize = 200;
+
+/// Every lane width the engine monomorphizes, plus 0 = auto sizing.
+const WIDTHS: [usize; 4] = [64, 128, 256, 0];
+
+const THREADS: [usize; 3] = [1, 3, 16];
+
+/// All ten registered artifacts: six ops, two single-stage apps, two
+/// staged pipelines (whose in-lane StoB→BtoS regeneration must carry
+/// fault masks across stage boundaries too).
+const ARTIFACTS: [&str; 10] = [
+    "op_multiply",
+    "op_scaled_add",
+    "op_abs_subtract",
+    "op_scaled_divide",
+    "op_square_root",
+    "op_exponential",
+    "app_ol",
+    "app_hdp",
+    "app_lit",
+    "app_kde",
+];
+
+fn engine(bl: usize, tag: &str) -> InterpEngine {
+    let dir = std::env::temp_dir().join(format!("stoch_imc_fault_{tag}_{bl}"));
+    std::fs::create_dir_all(&dir).unwrap();
+    let manifest = format!(
+        "op_multiply 2 {b} {bl}\nop_scaled_add 2 {b} {bl}\nop_abs_subtract 2 {b} {bl}\n\
+         op_scaled_divide 2 {b} {bl}\nop_square_root 1 {b} {bl}\nop_exponential 1 {b} {bl}\n\
+         app_ol 6 {b} {bl}\napp_hdp 8 {b} {bl}\napp_lit 64 {b} {bl}\napp_kde 9 {b} {bl}\n",
+        b = BATCH,
+    );
+    std::fs::write(dir.join("manifest.txt"), manifest).unwrap();
+    InterpEngine::load(&dir).expect("fault-suite engine load")
+}
+
+/// Random full-batch instance values, deterministic per (artifact,
+/// seed) so failures reproduce.
+fn values_for(e: &InterpEngine, name: &str, seed: i32) -> Vec<f32> {
+    let n = e.spec(name).unwrap().n_inputs;
+    let mut rng = Xoshiro256::seeded(fnv1a(name) ^ seed as u32 as u64);
+    (0..BATCH * n).map(|_| rng.next_f64() as f32).collect()
+}
+
+/// Satellite: a rate-0.0 plan must be bit-identical to the
+/// uninstrumented paths everywhere — word-parallel at every lane width
+/// and worker count, and the scalar golden path.
+#[test]
+fn rate_zero_plan_is_bit_identical_to_clean_paths() {
+    let e = engine(100, "zero");
+    let plan = FaultPlan::uniform(0.0, 0xDEAD_BEEF);
+    assert!(plan.is_noop(), "rate-0 plan must degrade to the clean path");
+    for (i, name) in ARTIFACTS.iter().enumerate() {
+        let seed = 900 + i as i32;
+        let values = values_for(&e, name, seed);
+        let live = 130; // ragged at width 64 and 128, partial at 256
+        for width in WIDTHS {
+            for threads in THREADS {
+                let clean = e.execute_rows_wide(name, &values, seed, live, threads, width).unwrap();
+                let (faulted, _) = e
+                    .execute_rows_instrumented(name, &values, seed, live, threads, width, Some(&plan))
+                    .unwrap();
+                assert_eq!(
+                    clean, faulted,
+                    "rate-0 diverged: artifact={name} width={width} threads={threads}"
+                );
+            }
+        }
+        let golden = e.execute_rows_scalar(name, &values, seed, live, 1).unwrap();
+        let scalar_faulted =
+            e.execute_rows_scalar_fault(name, &values, seed, live, 1, &plan).unwrap();
+        assert_eq!(golden, scalar_faulted, "rate-0 diverged on scalar path: artifact={name}");
+    }
+}
+
+/// Tentpole pin: with a live plan the word-parallel path must match the
+/// faulty scalar reference exactly — same masks at the same (site, row,
+/// t) coordinates regardless of evaluation order, lane width, or worker
+/// count — and must actually differ from the clean run.
+#[test]
+fn faulty_lane_path_matches_faulty_scalar_reference() {
+    let e = engine(100, "diff");
+    let plan = FaultPlan::uniform(0.08, 0x5EED_FA11);
+    for (i, name) in ARTIFACTS.iter().enumerate() {
+        let seed = 40 + i as i32;
+        let values = values_for(&e, name, seed);
+        let live = if i % 2 == 0 { 65 } else { 130 };
+        let golden = e.execute_rows_scalar_fault(name, &values, seed, live, 1, &plan).unwrap();
+        for width in WIDTHS {
+            for threads in THREADS {
+                let (word, _) = e
+                    .execute_rows_instrumented(name, &values, seed, live, threads, width, Some(&plan))
+                    .unwrap();
+                assert_eq!(
+                    golden, word,
+                    "faulty paths diverged: artifact={name} width={width} threads={threads}"
+                );
+            }
+        }
+        let clean = e.execute_rows_scalar(name, &values, seed, live, 1).unwrap();
+        assert_ne!(golden, clean, "8% flip rate left `{name}` outputs untouched");
+    }
+}
+
+/// Satellite: the stateless mask generator is statistically honest —
+/// over a large (lanes × bl) grid the empirical flip rate lands within
+/// 5σ of the configured per-bit rate (σ = √(r(1−r)/N), pinned seeds) —
+/// and the word generator agrees bit-for-bit with the scalar one.
+#[test]
+fn mask_flip_rate_tracks_configured_rate() {
+    let lanes = 256usize;
+    let bl = 4096usize;
+    let n = (lanes * bl) as f64;
+    for &(rate, seed) in &[(0.05f64, 0xA1u64), (0.15, 0xB2), (0.5, 0xC3)] {
+        let cuts = FaultPlan::uniform(rate, seed).cutoffs();
+        let site = cuts.gate_site(0, 3);
+        let mut ones = 0u64;
+        for t in 0..bl {
+            let words = cuts.mask_words::<4>(cuts.gate, site, 0, lanes, t);
+            ones += words.iter().map(|w| w.count_ones() as u64).sum::<u64>();
+        }
+        let p = ones as f64 / n;
+        let sigma = (rate * (1.0 - rate) / n).sqrt();
+        assert!(
+            (p - rate).abs() < 5.0 * sigma,
+            "rate={rate}: empirical {p} off by more than 5σ ({sigma})"
+        );
+        // Word and scalar generators must be the same function of
+        // (site, row, t): the lane/scalar differential rests on this.
+        for t in [0usize, 63, 1000] {
+            let words = cuts.mask_words::<4>(cuts.gate, site, 0, lanes, t);
+            for lane in 0..lanes {
+                let word_bit = (words[lane / 64] >> (lane % 64)) & 1 == 1;
+                let scalar_bit = cuts.mask_bit(cuts.gate, site, lane as u64, t as u64);
+                assert_eq!(word_bit, scalar_bit, "rate={rate} lane={lane} t={t}");
+            }
+        }
+    }
+    // Degenerate cutoffs: rate 0 flips nothing, rate 1 flips everything.
+    let cuts0 = FaultPlan::uniform(0.0, 7).cutoffs();
+    assert_eq!(cuts0.mask_words::<1>(cuts0.sng, cuts0.sng_site(0, 0), 0, 64, 9), [0u64]);
+    let cuts1 = FaultPlan::uniform(1.0, 7).cutoffs();
+    assert_eq!(cuts1.mask_words::<1>(cuts1.gate, cuts1.gate_site(0, 0), 0, 64, 9), [u64::MAX]);
+}
+
+/// Satellite: the executor's dynamic per-wave `OpCounters` must
+/// reproduce the static `scheduler::Schedule` firing counts (Eq 4) for
+/// each single-stage op. The only legitimate difference is the
+/// scheduler's alignment copies (Buff ops with no netlist node): the
+/// lane engine never materializes them, so its Buff firings and preset
+/// count are lower by exactly `copy_count` per lane-bit.
+#[test]
+fn executor_counters_match_static_schedule_eq4() {
+    let live = 100usize;
+    let bl = 64usize;
+    let lane_bits = (live * bl) as u64;
+    let e = engine(bl, "energy");
+    let cases: Vec<(&str, Netlist)> = vec![
+        ("op_multiply", ops::multiply()),
+        ("op_scaled_add", ops::scaled_add()),
+        ("op_abs_subtract", ops::abs_subtract()),
+        ("op_scaled_divide", ops::scaled_divide()),
+        ("op_square_root", ops::square_root(ops::ADDIE_BITS_APP)),
+        ("op_exponential", ops::exponential()),
+    ];
+    for (name, nl) in cases {
+        let sched = schedule(&nl, &Options::default());
+        let values = values_for(&e, name, 5);
+        let (_, stats) = e.execute_rows_instrumented(name, &values, 5, live, 3, 0, None).unwrap();
+        let dynamic = stats.ops;
+
+        let hist: HashMap<GateKind, usize> = sched.op_histogram();
+        for kind in GateKind::ALL {
+            let mut firings = *hist.get(&kind).unwrap_or(&0) as u64;
+            if kind == GateKind::Buff {
+                firings -= sched.copy_count as u64;
+            }
+            assert_eq!(
+                dynamic.gates[kind.index()],
+                firings * lane_bits,
+                "{name}: {kind:?} firings disagree with the static schedule"
+            );
+        }
+        assert_eq!(
+            dynamic.sbg_writes,
+            sched.sbg_count as u64 * lane_bits,
+            "{name}: SBG writes disagree with the schedule's stochastic input cells"
+        );
+        assert_eq!(
+            dynamic.presets,
+            (sched.preset_count() - sched.copy_count) as u64 * lane_bits,
+            "{name}: presets disagree (schedule presets minus alignment copies)"
+        );
+        // ADDIE macros are counted apart from gates on both sides: the
+        // schedule charges `addie_cycles` with no step ops, the
+        // executor counts one `addie_steps` per macro per lane-bit.
+        let n_addie = if name == "op_square_root" { 1 } else { 0 };
+        assert_eq!(dynamic.addie_steps, n_addie * lane_bits, "{name}: ADDIE step count");
+        assert_eq!(dynamic.stob_reads, lane_bits, "{name}: one StoB read per lane-bit");
+
+        // Priced through Eq 4 the counters yield a positive, finite
+        // energy with live logic and input-init shares.
+        let br = dynamic.energy(&EnergyParams::default());
+        assert!(br.total().is_finite() && br.total() > 0.0, "{name}: Eq 4 energy");
+        assert!(br.logic > 0.0 && br.input_init > 0.0, "{name}: Eq 4 shares");
+    }
+}
+
+/// Wear accounting rides the same instrumented path: a wave's profile
+/// must charge `writes == OpCounters::write_total()` against a
+/// `2·BL`-per-pass endurance budget, and scale its utilized cells with
+/// the live row count.
+#[test]
+fn wave_wear_profile_tracks_counters_and_live_rows() {
+    let bl = 64usize;
+    let e = engine(bl, "wear");
+    let values = values_for(&e, "op_multiply", 11);
+    let (_, small) = e.execute_rows_instrumented("op_multiply", &values, 11, 10, 1, 0, None).unwrap();
+    let (_, large) =
+        e.execute_rows_instrumented("op_multiply", &values, 11, 100, 1, 0, None).unwrap();
+    for stats in [&small, &large] {
+        assert_eq!(stats.wear.writes, stats.ops.write_total());
+        assert_eq!(stats.wear.max_cell_writes, 2 * bl as u64);
+    }
+    assert_eq!(large.wear.used_cells, 10 * small.wear.used_cells);
+    assert_eq!(large.wear.writes, 10 * small.wear.writes);
+    assert!(small.wear.merit().unwrap() > 0.0);
+}
