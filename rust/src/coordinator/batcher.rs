@@ -34,6 +34,9 @@ pub struct Batch {
     pub values: Vec<f32>,
     /// Response channels for the live (non-padding) rows.
     pub responders: Vec<Sender<f32>>,
+    /// Submit timestamps aligned with `responders` — the executor turns
+    /// these into queue-wait samples (submit → wave start).
+    pub enqueued: Vec<Instant>,
     pub padded: usize,
 }
 
@@ -62,9 +65,15 @@ impl Batcher {
         self.pending.is_empty()
     }
 
+    /// Whether a full wave is pending — when [`Batcher::ready`] holds,
+    /// this separates the capacity close from the deadline close.
+    pub fn is_full(&self) -> bool {
+        self.pending.len() >= self.cfg.batch
+    }
+
     /// Whether a wave should close now.
     pub fn ready(&self, now: Instant) -> bool {
-        if self.pending.len() >= self.cfg.batch {
+        if self.is_full() {
             return true;
         }
         match self.pending.first() {
@@ -79,12 +88,14 @@ impl Batcher {
         let live: Vec<Pending> = self.pending.drain(..take).collect();
         let mut values = vec![0.0f32; self.cfg.batch * self.n_inputs];
         let mut responders = Vec::with_capacity(live.len());
+        let mut enqueued = Vec::with_capacity(live.len());
         for (i, p) in live.into_iter().enumerate() {
             values[i * self.n_inputs..(i + 1) * self.n_inputs].copy_from_slice(&p.inputs);
             responders.push(p.respond);
+            enqueued.push(p.enqueued);
         }
         let padded = self.cfg.batch - responders.len();
-        Batch { values, responders, padded }
+        Batch { values, responders, enqueued, padded }
     }
 }
 

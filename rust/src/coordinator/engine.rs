@@ -58,4 +58,9 @@ impl Coordinator {
     pub fn metrics(&self, app: &str) -> Metrics {
         self.server.metrics(app)
     }
+
+    /// Flat exposition snapshot (see [`Server::snapshot`]).
+    pub fn snapshot(&self) -> crate::obs::MetricsSnapshot {
+        self.server.snapshot()
+    }
 }

@@ -1,26 +1,65 @@
 //! Coordinator metrics: waves, padding waste, latency and throughput —
 //! plus the reliability instrumentation the executor streams back per
-//! wave (Eq 4 operation counters, Eq 11 wear).
+//! wave (Eq 4 operation counters, Eq 11 wear) and the observability
+//! layer (fixed-memory latency / queue-wait / queue-depth / wave-size
+//! histograms, per-stage span timing, admission-control counters).
+//!
+//! All distributions live in bounded-memory [`Histogram`]s: recording
+//! is O(1), merging across shards is exact, and percentile queries
+//! carry a ≤ 1/32 relative-error bound — `Metrics` no longer buffers
+//! per-sample vectors no matter how much traffic flows through.
 
 use std::time::Duration;
 
 use crate::energy::{EnergyBreakdown, EnergyParams, OpCounters};
 use crate::lifetime::WearProfile;
+use crate::obs::{Histogram, MetricsSnapshot, StageSpans};
 use crate::runtime::WaveStats;
+
+/// Why a wave left the batcher — admission-control telemetry that
+/// separates saturated shards (full waves) from latency-bound ones
+/// (deadline drains) and shutdown flushes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WaveClose {
+    /// The wave filled every row slot before the deadline.
+    Full,
+    /// `max_wait` expired on the oldest pending request.
+    Deadline,
+    /// Explicit flush/shutdown drained a partial wave.
+    Flush,
+}
 
 #[derive(Debug, Clone, Default)]
 pub struct Metrics {
     pub requests: u64,
     pub waves: u64,
+    /// Waves closed because every row slot filled.
+    pub waves_full: u64,
+    /// Waves closed by the batcher deadline.
+    pub waves_deadline: u64,
+    /// Waves closed by an explicit flush or shutdown drain.
+    pub waves_flush: u64,
     pub padded_slots: u64,
     pub exec_time: Duration,
     pub total_time: Duration,
+    /// Submissions that blocked on a full admission queue.
+    pub backpressure_blocks: u64,
+    /// `try_submit` requests shed on a full admission queue.
+    pub shed: u64,
     /// Eq 4 operation counters summed over every wave recorded here
     /// (price with [`Metrics::energy`]).
     pub ops: OpCounters,
     /// Eq 11 wear of the subarray rows these waves kept re-writing.
     pub wear: WearProfile,
-    latencies_us: Vec<u64>,
+    /// Wall-clock attributed per engine stage (SNG/gate/regen/StoB),
+    /// summed across workers — shares are the meaningful signal.
+    pub spans: StageSpans,
+    latency: Histogram,
+    queue_wait: Histogram,
+    queue_depth: Histogram,
+    wave_sizes: Histogram,
+    #[cfg(test)]
+    exact_latencies_us: Vec<u64>,
 }
 
 impl Metrics {
@@ -29,35 +68,73 @@ impl Metrics {
         self.waves += 1;
         self.padded_slots += padded as u64;
         self.exec_time += exec;
+        self.wave_sizes.record(live as u64);
     }
 
     pub fn record_latency(&mut self, d: Duration) {
-        self.latencies_us.push(d.as_micros() as u64);
+        self.latency.record(d.as_micros() as u64);
+        #[cfg(test)]
+        self.exact_latencies_us.push(d.as_micros() as u64);
     }
 
-    /// Fold one executed wave's instrumentation in: counters sum; wear
-    /// *absorbs* — every wave of the same app re-writes the same
-    /// subarray rows, so capacity is a max while traffic accumulates.
+    /// Time a request spent between submission and wave execution
+    /// (admission channel + batcher residence).
+    pub fn record_queue_wait(&mut self, d: Duration) {
+        self.queue_wait.record(d.as_micros() as u64);
+    }
+
+    /// Admission-queue depth observed at an enqueue or dequeue edge.
+    pub fn record_queue_depth(&mut self, depth: u64) {
+        self.queue_depth.record(depth);
+    }
+
+    /// Count why a wave was closed out of the batcher.
+    pub fn record_drain(&mut self, close: WaveClose) {
+        match close {
+            WaveClose::Full => self.waves_full += 1,
+            WaveClose::Deadline => self.waves_deadline += 1,
+            WaveClose::Flush => self.waves_flush += 1,
+        }
+    }
+
+    /// Fold one executed wave's instrumentation in: counters and spans
+    /// sum; wear *absorbs* — every wave of the same app re-writes the
+    /// same subarray rows, so capacity is a max while traffic
+    /// accumulates.
     pub fn record_stats(&mut self, stats: &WaveStats) {
         self.ops.add(&stats.ops);
         self.wear.absorb_wave(&stats.wear);
+        self.spans.add(&stats.spans);
     }
 
     /// Fold another metrics snapshot into this one — the pool-wide
-    /// aggregation across apps/shards. Latency samples concatenate, so
-    /// percentiles stay exact; `total_time` sums wall-clock per app
-    /// (shards overlap in time, so the pool total is an upper bound).
-    /// Wear merges as *disjoint* banks: capacity and traffic sum, the
-    /// pool's hottest cell is the max of the parts.
+    /// aggregation across apps/shards. Histograms merge exactly
+    /// (bucket tables add), so pool percentiles equal those of the
+    /// concatenated sample streams within bucket resolution;
+    /// `total_time` sums wall-clock per app (shards overlap in time,
+    /// so the pool total is an upper bound). Wear merges as *disjoint*
+    /// banks: capacity and traffic sum, the pool's hottest cell is the
+    /// max of the parts.
     pub fn merge(&mut self, other: &Metrics) {
         self.requests += other.requests;
         self.waves += other.waves;
+        self.waves_full += other.waves_full;
+        self.waves_deadline += other.waves_deadline;
+        self.waves_flush += other.waves_flush;
         self.padded_slots += other.padded_slots;
         self.exec_time += other.exec_time;
         self.total_time += other.total_time;
+        self.backpressure_blocks += other.backpressure_blocks;
+        self.shed += other.shed;
         self.ops.add(&other.ops);
         self.wear.merge(&other.wear);
-        self.latencies_us.extend_from_slice(&other.latencies_us);
+        self.spans.add(&other.spans);
+        self.latency.merge(&other.latency);
+        self.queue_wait.merge(&other.queue_wait);
+        self.queue_depth.merge(&other.queue_depth);
+        self.wave_sizes.merge(&other.wave_sizes);
+        #[cfg(test)]
+        self.exact_latencies_us.extend_from_slice(&other.exact_latencies_us);
     }
 
     /// Executor-side Eq 4 energy of everything recorded here.
@@ -82,25 +159,91 @@ impl Metrics {
         self.padded_slots as f64 / total as f64
     }
 
-    /// Latency percentile in microseconds (p in [0,100]).
+    /// Request-latency percentile in microseconds (`p` clamped into
+    /// `[0, 100]`; `p≤0`/`p≥100` give the exact min/max, interior
+    /// percentiles carry the histogram's ≤ 1/32 relative-error bound).
     pub fn latency_us(&self, p: f64) -> u64 {
-        if self.latencies_us.is_empty() {
+        self.latency.percentile(p)
+    }
+
+    /// Queue-wait percentile in microseconds (same conventions as
+    /// [`Metrics::latency_us`]).
+    pub fn queue_wait_us(&self, p: f64) -> u64 {
+        self.queue_wait.percentile(p)
+    }
+
+    /// Queue-depth percentile in requests.
+    pub fn queue_depth(&self, p: f64) -> u64 {
+        self.queue_depth.percentile(p)
+    }
+
+    /// Exact nearest-rank percentile over the raw sample list — test
+    /// oracle for the histogram's error bound; the per-sample buffer
+    /// exists only under `cfg(test)`.
+    #[cfg(test)]
+    pub fn exact_latency_us(&self, p: f64) -> u64 {
+        if self.exact_latencies_us.is_empty() {
             return 0;
         }
-        let mut v = self.latencies_us.clone();
+        let mut v = self.exact_latencies_us.clone();
         v.sort_unstable();
+        let p = p.clamp(0.0, 100.0);
         let idx = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
         v[idx]
     }
 
+    /// Export every counter, percentile and stage share into `out`
+    /// under `serve_<scope>_*` keys. Every key is emitted even when
+    /// zero, so consumers (and `stats --check`) see a stable schema.
+    pub fn snapshot_into(&self, scope: &str, out: &mut MetricsSnapshot) {
+        let pre = format!("serve_{scope}_");
+        let mut put = |suffix: &str, v: f64| out.push(format!("{pre}{suffix}"), v);
+        put("requests", self.requests as f64);
+        put("waves", self.waves as f64);
+        put("waves_full", self.waves_full as f64);
+        put("waves_deadline", self.waves_deadline as f64);
+        put("waves_flush", self.waves_flush as f64);
+        put("padded_slots", self.padded_slots as f64);
+        put("padding_waste_pct", 100.0 * self.padding_waste());
+        put("throughput_rps", self.throughput());
+        put("backpressure_blocks", self.backpressure_blocks as f64);
+        put("shed_total", self.shed as f64);
+        put("latency_us_p50", self.latency.percentile(50.0) as f64);
+        put("latency_us_p90", self.latency.percentile(90.0) as f64);
+        put("latency_us_p95", self.latency.percentile(95.0) as f64);
+        put("latency_us_p99", self.latency.percentile(99.0) as f64);
+        put("latency_us_p999", self.latency.percentile(99.9) as f64);
+        put("latency_us_mean", self.latency.mean());
+        put("latency_us_max", self.latency.max() as f64);
+        put("queue_wait_us_p50", self.queue_wait.percentile(50.0) as f64);
+        put("queue_wait_us_p95", self.queue_wait.percentile(95.0) as f64);
+        put("queue_wait_us_p99", self.queue_wait.percentile(99.0) as f64);
+        put("queue_wait_us_max", self.queue_wait.max() as f64);
+        put("queue_depth_p50", self.queue_depth.percentile(50.0) as f64);
+        put("queue_depth_p95", self.queue_depth.percentile(95.0) as f64);
+        put("queue_depth_p99", self.queue_depth.percentile(99.0) as f64);
+        put("queue_depth_max", self.queue_depth.max() as f64);
+        put("wave_live_rows_p50", self.wave_sizes.percentile(50.0) as f64);
+        put("wave_live_rows_p95", self.wave_sizes.percentile(95.0) as f64);
+        put("wave_live_rows_max", self.wave_sizes.max() as f64);
+        let shares = self.spans.shares();
+        put("stage_sng_share", shares[0]);
+        put("stage_gate_share", shares[1]);
+        put("stage_regen_share", shares[2]);
+        put("stage_stob_share", shares[3]);
+        put("stage_total_ms", self.spans.total_ns() as f64 / 1e6);
+        put("wear_writes", self.wear.writes as f64);
+    }
+
     pub fn summary(&self) -> String {
         format!(
-            "requests={} waves={} waste={:.1}% thru={:.0} req/s p50={}µs p99={}µs",
+            "requests={} waves={} waste={:.1}% thru={:.0} req/s p50={}µs p95={}µs p99={}µs",
             self.requests,
             self.waves,
             100.0 * self.padding_waste(),
             self.throughput(),
             self.latency_us(50.0),
+            self.latency_us(95.0),
             self.latency_us(99.0),
         )
     }
@@ -125,6 +268,29 @@ mod tests {
         }
         assert_eq!(m.latency_us(50.0), 300);
         assert_eq!(m.latency_us(100.0), 1000);
+        // Out-of-range p clamps instead of indexing out of bounds.
+        assert_eq!(m.latency_us(250.0), 1000);
+        assert_eq!(m.latency_us(-10.0), 100);
+    }
+
+    #[test]
+    fn histogram_percentiles_track_exact_path() {
+        // The cfg(test)-only exact sort bounds the histogram error:
+        // within 1/32 relative at every queried percentile.
+        let mut m = Metrics::default();
+        let mut x = 0x0123_4567_89AB_CDEFu64;
+        for _ in 0..2000 {
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            m.record_latency(Duration::from_micros(x % 250_000));
+        }
+        for p in [0.0, 10.0, 50.0, 90.0, 95.0, 99.0, 99.9, 100.0] {
+            let exact = m.exact_latency_us(p);
+            let est = m.latency_us(p);
+            let err = est.abs_diff(exact) as f64;
+            assert!(err <= exact as f64 / 32.0 + 1.0, "p{p}: est {est} exact {exact}");
+        }
     }
 
     #[test]
@@ -138,14 +304,16 @@ mod tests {
         let stats = WaveStats {
             ops: OpCounters { sbg_writes: 10, presets: 10, ..OpCounters::default() },
             wear: WearProfile { used_cells: 8, writes: 20, max_cell_writes: 4 },
+            spans: StageSpans { sng_ns: 100, gate_ns: 200, regen_ns: 0, stob_ns: 100 },
         };
         // Two waves of the same app: ops sum, cells re-written (max),
-        // hottest cell accumulates.
+        // hottest cell accumulates, spans sum.
         let mut a = Metrics::default();
         a.record_stats(&stats);
         a.record_stats(&stats);
         assert_eq!(a.ops.sbg_writes, 20);
         assert_eq!(a.wear, WearProfile { used_cells: 8, writes: 40, max_cell_writes: 8 });
+        assert_eq!(a.spans.total_ns(), 800);
         // Another app's bank merges disjointly: capacity sums, the
         // pool's hottest cell is the max of the parts.
         let mut b = Metrics::default();
@@ -153,6 +321,7 @@ mod tests {
         a.merge(&b);
         assert_eq!(a.ops.sbg_writes, 30);
         assert_eq!(a.wear, WearProfile { used_cells: 16, writes: 60, max_cell_writes: 8 });
+        assert_eq!(a.spans.total_ns(), 1200);
     }
 
     #[test]
@@ -171,5 +340,54 @@ mod tests {
         assert_eq!(a.exec_time, Duration::from_millis(3));
         assert_eq!(a.latency_us(100.0), 500);
         assert_eq!(a.latency_us(0.0), 100);
+    }
+
+    #[test]
+    fn queue_and_drain_telemetry_merge() {
+        let mut a = Metrics::default();
+        a.record_queue_wait(Duration::from_micros(50));
+        a.record_queue_depth(3);
+        a.record_drain(WaveClose::Full);
+        a.record_drain(WaveClose::Deadline);
+        a.backpressure_blocks = 2;
+        a.shed = 1;
+        let mut b = Metrics::default();
+        b.record_queue_wait(Duration::from_micros(150));
+        b.record_queue_depth(9);
+        b.record_drain(WaveClose::Flush);
+        b.shed = 4;
+        a.merge(&b);
+        assert_eq!(a.waves_full, 1);
+        assert_eq!(a.waves_deadline, 1);
+        assert_eq!(a.waves_flush, 1);
+        assert_eq!(a.backpressure_blocks, 2);
+        assert_eq!(a.shed, 5);
+        assert_eq!(a.queue_wait_us(0.0), 50);
+        assert_eq!(a.queue_wait_us(100.0), 150);
+        assert_eq!(a.queue_depth(100.0), 9);
+    }
+
+    #[test]
+    fn snapshot_emits_stable_schema() {
+        let m = Metrics::default();
+        let mut snap = MetricsSnapshot::default();
+        m.snapshot_into("pool", &mut snap);
+        // Every key present even on an empty metrics object.
+        for key in [
+            "serve_pool_requests",
+            "serve_pool_latency_us_p50",
+            "serve_pool_latency_us_p999",
+            "serve_pool_queue_wait_us_p99",
+            "serve_pool_queue_depth_p99",
+            "serve_pool_shed_total",
+            "serve_pool_backpressure_blocks",
+            "serve_pool_stage_sng_share",
+            "serve_pool_stage_stob_share",
+            "serve_pool_waves_deadline",
+            "serve_pool_wear_writes",
+        ] {
+            assert!(snap.get(key).is_some(), "missing {key}");
+        }
+        assert_eq!(snap.get("serve_pool_requests"), Some(0.0));
     }
 }

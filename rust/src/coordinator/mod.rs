@@ -18,4 +18,4 @@ pub mod metrics;
 
 pub use batcher::{Batch, Batcher, BatcherConfig, Pending};
 pub use engine::Coordinator;
-pub use metrics::Metrics;
+pub use metrics::{Metrics, WaveClose};

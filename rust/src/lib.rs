@@ -23,6 +23,7 @@
 //! | [`runtime`] | Artifact registry + pluggable [`runtime::Engine`] backends |
 //! | [`coordinator`] | Request batcher + single-shard wrapper, metrics (§4.3 bank controller) |
 //! | [`serve`] | Sharded bank-parallel serving: `BankPool`, `Server`, admission control |
+//! | [`obs`] | Observability: fixed-memory histograms, stage spans, stats exposition |
 //! | [`report`] | Generators for the paper's tables/figures |
 //! | [`error`] | Dependency-free `anyhow`-style error type and macros |
 //! | [`util`] | PRNG (xoshiro256**), stats, property-test helper |
@@ -58,5 +59,6 @@ pub mod arch;
 pub mod baseline;
 pub mod apps;
 pub mod coordinator;
+pub mod obs;
 pub mod report;
 pub mod serve;

@@ -17,6 +17,12 @@
 //!                             engine; writes a flat-JSON snapshot
 //!   bench-check [FILE]        CI sanity gate over BENCH_serve.json:
 //!                             log all keys, fail if any *_speedup < 1
+//!   stats [FILE] [--check] [--prom]
+//!                             stats exposition: print a stats snapshot
+//!                             (or take a live one by serving a smoke
+//!                             workload); --check asserts the queue and
+//!                             stage-timing telemetry keys, --prom emits
+//!                             Prometheus text instead of flat JSON
 
 use std::path::{Path, PathBuf};
 
@@ -65,6 +71,7 @@ fn main() -> Result<()> {
         Some("schedule") => cmd_schedule(&args[1..]),
         Some("faults") => cmd_faults(&cfg, &args[1..]),
         Some("bench-check") => cmd_bench_check(&args[1..]),
+        Some("stats") => cmd_stats(&cfg, &args[1..]),
         other => {
             if let Some(o) = other {
                 eprintln!("unknown command `{o}`");
@@ -72,7 +79,7 @@ fn main() -> Result<()> {
             eprintln!(
                 "usage: stoch-imc \
                  <info|fig3|fig7|table2|table3|table4|fig10|fig11|run|serve|schedule|faults|\
-                 bench-check> [--config FILE]"
+                 bench-check|stats> [--config FILE]"
             );
             std::process::exit(2);
         }
@@ -116,6 +123,122 @@ fn cmd_bench_check(args: &[String]) -> Result<()> {
     }
     println!("\nAll `*_speedup` keys ≥ 1.0.");
     Ok(())
+}
+
+/// Snapshot keys `stats --check` requires — the queue and stage-timing
+/// telemetry the serve smoke in CI asserts on. Every key is emitted
+/// unconditionally by `Metrics::snapshot_into`, so a missing key means
+/// the exposition schema regressed, not that the workload was idle.
+const REQUIRED_STATS_KEYS: &[&str] = &[
+    "serve_pool_requests",
+    "serve_pool_waves",
+    "serve_pool_waves_full",
+    "serve_pool_waves_deadline",
+    "serve_pool_waves_flush",
+    "serve_pool_latency_us_p50",
+    "serve_pool_latency_us_p95",
+    "serve_pool_latency_us_p99",
+    "serve_pool_queue_wait_us_p99",
+    "serve_pool_queue_depth_p99",
+    "serve_pool_shed_total",
+    "serve_pool_backpressure_blocks",
+    "serve_pool_stage_sng_share",
+    "serve_pool_stage_gate_share",
+    "serve_pool_stage_regen_share",
+    "serve_pool_stage_stob_share",
+];
+
+/// Stats exposition: print a stats snapshot — either one previously
+/// written as flat JSON (`stats FILE`) or a live one taken by serving a
+/// short smoke workload (`stats` with no file). `--prom` renders
+/// Prometheus text instead of flat JSON; `--check` fails unless every
+/// key in [`REQUIRED_STATS_KEYS`] is present (the CI serve-smoke gate).
+fn cmd_stats(cfg: &Config, args: &[String]) -> Result<()> {
+    use stoch_imc::obs::MetricsSnapshot;
+    use stoch_imc::util::benchjson;
+
+    let check = args.iter().any(|a| a == "--check");
+    let prom = args.iter().any(|a| a == "--prom");
+    let mut file: Option<PathBuf> = None;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--config" => i += 1, // skip the flag's value too
+            a if a.starts_with("--") => {}
+            a => file = Some(PathBuf::from(a)),
+        }
+        i += 1;
+    }
+
+    let snap = match &file {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading stats snapshot {}", path.display()))?;
+            let entries = benchjson::parse_flat(&text);
+            if entries.is_empty() {
+                bail!("stats snapshot {} has no keys", path.display());
+            }
+            MetricsSnapshot::from_entries(&entries)
+        }
+        None => live_stats_snapshot(cfg)?,
+    };
+
+    if prom {
+        print!("{}", snap.to_prometheus());
+    } else {
+        print!("{}", snap.to_flat_json());
+    }
+
+    if check {
+        let missing: Vec<&str> = REQUIRED_STATS_KEYS
+            .iter()
+            .copied()
+            .filter(|k| snap.get(k).is_none())
+            .collect();
+        if !missing.is_empty() {
+            bail!(
+                "stats snapshot missing {} required key(s): {}",
+                missing.len(),
+                missing.join(", ")
+            );
+        }
+        eprintln!(
+            "stats --check OK: all {} required telemetry keys present ({} keys total)",
+            REQUIRED_STATS_KEYS.len(),
+            snap.len()
+        );
+    }
+    Ok(())
+}
+
+/// Serve a short smoke workload (32 instances of every registered
+/// `app_*` artifact) and return the live pool snapshot.
+fn live_stats_snapshot(cfg: &Config) -> Result<stoch_imc::obs::MetricsSnapshot> {
+    use stoch_imc::serve::{Server, ServerConfig};
+
+    let server = Server::start(&artifact_dir(), ServerConfig::default())?;
+    let n = 32usize;
+    let mut served = 0usize;
+    for app in all_apps().iter() {
+        let artifact = format!("app_{}", app.name());
+        let Some(arity) = server.n_inputs(&artifact) else { continue };
+        let instances = app.workload(n, cfg.seed);
+        let padded: Vec<Vec<f64>> = instances
+            .iter()
+            .map(|x| {
+                let mut v = x.clone();
+                v.resize(arity, 0.0);
+                v
+            })
+            .collect();
+        server.run_workload(&artifact, &padded)?;
+        served += 1;
+    }
+    if served == 0 {
+        bail!("no app_* artifacts registered under {}", artifact_dir().display());
+    }
+    server.drain()?;
+    Ok(server.snapshot())
 }
 
 fn cmd_info(cfg: &Config) -> Result<()> {
@@ -407,7 +530,63 @@ fn cmd_serve(cfg: &Config, args: &[String]) -> Result<()> {
         total as f64 / dt.as_secs_f64(),
         server.pool_metrics().summary()
     );
+    // Stats exposition: the same flat snapshot `stoch-imc stats` checks,
+    // printed as a digest and written for the CI artifact.
+    let snap = server.snapshot();
+    print_pool_observability(&snap);
+    let out = write_stats_snapshot(&snap)?;
+    println!("wrote {} stats keys to {}", snap.len(), out.display());
     Ok(())
+}
+
+/// Human-readable pool observability digest from a stats snapshot —
+/// the end-of-run report `serve` and `faults` share.
+fn print_pool_observability(snap: &stoch_imc::obs::MetricsSnapshot) {
+    let g = |k: &str| snap.get(k).unwrap_or(0.0);
+    println!(
+        "pool latency µs: p50={:.0} p95={:.0} p99={:.0} p99.9={:.0} max={:.0}",
+        g("serve_pool_latency_us_p50"),
+        g("serve_pool_latency_us_p95"),
+        g("serve_pool_latency_us_p99"),
+        g("serve_pool_latency_us_p999"),
+        g("serve_pool_latency_us_max"),
+    );
+    println!(
+        "pool queue: wait µs p50={:.0} p99={:.0}, depth p50={:.0} max={:.0}, \
+         backpressure={:.0}, shed={:.0}",
+        g("serve_pool_queue_wait_us_p50"),
+        g("serve_pool_queue_wait_us_p99"),
+        g("serve_pool_queue_depth_p50"),
+        g("serve_pool_queue_depth_max"),
+        g("serve_pool_backpressure_blocks"),
+        g("serve_pool_shed_total"),
+    );
+    println!(
+        "pool stages: sng={:.1}% gates={:.1}% regen={:.1}% stob={:.1}% \
+         ({:.1} ms summed across workers)",
+        100.0 * g("serve_pool_stage_sng_share"),
+        100.0 * g("serve_pool_stage_gate_share"),
+        100.0 * g("serve_pool_stage_regen_share"),
+        100.0 * g("serve_pool_stage_stob_share"),
+        g("serve_pool_stage_total_ms"),
+    );
+    println!(
+        "pool waves: full={:.0} deadline={:.0} flush={:.0}",
+        g("serve_pool_waves_full"),
+        g("serve_pool_waves_deadline"),
+        g("serve_pool_waves_flush"),
+    );
+}
+
+/// Write a stats snapshot as flat JSON to `STOCH_IMC_STATS_OUT` (else
+/// `SERVE_stats.json`) and return the path.
+fn write_stats_snapshot(snap: &stoch_imc::obs::MetricsSnapshot) -> Result<PathBuf> {
+    let out = std::env::var("STOCH_IMC_STATS_OUT")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("SERVE_stats.json"));
+    std::fs::write(&out, snap.to_flat_json())
+        .with_context(|| format!("writing stats snapshot {}", out.display()))?;
+    Ok(out)
 }
 
 /// Table-4-style reliability campaign through the full serving stack:
@@ -461,6 +640,9 @@ fn cmd_faults(cfg: &Config, args: &[String]) -> Result<()> {
     println!("# faults — output error (%) through the serving stack under injected bitflips");
     println!("rates {rates:?}, {n} instances per app, seed {}", cfg.seed);
     let mut entries: Vec<(String, f64)> = Vec::new();
+    // Pool observability from the last rate's server — the campaign's
+    // end-of-run stage/queue digest (counters are rate-independent).
+    let mut last_snap: Option<stoch_imc::obs::MetricsSnapshot> = None;
     // Per app: (name, binary errors per rate, stochastic errors per rate).
     let mut table: Vec<(String, Vec<f64>, Vec<f64>)> =
         apps.iter().map(|a| (a.name().to_string(), Vec::new(), Vec::new())).collect();
@@ -525,11 +707,16 @@ fn cmd_faults(cfg: &Config, args: &[String]) -> Result<()> {
                 }
             }
         }
+        last_snap = Some(server.snapshot());
     }
     let fmt = |v: &[f64]| v.iter().map(|x| format!("{x:7.2}")).collect::<Vec<_>>().join(" ");
     println!("\n{:<6} | binary-IMC | Stoch-IMC   (per rate)", "app");
     for (name, b, s) in &table {
         println!("{name:<6} | {} | {}", fmt(b), fmt(s));
+    }
+    if let Some(snap) = &last_snap {
+        println!();
+        print_pool_observability(snap);
     }
     let out = std::env::var("STOCH_IMC_FAULTS_OUT").map(PathBuf::from).unwrap_or_else(|_| {
         let d = Path::new("docs/experiments");

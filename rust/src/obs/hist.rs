@@ -1,0 +1,285 @@
+//! Fixed-memory, mergeable, log-bucketed histogram (HDR-style).
+//!
+//! [`Histogram`] records non-negative `u64` samples in O(1) into a
+//! fixed bucket table: values below [`SUBBUCKETS`] land in exact
+//! unit-width buckets, and every power-of-two range `[2^e, 2^{e+1})`
+//! above that is split into [`SUBBUCKETS`] equal sub-buckets — the
+//! HdrHistogram layout at 5 significant bits. The table is
+//! [`N_BUCKETS`] = 1920 `u64` counters (15 KiB), covering the whole
+//! `u64` domain with no saturation cliff, so a `Metrics` holding a few
+//! of these stays bounded no matter how many samples stream through
+//! (unlike the per-sample `Vec<u64>` it replaced).
+//!
+//! Guarantees:
+//! * **O(1) record** — one `leading_zeros`, two shifts, one add.
+//! * **Exact-count merge** — bucket tables add elementwise, so
+//!   `merge(a, b)` holds exactly the union of the samples `a` and `b`
+//!   saw: merging per-shard histograms ≡ one histogram fed the
+//!   concatenated stream (the pool-aggregation invariant, pinned by
+//!   `tests/obs.rs`).
+//! * **Bounded percentile error** — a percentile query returns the
+//!   midpoint of the bucket holding the target rank, clamped into the
+//!   exact `[min, max]` seen. Values `< 32` are exact; above that the
+//!   bucket is at most `value/32` wide, so the estimate is within
+//!   **3.125 %** relative error of the true order statistic (midpoint
+//!   reporting halves the typical error to ~1.6 %).
+
+/// Sub-bucket resolution bits: 32 sub-buckets per power-of-two range.
+const SUB_BITS: u32 = 5;
+/// Sub-buckets per octave; also the width of the exact linear region.
+pub const SUBBUCKETS: usize = 1 << SUB_BITS;
+/// Total bucket count: the linear region plus `64 - SUB_BITS` octaves
+/// of `SUBBUCKETS` each — covers all of `u64` in 1920 counters.
+pub const N_BUCKETS: usize = SUBBUCKETS + (64 - SUB_BITS as usize) * SUBBUCKETS;
+
+/// Log-bucketed fixed-memory histogram of `u64` samples.
+///
+/// `Default` is an empty histogram that owns no bucket table; the
+/// table is allocated on the first [`Histogram::record`] (or merge
+/// from a non-empty peer), so idle `Metrics` stay a few words.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Histogram {
+    counts: Vec<u64>,
+    count: u64,
+    sum: u128,
+    min: u64,
+    max: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self { counts: Vec::new(), count: 0, sum: 0, min: u64::MAX, max: 0 }
+    }
+}
+
+impl Histogram {
+    /// Bucket holding `v`: exact below [`SUBBUCKETS`], then
+    /// `SUBBUCKETS` sub-buckets per octave keyed by the top
+    /// `SUB_BITS` mantissa bits.
+    fn bucket_index(v: u64) -> usize {
+        if v < SUBBUCKETS as u64 {
+            return v as usize;
+        }
+        let e = 63 - v.leading_zeros(); // floor(log2 v) ≥ SUB_BITS
+        let sub = ((v >> (e - SUB_BITS)) as usize) & (SUBBUCKETS - 1);
+        SUBBUCKETS * (e - SUB_BITS) as usize + sub + SUBBUCKETS
+    }
+
+    /// `(low, width)` of bucket `i` — the half-open value range
+    /// `[low, low + width)` it covers.
+    fn bucket_bounds(i: usize) -> (u64, u64) {
+        if i < SUBBUCKETS {
+            return (i as u64, 1);
+        }
+        let g = ((i - SUBBUCKETS) / SUBBUCKETS) as u32; // e - SUB_BITS
+        let sub = ((i - SUBBUCKETS) % SUBBUCKETS) as u64;
+        ((SUBBUCKETS as u64 + sub) << g, 1u64 << g)
+    }
+
+    /// Record one sample. O(1); allocates the bucket table on first use.
+    pub fn record(&mut self, v: u64) {
+        if self.counts.is_empty() {
+            self.counts = vec![0; N_BUCKETS];
+        }
+        self.counts[Self::bucket_index(v)] += 1;
+        self.count += 1;
+        self.sum += v as u128;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    /// Fold `other` in. Exact: the result's bucket table (and count /
+    /// sum / min / max) is identical to one histogram having recorded
+    /// both sample streams.
+    pub fn merge(&mut self, other: &Histogram) {
+        if other.count == 0 {
+            return;
+        }
+        if self.counts.is_empty() {
+            self.counts = vec![0; N_BUCKETS];
+        }
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += *b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Number of recorded samples.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Exact smallest recorded sample (0 when empty).
+    pub fn min(&self) -> u64 {
+        if self.count == 0 { 0 } else { self.min }
+    }
+
+    /// Exact largest recorded sample (0 when empty).
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Exact mean of the recorded samples (0.0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        self.sum as f64 / self.count as f64
+    }
+
+    /// Percentile estimate (`p` clamped into `[0, 100]`): the value at
+    /// nearest rank `round(p/100 · (count−1))` of the conceptual
+    /// sorted sample list — the same convention an exact sort uses —
+    /// reported as its bucket midpoint clamped into the exact
+    /// `[min, max]`. `p ≤ 0` and `p ≥ 100` return the exact min/max.
+    /// Relative error is bounded by the bucket resolution (≤ 1/32).
+    pub fn percentile(&self, p: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let p = if p.is_nan() { 0.0 } else { p.clamp(0.0, 100.0) };
+        if p <= 0.0 {
+            return self.min;
+        }
+        if p >= 100.0 {
+            return self.max;
+        }
+        let rank = ((p / 100.0) * (self.count - 1) as f64).round() as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen > rank {
+                let (low, width) = Self::bucket_bounds(i);
+                return (low + width / 2).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_is_monotone_and_covers_u64() {
+        // Index 0 ↔ value 0; the linear region is exact; every octave
+        // boundary continues the previous range without gap or overlap.
+        assert_eq!(Histogram::bucket_index(0), 0);
+        assert_eq!(Histogram::bucket_index(31), 31);
+        assert_eq!(Histogram::bucket_index(32), 32);
+        assert_eq!(Histogram::bucket_index(u64::MAX), N_BUCKETS - 1);
+        let mut last = 0usize;
+        for e in 5..64u32 {
+            for v in [1u64 << e, (1u64 << e) + 1, (1u64 << e) * 2 - 1] {
+                let i = Histogram::bucket_index(v);
+                assert!(i >= last, "index not monotone at v={v}");
+                last = i;
+                let (low, width) = Histogram::bucket_bounds(i);
+                assert!(low <= v && (v - low) < width, "v={v} outside bucket {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn linear_region_is_exact() {
+        let mut h = Histogram::default();
+        for v in 0..32u64 {
+            h.record(v);
+        }
+        for v in 0..32u64 {
+            let p = 100.0 * v as f64 / 31.0;
+            assert_eq!(h.percentile(p), v, "p={p}");
+        }
+    }
+
+    #[test]
+    fn empty_and_edge_percentiles() {
+        let h = Histogram::default();
+        assert_eq!(h.percentile(50.0), 0);
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.max(), 0);
+        assert_eq!(h.mean(), 0.0);
+        let mut h = Histogram::default();
+        h.record(7);
+        h.record(1_000_000);
+        // Out-of-range p clamps; exact min/max at the edges.
+        assert_eq!(h.percentile(-5.0), 7);
+        assert_eq!(h.percentile(250.0), 1_000_000);
+        assert_eq!(h.percentile(f64::NAN), 7);
+    }
+
+    #[test]
+    fn saturation_edge_holds_u64_max() {
+        let mut h = Histogram::default();
+        h.record(u64::MAX);
+        h.record(0);
+        assert_eq!(h.max(), u64::MAX);
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.percentile(100.0), u64::MAX);
+        assert_eq!(h.percentile(0.0), 0);
+    }
+
+    #[test]
+    fn merge_is_exact_bucket_addition() {
+        let mut a = Histogram::default();
+        let mut b = Histogram::default();
+        let mut both = Histogram::default();
+        for i in 0..500u64 {
+            let v = i * i % 10_007;
+            if i % 2 == 0 {
+                a.record(v);
+            } else {
+                b.record(v);
+            }
+            both.record(v);
+        }
+        let mut merged = a.clone();
+        merged.merge(&b);
+        assert_eq!(merged, both, "merge must equal the concatenated stream");
+        // Merging into an empty histogram clones the peer's contents.
+        let mut empty = Histogram::default();
+        empty.merge(&both);
+        assert_eq!(empty, both);
+        // Merging an empty peer is a no-op (and allocates nothing).
+        let snap = merged.clone();
+        merged.merge(&Histogram::default());
+        assert_eq!(merged, snap);
+    }
+
+    #[test]
+    fn percentile_error_is_bounded_vs_exact_sort() {
+        // Deterministic pseudo-random samples spanning several octaves.
+        let mut h = Histogram::default();
+        let mut exact: Vec<u64> = Vec::new();
+        let mut x = 0x9E37_79B9_7F4A_7C15u64;
+        for _ in 0..4000 {
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            let v = x % 5_000_000;
+            h.record(v);
+            exact.push(v);
+        }
+        exact.sort_unstable();
+        for p in [0.0, 1.0, 10.0, 50.0, 90.0, 95.0, 99.0, 99.9, 100.0] {
+            let idx = ((p / 100.0) * (exact.len() - 1) as f64).round() as usize;
+            let want = exact[idx];
+            let got = h.percentile(p);
+            let err = got.abs_diff(want) as f64;
+            assert!(
+                err <= want as f64 / 32.0 + 1.0,
+                "p{p}: got {got} want {want} (err {err})"
+            );
+        }
+        assert_eq!(h.count(), 4000);
+        assert_eq!(h.min(), exact[0]);
+        assert_eq!(h.max(), *exact.last().unwrap());
+        let mean_exact = exact.iter().map(|&v| v as f64).sum::<f64>() / exact.len() as f64;
+        assert!((h.mean() - mean_exact).abs() < 1e-6, "mean is tracked exactly");
+    }
+}

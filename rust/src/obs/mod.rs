@@ -1,0 +1,23 @@
+//! Observability primitives: fixed-memory histograms, per-stage span
+//! timing, and the flat snapshot exposition layer.
+//!
+//! Dependency-free, like the rest of the crate. Three pieces:
+//!
+//! * [`Histogram`] — log-bucketed, O(1)-record, exactly-mergeable
+//!   distribution of `u64` samples with bounded percentile error
+//!   (≤ 1/32 relative). Backs request latency, queue wait, queue
+//!   depth and wave-size distributions in `coordinator::Metrics`.
+//! * [`StageSpans`] — monotonic-clock nanoseconds attributed to the
+//!   SNG / gate / regen / StoB stages of the lane engine, accumulated
+//!   per wave into `runtime::WaveStats`.
+//! * [`MetricsSnapshot`] — a flat `key → f64` exposition map rendered
+//!   as flat JSON (`util::benchjson`) or Prometheus text; produced by
+//!   `serve::Server::snapshot()` and the `stoch-imc stats` subcommand.
+
+mod hist;
+mod snapshot;
+mod span;
+
+pub use hist::{Histogram, N_BUCKETS, SUBBUCKETS};
+pub use snapshot::MetricsSnapshot;
+pub use span::StageSpans;

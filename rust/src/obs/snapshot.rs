@@ -1,0 +1,104 @@
+//! Flat metrics snapshot and its exposition formats.
+//!
+//! [`MetricsSnapshot`] is the bridge between the in-process `Metrics`
+//! (histograms, counters, spans) and the outside world: a flat,
+//! ordered `key → f64` map rendered either as the same flat JSON the
+//! bench harnesses use (`util::benchjson`) or as Prometheus-style
+//! text. Keys follow `serve_<scope>_<metric>` where `<scope>` is an
+//! app name (e.g. `app_kde`) or `pool`; the full field map lives in
+//! `docs/ARCHITECTURE.md` § Observability.
+
+use std::collections::BTreeMap;
+
+use crate::util::benchjson;
+
+/// A flat, ordered snapshot of every exported metric.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MetricsSnapshot {
+    entries: BTreeMap<String, f64>,
+}
+
+impl MetricsSnapshot {
+    /// Insert (or overwrite) one metric.
+    pub fn push(&mut self, key: impl Into<String>, value: f64) {
+        self.entries.insert(key.into(), value);
+    }
+
+    /// Look one metric up.
+    pub fn get(&self, key: &str) -> Option<f64> {
+        self.entries.get(key).copied()
+    }
+
+    /// Number of exported metrics.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Iterate `(key, value)` in sorted key order.
+    pub fn iter(&self) -> impl Iterator<Item = (&str, f64)> {
+        self.entries.iter().map(|(k, v)| (k.as_str(), *v))
+    }
+
+    /// Build from parsed flat-JSON entries (`benchjson::parse_flat`).
+    pub fn from_entries(entries: &[(String, f64)]) -> Self {
+        Self { entries: entries.iter().cloned().collect() }
+    }
+
+    /// Render as the flat JSON object shared with the bench harnesses.
+    pub fn to_flat_json(&self) -> String {
+        benchjson::render(&self.entries)
+    }
+
+    /// Render as Prometheus text exposition: one
+    /// `stoch_imc_<key> <value>` line per metric, keys sanitized to
+    /// the `[a-zA-Z0-9_:]` metric-name alphabet.
+    pub fn to_prometheus(&self) -> String {
+        let mut s = String::new();
+        for (k, v) in &self.entries {
+            s.push_str("stoch_imc_");
+            for c in k.chars() {
+                if c.is_ascii_alphanumeric() || c == '_' || c == ':' {
+                    s.push(c);
+                } else {
+                    s.push('_');
+                }
+            }
+            s.push(' ');
+            s.push_str(&format!("{v}"));
+            s.push('\n');
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flat_json_round_trips_through_benchjson() {
+        let mut snap = MetricsSnapshot::default();
+        snap.push("serve_pool_latency_us_p50", 123.0);
+        snap.push("serve_app_kde_requests", 64.0);
+        let text = snap.to_flat_json();
+        let back = MetricsSnapshot::from_entries(&benchjson::parse_flat(&text));
+        assert_eq!(back.get("serve_pool_latency_us_p50"), Some(123.0));
+        assert_eq!(back.get("serve_app_kde_requests"), Some(64.0));
+        assert_eq!(back.len(), 2);
+    }
+
+    #[test]
+    fn prometheus_lines_are_sanitized_and_sorted() {
+        let mut snap = MetricsSnapshot::default();
+        snap.push("serve_pool_latency_us_p99.9", 7.5);
+        snap.push("a-key with spaces", 1.0);
+        let text = snap.to_prometheus();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines[0], "stoch_imc_a_key_with_spaces 1");
+        assert_eq!(lines[1], "stoch_imc_serve_pool_latency_us_p99_9 7.5");
+    }
+}

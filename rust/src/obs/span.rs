@@ -1,0 +1,82 @@
+//! Per-stage wall-clock spans for the wave engine.
+//!
+//! [`StageSpans`] splits a wave's execution time across the four
+//! pipeline stages of the lane-major engine: SNG bitstream generation,
+//! gate-program evaluation, StoB vertical-counter readout, and the
+//! in-lane StoB→BtoS regeneration between `StagedPlan` stages. The
+//! engine takes one monotonic-clock reading per stage boundary per
+//! lane block (coarse — nanoseconds of overhead against microseconds
+//! to milliseconds of work), so the clean-path speedup gates are not
+//! disturbed.
+//!
+//! Spans from worker threads **sum** — the totals are CPU-time-like,
+//! so with N workers the total can exceed the wave's wall-clock. The
+//! per-stage *shares* are the meaningful signal, and those are
+//! invariant under the summing.
+
+/// Nanoseconds of wall-clock attributed to each engine stage.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StageSpans {
+    /// Stage-0 input bitstream generation (SNG sampling + cutoffs).
+    pub sng_ns: u64,
+    /// Gate-program evaluation over lane words.
+    pub gate_ns: u64,
+    /// Inter-stage StoB→BtoS regeneration (stages > 0 of a `StagedPlan`).
+    pub regen_ns: u64,
+    /// Vertical-counter StoB readout of stage outputs.
+    pub stob_ns: u64,
+}
+
+impl StageSpans {
+    /// Sum another span set in (worker fold / wave accumulation).
+    pub fn add(&mut self, other: &StageSpans) {
+        self.sng_ns += other.sng_ns;
+        self.gate_ns += other.gate_ns;
+        self.regen_ns += other.regen_ns;
+        self.stob_ns += other.stob_ns;
+    }
+
+    /// Total attributed nanoseconds across all four stages.
+    pub fn total_ns(&self) -> u64 {
+        self.sng_ns + self.gate_ns + self.regen_ns + self.stob_ns
+    }
+
+    /// Fractional share of each stage `[sng, gate, regen, stob]`;
+    /// all zeros when nothing has been timed.
+    pub fn shares(&self) -> [f64; 4] {
+        let total = self.total_ns();
+        if total == 0 {
+            return [0.0; 4];
+        }
+        let t = total as f64;
+        [
+            self.sng_ns as f64 / t,
+            self.gate_ns as f64 / t,
+            self.regen_ns as f64 / t,
+            self.stob_ns as f64 / t,
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_sums_fields_and_shares_normalize() {
+        let mut a = StageSpans { sng_ns: 10, gate_ns: 20, regen_ns: 0, stob_ns: 10 };
+        let b = StageSpans { sng_ns: 5, gate_ns: 10, regen_ns: 5, stob_ns: 0 };
+        a.add(&b);
+        assert_eq!(a, StageSpans { sng_ns: 15, gate_ns: 30, regen_ns: 5, stob_ns: 10 });
+        assert_eq!(a.total_ns(), 60);
+        let s = a.shares();
+        assert!((s.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!((s[1] - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_spans_share_zero() {
+        assert_eq!(StageSpans::default().shares(), [0.0; 4]);
+        assert_eq!(StageSpans::default().total_ns(), 0);
+    }
+}

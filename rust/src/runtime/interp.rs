@@ -45,6 +45,7 @@
 use std::collections::HashMap;
 use std::path::Path;
 use std::sync::Mutex;
+use std::time::Instant;
 
 use crate::apps::{hdp::Hdp, kde::Kde, lit::Lit, ol::Ol, App};
 use crate::bail;
@@ -53,6 +54,7 @@ use crate::error::{Context, Result};
 use crate::fault::{FaultCutoffs, FaultPlan};
 use crate::lifetime::WearProfile;
 use crate::netlist::{ops, Binding, InputClass, Netlist, PlanScratch, StagedPlan};
+use crate::obs::StageSpans;
 use crate::sc::bitplane::{LaneBlock, LANES};
 use crate::sc::sng;
 use crate::util::prng::{fnv1a, RngBank, Xoshiro256};
@@ -75,11 +77,17 @@ struct Wave<'a> {
 
 /// Per-wave instrumentation the executor accumulates *as it runs*: the
 /// Eq 4 operation counters (price them with
-/// [`OpCounters::energy`](crate::energy::OpCounters::energy)) and the
-/// Eq 11 wear profile of the subarray rows the wave touched. Returned
-/// by [`InterpEngine::execute_rows_instrumented`]; the serving layer
+/// [`OpCounters::energy`](crate::energy::OpCounters::energy)), the
+/// Eq 11 wear profile of the subarray rows the wave touched, and the
+/// wall-clock spans per engine stage. Returned by
+/// [`InterpEngine::execute_rows_instrumented`]; the serving layer
 /// folds one of these per wave into its per-shard
 /// [`Metrics`](crate::coordinator::Metrics).
+///
+/// `ops` and `wear` are deterministic wave invariants (same totals for
+/// any worker split or lane width); `spans` is measured wall-clock and
+/// varies run to run — comparisons asserting determinism must compare
+/// the invariant fields, not the whole struct.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct WaveStats {
     /// Gate fires, presets, SBG writes, StoB reads, ADDIE steps.
@@ -89,6 +97,10 @@ pub struct WaveStats {
     /// hottest cell takes one preset + one write per time step
     /// (`2 × BL`).
     pub wear: WearProfile,
+    /// Monotonic-clock nanoseconds per engine stage (SNG / gates /
+    /// regen / StoB), sampled once per stage per lane block and summed
+    /// across workers — CPU-time-like, so shares are the signal.
+    pub spans: StageSpans,
 }
 
 /// The interpreter engine: artifact specs plus per-artifact compiled
@@ -405,7 +417,7 @@ impl InterpEngine {
         let mut stats = WaveStats::default();
         if word_parallel {
             let wave = Wave { name, spec, kernel, values, seed, fault: cuts.as_ref() };
-            let ops = Mutex::new(OpCounters::default());
+            let ops = Mutex::new((OpCounters::default(), StageSpans::default()));
             // Monomorphized per lane width so every per-word loop
             // runs over a compile-time-sized array.
             match resolve_lane_width(lane_width, live, threads) {
@@ -413,7 +425,7 @@ impl InterpEngine {
                 128 => self.execute_blocks::<2>(&wave, &mut out[..live], threads, &ops)?,
                 _ => self.execute_blocks::<4>(&wave, &mut out[..live], threads, &ops)?,
             }
-            stats.ops = ops.into_inner().expect("ops mutex poisoned");
+            (stats.ops, stats.spans) = ops.into_inner().expect("ops mutex poisoned");
             if live > 0 {
                 // Eq 11 terms for this wave: every stage slot of every
                 // live lane is a utilized subarray row; the hottest
@@ -452,7 +464,7 @@ impl InterpEngine {
         wave: &Wave,
         out: &mut [f32],
         threads: usize,
-        ops: &Mutex<OpCounters>,
+        ops: &Mutex<(OpCounters, StageSpans)>,
     ) -> Result<()> {
         let live = out.len();
         if live == 0 {
@@ -463,14 +475,24 @@ impl InterpEngine {
         let workers = threads.min(blocks).max(1);
         parallel_chunks(out, workers, blocks.div_ceil(workers) * block_rows, |start, sub| {
             let mut ws = BlockWorkspace::<W>::default();
-            // Worker-local Eq 4 counters, folded into the wave total
-            // once per worker — the per-block hot path never touches
-            // the mutex.
+            // Worker-local Eq 4 counters and stage spans, folded into
+            // the wave total once per worker — the per-block hot path
+            // never touches the mutex.
             let mut local = OpCounters::default();
+            let mut spans = StageSpans::default();
             for (bj, block_out) in sub.chunks_mut(block_rows).enumerate() {
-                self.eval_block(wave, start + bj * block_rows, block_out, &mut ws, &mut local);
+                self.eval_block(
+                    wave,
+                    start + bj * block_rows,
+                    block_out,
+                    &mut ws,
+                    &mut local,
+                    &mut spans,
+                );
             }
-            ops.lock().expect("ops mutex poisoned").add(&local);
+            let mut total = ops.lock().expect("ops mutex poisoned");
+            total.0.add(&local);
+            total.1.add(&spans);
             Ok(())
         })
     }
@@ -487,6 +509,15 @@ impl InterpEngine {
     /// regeneration, never leaving the lane domain. No per-row
     /// bitstreams, no transposes, no allocations beyond the reused
     /// workspace.
+    ///
+    /// Span timing is coarse on purpose: one monotonic-clock reading
+    /// per stage boundary (4 per stage per block — nanoseconds against
+    /// the microseconds-to-milliseconds a block takes), so the
+    /// clean-path speedup gates are undisturbed. Stage-0 input
+    /// generation is attributed to SNG; later stages' input generation
+    /// is the inter-stage regeneration span (its `Regen` thresholds
+    /// come from the previous stage's StoB values).
+    #[allow(clippy::too_many_arguments)]
     fn eval_block<const W: usize>(
         &self,
         w: &Wave,
@@ -494,6 +525,7 @@ impl InterpEngine {
         out: &mut [f32],
         ws: &mut BlockWorkspace<W>,
         ops: &mut OpCounters,
+        spans: &mut StageSpans,
     ) {
         let BlockWorkspace {
             rngs,
@@ -537,6 +569,7 @@ impl InterpEngine {
                 inputs.resize_with(stage.plan.n_inputs(), || LaneBlock::zeros(0, 0));
             }
             filled_groups.clear();
+            let t0 = Instant::now();
             for (i, (binding, class)) in stage.bindings.iter().zip(&stage.classes).enumerate() {
                 // Per-lane threshold value for this input.
                 vals.clear();
@@ -583,6 +616,15 @@ impl InterpEngine {
                 ops.sbg_writes += (lanes * bl) as u64;
                 ops.presets += (lanes * bl) as u64;
             }
+            let t1 = Instant::now();
+            // Stage-0 generation is fresh SNG; later stages regenerate
+            // from the previous stage's StoB values in-lane.
+            let gen_ns = t1.duration_since(t0).as_nanos() as u64;
+            if si == 0 {
+                spans.sng_ns += gen_ns;
+            } else {
+                spans.regen_ns += gen_ns;
+            }
             let outs = match w.fault {
                 Some(cuts) => stage.plan.eval_lanes_fault_into(
                     &inputs[..stage.plan.n_inputs()],
@@ -593,6 +635,8 @@ impl InterpEngine {
                 ),
                 None => stage.plan.eval_lanes_into(&inputs[..stage.plan.n_inputs()], &mut plans[si]),
             };
+            let t2 = Instant::now();
+            spans.gate_ns += t2.duration_since(t1).as_nanos() as u64;
             // Eq 4: each instruction fires once per lane per time step
             // — a preset of its output row, then the bitline-computed
             // write — and each ADDIE island steps its accumulator.
@@ -613,6 +657,7 @@ impl InterpEngine {
                 sv.extend(counts.iter().map(|&c| c as f64 / bl as f64));
                 ops.stob_reads += lane_bits;
             }
+            spans.stob_ns += t2.elapsed().as_nanos() as u64;
         }
         let (rs, ro) = w.kernel.result();
         let sv = &stage_vals[rs];
@@ -1001,11 +1046,16 @@ mod tests {
         assert_eq!(stats.wear.max_cell_writes, 2 * 512);
         assert!(stats.wear.used_cells >= 3 * 70, "≥ one slot per node per lane");
         // Counters are wave-invariants: same totals for any worker
-        // split or lane width.
+        // split or lane width. Spans are measured wall-clock, so only
+        // the invariant fields compare equal — the spans just have to
+        // be present (a wave that executed took nonzero time).
         let (_, again) = e
             .execute_rows_instrumented("op_multiply", &values, 5, 70, 5, 64, None)
             .unwrap();
-        assert_eq!(stats, again);
+        assert_eq!(stats.ops, again.ops);
+        assert_eq!(stats.wear, again.wear);
+        assert!(stats.spans.total_ns() > 0, "instrumented wave must time its stages");
+        assert!(again.spans.total_ns() > 0);
         // A live plan flips bits — and the faulted lane path stays
         // bit-identical to the faulted scalar golden reference.
         let plan = FaultPlan::uniform(0.05, 9);

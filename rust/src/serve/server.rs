@@ -12,10 +12,11 @@ use crate::coordinator::batcher::BatcherConfig;
 use crate::coordinator::metrics::Metrics;
 use crate::error::{Context, Result};
 use crate::fault::FaultPlan;
+use crate::obs::MetricsSnapshot;
 use crate::runtime::Engine;
 
 use super::pool::BankPool;
-use super::shard::ShardMsg;
+use super::shard::{Admission, ShardMsg};
 
 /// Serving configuration: how many bank shards, how deep each shard's
 /// admission queue is, and how waves batch/execute.
@@ -157,11 +158,33 @@ impl Server {
             app: app.to_string(),
             inputs: inputs.iter().map(|&v| v as f32).collect(),
             respond: rtx,
+            enqueued: Instant::now(),
         };
-        if block {
-            shard.send(msg)?;
-        } else {
-            shard.try_send(msg)?;
+        // Admission telemetry: depth sampled at the enqueue edge,
+        // backpressure blocks and sheds counted per app. The lock is a
+        // few nanoseconds against millisecond waves.
+        match shard.admit(msg, block)? {
+            Admission::Accepted(depth) => {
+                if let Ok(mut m) = self.pool.metrics_map().lock() {
+                    m.entry(app.to_string()).or_default().record_queue_depth(depth);
+                }
+            }
+            Admission::AcceptedAfterBlock(depth) => {
+                if let Ok(mut m) = self.pool.metrics_map().lock() {
+                    let e = m.entry(app.to_string()).or_default();
+                    e.record_queue_depth(depth);
+                    e.backpressure_blocks += 1;
+                }
+            }
+            Admission::Shed => {
+                if let Ok(mut m) = self.pool.metrics_map().lock() {
+                    m.entry(app.to_string()).or_default().shed += 1;
+                }
+                bail!(
+                    "shard {} admission queue full (backpressure)",
+                    self.pool.shard_of(app).unwrap_or(0)
+                );
+            }
         }
         Ok(rrx)
     }
@@ -203,5 +226,26 @@ impl Server {
     /// Aggregate metrics across all apps and shards.
     pub fn pool_metrics(&self) -> Metrics {
         self.pool.pool_metrics()
+    }
+
+    /// Flat exposition snapshot of every per-app metrics object plus
+    /// the pool aggregate, under `serve_<app>_*` / `serve_pool_*` keys
+    /// (see `docs/ARCHITECTURE.md` § Observability for the field map).
+    /// Render it with [`MetricsSnapshot::to_flat_json`] or
+    /// [`MetricsSnapshot::to_prometheus`].
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let mut snap = MetricsSnapshot::default();
+        let mut pool = Metrics::default();
+        if let Ok(m) = self.pool.metrics_map().lock() {
+            let mut apps: Vec<&String> = m.keys().collect();
+            apps.sort();
+            for app in apps {
+                let e = &m[app];
+                e.snapshot_into(app, &mut snap);
+                pool.merge(e);
+            }
+        }
+        pool.snapshot_into("pool", &mut snap);
+        snap
     }
 }

@@ -10,6 +10,7 @@
 //! front-door [`super::Server`] exposes.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -17,7 +18,7 @@ use std::time::Instant;
 
 use crate::bail;
 use crate::coordinator::batcher::{Batcher, BatcherConfig, Pending};
-use crate::coordinator::metrics::Metrics;
+use crate::coordinator::metrics::{Metrics, WaveClose};
 use crate::error::{Context, Result};
 use crate::fault::FaultPlan;
 use crate::runtime::Engine;
@@ -37,16 +38,39 @@ pub(crate) struct WaveKnobs {
 
 /// Messages accepted by a shard's admission queue.
 pub(crate) enum ShardMsg {
-    Request { app: String, inputs: Vec<f32>, respond: Sender<f32> },
+    Request {
+        app: String,
+        inputs: Vec<f32>,
+        respond: Sender<f32>,
+        /// Submit timestamp — queue wait is measured from here to wave
+        /// start, covering the admission channel *and* the batcher.
+        enqueued: Instant,
+    },
     /// Drain every batcher (partial waves included), then ack.
     Flush(Sender<()>),
     Shutdown,
+}
+
+/// Outcome of a depth-tracked admission attempt ([`Shard::admit`]).
+/// Carries the queue depth right after the enqueue so the caller can
+/// feed the depth distribution without re-reading the counter.
+pub(crate) enum Admission {
+    /// Enqueued without waiting.
+    Accepted(u64),
+    /// Enqueued after blocking on a full queue (backpressure).
+    AcceptedAfterBlock(u64),
+    /// Rejected — queue full on the non-blocking path (load shed).
+    Shed,
 }
 
 /// One controller shard: the handle side (queue sender + join handle).
 pub struct Shard {
     id: usize,
     tx: SyncSender<ShardMsg>,
+    /// Requests admitted but not yet dequeued by the shard loop —
+    /// blocked submitters included, so depth can briefly exceed the
+    /// channel bound under backpressure.
+    depth: Arc<AtomicU64>,
     handle: Option<JoinHandle<()>>,
 }
 
@@ -65,11 +89,13 @@ impl Shard {
         metrics: Arc<Mutex<HashMap<String, Metrics>>>,
     ) -> Result<Self> {
         let (tx, rx) = sync_channel(queue_depth.max(1));
+        let depth = Arc::new(AtomicU64::new(0));
+        let loop_depth = Arc::clone(&depth);
         let handle = std::thread::Builder::new()
             .name(format!("stoch-imc-shard-{id}"))
-            .spawn(move || shard_loop(id, &engine, rx, &metrics, &specs, &cfg, knobs))
+            .spawn(move || shard_loop(id, &engine, rx, &loop_depth, &metrics, &specs, &cfg, knobs))
             .with_context(|| format!("spawning shard {id}"))?;
-        Ok(Self { id, tx, handle: Some(handle) })
+        Ok(Self { id, tx, depth, handle: Some(handle) })
     }
 
     pub fn id(&self) -> usize {
@@ -78,20 +104,49 @@ impl Shard {
 
     /// Blocking enqueue: waits when the admission queue is full
     /// (backpressure) and errors only if the shard thread is gone.
+    /// Control messages (flush/shutdown) ride this untracked path;
+    /// requests go through [`Shard::admit`] so depth telemetry sees
+    /// them.
     pub(crate) fn send(&self, msg: ShardMsg) -> Result<()> {
         self.tx.send(msg).ok().with_context(|| format!("shard {} gone", self.id))
     }
 
-    /// Non-blocking enqueue: errors with a "queue full" message when the
-    /// bounded queue is at capacity.
-    pub(crate) fn try_send(&self, msg: ShardMsg) -> Result<()> {
+    /// Depth-tracked request admission. Blocking mode waits out a full
+    /// queue (reported as [`Admission::AcceptedAfterBlock`]); the
+    /// non-blocking mode reports [`Admission::Shed`] instead of
+    /// waiting. Errors only if the shard thread is gone.
+    pub(crate) fn admit(&self, msg: ShardMsg, block: bool) -> Result<Admission> {
+        // Count before the send so the shard loop (which decrements on
+        // dequeue) can never observe the message before the increment.
+        self.depth.fetch_add(1, Ordering::Relaxed);
         match self.tx.try_send(msg) {
-            Ok(()) => Ok(()),
-            Err(TrySendError::Full(_)) => {
-                bail!("shard {} admission queue full (backpressure)", self.id)
+            Ok(()) => Ok(Admission::Accepted(self.depth.load(Ordering::Relaxed))),
+            Err(TrySendError::Full(msg)) => {
+                if !block {
+                    self.depth.fetch_sub(1, Ordering::Relaxed);
+                    return Ok(Admission::Shed);
+                }
+                match self.tx.send(msg) {
+                    Ok(()) => {
+                        Ok(Admission::AcceptedAfterBlock(self.depth.load(Ordering::Relaxed)))
+                    }
+                    Err(_) => {
+                        self.depth.fetch_sub(1, Ordering::Relaxed);
+                        bail!("shard {} gone", self.id)
+                    }
+                }
             }
-            Err(TrySendError::Disconnected(_)) => bail!("shard {} gone", self.id),
+            Err(TrySendError::Disconnected(_)) => {
+                self.depth.fetch_sub(1, Ordering::Relaxed);
+                bail!("shard {} gone", self.id)
+            }
         }
+    }
+
+    /// Current admission-queue depth (requests admitted, not yet
+    /// dequeued).
+    pub fn queue_len(&self) -> u64 {
+        self.depth.load(Ordering::Relaxed)
     }
 
     /// Ask the shard to exit; it drains pending waves first. Pair with
@@ -111,10 +166,12 @@ impl Shard {
 /// The executor loop: one per shard thread. Identical in shape to the
 /// old single-controller loop, but scoped to this shard's apps and
 /// executing waves row-parallel on the shared engine.
+#[allow(clippy::too_many_arguments)]
 fn shard_loop(
     id: usize,
     engine: &Engine,
     rx: Receiver<ShardMsg>,
+    depth: &AtomicU64,
     metrics: &Arc<Mutex<HashMap<String, Metrics>>>,
     specs: &HashMap<String, (usize, usize)>,
     cfg: &BatcherConfig,
@@ -127,17 +184,23 @@ fn shard_loop(
     loop {
         // Wait for work (bounded, so timeouts can close partial waves).
         match rx.recv_timeout(cfg.max_wait) {
-            Ok(ShardMsg::Request { app, inputs, respond }) => {
+            Ok(ShardMsg::Request { app, inputs, respond, enqueued }) => {
+                // Dequeue edge: the consumer-side depth sample pairs
+                // with the producer-side sample taken at admission.
+                let d = depth.fetch_sub(1, Ordering::Relaxed).saturating_sub(1);
                 let Some(&(n, batch)) = specs.get(&app) else {
                     // The server validates routing before enqueueing;
                     // drop the responder so the caller sees an error.
                     eprintln!("shard {id}: request for unrouted app `{app}` dropped");
                     continue;
                 };
+                if let Ok(mut m) = metrics.lock() {
+                    m.entry(app.clone()).or_default().record_queue_depth(d);
+                }
                 let b = batchers.entry(app).or_insert_with(|| {
                     Batcher::new(BatcherConfig { batch, max_wait: cfg.max_wait }, n)
                 });
-                b.push(Pending { inputs, respond, enqueued: Instant::now() });
+                b.push(Pending { inputs, respond, enqueued });
             }
             Ok(ShardMsg::Flush(ack)) => {
                 drain_all(engine, &mut batchers, metrics, &mut seed, knobs);
@@ -157,7 +220,8 @@ fn shard_loop(
         let now = Instant::now();
         for (app, b) in batchers.iter_mut() {
             while b.ready(now) {
-                execute_wave(engine, app, b, metrics, &mut seed, knobs);
+                let close = if b.is_full() { WaveClose::Full } else { WaveClose::Deadline };
+                execute_wave(engine, app, b, metrics, &mut seed, knobs, close);
             }
         }
     }
@@ -172,11 +236,16 @@ fn drain_all(
 ) {
     for (app, b) in batchers.iter_mut() {
         while !b.is_empty() {
-            execute_wave(engine, app, b, metrics, seed, knobs);
+            // A full wave that happens to drain during a flush still
+            // counts as a capacity close; only partial tails are
+            // flush-closed.
+            let close = if b.is_full() { WaveClose::Full } else { WaveClose::Flush };
+            execute_wave(engine, app, b, metrics, seed, knobs, close);
         }
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn execute_wave(
     engine: &Engine,
     app: &str,
@@ -184,6 +253,7 @@ fn execute_wave(
     metrics: &Arc<Mutex<HashMap<String, Metrics>>>,
     seed: &mut i32,
     knobs: WaveKnobs,
+    close: WaveClose,
 ) {
     let wave = b.drain();
     *seed = seed.wrapping_mul(0x343FD).wrapping_add(0x269EC3);
@@ -206,6 +276,12 @@ fn execute_wave(
                 let e = m.entry(app.to_string()).or_default();
                 e.record_wave(wave.responders.len(), wave.padded, dt);
                 e.record_stats(&stats);
+                e.record_drain(close);
+                for enq in &wave.enqueued {
+                    // Submit → wave start (admission channel + batcher
+                    // residence); saturates to zero across threads.
+                    e.record_queue_wait(t0.duration_since(*enq));
+                }
                 for _ in 0..wave.responders.len() {
                     e.record_latency(dt);
                 }

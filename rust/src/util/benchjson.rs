@@ -30,25 +30,64 @@ pub fn merge_and_write(path: &Path, entries: &[(String, f64)]) -> io::Result<()>
     std::fs::write(path, render(&map))
 }
 
-/// Parse the flat `{ "key": number, ... }` shape. Unparseable values
-/// are skipped rather than failing the bench run.
+/// Parse the flat `{ "key": number, ... }` shape. Key strings honor
+/// JSON backslash escapes (the inverse of [`escape`]); unparseable
+/// values are skipped rather than failing the bench run.
 pub fn parse_flat(text: &str) -> Vec<(String, f64)> {
     let mut out = Vec::new();
     let mut rest = text;
     while let Some(q0) = rest.find('"') {
         let after_open = &rest[q0 + 1..];
-        let Some(q1) = after_open.find('"') else { break };
-        let key = &after_open[..q1];
-        let after_key = &after_open[q1 + 1..];
+        let Some((key, consumed)) = scan_string(after_open) else { break };
+        let after_key = &after_open[consumed..];
         let Some(colon) = after_key.find(':') else { break };
         let val_text = after_key[colon + 1..].trim_start();
         let end = val_text
             .find(|c: char| c == ',' || c == '}' || c == '\n')
             .unwrap_or(val_text.len());
         if let Ok(v) = val_text[..end].trim().parse::<f64>() {
-            out.push((key.to_string(), v));
+            out.push((key, v));
         }
         rest = &val_text[end..];
+    }
+    out
+}
+
+/// Walk a JSON string body (opening quote already consumed), honoring
+/// backslash escapes. Returns the unescaped content and the number of
+/// bytes consumed *including* the closing quote, or `None` when the
+/// string never closes.
+fn scan_string(s: &str) -> Option<(String, usize)> {
+    let mut key = String::new();
+    let mut chars = s.char_indices();
+    while let Some((i, c)) = chars.next() {
+        match c {
+            '"' => return Some((key, i + 1)),
+            '\\' => match chars.next() {
+                Some((_, 'n')) => key.push('\n'),
+                Some((_, 'r')) => key.push('\r'),
+                Some((_, 't')) => key.push('\t'),
+                Some((_, esc)) => key.push(esc), // \", \\, \/ and friends
+                None => return None,
+            },
+            _ => key.push(c),
+        }
+    }
+    None
+}
+
+/// Escape a key for embedding in a JSON string literal.
+fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            _ => out.push(c),
+        }
     }
     out
 }
@@ -58,7 +97,7 @@ pub fn render(map: &BTreeMap<String, f64>) -> String {
     let mut s = String::from("{\n");
     for (i, (k, v)) in map.iter().enumerate() {
         let comma = if i + 1 < map.len() { "," } else { "" };
-        s.push_str(&format!("  \"{k}\": {v:.3}{comma}\n"));
+        s.push_str(&format!("  \"{}\": {v:.3}{comma}\n", escape(k)));
     }
     s.push_str("}\n");
     s
@@ -111,5 +150,24 @@ mod tests {
         assert!(parse_flat("").is_empty());
         assert!(parse_flat("{}").is_empty());
         assert!(parse_flat("\"dangling").is_empty());
+        assert!(parse_flat("\"never closes \\").is_empty());
+    }
+
+    #[test]
+    fn escaped_keys_round_trip() {
+        let mut map = BTreeMap::new();
+        map.insert("plain_key".to_string(), 1.0);
+        map.insert("quote\"in\"key".to_string(), 2.0);
+        map.insert("back\\slash".to_string(), 3.0);
+        map.insert("tab\tand\nnewline".to_string(), 4.0);
+        let text = render(&map);
+        // The rendered form stays one entry per line: escapes keep
+        // raw newlines/quotes out of the serialized text.
+        assert_eq!(text.lines().count(), map.len() + 2, "{text}");
+        let got: BTreeMap<String, f64> = parse_flat(&text).into_iter().collect();
+        assert_eq!(got.len(), map.len(), "{text}");
+        for (k, v) in &map {
+            assert_eq!(got.get(k), Some(v), "key {k:?} lost in {text}");
+        }
     }
 }

@@ -1,0 +1,202 @@
+//! Observability acceptance: the instrumentation layer must be free
+//! (bit-identical outputs with spans/counters on), the fixed-memory
+//! histograms must aggregate exactly across shards, and the exposition
+//! layer must surface the full telemetry schema from a live server.
+//!
+//! Three pins:
+//!
+//! * **Instrumentation is free** — `execute_rows_instrumented` with no
+//!   fault plan returns exactly the clean path's bits for every lane
+//!   width {64, 128, 256, auto} and worker count {1, 3, 16}, while
+//!   still accumulating stage spans and op counters. (The rate-0 fault
+//!   differential lives in `tests/fault.rs`.)
+//! * **Merge ≡ concatenation** — per-shard `Metrics` merged into a pool
+//!   answer every percentile identically to one `Metrics` fed the
+//!   concatenated sample stream (the histogram exact-merge invariant
+//!   promised in `obs::hist`).
+//! * **Exposition end-to-end** — a live `serve::Server` snapshot
+//!   carries the stable key schema (`stats --check` contract), stage
+//!   shares that sum to 1, and survives the flat-JSON and Prometheus
+//!   renderings.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use stoch_imc::coordinator::{Metrics, WaveClose};
+use stoch_imc::obs::MetricsSnapshot;
+use stoch_imc::runtime::InterpEngine;
+use stoch_imc::serve::{Server, ServerConfig};
+use stoch_imc::util::benchjson;
+use stoch_imc::util::prng::{fnv1a, Xoshiro256};
+
+const BATCH: usize = 200;
+const WIDTHS: [usize; 4] = [64, 128, 256, 0];
+const THREADS: [usize; 3] = [1, 3, 16];
+
+fn engine(tag: &str) -> InterpEngine {
+    let dir = std::env::temp_dir().join(format!("stoch_imc_obs_{tag}"));
+    std::fs::create_dir_all(&dir).unwrap();
+    let manifest =
+        format!("op_multiply 2 {BATCH} 100\napp_ol 6 {BATCH} 100\napp_kde 9 {BATCH} 100\n");
+    std::fs::write(dir.join("manifest.txt"), manifest).unwrap();
+    InterpEngine::load(&dir).expect("obs-suite engine load")
+}
+
+fn values_for(e: &InterpEngine, name: &str, seed: i32) -> Vec<f32> {
+    let n = e.spec(name).unwrap().n_inputs;
+    let mut rng = Xoshiro256::seeded(fnv1a(name) ^ seed as u32 as u64);
+    (0..BATCH * n).map(|_| rng.next_f64() as f32).collect()
+}
+
+fn manifest_dir(tag: &str, lines: &str) -> PathBuf {
+    std::env::remove_var("STOCH_IMC_BACKEND");
+    let dir = std::env::temp_dir().join(format!("stoch_imc_it_obs_{tag}"));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.txt"), lines).unwrap();
+    dir
+}
+
+/// Span timing and op counting must never perturb the computed bits:
+/// the instrumented path with no fault plan is the clean path plus
+/// observation, at every lane width and worker count.
+#[test]
+fn instrumentation_is_bit_identical_to_clean_path() {
+    let e = engine("free");
+    for (i, name) in ["op_multiply", "app_ol", "app_kde"].iter().enumerate() {
+        let seed = 700 + i as i32;
+        let values = values_for(&e, name, seed);
+        let live = 130; // ragged at 64/128, partial at 256
+        for width in WIDTHS {
+            for threads in THREADS {
+                let clean = e.execute_rows_wide(name, &values, seed, live, threads, width).unwrap();
+                let (instr, stats) = e
+                    .execute_rows_instrumented(name, &values, seed, live, threads, width, None)
+                    .unwrap();
+                assert_eq!(
+                    clean, instr,
+                    "instrumentation changed bits: artifact={name} width={width} threads={threads}"
+                );
+                // ...while the observation itself is live.
+                assert!(
+                    stats.spans.total_ns() > 0,
+                    "no stage time recorded: artifact={name} width={width} threads={threads}"
+                );
+                assert!(stats.ops.stob_reads > 0, "no op counters: artifact={name}");
+                let shares = stats.spans.shares();
+                let sum: f64 = shares.iter().sum();
+                assert!((sum - 1.0).abs() < 1e-9, "{name}: stage shares sum to {sum}");
+            }
+        }
+    }
+}
+
+/// The pool-aggregation invariant: merging per-shard metrics answers
+/// every percentile exactly as one metrics object fed the concatenated
+/// sample stream would — histograms merge by bucket addition, so the
+/// two are the *same* histogram, not merely close.
+#[test]
+fn shard_merge_equals_concatenated_stream() {
+    let mut shards = [Metrics::default(), Metrics::default(), Metrics::default()];
+    let mut whole = Metrics::default();
+    let mut x = 0xDEC0_DE00_1234_5678u64;
+    for i in 0..3000usize {
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        let us = x % 2_000_000; // spans several octaves
+        let s = &mut shards[i % 3];
+        s.record_latency(Duration::from_micros(us));
+        s.record_queue_wait(Duration::from_micros(us / 3));
+        s.record_queue_depth(x % 97);
+        whole.record_latency(Duration::from_micros(us));
+        whole.record_queue_wait(Duration::from_micros(us / 3));
+        whole.record_queue_depth(x % 97);
+    }
+    shards[0].record_drain(WaveClose::Full);
+    shards[1].record_drain(WaveClose::Deadline);
+    shards[2].record_drain(WaveClose::Flush);
+    let mut pool = Metrics::default();
+    for s in &shards {
+        pool.merge(s);
+    }
+    for p in [0.0, 1.0, 10.0, 50.0, 90.0, 95.0, 99.0, 99.9, 100.0] {
+        assert_eq!(pool.latency_us(p), whole.latency_us(p), "latency p{p}");
+        assert_eq!(pool.queue_wait_us(p), whole.queue_wait_us(p), "queue wait p{p}");
+        assert_eq!(pool.queue_depth(p), whole.queue_depth(p), "queue depth p{p}");
+    }
+    assert_eq!(pool.waves_full + pool.waves_deadline + pool.waves_flush, 3);
+}
+
+/// End-to-end exposition: a live server's snapshot carries the stable
+/// schema `stats --check` gates on, internally consistent values, and
+/// round-trips through both exposition formats.
+#[test]
+fn server_snapshot_schema_and_round_trip() {
+    let dir = manifest_dir("snap", "op_multiply 2 8 2048\nop_scaled_add 2 8 2048\n");
+    let server = Server::start(&dir, ServerConfig::default()).unwrap();
+    let mul: Vec<Vec<f64>> = (0..24).map(|i| vec![(i as f64 + 1.0) / 30.0, 0.5]).collect();
+    let add: Vec<Vec<f64>> = (0..24).map(|i| vec![(i as f64 + 1.0) / 30.0, 0.25]).collect();
+    server.run_workload("op_multiply", &mul).unwrap();
+    server.run_workload("op_scaled_add", &add).unwrap();
+    server.drain().unwrap();
+
+    let snap = server.snapshot();
+    // The `stats --check` key contract, for the pool scope and every
+    // app scope (snapshot_into emits the same schema per scope).
+    for scope in ["pool", "op_multiply", "op_scaled_add"] {
+        for metric in [
+            "requests",
+            "waves",
+            "waves_full",
+            "waves_deadline",
+            "waves_flush",
+            "latency_us_p50",
+            "latency_us_p95",
+            "latency_us_p99",
+            "latency_us_p999",
+            "latency_us_max",
+            "queue_wait_us_p99",
+            "queue_depth_p99",
+            "shed_total",
+            "backpressure_blocks",
+            "stage_sng_share",
+            "stage_gate_share",
+            "stage_regen_share",
+            "stage_stob_share",
+            "stage_total_ms",
+            "wave_live_rows_max",
+            "wear_writes",
+        ] {
+            let key = format!("serve_{scope}_{metric}");
+            assert!(snap.get(&key).is_some(), "missing {key}");
+        }
+    }
+    // Internal consistency: counts, ordering, shares.
+    assert_eq!(snap.get("serve_pool_requests"), Some(48.0));
+    assert_eq!(snap.get("serve_op_multiply_requests"), Some(24.0));
+    let p50 = snap.get("serve_pool_latency_us_p50").unwrap();
+    let p99 = snap.get("serve_pool_latency_us_p99").unwrap();
+    let max = snap.get("serve_pool_latency_us_max").unwrap();
+    assert!(p50 <= p99 && p99 <= max, "percentiles out of order: {p50} {p99} {max}");
+    let shares: f64 = ["sng", "gate", "regen", "stob"]
+        .iter()
+        .map(|s| snap.get(&format!("serve_pool_stage_{s}_share")).unwrap())
+        .sum();
+    assert!((shares - 1.0).abs() < 1e-9, "stage shares sum to {shares}");
+    assert!(snap.get("serve_pool_stage_total_ms").unwrap() > 0.0);
+
+    // Flat JSON round-trip through the shared benchjson writer/reader.
+    let text = snap.to_flat_json();
+    let back = MetricsSnapshot::from_entries(&benchjson::parse_flat(&text));
+    assert_eq!(back.len(), snap.len(), "keys lost in flat JSON");
+    for (k, v) in snap.iter() {
+        let got = back.get(k).unwrap_or_else(|| panic!("key {k} lost"));
+        assert!((got - v).abs() < 1e-3, "{k}: {got} vs {v}");
+    }
+    // Prometheus text: one sanitized line per metric.
+    let prom = snap.to_prometheus();
+    assert_eq!(prom.lines().count(), snap.len());
+    for line in prom.lines() {
+        assert!(line.starts_with("stoch_imc_serve_"), "bad line {line}");
+    }
+}

@@ -120,10 +120,30 @@ fn bounded_queue_sheds_load_then_drains() {
     // drain() waits until every admitted request has executed; nothing
     // admitted is ever dropped.
     server.drain().unwrap();
+    let n_admitted = admitted.len();
     for rx in admitted {
         let v = rx.recv().expect("admitted request answered") as f64;
         assert!((v - 0.25).abs() < 0.05, "got {v}");
     }
+
+    // Admission-control telemetry: every shed was counted per app, the
+    // try-only loop never blocked, and every executed wave's close
+    // reason was recorded.
+    let m = server.metrics("op_multiply");
+    assert_eq!(m.shed, shed as u64, "each try_submit rejection counts once");
+    assert_eq!(m.backpressure_blocks, 0, "try_submit must never block");
+    assert_eq!(m.requests, n_admitted as u64);
+    assert_eq!(
+        m.waves_full + m.waves_deadline + m.waves_flush,
+        m.waves,
+        "every wave has exactly one close reason"
+    );
+    // The flat snapshot exposes the same counters under stable keys.
+    let snap = server.snapshot();
+    assert_eq!(snap.get("serve_op_multiply_shed_total"), Some(shed as f64));
+    assert_eq!(snap.get("serve_pool_shed_total"), Some(shed as f64));
+    assert!(snap.get("serve_pool_queue_wait_us_p99").is_some());
+    assert!(snap.get("serve_pool_queue_depth_max").is_some());
 }
 
 #[test]
