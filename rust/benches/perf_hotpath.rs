@@ -59,18 +59,20 @@ fn main() {
 
     // L3a': wave-shaped SNG — scalar per-row bitstreams (one PRNG per
     // row, the pre-lane-major wave path) vs the lane-major RNG-bank
-    // path packing 256 rows into u64×4 lane words. Both generate the
-    // identical bits (each row's draw order is pinned by tests), so
-    // the ratio isolates generation cost — the dominant wave cost once
-    // gate eval is word-parallel.
+    // path packing 256 rows into u64×4 lane words, vs the counter-based
+    // stateless path (the default generator since PR 8). Each family
+    // generates its own pinned bits; the ratios isolate generation
+    // cost — the dominant wave cost once gate eval is word-parallel.
     {
         use stoch_imc::sc::bitplane::LaneBlock;
         use stoch_imc::sc::sng;
-        use stoch_imc::util::prng::{fnv1a, RngBank};
+        use stoch_imc::util::prng::{counter_node_part, fnv1a, CounterBank, RngBank};
         const ROWS: usize = 256;
         const BL: usize = 256;
         let h = fnv1a("bench_sng");
         let vals: Vec<f64> = (0..ROWS).map(|i| 0.05 + 0.9 * (i as f64) / ROWS as f64).collect();
+        let mut cutoffs = Vec::new();
+        sng::load_cutoffs(&vals, &mut cutoffs);
         let sng_scalar_t = bench("SNG scalar 256 rows × BL=256", 1_000, || {
             for (row, &v) in vals.iter().enumerate() {
                 let mut row_rng = Xoshiro256::seeded(h ^ ((row as u64) << 32));
@@ -82,7 +84,7 @@ fn main() {
         let mut block: LaneBlock<4> = LaneBlock::zeros(0, 0);
         let sng_lane_t = bench("SNG lane-major 256 rows × BL=256", 1_000, || {
             bank.reseed_with(ROWS, |l| h ^ ((l as u64) << 32));
-            sng::sample_block(&vals, BL, &mut bank, &mut scratch, &mut block);
+            sng::sample_block(&cutoffs, BL, &mut bank, &mut scratch, &mut block);
             std::hint::black_box(block.word(BL - 1));
         });
         let sng_speedup = sng_scalar_t / sng_lane_t;
@@ -90,6 +92,33 @@ fn main() {
         results.push(("hotpath_sng_scalar_rows_per_s".to_string(), ROWS as f64 / sng_scalar_t));
         results.push(("hotpath_sng_lanemajor_rows_per_s".to_string(), ROWS as f64 / sng_lane_t));
         results.push(("hotpath_sng_lanemajor_speedup".to_string(), sng_speedup));
+        // Counter path, same wave shape (reseed inside the loop both
+        // ways, so per-wave key setup is costed symmetrically).
+        let mut ctr = CounterBank::new();
+        let node = sng::sng_node(sng::NODE_INPUT, 0, 0);
+        let sng_counter_t = bench("SNG counter 256 rows × BL=256", 1_000, || {
+            ctr.reseed_with(ROWS, |l| h ^ ((l as u64) << 32));
+            sng::sample_block_counter(&cutoffs, BL, &ctr, node, &mut scratch, &mut block);
+            std::hint::black_box(block.word(BL - 1));
+        });
+        let counter_speedup = sng_lane_t / sng_counter_t;
+        println!("{:<44} {:>11.2}x", "  → counter vs lockstep-xoshiro SNG", counter_speedup);
+        results.push(("hotpath_sng_counter_rows_per_s".to_string(), ROWS as f64 / sng_counter_t));
+        results.push(("hotpath_sng_counter_speedup".to_string(), counter_speedup));
+        // Raw counter draw throughput (the mix64 kernel the simd
+        // feature vectorizes): one 256-key bank swept over 256 steps.
+        let np = counter_node_part(node);
+        let mut buf = vec![0u64; ROWS];
+        let draw_t = bench("counter RNG raw draws 256 keys × 256 steps", 2_000, || {
+            for t in 0..BL as u64 {
+                ctr.draws_at_into(np, t, &mut buf);
+            }
+            std::hint::black_box(buf[ROWS - 1]);
+        });
+        results.push((
+            "hotpath_rng_draw_words_per_s".to_string(),
+            (ROWS * BL) as f64 / draw_t,
+        ));
     }
 
     // L3b: scheduler on a large replicated netlist (exp × 256 lanes).
@@ -175,6 +204,42 @@ fn main() {
             results.push((format!("hotpath_staged_{short}_lanemajor_rows_per_s"), 128.0 / lane_t));
             results.push((format!("hotpath_staged_{short}_lanemajor_speedup"), speedup));
         }
+    }
+
+    // L3f: SNG block cache — a steady-state serving shape (the same
+    // wave re-executed under one seed, e.g. a replayed benchmark batch)
+    // where every block comes out of the engine-level cache instead of
+    // being regenerated. The hit rate lands in BENCH_serve.json so the
+    // cache's effectiveness is tracked alongside its speed.
+    {
+        use stoch_imc::runtime::InterpEngine;
+        use stoch_imc::util::prng::RngMode;
+        let dir = std::env::temp_dir().join("stoch_imc_perf_sngcache");
+        std::fs::create_dir_all(&dir).expect("tmp dir");
+        std::fs::write(dir.join("manifest.txt"), "op_multiply 2 256 256\n").expect("manifest");
+        let e = InterpEngine::load(&dir).expect("interp engine");
+        let mut values = vec![0.0f32; 256 * 2];
+        for i in 0..256 {
+            values[2 * i] = 0.6;
+            values[2 * i + 1] = 0.3;
+        }
+        let run = || {
+            e.execute_rows_tuned("op_multiply", &values, 3, 256, 1, 0, Some(RngMode::Counter), None)
+                .unwrap()
+        };
+        let (_, cold) = run();
+        let warm_t = bench("op_multiply cached wave (256 rows, repeat)", 200, || {
+            std::hint::black_box(run());
+        });
+        let (_, warm) = run();
+        println!(
+            "{:<44} {:>10.0}% (cold {:.0}%)",
+            "  → SNG block-cache hit rate (warm)",
+            100.0 * warm.cache.hit_rate(),
+            100.0 * cold.cache.hit_rate()
+        );
+        results.push(("hotpath_sng_cache_hit_rate".to_string(), warm.cache.hit_rate()));
+        results.push(("hotpath_sng_cached_wave_rows_per_s".to_string(), 256.0 / warm_t));
     }
 
     // End-to-end: coordinator wave throughput per artifact on whichever

@@ -15,6 +15,7 @@ use crate::energy::{EnergyBreakdown, EnergyParams, OpCounters};
 use crate::lifetime::WearProfile;
 use crate::obs::{Histogram, MetricsSnapshot, StageSpans};
 use crate::runtime::WaveStats;
+use crate::sc::sng::SngCacheStats;
 
 /// Why a wave left the batcher — admission-control telemetry that
 /// separates saturated shards (full waves) from latency-bound ones
@@ -54,6 +55,10 @@ pub struct Metrics {
     /// Wall-clock attributed per engine stage (SNG/gate/regen/StoB),
     /// summed across workers — shares are the meaningful signal.
     pub spans: StageSpans,
+    /// SNG block-cache and per-wave cutoff-memo hit/miss counters,
+    /// summed over every wave recorded here (counter-RNG waves only —
+    /// the xoshiro compat path bypasses both caches).
+    pub cache: SngCacheStats,
     latency: Histogram,
     queue_wait: Histogram,
     queue_depth: Histogram,
@@ -105,6 +110,7 @@ impl Metrics {
         self.ops.add(&stats.ops);
         self.wear.absorb_wave(&stats.wear);
         self.spans.add(&stats.spans);
+        self.cache.add(&stats.cache);
     }
 
     /// Fold another metrics snapshot into this one — the pool-wide
@@ -129,6 +135,7 @@ impl Metrics {
         self.ops.add(&other.ops);
         self.wear.merge(&other.wear);
         self.spans.add(&other.spans);
+        self.cache.add(&other.cache);
         self.latency.merge(&other.latency);
         self.queue_wait.merge(&other.queue_wait);
         self.queue_depth.merge(&other.queue_depth);
@@ -233,6 +240,11 @@ impl Metrics {
         put("stage_stob_share", shares[3]);
         put("stage_total_ms", self.spans.total_ns() as f64 / 1e6);
         put("wear_writes", self.wear.writes as f64);
+        put("sng_cache_hits", self.cache.hits as f64);
+        put("sng_cache_misses", self.cache.misses as f64);
+        put("sng_cache_hit_rate", self.cache.hit_rate());
+        put("sng_cutoff_hits", self.cache.cutoff_hits as f64);
+        put("sng_cutoff_misses", self.cache.cutoff_misses as f64);
     }
 
     pub fn summary(&self) -> String {
@@ -305,6 +317,7 @@ mod tests {
             ops: OpCounters { sbg_writes: 10, presets: 10, ..OpCounters::default() },
             wear: WearProfile { used_cells: 8, writes: 20, max_cell_writes: 4 },
             spans: StageSpans { sng_ns: 100, gate_ns: 200, regen_ns: 0, stob_ns: 100 },
+            cache: SngCacheStats { hits: 3, misses: 1, cutoff_hits: 0, cutoff_misses: 4 },
         };
         // Two waves of the same app: ops sum, cells re-written (max),
         // hottest cell accumulates, spans sum.
@@ -314,6 +327,7 @@ mod tests {
         assert_eq!(a.ops.sbg_writes, 20);
         assert_eq!(a.wear, WearProfile { used_cells: 8, writes: 40, max_cell_writes: 8 });
         assert_eq!(a.spans.total_ns(), 800);
+        assert_eq!((a.cache.hits, a.cache.misses, a.cache.cutoff_misses), (6, 2, 8));
         // Another app's bank merges disjointly: capacity sums, the
         // pool's hottest cell is the max of the parts.
         let mut b = Metrics::default();
@@ -385,6 +399,9 @@ mod tests {
             "serve_pool_stage_stob_share",
             "serve_pool_waves_deadline",
             "serve_pool_wear_writes",
+            "serve_pool_sng_cache_hits",
+            "serve_pool_sng_cache_hit_rate",
+            "serve_pool_sng_cutoff_hits",
         ] {
             assert!(snap.get(key).is_some(), "missing {key}");
         }

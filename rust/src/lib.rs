@@ -26,7 +26,7 @@
 //! | [`obs`] | Observability: fixed-memory histograms, stage spans, stats exposition |
 //! | [`report`] | Generators for the paper's tables/figures |
 //! | [`error`] | Dependency-free `anyhow`-style error type and macros |
-//! | [`util`] | PRNG (xoshiro256**), stats, property-test helper |
+//! | [`util`] | PRNGs (counter-mode SplitMix64, xoshiro256**), stats, property-test helper |
 //!
 //! # Backends
 //!
@@ -36,6 +36,10 @@
 //! the PJRT/XLA client for the AOT HLO artifacts; see `rust/Cargo.toml`
 //! for how to link it.
 #![allow(clippy::needless_range_loop)]
+// The off-by-default `simd` feature vectorizes the counter-RNG/SNG hot
+// loops via `std::simd`, which is nightly-only; stable builds never see
+// this attribute.
+#![cfg_attr(feature = "simd", feature(portable_simd))]
 // `xla_available` is a user-provided cfg (set via RUSTFLAGS when the
 // PJRT `xla` crate is vendored); silence check-cfg on toolchains that
 // know the lint, and the unknown-lint warning on those that don't.

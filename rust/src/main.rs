@@ -146,6 +146,9 @@ const REQUIRED_STATS_KEYS: &[&str] = &[
     "serve_pool_stage_gate_share",
     "serve_pool_stage_regen_share",
     "serve_pool_stage_stob_share",
+    "serve_pool_sng_cache_hits",
+    "serve_pool_sng_cache_hit_rate",
+    "serve_pool_sng_cutoff_hits",
 ];
 
 /// Stats exposition: print a stats snapshot — either one previously

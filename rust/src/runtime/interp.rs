@@ -11,14 +11,23 @@
 //! and the single-stage apps (`app_ol`, `app_hdp`) as one-stage plans,
 //! the multi-stage apps (`app_lit`, `app_kde`) as chains of gate plans
 //! wired through StoB→BtoS regeneration edges — and evaluated
-//! **word-parallel** over a fully lane-major pipeline: a lockstep
-//! [`RngBank`] seeds one PRNG stream per batch row, the lane-major SNG
-//! ([`crate::sc::sng`], integer-threshold comparisons) packs each time
-//! step's bits straight into `u64×W` lane words
-//! ([`LaneBlock`](crate::sc::LaneBlock), `W ∈ {1, 2, 4}` → 64/128/256
-//! rows per block), each stage's compiled gate program executes every
-//! instruction for all lanes at once, and the vertical-counter StoB
-//! readout produces every row's count without leaving the lane domain.
+//! **word-parallel** over a fully lane-major pipeline: one generator
+//! stream per batch row — by default the stateless counter generator
+//! ([`CounterBank`], draws addressed by `(lane, node, step)`, cacheable
+//! and seekable), or the lockstep xoshiro [`RngBank`] compatibility
+//! path (`STOCH_IMC_RNG=xoshiro`) — feeds the lane-major SNG
+//! ([`crate::sc::sng`], integer-threshold comparisons), which packs
+//! each time step's bits straight into `u64×W` lane words
+//! ([`LaneBlock`](crate::sc::LaneBlock), `W ∈ {1, 2, 4, 8}` →
+//! 64/128/256/512 rows per block), each stage's compiled gate program
+//! executes every instruction for all lanes at once, and the
+//! vertical-counter StoB readout produces every row's count without
+//! leaving the lane domain. On the counter path, freshly generated
+//! input blocks are additionally memoized in an engine-level
+//! [`SngCache`](crate::sc::sng::SngCache): re-executing the same
+//! `(seed, artifact, rows, values)` wave reuses the packed words
+//! instead of regenerating them (hit/miss counters ride along in
+//! [`WaveStats`]).
 //! Between stages the per-lane counts become the per-lane SNG
 //! thresholds of the next stage's regenerated inputs (correlated
 //! groups included) — the regeneration never leaves the lane domain
@@ -27,10 +36,12 @@
 //! bit-parallel subarray rows, staged applications included (§5.3).
 //!
 //! Outputs are bit-identical to the retained scalar golden path
-//! ([`StagedPlan::eval_row_scalar`], reachable via
+//! ([`StagedPlan::eval_row_scalar`] /
+//! [`StagedPlan::eval_row_scalar_counter`], reachable via
 //! [`InterpEngine::execute_rows_scalar`]) because each lane draws the
-//! same per-row stream in the same per-stage order and the plans
-//! evaluate each lane exactly as the golden model does. For the flat
+//! same per-row stream — in the same per-stage order on the xoshiro
+//! path, at the same `(node, step)` addresses on the counter path —
+//! and the plans evaluate each lane exactly as the golden model does. For the flat
 //! kernels this is the same golden contract as before the staged
 //! engine; for `app_lit`/`app_kde` the bit-level reference is the
 //! staged-netlist model (see `netlist::staged` — the legacy
@@ -57,7 +68,7 @@ use crate::netlist::{ops, Binding, InputClass, Netlist, PlanScratch, StagedPlan}
 use crate::obs::StageSpans;
 use crate::sc::bitplane::{LaneBlock, LANES};
 use crate::sc::sng;
-use crate::util::prng::{fnv1a, RngBank, Xoshiro256};
+use crate::util::prng::{fnv1a, mix64, CounterBank, RngBank, RngMode, Xoshiro256};
 
 use super::artifacts::{load_manifest, ArtifactSpec};
 
@@ -69,6 +80,11 @@ struct Wave<'a> {
     kernel: &'a StagedPlan,
     values: &'a [f32],
     seed: i32,
+    /// Which generator feeds the SNG (counter default; xoshiro compat).
+    rng: RngMode,
+    /// SNG-cache epoch: fingerprints `(artifact, seed)` so a reseeded
+    /// or cross-artifact wave can never hit another wave's blocks.
+    epoch: u64,
     /// Precomputed fault-mask cutoffs when this wave is fault-injected
     /// (`None` for clean waves and no-op plans — the hot path then
     /// compiles to the uninstrumented loops).
@@ -101,13 +117,19 @@ pub struct WaveStats {
     /// regen / StoB), sampled once per stage per lane block and summed
     /// across workers — CPU-time-like, so shares are the signal.
     pub spans: StageSpans,
+    /// SNG block-cache and cutoff-memo hit/miss counters for this wave
+    /// (all zero on the xoshiro path, which cannot cache).
+    pub cache: sng::SngCacheStats,
 }
 
 /// The interpreter engine: artifact specs plus per-artifact compiled
-/// staged plans.
+/// staged plans, and the engine-level packed-word SNG block cache
+/// (counter path only — see [`sng::SngCache`] for why hits require the
+/// stateless generator).
 pub struct InterpEngine {
     specs: HashMap<String, ArtifactSpec>,
     kernels: HashMap<String, StagedPlan>,
+    sng_cache: sng::SngCache,
 }
 
 /// Compile-time value binding for one primary input of a single-stage
@@ -254,7 +276,7 @@ impl InterpEngine {
             kernels.insert(spec.name.clone(), k);
             specs.insert(spec.name.clone(), spec);
         }
-        Ok(Self { specs, kernels })
+        Ok(Self { specs, kernels, sng_cache: sng::SngCache::new() })
     }
 
     pub fn platform(&self) -> String {
@@ -302,14 +324,14 @@ impl InterpEngine {
         live: usize,
         threads: usize,
     ) -> Result<Vec<f32>> {
-        Ok(self.execute_impl(name, values, seed, live, threads, 0, true, None)?.0)
+        Ok(self.execute_impl(name, values, seed, live, threads, 0, true, None, None)?.0)
     }
 
     /// [`InterpEngine::execute_rows`] with an explicit lane width:
-    /// `64`, `128`, or `256` rows per lane block (`u64×{1,2,4}` lane
-    /// words); `0` = auto (`STOCH_IMC_LANE_WIDTH` if set, else sized
-    /// to the wave and worker count — see `resolve_lane_width`). Any
-    /// other value falls back to auto. Purely a throughput knob —
+    /// `64`, `128`, `256`, or `512` rows per lane block (`u64×{1,2,4,8}`
+    /// lane words); `0` = auto (`STOCH_IMC_LANE_WIDTH` if set, else
+    /// sized to the wave and worker count — see `resolve_lane_width`).
+    /// Any other value falls back to auto. Purely a throughput knob —
     /// outputs are bit-identical across widths.
     pub fn execute_rows_wide(
         &self,
@@ -320,7 +342,29 @@ impl InterpEngine {
         threads: usize,
         lane_width: usize,
     ) -> Result<Vec<f32>> {
-        Ok(self.execute_impl(name, values, seed, live, threads, lane_width, true, None)?.0)
+        Ok(self.execute_impl(name, values, seed, live, threads, lane_width, true, None, None)?.0)
+    }
+
+    /// The fully tuned wave entry point: everything
+    /// [`InterpEngine::execute_rows_instrumented`] offers plus an
+    /// explicit generator selection. `rng = None` resolves the
+    /// `STOCH_IMC_RNG` env var and then the counter default; explicit
+    /// `Some(..)` pins the path regardless of environment (what the
+    /// serving layer and the differential suites use — tests must never
+    /// mutate process-global env).
+    #[allow(clippy::too_many_arguments)]
+    pub fn execute_rows_tuned(
+        &self,
+        name: &str,
+        values: &[f32],
+        seed: i32,
+        live: usize,
+        threads: usize,
+        lane_width: usize,
+        rng: Option<RngMode>,
+        fault: Option<&FaultPlan>,
+    ) -> Result<(Vec<f32>, WaveStats)> {
+        self.execute_impl(name, values, seed, live, threads, lane_width, true, rng, fault)
     }
 
     /// [`InterpEngine::execute_rows_wide`] with the paper's reliability
@@ -341,15 +385,16 @@ impl InterpEngine {
         lane_width: usize,
         fault: Option<&FaultPlan>,
     ) -> Result<(Vec<f32>, WaveStats)> {
-        self.execute_impl(name, values, seed, live, threads, lane_width, true, fault)
+        self.execute_impl(name, values, seed, live, threads, lane_width, true, None, fault)
     }
 
     /// [`InterpEngine::execute_rows`] forced onto the scalar golden
     /// path: every row is evaluated one bit at a time through
-    /// [`StagedPlan::eval_row_scalar`] (per stage,
-    /// `netlist::eval::eval_stochastic` over per-row bitstreams). Kept
-    /// public as the reference the word-parallel path is differentially
-    /// tested (and benchmarked) against.
+    /// [`StagedPlan::eval_row_scalar`] (xoshiro) or
+    /// [`StagedPlan::eval_row_scalar_counter`] (counter), per the
+    /// resolved generator mode. Kept public as the reference the
+    /// word-parallel path is differentially tested (and benchmarked)
+    /// against.
     pub fn execute_rows_scalar(
         &self,
         name: &str,
@@ -358,7 +403,22 @@ impl InterpEngine {
         live: usize,
         threads: usize,
     ) -> Result<Vec<f32>> {
-        Ok(self.execute_impl(name, values, seed, live, threads, 0, false, None)?.0)
+        Ok(self.execute_impl(name, values, seed, live, threads, 0, false, None, None)?.0)
+    }
+
+    /// [`InterpEngine::execute_rows_scalar`] with an explicit generator
+    /// selection (`None` = env, then counter default) — the scalar
+    /// reference side of the tuned differential suites.
+    pub fn execute_rows_scalar_tuned(
+        &self,
+        name: &str,
+        values: &[f32],
+        seed: i32,
+        live: usize,
+        threads: usize,
+        rng: Option<RngMode>,
+    ) -> Result<Vec<f32>> {
+        Ok(self.execute_impl(name, values, seed, live, threads, 0, false, rng, None)?.0)
     }
 
     /// [`InterpEngine::execute_rows_scalar`] under fault injection —
@@ -376,7 +436,7 @@ impl InterpEngine {
         threads: usize,
         fault: &FaultPlan,
     ) -> Result<Vec<f32>> {
-        Ok(self.execute_impl(name, values, seed, live, threads, 0, false, Some(fault))?.0)
+        Ok(self.execute_impl(name, values, seed, live, threads, 0, false, None, Some(fault))?.0)
     }
 
     #[allow(clippy::too_many_arguments)]
@@ -389,6 +449,7 @@ impl InterpEngine {
         threads: usize,
         lane_width: usize,
         word_parallel: bool,
+        rng: Option<RngMode>,
         fault: Option<&FaultPlan>,
     ) -> Result<(Vec<f32>, WaveStats)> {
         let Some(spec) = self.specs.get(name) else {
@@ -410,22 +471,30 @@ impl InterpEngine {
         // registered spec matches its kernel's instance shape here.
         let live = live.min(spec.batch);
         let threads = if threads == 0 { default_row_threads() } else { threads };
+        let rng = resolve_rng_mode(rng);
         // A no-op plan (all rates 0) degrades to the clean path: same
         // bits by construction *and* zero instrumentation overhead.
         let cuts = fault.and_then(|p| if p.is_noop() { None } else { Some(p.cutoffs()) });
         let mut out = vec![0.0f32; spec.batch];
         let mut stats = WaveStats::default();
         if word_parallel {
-            let wave = Wave { name, spec, kernel, values, seed, fault: cuts.as_ref() };
-            let ops = Mutex::new((OpCounters::default(), StageSpans::default()));
+            let epoch = mix64(fnv1a(name) ^ mix64(seed as u32 as u64));
+            let wave = Wave { name, spec, kernel, values, seed, rng, epoch, fault: cuts.as_ref() };
+            let ops = Mutex::new((
+                OpCounters::default(),
+                StageSpans::default(),
+                sng::SngCacheStats::default(),
+            ));
             // Monomorphized per lane width so every per-word loop
             // runs over a compile-time-sized array.
             match resolve_lane_width(lane_width, live, threads) {
                 64 => self.execute_blocks::<1>(&wave, &mut out[..live], threads, &ops)?,
                 128 => self.execute_blocks::<2>(&wave, &mut out[..live], threads, &ops)?,
-                _ => self.execute_blocks::<4>(&wave, &mut out[..live], threads, &ops)?,
+                256 => self.execute_blocks::<4>(&wave, &mut out[..live], threads, &ops)?,
+                _ => self.execute_blocks::<8>(&wave, &mut out[..live], threads, &ops)?,
             }
-            (stats.ops, stats.spans) = ops.into_inner().expect("ops mutex poisoned");
+            (stats.ops, stats.spans, stats.cache) =
+                ops.into_inner().expect("ops mutex poisoned");
             if live > 0 {
                 // Eq 11 terms for this wave: every stage slot of every
                 // live lane is a utilized subarray row; the hottest
@@ -445,6 +514,7 @@ impl InterpEngine {
                 seed,
                 &mut out[..live],
                 threads,
+                rng,
                 cuts.as_ref(),
             )?;
         }
@@ -464,7 +534,7 @@ impl InterpEngine {
         wave: &Wave,
         out: &mut [f32],
         threads: usize,
-        ops: &Mutex<(OpCounters, StageSpans)>,
+        ops: &Mutex<(OpCounters, StageSpans, sng::SngCacheStats)>,
     ) -> Result<()> {
         let live = out.len();
         if live == 0 {
@@ -475,11 +545,12 @@ impl InterpEngine {
         let workers = threads.min(blocks).max(1);
         parallel_chunks(out, workers, blocks.div_ceil(workers) * block_rows, |start, sub| {
             let mut ws = BlockWorkspace::<W>::default();
-            // Worker-local Eq 4 counters and stage spans, folded into
-            // the wave total once per worker — the per-block hot path
-            // never touches the mutex.
+            // Worker-local Eq 4 counters, stage spans, and cache
+            // counters, folded into the wave total once per worker —
+            // the per-block hot path never touches the mutex.
             let mut local = OpCounters::default();
             let mut spans = StageSpans::default();
+            let mut cache = sng::SngCacheStats::default();
             for (bj, block_out) in sub.chunks_mut(block_rows).enumerate() {
                 self.eval_block(
                     wave,
@@ -488,11 +559,14 @@ impl InterpEngine {
                     &mut ws,
                     &mut local,
                     &mut spans,
+                    &mut cache,
                 );
             }
+            (cache.cutoff_hits, cache.cutoff_misses) = ws.cutcache.counters();
             let mut total = ops.lock().expect("ops mutex poisoned");
             total.0.add(&local);
             total.1.add(&spans);
+            total.2.add(&cache);
             Ok(())
         })
     }
@@ -526,10 +600,13 @@ impl InterpEngine {
         ws: &mut BlockWorkspace<W>,
         ops: &mut OpCounters,
         spans: &mut StageSpans,
+        cache: &mut sng::SngCacheStats,
     ) {
         let BlockWorkspace {
             rngs,
+            ctr,
             sng: sng_ws,
+            cutcache,
             vals,
             instances,
             uniforms,
@@ -544,7 +621,10 @@ impl InterpEngine {
         let lanes = out.len();
         let n = w.spec.n_inputs;
         let name_hash = fnv1a(w.name);
-        rngs.reseed_with(lanes, |l| row_seed(w.seed, name_hash, row0 + l));
+        match w.rng {
+            RngMode::Xoshiro => rngs.reseed_with(lanes, |l| row_seed(w.seed, name_hash, row0 + l)),
+            RngMode::Counter => ctr.reseed_with(lanes, |l| row_seed(w.seed, name_hash, row0 + l)),
+        }
         // Clamped instance values, lane-major ([lane][input]).
         instances.clear();
         instances.extend(
@@ -559,6 +639,11 @@ impl InterpEngine {
             plans.clear();
             plans.resize_with(stages.len(), PlanScratch::default);
         }
+        // Running (stage, input) slot index for the per-wave cutoff
+        // memo — the same position across a wave's blocks compares its
+        // values against the previous block's and skips the ⌈v·2⁵³⌉
+        // recomputation when they repeat.
+        let mut slot = 0usize;
         for (si, stage) in stages.iter().enumerate() {
             // One lane-major block per primary input, generated in
             // netlist node-id order — the binding order of the stage's
@@ -588,17 +673,53 @@ impl InterpEngine {
                     }
                 }
                 let block = &mut inputs[i];
+                let cuts_v = cutcache.cutoffs(slot, vals);
+                slot += 1;
                 match class {
                     InputClass::Correlated(g) => {
                         let us = uniforms.entry(*g).or_default();
                         if !filled_groups.contains(g) {
-                            sng::fill_draw_block(lanes, bl, rngs, us);
+                            match w.rng {
+                                RngMode::Xoshiro => sng::fill_draw_block(lanes, bl, rngs, us),
+                                RngMode::Counter => sng::fill_draw_block_counter(
+                                    lanes,
+                                    bl,
+                                    ctr,
+                                    sng::sng_node(sng::NODE_GROUP, si, *g as usize),
+                                    us,
+                                ),
+                            }
                             filled_groups.push(*g);
                         }
-                        sng::threshold_block(vals, bl, us.as_slice(), sng_ws, block);
+                        sng::threshold_block(cuts_v, bl, us.as_slice(), block);
                     }
                     // BinaryBit inputs are rejected at plan compile.
-                    _ => sng::sample_block(vals, bl, rngs, sng_ws, block),
+                    _ => match w.rng {
+                        RngMode::Xoshiro => sng::sample_block(cuts_v, bl, rngs, sng_ws, block),
+                        RngMode::Counter => {
+                            // Counter streams are pure functions of
+                            // their key, so the packed block can be
+                            // reused across executions via the
+                            // engine-level cache (stored pre-fault;
+                            // masks XOR in below either way).
+                            let node = sng::sng_node(sng::NODE_INPUT, si, i);
+                            let key = sng::SngKey {
+                                epoch: w.epoch,
+                                node,
+                                row0: row0 as u64,
+                                lanes: lanes as u32,
+                                bl: bl as u32,
+                                w: W as u32,
+                            };
+                            if self.sng_cache.fetch(&key, cuts_v, block) {
+                                cache.hits += 1;
+                            } else {
+                                cache.misses += 1;
+                                sng::sample_block_counter(cuts_v, bl, ctr, node, sng_ws, block);
+                                self.sng_cache.store(key, cuts_v, block);
+                            }
+                        }
+                    },
                 }
                 // SNG-output fault site: flip the freshly generated
                 // stream's lane words in place, so the faulted bits
@@ -679,6 +800,7 @@ impl InterpEngine {
         seed: i32,
         out: &mut [f32],
         threads: usize,
+        rng: RngMode,
         fault: Option<&FaultCutoffs>,
     ) -> Result<()> {
         let live = out.len();
@@ -686,18 +808,32 @@ impl InterpEngine {
             return Ok(());
         }
         let bl = spec.bl.max(1);
+        let name_hash = fnv1a(name);
         let workers = threads.min(live).max(1);
         parallel_chunks(out, workers, live.div_ceil(workers), |start, sub| {
             let mut x = Vec::with_capacity(spec.n_inputs);
             for (j, slot) in sub.iter_mut().enumerate() {
                 let row = start + j;
                 clamp_instance_into(values, spec.n_inputs, row, &mut x);
-                let mut rng = row_rng(seed, name, row);
-                *slot = match fault {
-                    Some(cuts) => {
-                        kernel.eval_row_scalar_fault(&x, bl, &mut rng, cuts, row as u64) as f32
+                *slot = match rng {
+                    RngMode::Xoshiro => {
+                        let mut row_rng = row_rng(seed, name, row);
+                        match fault {
+                            Some(cuts) => kernel
+                                .eval_row_scalar_fault(&x, bl, &mut row_rng, cuts, row as u64)
+                                as f32,
+                            None => kernel.eval_row_scalar(&x, bl, &mut row_rng) as f32,
+                        }
                     }
-                    None => kernel.eval_row_scalar(&x, bl, &mut rng) as f32,
+                    RngMode::Counter => {
+                        let rs = row_seed(seed, name_hash, row);
+                        match fault {
+                            Some(cuts) => kernel
+                                .eval_row_scalar_counter_fault(&x, bl, rs, cuts, row as u64)
+                                as f32,
+                            None => kernel.eval_row_scalar_counter(&x, bl, rs) as f32,
+                        }
+                    }
                 };
             }
             Ok(())
@@ -713,10 +849,18 @@ impl InterpEngine {
 /// wave; after the first block every buffer is a cheap reshape.
 #[derive(Default)]
 struct BlockWorkspace<const W: usize> {
-    /// One lockstep PRNG stream per live lane (reseeded per block).
+    /// One lockstep xoshiro stream per live lane (reseeded per block;
+    /// compatibility path only).
     rngs: RngBank,
-    /// Raw-draw and integer-cutoff scratch for the lane-major SNG.
+    /// One counter half-key per live lane (rekeyed per block; the
+    /// default stateless path).
+    ctr: CounterBank,
+    /// Raw-draw scratch for the lane-major SNG.
     sng: sng::SngScratch,
+    /// Per-wave cutoff memo, one slot per (stage, input) position —
+    /// repeated values across the worker's blocks skip the per-lane
+    /// ⌈v·2⁵³⌉ recomputation.
+    cutcache: sng::CutoffCache,
     /// Per-lane threshold for the input currently being generated.
     vals: Vec<f64>,
     /// Clamped instance values, lane-major `[lane][input]`.
@@ -741,41 +885,64 @@ struct BlockWorkspace<const W: usize> {
 }
 
 /// The explicit lane-width override from `STOCH_IMC_LANE_WIDTH`:
-/// `None` when the var is unset — or not one of 64/128/256, which
+/// `None` when the var is unset — or not one of 64/128/256/512, which
 /// warns and falls back to auto sizing.
 pub fn lane_width_override() -> Option<usize> {
     let s = std::env::var("STOCH_IMC_LANE_WIDTH").ok()?;
     match s.trim().parse::<usize>() {
-        Ok(w) if w == 64 || w == 128 || w == 256 => Some(w),
+        Ok(w) if w == 64 || w == 128 || w == 256 || w == 512 => Some(w),
         _ => {
-            eprintln!("STOCH_IMC_LANE_WIDTH=`{s}` is not one of 64|128|256; using auto");
+            eprintln!("STOCH_IMC_LANE_WIDTH=`{s}` is not one of 64|128|256|512; using auto");
             None
         }
     }
 }
 
+/// The explicit generator override from `STOCH_IMC_RNG`: `None` when
+/// the var is unset — or not one of counter/xoshiro, which warns and
+/// falls back to the counter default.
+pub fn rng_mode_override() -> Option<RngMode> {
+    let s = std::env::var("STOCH_IMC_RNG").ok()?;
+    match s.trim().to_ascii_lowercase().as_str() {
+        "counter" => Some(RngMode::Counter),
+        "xoshiro" => Some(RngMode::Xoshiro),
+        _ => {
+            eprintln!("STOCH_IMC_RNG=`{s}` is not one of counter|xoshiro; using counter");
+            None
+        }
+    }
+}
+
+/// Resolve the generator mode: an explicit argument wins, then the
+/// `STOCH_IMC_RNG` env var, then the counter default.
+fn resolve_rng_mode(rng: Option<RngMode>) -> RngMode {
+    rng.or_else(rng_mode_override).unwrap_or_default()
+}
+
 /// Resolve the lane width for a wave of `live` rows on `threads`
 /// workers: an explicit argument wins, then the `STOCH_IMC_LANE_WIDTH`
 /// env var, then auto. Auto starts from the narrowest width that
-/// covers the wave (≤ 64 rows → 64, ≤ 128 → 128, else 256) — so small
-/// waves don't drag dead lane words through every gate — and then
-/// narrows while the wave would otherwise yield fewer lane blocks than
-/// workers: wider words amortize the instruction walk, but never at
-/// the price of idling the worker pool.
+/// covers the wave (≤ 64 rows → 64, ≤ 128 → 128, ≤ 256 → 256, else
+/// 512) — so small waves don't drag dead lane words through every gate
+/// — and then narrows while the wave would otherwise yield fewer lane
+/// blocks than workers: wider words amortize the instruction walk, but
+/// never at the price of idling the worker pool.
 fn resolve_lane_width(lane_width: usize, live: usize, threads: usize) -> usize {
     let w = match lane_width {
-        64 | 128 | 256 => lane_width,
+        64 | 128 | 256 | 512 => lane_width,
         _ => lane_width_override().unwrap_or(0),
     };
     match w {
-        64 | 128 | 256 => w,
+        64 | 128 | 256 | 512 => w,
         _ => {
             let mut width = if live <= 64 {
                 64
             } else if live <= 128 {
                 128
-            } else {
+            } else if live <= 256 {
                 256
+            } else {
+                512
             };
             while width > 64 && live.div_ceil(width) < threads {
                 width /= 2;
@@ -931,7 +1098,7 @@ mod tests {
             }
             // Explicit lane widths must all match the golden path too:
             // width only changes how many rows share a lane word.
-            for width in [64usize, 128, 256] {
+            for width in [64usize, 128, 256, 512] {
                 let word =
                     e.execute_rows_wide("op_scaled_divide", &values, 21, live, 2, width).unwrap();
                 assert_eq!(golden, word, "live={live} width={width}");
@@ -1066,6 +1233,93 @@ mod tests {
         let golden =
             e.execute_rows_scalar_fault("op_multiply", &values, 5, 70, 1, &plan).unwrap();
         assert_eq!(faulty, golden, "faulty lane path vs faulty scalar reference");
+    }
+
+    #[test]
+    fn rng_modes_are_pinned_and_distinct() {
+        let e = engine_with("op_multiply 2 40 512\n", "rngmode");
+        let mut values = vec![0.0f32; 40 * 2];
+        for i in 0..40 {
+            values[2 * i] = 0.1 + 0.02 * i as f32;
+            values[2 * i + 1] = 0.9 - 0.02 * i as f32;
+        }
+        let (ctr, _) = e
+            .execute_rows_tuned("op_multiply", &values, 3, 40, 2, 0, Some(RngMode::Counter), None)
+            .unwrap();
+        let (xos, _) = e
+            .execute_rows_tuned("op_multiply", &values, 3, 40, 2, 0, Some(RngMode::Xoshiro), None)
+            .unwrap();
+        assert_ne!(ctr, xos, "the two generator families must not alias");
+        // Each lane path is bit-pinned to its own scalar reference.
+        let ctr_ref = e
+            .execute_rows_scalar_tuned("op_multiply", &values, 3, 40, 1, Some(RngMode::Counter))
+            .unwrap();
+        let xos_ref = e
+            .execute_rows_scalar_tuned("op_multiply", &values, 3, 40, 1, Some(RngMode::Xoshiro))
+            .unwrap();
+        assert_eq!(ctr, ctr_ref, "counter lane path vs counter scalar reference");
+        assert_eq!(xos, xos_ref, "xoshiro lane path vs xoshiro scalar reference");
+        // The env-resolved default is the counter path.
+        assert_eq!(ctr, e.execute_rows("op_multiply", &values, 3, 40, 2).unwrap());
+    }
+
+    #[test]
+    fn counter_sng_cache_hits_on_repeated_waves() {
+        // A repeated-value batch re-executed under one seed must reuse
+        // the packed SNG words: zero hits the first time (every block
+        // is generated and stored), all hits the second.
+        let e = engine_with("op_multiply 2 128 256\n", "sngcache");
+        let mut values = vec![0.0f32; 128 * 2];
+        for i in 0..128 {
+            values[2 * i] = 0.6;
+            values[2 * i + 1] = 0.3;
+        }
+        let run = || {
+            e.execute_rows_tuned(
+                "op_multiply",
+                &values,
+                3,
+                128,
+                1,
+                64,
+                Some(RngMode::Counter),
+                None,
+            )
+            .unwrap()
+        };
+        let (a, s1) = run();
+        assert_eq!(s1.cache.hits, 0, "fresh engine cannot hit");
+        assert!(s1.cache.misses > 0);
+        // The repeated values also exercise the per-wave cutoff memo:
+        // the second 64-row block repeats the first block's value
+        // vectors at every input slot.
+        assert!(s1.cache.cutoff_hits > 0, "repeated values must hit the cutoff memo");
+        let (b, s2) = run();
+        assert_eq!(a, b, "cache hits must be bit-identical to regeneration");
+        assert!(s2.cache.hits > 0, "repeated wave must hit the SNG block cache");
+        assert_eq!(s2.cache.misses, 0, "every block of the repeat is cached");
+        assert!(s2.cache.hit_rate() > 0.99);
+        // Fault masks XOR in after the cache, so a faulted repeat is
+        // deterministic across the generate and fetch paths too.
+        let plan = FaultPlan::uniform(0.05, 7);
+        let faulted = |p: &FaultPlan| {
+            e.execute_rows_tuned(
+                "op_multiply",
+                &values,
+                3,
+                128,
+                1,
+                64,
+                Some(RngMode::Counter),
+                Some(p),
+            )
+            .unwrap()
+        };
+        let (f1, _) = faulted(&plan);
+        let (f2, sf) = faulted(&plan);
+        assert_eq!(f1, f2);
+        assert!(sf.cache.hits > 0);
+        assert_ne!(f1, a, "5% flips must disturb outputs");
     }
 
     #[test]

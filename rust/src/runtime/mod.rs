@@ -39,7 +39,8 @@ compile_error!(
 
 pub use artifacts::{load_manifest, ArtifactSpec};
 pub use interp::{
-    default_row_threads, lane_width_override, row_threads_override, InterpEngine, WaveStats,
+    default_row_threads, lane_width_override, rng_mode_override, row_threads_override,
+    InterpEngine, WaveStats,
 };
 
 use std::path::Path;
@@ -47,6 +48,7 @@ use std::path::Path;
 use crate::bail;
 use crate::error::Result;
 use crate::fault::FaultPlan;
+use crate::util::prng::RngMode;
 
 /// A loaded execution backend over one artifact directory.
 pub enum Engine {
@@ -131,8 +133,8 @@ impl Engine {
     }
 
     /// [`Engine::execute_rows`] with an explicit lane width (rows per
-    /// lane block: 64, 128, or 256; `0` = auto). The interpreter
-    /// monomorphizes its wave over `u64×{1,2,4}` lane words with
+    /// lane block: 64, 128, 256, or 512; `0` = auto). The interpreter
+    /// monomorphizes its wave over `u64×{1,2,4,8}` lane words with
     /// bit-identical outputs at every width; PJRT always runs its
     /// fixed-shape batch and ignores both knobs.
     pub fn execute_rows_wide(
@@ -177,6 +179,35 @@ impl Engine {
             #[cfg(all(feature = "xla-runtime", xla_available))]
             Engine::Pjrt(e) => {
                 let _ = (threads, lane_width, fault);
+                Ok((e.execute(name, values, seed, live)?, WaveStats::default()))
+            }
+        }
+    }
+
+    /// [`Engine::execute_rows_instrumented`] with an explicit RNG mode
+    /// (`None` = the `STOCH_IMC_RNG` env default): the interpreter
+    /// drives its SNGs from either the counter-based stateless family
+    /// (default) or the pinned xoshiro compat bank. PJRT has no
+    /// circuit-level SNG model and ignores the knob.
+    #[allow(clippy::too_many_arguments)]
+    pub fn execute_rows_tuned(
+        &self,
+        name: &str,
+        values: &[f32],
+        seed: i32,
+        live: usize,
+        threads: usize,
+        lane_width: usize,
+        rng: Option<RngMode>,
+        fault: Option<&FaultPlan>,
+    ) -> Result<(Vec<f32>, WaveStats)> {
+        match self {
+            Engine::Interp(e) => {
+                e.execute_rows_tuned(name, values, seed, live, threads, lane_width, rng, fault)
+            }
+            #[cfg(all(feature = "xla-runtime", xla_available))]
+            Engine::Pjrt(e) => {
+                let _ = (threads, lane_width, rng, fault);
                 Ok((e.execute(name, values, seed, live)?, WaveStats::default()))
             }
         }

@@ -9,9 +9,10 @@
 //! `l`'s bit — so a single bitwise instruction (per word of the lane
 //! word) evaluates one gate for up to `64·W` rows at once, the software
 //! analogue of a subarray group firing all its rows in one cycle (paper
-//! §4.1, Fig 7b). `W ∈ {1, 2, 4}` widens the block to 64/128/256 rows;
-//! the words of one lane word are contiguous, so the per-instruction
-//! loops are autovectorizable.
+//! §4.1, Fig 7b). `W ∈ {1, 2, 4, 8}` widens the block to 64/128/256/512
+//! rows; the words of one lane word are contiguous, so the
+//! per-instruction loops are autovectorizable (and W = 8 is exactly one
+//! AVX-512 register per time step).
 //!
 //! Since the lane-major SNG pipeline (`sc::sng`) generates input blocks
 //! directly in this layout and the vertical-counter readout
@@ -26,8 +27,8 @@ use super::bitstream::Bitstream;
 /// Number of batch rows one `u64` of a lane word carries.
 pub const LANES: usize = 64;
 
-/// Widest supported lane word, in `u64`s (256 rows per block).
-pub const MAX_LANE_WORDS: usize = 4;
+/// Widest supported lane word, in `u64`s (512 rows per block).
+pub const MAX_LANE_WORDS: usize = 8;
 
 /// In-place 64×64 bit-matrix transpose over LSB-first words: afterwards
 /// bit `r` of `a[c]` is what bit `c` of `a[r]` was. Hacker's Delight
@@ -330,10 +331,11 @@ mod tests {
 
     #[test]
     fn wide_blocks_round_trip_every_lane() {
-        // W = 2 and W = 4 with lane counts walking the per-word
-        // boundaries (64, 65, 128, 129, 200, 256) and ragged lengths.
+        // W ∈ {2, 4, 8} with lane counts walking the per-word
+        // boundaries (64, 65, …, 256, 257, 512) and ragged lengths.
         roundtrip_cases::<2>(&[(100, 65), (64, 128), (65, 127), (1, 2)], 11);
         roundtrip_cases::<4>(&[(100, 129), (256, 256), (63, 200), (65, 65)], 13);
+        roundtrip_cases::<8>(&[(100, 257), (64, 512), (65, 449), (63, 300)], 17);
     }
 
     #[test]

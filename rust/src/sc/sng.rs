@@ -5,43 +5,61 @@
 //! *time* axis. The wave engine wants the transposed layout — for each
 //! time step, one packed lane word holding every row's bit — and it
 //! used to get there by generating per-row bitstreams and transposing.
-//! This module generates the lane-major words **directly**: an
-//! [`RngBank`] steps every row's PRNG in lockstep, each time step
-//! compares all lanes' raw draws against their per-lane thresholds, and
-//! the comparison bits are packed into one `[u64; W]` lane word — no
-//! per-row intermediates, no transpose.
+//! This module generates the lane-major words **directly**, from either
+//! of the engine's two generators:
+//!
+//! * the lockstep [`RngBank`] compatibility path ([`sample_block`] /
+//!   [`fill_draw_block`]): every row's xoshiro stream steps in draw
+//!   order, bit-identical to the original scalar engine;
+//! * the counter path ([`sample_block_counter`] /
+//!   [`fill_draw_block_counter`]): draws come from the stateless
+//!   [`CounterBank`], addressed by `(lane, node, step)` — step-major
+//!   strides with no loop-carried state, O(1)-seekable, and the
+//!   substrate for the packed-word [`SngCache`] below.
 //!
 //! Comparisons are **integer**: the scalar path's Bernoulli test
 //! `next_f64() < v` is `(x >> 11)·2⁻⁵³ < v` for the raw draw `x`,
 //! which is equivalent to the pure-integer `(x >> 11) < ⌈v·2⁵³⌉`
 //! (see [`cutoff`]). The per-lane cutoffs are computed **once per
-//! input block** instead of converting every draw of every lane to
-//! `f64`, and bit-identity with the scalar comparison is pinned by
-//! tests below.
+//! input block** via [`load_cutoffs`] (and reused across a wave's
+//! blocks by [`CutoffCache`] when the values repeat), and bit-identity
+//! with the scalar comparison is pinned by tests below.
 //!
-//! Draw-order contract (what keeps outputs bit-identical to the scalar
-//! path): lane `l` of the bank is seeded exactly like the scalar row
-//! PRNG, and each generation call consumes draws in the same order the
-//! scalar path would — [`sample_block`] draws `bl` raw u64s per lane
-//! (like [`Bitstream::sample`]'s `bl` `next_f64` calls),
-//! [`fill_draw_block`] draws the `bl` shared raws of a correlated
-//! group per lane (like `Xoshiro256::fill_f64`), and
+//! Draw-order contract for the xoshiro path (what keeps outputs
+//! bit-identical to the scalar path): lane `l` of the bank is seeded
+//! exactly like the scalar row PRNG, and each generation call consumes
+//! draws in the same order the scalar path would — [`sample_block`]
+//! draws `bl` raw u64s per lane (like [`Bitstream::sample`]'s `bl`
+//! `next_f64` calls), [`fill_draw_block`] draws the `bl` shared raws of
+//! a correlated group per lane (like `Xoshiro256::fill_f64`), and
 //! [`threshold_block`] draws nothing (like
 //! [`Bitstream::from_uniforms`]). Callers replay inputs in netlist
 //! node-id order, so the interleaving across inputs matches too.
 //!
+//! The counter path replaces the *order* contract with an *addressing*
+//! contract: draw `t` of input site `node` in row `l` is
+//! `CounterRng::keyed(row_seed(l), node).draw_at(t)`, a pure function,
+//! so scalar and lane-word engines agree by construction no matter what
+//! stride either uses. Input sites are numbered by [`sng_node`]
+//! (independent inputs by binding position, correlated groups by group
+//! id), so distinct inputs of one stage — and the same input across
+//! stages — never share a stream.
+//!
 //! Fault injection (the paper's SNG-output flip site) happens strictly
 //! *downstream* of this module: the executor XORs stateless
 //! [`FaultCutoffs`](crate::fault::FaultCutoffs) masks into the
-//! generated lane words after the comparison, so a faulty campaign
-//! consumes the exact same PRNG draws as a clean one and the draw-order
-//! contract above is never disturbed.
+//! generated lane words after the comparison (and after any
+//! [`SngCache`] fetch), so a faulty campaign consumes the exact same
+//! draws as a clean one and neither contract above is disturbed.
 //!
 //! [`Bitstream::sample`]: crate::sc::bitstream::Bitstream::sample
 //! [`Bitstream::from_uniforms`]: crate::sc::bitstream::Bitstream::from_uniforms
 
+use std::collections::HashMap;
+use std::sync::Mutex;
+
 use super::bitplane::{LaneBlock, LANES};
-use crate::util::prng::RngBank;
+use crate::util::prng::{counter_node_part, CounterBank, RngBank};
 
 /// Integer SNG threshold of value `v`: the smallest `n` such that
 /// `(x >> 11) < n ⇔ (x >> 11)·2⁻⁵³ < v` for every raw draw `x`.
@@ -58,26 +76,220 @@ pub fn cutoff(v: f64) -> u64 {
     (v * (1u64 << 53) as f64).ceil() as u64
 }
 
-/// Reusable scratch for lane-major SNG generation: one raw draw and one
-/// integer cutoff per lane. Caller-owned so a wave worker allocates
-/// once and reuses it for every input block of every lane block.
+// ---- SNG input-site ids (counter stream keying) ------------------------
+
+/// Node-id class for an independent input stream (index = the input's
+/// binding position within its stage).
+pub const NODE_INPUT: u64 = 1 << 60;
+
+/// Node-id class for a correlated group's shared draw stream (index =
+/// the group id).
+pub const NODE_GROUP: u64 = 2 << 60;
+
+/// Pack an SNG input-site id from (class, stage, index) — the same
+/// 20-stage-bit / 40-index-bit layout as `fault`'s injection sites, so
+/// every generated stream in a staged pipeline has a unique counter
+/// key.
+#[inline]
+pub fn sng_node(class: u64, stage: usize, index: usize) -> u64 {
+    class | ((stage as u64) << 40) | index as u64
+}
+
+/// Reusable scratch for lane-major SNG generation: one raw draw per
+/// lane. Caller-owned so a wave worker allocates once and reuses it for
+/// every input block of every lane block.
 #[derive(Debug, Default)]
 pub struct SngScratch {
-    /// One raw u64 draw per lane ([`sample_block`]'s per-step scratch).
+    /// One raw u64 draw per lane (the per-step scratch row).
     draws: Vec<u64>,
-    /// Per-lane integer thresholds for the input being generated.
-    cutoffs: Vec<u64>,
 }
 
 /// Load every lane's integer threshold (one [`cutoff`] per value).
-fn load_cutoffs(values: &[f64], cutoffs: &mut Vec<u64>) {
+pub fn load_cutoffs(values: &[f64], cutoffs: &mut Vec<u64>) {
     cutoffs.clear();
     cutoffs.extend(values.iter().map(|&v| cutoff(v)));
 }
 
+/// Per-wave cutoff memo: one slot per (stage, input) position of the
+/// compiled pipeline, holding the last values vector seen there and its
+/// cutoffs. A wave's blocks walk the same input positions with
+/// often-identical values (constants always; batch columns whenever the
+/// batch repeats values), and recomputing `⌈v·2⁵³⌉` per lane per block
+/// was pure waste — the fix the hit/miss counters make observable.
+#[derive(Debug, Default)]
+pub struct CutoffCache {
+    slots: Vec<(Vec<f64>, Vec<u64>)>,
+    hits: u64,
+    misses: u64,
+}
+
+impl CutoffCache {
+    /// The cutoffs for input slot `slot` under `values`: reuses the
+    /// memoized vector when the values match the previous block's
+    /// exactly (bitwise f64 comparison via `==`; NaN never occurs in
+    /// the clamped domain), recomputes otherwise.
+    pub fn cutoffs(&mut self, slot: usize, values: &[f64]) -> &[u64] {
+        if self.slots.len() <= slot {
+            self.slots.resize_with(slot + 1, Default::default);
+        }
+        let (vals, cuts) = &mut self.slots[slot];
+        if vals.as_slice() == values && !values.is_empty() {
+            self.hits += 1;
+        } else {
+            self.misses += 1;
+            vals.clear();
+            vals.extend_from_slice(values);
+            load_cutoffs(values, cuts);
+        }
+        &self.slots[slot].1
+    }
+
+    /// (hits, misses) since construction.
+    pub fn counters(&self) -> (u64, u64) {
+        (self.hits, self.misses)
+    }
+}
+
+// ---- packed-word SNG block cache ---------------------------------------
+
+/// Hit/miss counters for the SNG caches, folded into `WaveStats` and
+/// the `obs` snapshots. `hits`/`misses` count packed-block lookups in
+/// [`SngCache`]; `cutoff_hits`/`cutoff_misses` count [`CutoffCache`]
+/// slot lookups.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SngCacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub cutoff_hits: u64,
+    pub cutoff_misses: u64,
+}
+
+impl SngCacheStats {
+    pub fn add(&mut self, other: &SngCacheStats) {
+        self.hits += other.hits;
+        self.misses += other.misses;
+        self.cutoff_hits += other.cutoff_hits;
+        self.cutoff_misses += other.cutoff_misses;
+    }
+
+    /// Block-cache hit rate in [0, 1]; 0 when no lookups ran.
+    pub fn hit_rate(&self) -> f64 {
+        let n = self.hits + self.misses;
+        if n == 0 {
+            0.0
+        } else {
+            self.hits as f64 / n as f64
+        }
+    }
+}
+
+/// Exact identity of one generated SNG block. `epoch` fingerprints the
+/// (wave seed, artifact name) pair so reseeding invalidates everything;
+/// `node` is the [`sng_node`] input site; `row0`/`lanes` pin the batch
+/// rows the block's lanes carry; `bl`/`w` pin the shape and the
+/// flattened word layout.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct SngKey {
+    pub epoch: u64,
+    pub node: u64,
+    pub row0: u64,
+    pub lanes: u32,
+    pub bl: u32,
+    pub w: u32,
+}
+
+#[derive(Debug)]
+struct SngEntry {
+    /// The per-lane cutoffs the cached words were generated under —
+    /// verified in full on every hit, because the key does not encode
+    /// the input values.
+    cutoffs: Vec<u64>,
+    /// `bl × W` packed lane words, time-major.
+    words: Vec<u64>,
+}
+
+/// Bound on retained blocks; the map is cleared wholesale when full
+/// (generation is cheap enough that eviction policy isn't worth state).
+const SNG_CACHE_CAP: usize = 512;
+
+/// Packed-word SNG block cache. Counter-path only: a cached block is a
+/// pure function of its [`SngKey`] plus the cutoff vector, which holds
+/// for counter streams (stateless addressing) but not for xoshiro
+/// streams (a draw's value depends on every preceding draw of the
+/// wave). Within one wave every generated block is unique — distinct
+/// rows or distinct nodes — so hits come from *repeated executions*:
+/// re-served identical waves, bench iterations, repeated-value batches
+/// re-submitted under one seed. Shared across an engine's workers via a
+/// mutex; the lock is taken once per block, not per step.
+#[derive(Debug, Default)]
+pub struct SngCache {
+    inner: Mutex<HashMap<SngKey, SngEntry>>,
+}
+
+impl SngCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Look `key` up and, when present *with exactly these cutoffs*,
+    /// deposit the cached words into `out` (reshaped in place) and
+    /// return true. A key match with different cutoffs is a miss — the
+    /// batch's values changed at the same rows — and the store after
+    /// regeneration overwrites the stale entry.
+    pub fn fetch<const W: usize>(
+        &self,
+        key: &SngKey,
+        cutoffs: &[u64],
+        out: &mut LaneBlock<W>,
+    ) -> bool {
+        debug_assert_eq!(key.w as usize, W);
+        let map = self.inner.lock().unwrap();
+        let Some(entry) = map.get(key) else { return false };
+        if entry.cutoffs != cutoffs {
+            return false;
+        }
+        let (bl, lanes) = (key.bl as usize, key.lanes as usize);
+        debug_assert_eq!(entry.words.len(), bl * W);
+        out.reset(bl, lanes);
+        for t in 0..bl {
+            out.set_word(t, std::array::from_fn(|k| entry.words[t * W + k]));
+        }
+        true
+    }
+
+    /// Insert the freshly generated `block` under `key`. Blocks are
+    /// stored pre-fault (the executor XORs masks in afterwards), so a
+    /// hit replays the clean generation exactly.
+    pub fn store<const W: usize>(&self, key: SngKey, cutoffs: &[u64], block: &LaneBlock<W>) {
+        debug_assert_eq!(key.w as usize, W);
+        let bl = block.len();
+        let mut words = Vec::with_capacity(bl * W);
+        for t in 0..bl {
+            words.extend_from_slice(&block.word(t));
+        }
+        let mut map = self.inner.lock().unwrap();
+        if map.len() >= SNG_CACHE_CAP && !map.contains_key(&key) {
+            map.clear();
+        }
+        map.insert(key, SngEntry { cutoffs: cutoffs.to_vec(), words });
+    }
+
+    /// Number of cached blocks (tests/debug).
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+// ---- packing -----------------------------------------------------------
+
 /// Pack one time step's comparison bits: bit `l` of the lane word is
 /// `(draws[l] >> 11) < cutoffs[l]` — the integer form of the strict
 /// `u < v` in `Xoshiro256::bernoulli` and `Bitstream::from_uniforms`.
+#[cfg(not(feature = "simd"))]
 #[inline]
 fn pack_lt<const W: usize>(draws: &[u64], cutoffs: &[u64]) -> [u64; W] {
     let mut w = [0u64; W];
@@ -87,31 +299,57 @@ fn pack_lt<const W: usize>(draws: &[u64], cutoffs: &[u64]) -> [u64; W] {
     w
 }
 
+/// `std::simd` variant of the scalar `pack_lt` above, bit-identical:
+/// 8-lane compare-to-bitmask chunks (aligned to multiples of 8, so a
+/// chunk never straddles a 64-bit lane-word boundary) plus a scalar
+/// tail.
+#[cfg(feature = "simd")]
+#[inline]
+fn pack_lt<const W: usize>(draws: &[u64], cutoffs: &[u64]) -> [u64; W] {
+    use std::simd::cmp::SimdPartialOrd;
+    use std::simd::u64x8;
+    let mut w = [0u64; W];
+    let n = draws.len().min(cutoffs.len());
+    let mut l = 0;
+    while l + 8 <= n {
+        let x = u64x8::from_slice(&draws[l..l + 8]) >> u64x8::splat(11);
+        let c = u64x8::from_slice(&cutoffs[l..l + 8]);
+        w[l / LANES] |= x.simd_lt(c).to_bitmask() << (l % LANES);
+        l += 8;
+    }
+    while l < n {
+        w[l / LANES] |= (((draws[l] >> 11) < cutoffs[l]) as u64) << (l % LANES);
+        l += 1;
+    }
+    w
+}
+
+// ---- xoshiro (lockstep compatibility) path -----------------------------
+
 /// Bernoulli-sample one lane-major input block: lane `l` compares its
-/// own stream's next `bl` draws against threshold `values[l]` (models
+/// own stream's next `bl` draws against threshold `cutoffs[l]` (models
 /// the MTJ stochastic write, P_sw = value, across a whole subarray row
 /// group at once). The per-lane bit sequence — and the number of draws
 /// consumed — is identical to `Bitstream::sample(values[l], bl,
-/// lane_rng)`.
+/// lane_rng)` for `cutoffs` from [`load_cutoffs`].
 ///
-/// `out` is reshaped to `bl × values.len()` in place, reusing its
+/// `out` is reshaped to `bl × cutoffs.len()` in place, reusing its
 /// allocation across blocks; `scratch` likewise.
 pub fn sample_block<const W: usize>(
-    values: &[f64],
+    cutoffs: &[u64],
     bl: usize,
     rngs: &mut RngBank,
     scratch: &mut SngScratch,
     out: &mut LaneBlock<W>,
 ) {
-    let lanes = values.len();
+    let lanes = cutoffs.len();
     assert_eq!(rngs.len(), lanes, "one RNG stream per lane");
-    load_cutoffs(values, &mut scratch.cutoffs);
     out.reset(bl, lanes);
     scratch.draws.clear();
     scratch.draws.resize(lanes, 0);
     for t in 0..bl {
         rngs.next_u64_into(&mut scratch.draws);
-        out.set_word(t, pack_lt(&scratch.draws, &scratch.cutoffs));
+        out.set_word(t, pack_lt(&scratch.draws, cutoffs));
     }
 }
 
@@ -130,22 +368,66 @@ pub fn fill_draw_block(lanes: usize, bl: usize, rngs: &mut RngBank, draws: &mut 
 }
 
 /// Threshold a pre-drawn lane-major raw-draw block (from
-/// [`fill_draw_block`]) against per-lane values — the correlated
-/// counterpart of [`sample_block`], consuming no RNG draws, exactly
-/// like `Bitstream::from_uniforms` per lane.
+/// [`fill_draw_block`] or [`fill_draw_block_counter`]) against per-lane
+/// cutoffs — the correlated counterpart of [`sample_block`], consuming
+/// no RNG draws, exactly like `Bitstream::from_uniforms` per lane.
 pub fn threshold_block<const W: usize>(
-    values: &[f64],
+    cutoffs: &[u64],
     bl: usize,
     draws: &[u64],
+    out: &mut LaneBlock<W>,
+) {
+    let lanes = cutoffs.len();
+    assert_eq!(draws.len(), lanes * bl, "draw block shape mismatch");
+    out.reset(bl, lanes);
+    for t in 0..bl {
+        out.set_word(t, pack_lt(&draws[t * lanes..(t + 1) * lanes], cutoffs));
+    }
+}
+
+// ---- counter (stateless) path ------------------------------------------
+
+/// Counter-path [`sample_block`]: lane `l`'s bit at step `t` is
+/// `(bank.stream(l, node_part).draw_at(t) >> 11) < cutoffs[l]` — pure
+/// addressing, no draw-order bookkeeping. The per-lane bit sequence is
+/// identical to thresholding `CounterRng::keyed(row_seed(l), node)`'s
+/// stream, which is what the scalar counter reference does.
+pub fn sample_block_counter<const W: usize>(
+    cutoffs: &[u64],
+    bl: usize,
+    bank: &CounterBank,
+    node: u64,
     scratch: &mut SngScratch,
     out: &mut LaneBlock<W>,
 ) {
-    let lanes = values.len();
-    assert_eq!(draws.len(), lanes * bl, "draw block shape mismatch");
-    load_cutoffs(values, &mut scratch.cutoffs);
+    let lanes = cutoffs.len();
+    assert_eq!(bank.len(), lanes, "one counter key per lane");
+    let node_part = counter_node_part(node);
     out.reset(bl, lanes);
+    scratch.draws.clear();
+    scratch.draws.resize(lanes, 0);
     for t in 0..bl {
-        out.set_word(t, pack_lt(&draws[t * lanes..(t + 1) * lanes], &scratch.cutoffs));
+        bank.draws_at_into(node_part, t as u64, &mut scratch.draws);
+        out.set_word(t, pack_lt(&scratch.draws, cutoffs));
+    }
+}
+
+/// Counter-path [`fill_draw_block`]: materialize a correlated group's
+/// shared raw draws lane-major from the group's counter stream
+/// (`node` = `sng_node(NODE_GROUP, stage, group)`).
+pub fn fill_draw_block_counter(
+    lanes: usize,
+    bl: usize,
+    bank: &CounterBank,
+    node: u64,
+    draws: &mut Vec<u64>,
+) {
+    assert_eq!(bank.len(), lanes, "one counter key per lane");
+    let node_part = counter_node_part(node);
+    draws.clear();
+    draws.resize(lanes * bl, 0);
+    for t in 0..bl {
+        bank.draws_at_into(node_part, t as u64, &mut draws[t * lanes..(t + 1) * lanes]);
     }
 }
 
@@ -153,7 +435,7 @@ pub fn threshold_block<const W: usize>(
 mod tests {
     use super::*;
     use crate::sc::bitstream::Bitstream;
-    use crate::util::prng::Xoshiro256;
+    use crate::util::prng::{CounterRng, Xoshiro256};
 
     fn lane_seed(l: usize) -> u64 {
         0x5135_u64 ^ ((l as u64) << 32) ^ (l as u64)
@@ -161,6 +443,12 @@ mod tests {
 
     fn lane_values(lanes: usize) -> Vec<f64> {
         (0..lanes).map(|l| (0.03 + 0.94 * l as f64 / lanes.max(1) as f64).clamp(0.0, 1.0)).collect()
+    }
+
+    fn cutoffs_of(values: &[f64]) -> Vec<u64> {
+        let mut c = Vec::new();
+        load_cutoffs(values, &mut c);
+        c
     }
 
     #[test]
@@ -214,7 +502,7 @@ mod tests {
             bank.reseed_with(lanes, lane_seed);
             let mut scratch = SngScratch::default();
             let mut block: LaneBlock<4> = LaneBlock::zeros(0, 0);
-            sample_block(&values, bl, &mut bank, &mut scratch, &mut block);
+            sample_block(&cutoffs_of(&values), bl, &mut bank, &mut scratch, &mut block);
             assert_eq!(block.len(), bl);
             assert_eq!(block.lanes(), lanes);
             let mut probe = vec![0u64; lanes];
@@ -240,11 +528,10 @@ mod tests {
         bank.reseed_with(lanes, lane_seed);
         let mut draws = Vec::new();
         fill_draw_block(lanes, bl, &mut bank, &mut draws);
-        let mut scratch = SngScratch::default();
         let mut a: LaneBlock<2> = LaneBlock::zeros(0, 0);
         let mut b: LaneBlock<2> = LaneBlock::zeros(0, 0);
-        threshold_block(&va, bl, &draws, &mut scratch, &mut a);
-        threshold_block(&vb, bl, &draws, &mut scratch, &mut b);
+        threshold_block(&cutoffs_of(&va), bl, &draws, &mut a);
+        threshold_block(&cutoffs_of(&vb), bl, &draws, &mut b);
         let mut probe = vec![0u64; lanes];
         bank.next_u64_into(&mut probe);
         for l in 0..lanes {
@@ -265,12 +552,112 @@ mod tests {
         let mut scratch = SngScratch::default();
         let mut block: LaneBlock<1> = LaneBlock::zeros(0, 0);
         bank.reseed_with(10, lane_seed);
-        sample_block(&[1.0; 10], 50, &mut bank, &mut scratch, &mut block);
+        sample_block(&cutoffs_of(&[1.0; 10]), 50, &mut bank, &mut scratch, &mut block);
         assert!((0..10).all(|l| block.lane_popcount(l) == 50));
         bank.reseed_with(7, lane_seed);
-        sample_block(&[0.0; 7], 30, &mut bank, &mut scratch, &mut block);
+        sample_block(&cutoffs_of(&[0.0; 7]), 30, &mut bank, &mut scratch, &mut block);
         assert_eq!(block.len(), 30);
         assert_eq!(block.lanes(), 7);
         assert!((0..7).all(|l| block.lane_popcount(l) == 0));
+    }
+
+    #[test]
+    fn counter_sample_block_matches_stream_reference() {
+        // Lane l of the counter-generated block must equal thresholding
+        // CounterRng::keyed(seed_of(l), node)'s stream bit by bit —
+        // the addressing contract the scalar counter reference uses.
+        let node = sng_node(NODE_INPUT, 3, 2);
+        for (lanes, bl) in [(1usize, 100usize), (63, 64), (130, 100), (300, 64), (512, 33)] {
+            let values = lane_values(lanes);
+            let mut bank = CounterBank::new();
+            bank.reseed_with(lanes, lane_seed);
+            let mut scratch = SngScratch::default();
+            let mut block: LaneBlock<8> = LaneBlock::zeros(0, 0);
+            sample_block_counter(&cutoffs_of(&values), bl, &bank, node, &mut scratch, &mut block);
+            assert_eq!(block.len(), bl);
+            assert_eq!(block.lanes(), lanes);
+            for l in 0..lanes {
+                let stream = CounterRng::keyed(lane_seed(l), node);
+                let bits: Vec<bool> =
+                    (0..bl).map(|t| (stream.draw_at(t as u64) >> 11) < cutoff(values[l])).collect();
+                assert_eq!(block.lane(l), Bitstream::from_bits(&bits), "lanes={lanes} lane={l}");
+            }
+        }
+    }
+
+    #[test]
+    fn counter_correlated_path_shares_draws() {
+        // fill_draw_block_counter + threshold_block: two inputs of one
+        // group threshold the same group-stream draws.
+        let (lanes, bl) = (70usize, 96usize);
+        let node = sng_node(NODE_GROUP, 0, 1);
+        let va = lane_values(lanes);
+        let vb: Vec<f64> = va.iter().map(|v| 1.0 - *v).collect();
+        let mut bank = CounterBank::new();
+        bank.reseed_with(lanes, lane_seed);
+        let mut draws = Vec::new();
+        fill_draw_block_counter(lanes, bl, &bank, node, &mut draws);
+        let mut a: LaneBlock<2> = LaneBlock::zeros(0, 0);
+        let mut b: LaneBlock<2> = LaneBlock::zeros(0, 0);
+        threshold_block(&cutoffs_of(&va), bl, &draws, &mut a);
+        threshold_block(&cutoffs_of(&vb), bl, &draws, &mut b);
+        for l in 0..lanes {
+            let stream = CounterRng::keyed(lane_seed(l), node);
+            for t in 0..bl {
+                let x = stream.draw_at(t as u64) >> 11;
+                assert_eq!(draws[t * lanes + l] >> 11, x);
+                assert_eq!(a.lane(l).get(t), x < cutoff(va[l]), "a lane {l} t {t}");
+                assert_eq!(b.lane(l).get(t), x < cutoff(vb[l]), "b lane {l} t {t}");
+            }
+        }
+    }
+
+    #[test]
+    fn cutoff_cache_reuses_repeated_values() {
+        let mut cache = CutoffCache::default();
+        let va = lane_values(10);
+        let vb = lane_values(7);
+        assert_eq!(cache.cutoffs(0, &va), cutoffs_of(&va).as_slice());
+        assert_eq!(cache.counters(), (0, 1));
+        // Same slot, same values: hit, same cutoffs.
+        assert_eq!(cache.cutoffs(0, &va), cutoffs_of(&va).as_slice());
+        assert_eq!(cache.counters(), (1, 1));
+        // Same slot, new values: miss, recomputed.
+        assert_eq!(cache.cutoffs(0, &vb), cutoffs_of(&vb).as_slice());
+        assert_eq!(cache.counters(), (1, 2));
+        // Distinct slots don't interfere.
+        assert_eq!(cache.cutoffs(3, &va), cutoffs_of(&va).as_slice());
+        assert_eq!(cache.cutoffs(3, &va), cutoffs_of(&va).as_slice());
+        assert_eq!(cache.counters(), (2, 3));
+    }
+
+    #[test]
+    fn sng_cache_roundtrip_and_cutoff_verification() {
+        let (lanes, bl) = (70usize, 40usize);
+        let values = lane_values(lanes);
+        let cuts = cutoffs_of(&values);
+        let mut bank = CounterBank::new();
+        bank.reseed_with(lanes, lane_seed);
+        let mut scratch = SngScratch::default();
+        let mut block: LaneBlock<2> = LaneBlock::zeros(0, 0);
+        let node = sng_node(NODE_INPUT, 0, 0);
+        sample_block_counter(&cuts, bl, &bank, node, &mut scratch, &mut block);
+
+        let cache = SngCache::new();
+        let key = SngKey { epoch: 9, node, row0: 0, lanes: lanes as u32, bl: bl as u32, w: 2 };
+        let mut fetched: LaneBlock<2> = LaneBlock::zeros(0, 0);
+        assert!(!cache.fetch(&key, &cuts, &mut fetched), "empty cache must miss");
+        cache.store(key.clone(), &cuts, &block);
+        assert_eq!(cache.len(), 1);
+        assert!(cache.fetch(&key, &cuts, &mut fetched));
+        assert_eq!(fetched, block, "fetched block must be bit-identical");
+        // Same key, different cutoffs: the full-vector verification
+        // rejects the entry instead of serving stale bits.
+        let other = cutoffs_of(&lane_values(lanes).iter().map(|v| v * 0.5).collect::<Vec<_>>());
+        assert!(!cache.fetch(&key, &other, &mut fetched));
+        // Different key fields miss outright.
+        let mut k2 = key.clone();
+        k2.epoch = 10;
+        assert!(!cache.fetch(&k2, &cuts, &mut fetched));
     }
 }

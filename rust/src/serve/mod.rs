@@ -21,14 +21,16 @@
 //! Row-level parallelism composes underneath: each wave is evaluated
 //! by the word-parallel engine via
 //! [`runtime::InterpEngine::execute_rows`] — every kernel packs up
-//! to 256 batch rows per `u64×W` lane word (lane-major SNG → staged
+//! to 512 batch rows per `u64×W` lane word (lane-major SNG → staged
 //! gate plans with in-lane StoB→BtoS regeneration → vertical-counter
 //! StoB, no per-row intermediates) and
 //! split the lane blocks across a scoped worker pool — so shard-level
 //! (bank) and row-level (subarray row) parallelism mirror the paper's
 //! two-level hierarchy. `ServerConfig::lane_width` /
-//! `STOCH_IMC_LANE_WIDTH` pins the block width (64/128/256; default
-//! auto-sizes per wave).
+//! `STOCH_IMC_LANE_WIDTH` pins the block width (64/128/256/512;
+//! default auto-sizes per wave), and `ServerConfig::rng` /
+//! `STOCH_IMC_RNG` selects the SNG generator family (counter-based
+//! stateless default, lockstep xoshiro compat).
 //!
 //! `coordinator::Coordinator` is now a thin single-shard wrapper over
 //! [`Server`], kept for its simpler API and for backward compatibility.

@@ -15,7 +15,7 @@ use crate::coordinator::metrics::Metrics;
 use crate::error::Result;
 use crate::fault::FaultPlan;
 use crate::runtime::Engine;
-use crate::util::prng::fnv1a;
+use crate::util::prng::{fnv1a, RngMode};
 
 use super::shard::{Shard, ShardMsg, WaveKnobs};
 
@@ -54,6 +54,7 @@ impl BankPool {
         queue_depth: usize,
         row_threads: usize,
         lane_width: usize,
+        rng: Option<RngMode>,
         fault: Option<FaultPlan>,
     ) -> Result<Self> {
         let mut names: Vec<String> = specs.keys().cloned().collect();
@@ -76,10 +77,13 @@ impl BankPool {
         // STOCH_IMC_LANE_WIDTH pins every wave; otherwise 0 lets the
         // engine auto-size each wave to its live row count.
         let lane_width = match lane_width {
-            64 | 128 | 256 => lane_width,
+            64 | 128 | 256 | 512 => lane_width,
             _ => crate::runtime::lane_width_override().unwrap_or(0),
         };
-        let knobs = WaveKnobs { row_threads, lane_width, fault };
+        // And for the generator family: an explicit config mode wins,
+        // then STOCH_IMC_RNG, then the counter default.
+        let rng = rng.or_else(crate::runtime::rng_mode_override).unwrap_or_default();
+        let knobs = WaveKnobs { row_threads, lane_width, rng, fault };
         let metrics: Arc<Mutex<HashMap<String, Metrics>>> = Arc::default();
         let mut pool_shards = Vec::with_capacity(n);
         for id in 0..n {

@@ -14,6 +14,7 @@ use crate::error::{Context, Result};
 use crate::fault::FaultPlan;
 use crate::obs::MetricsSnapshot;
 use crate::runtime::Engine;
+use crate::util::prng::RngMode;
 
 use super::pool::BankPool;
 use super::shard::{Admission, ShardMsg};
@@ -43,14 +44,20 @@ pub struct ServerConfig {
     /// every value.
     pub row_threads: usize,
     /// Rows per lane block in the word-parallel engine: `64`, `128`,
-    /// or `256` (`u64×{1,2,4}` lane words). `0` (default) = auto —
-    /// the `STOCH_IMC_LANE_WIDTH` env var if set (resolved once at
-    /// pool start into a pinned width, like `row_threads`), else each
-    /// wave is auto-sized by the engine (narrowest covering block,
-    /// narrowed further only so every row worker keeps a block).
-    /// Purely a throughput knob: outputs are bit-identical at every
-    /// width.
+    /// `256`, or `512` (`u64×{1,2,4,8}` lane words). `0` (default) =
+    /// auto — the `STOCH_IMC_LANE_WIDTH` env var if set (resolved once
+    /// at pool start into a pinned width, like `row_threads`), else
+    /// each wave is auto-sized by the engine (narrowest covering
+    /// block, narrowed further only so every row worker keeps a
+    /// block). Purely a throughput knob: outputs are bit-identical at
+    /// every width.
     pub lane_width: usize,
+    /// SNG generator family every wave draws from: `None` (default) =
+    /// the `STOCH_IMC_RNG` env var if set, else the counter-based
+    /// stateless generator. `Some(RngMode::Xoshiro)` pins the legacy
+    /// lockstep xoshiro bank (the bit-pinned compat path). Resolved
+    /// once at pool start.
+    pub rng: Option<RngMode>,
     /// Fault-injection plan every wave executes under (`None` = clean
     /// serving, the default). With a live plan the executor XORs
     /// stateless fault masks into the lane words at the paper's three
@@ -68,6 +75,7 @@ impl Default for ServerConfig {
             batcher: BatcherConfig::default(),
             row_threads: 0,
             lane_width: 0,
+            rng: None,
             fault: None,
         }
     }
@@ -106,6 +114,7 @@ impl Server {
             cfg.queue_depth,
             cfg.row_threads,
             cfg.lane_width,
+            cfg.rng,
             cfg.fault,
         )?;
         Ok(Self { pool, specs })

@@ -22,6 +22,7 @@ use crate::coordinator::metrics::{Metrics, WaveClose};
 use crate::error::{Context, Result};
 use crate::fault::FaultPlan;
 use crate::runtime::Engine;
+use crate::util::prng::RngMode;
 
 /// Per-wave execution knobs, resolved once at pool start (env
 /// lookups included) so the wave path never touches the environment.
@@ -29,8 +30,11 @@ use crate::runtime::Engine;
 pub(crate) struct WaveKnobs {
     /// Worker threads a wave's rows/lane blocks are split across.
     pub row_threads: usize,
-    /// Rows per lane block (64/128/256; 0 = auto per wave).
+    /// Rows per lane block (64/128/256/512; 0 = auto per wave).
     pub lane_width: usize,
+    /// SNG generator family (counter default / xoshiro compat),
+    /// resolved from config or `STOCH_IMC_RNG` at pool start.
+    pub rng: RngMode,
     /// Fault-injection plan applied to every wave (`None` = clean
     /// serving; a no-op plan is equally free).
     pub fault: Option<FaultPlan>,
@@ -258,13 +262,14 @@ fn execute_wave(
     let wave = b.drain();
     *seed = seed.wrapping_mul(0x343FD).wrapping_add(0x269EC3);
     let t0 = Instant::now();
-    match engine.execute_rows_instrumented(
+    match engine.execute_rows_tuned(
         app,
         &wave.values,
         *seed,
         wave.responders.len(),
         knobs.row_threads,
         knobs.lane_width,
+        Some(knobs.rng),
         knobs.fault.as_ref(),
     ) {
         Ok((outs, stats)) => {

@@ -21,6 +21,23 @@ pub fn fnv1a(name: &str) -> u64 {
     h
 }
 
+/// SplitMix64's Weyl-sequence increment (the golden-ratio gamma from the
+/// reference implementation). Shared by the sequential [`SplitMix64`]
+/// walker and the counter-addressed [`CounterRng`], which must agree on
+/// it exactly for seek ≡ sequential-stream identity.
+pub const GOLDEN_GAMMA: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// SplitMix64's avalanche finalizer (Stafford variant 13): a bijective
+/// mix of a 64-bit word. Exposed on its own because the counter RNG,
+/// stream keying, and the fault mask source are all "finalize a
+/// structured coordinate word" applications of this one function.
+#[inline]
+pub fn mix64(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
 /// SplitMix64: used to expand a single `u64` seed into generator state.
 #[derive(Debug, Clone)]
 pub struct SplitMix64 {
@@ -34,11 +51,168 @@ impl SplitMix64 {
 
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
-        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
-        let mut z = self.state;
-        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
-        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
-        z ^ (z >> 31)
+        self.state = self.state.wrapping_add(GOLDEN_GAMMA);
+        mix64(self.state)
+    }
+}
+
+/// Which generator feeds the SNG draw path of the lane engine.
+///
+/// `Counter` is the default: the stateless counter generator below,
+/// O(1)-seekable and step-major/SIMD friendly. `Xoshiro` is the pinned
+/// compatibility path (the original lockstep [`RngBank`]), kept
+/// bit-exact so historical outputs stay reproducible. Selected per wave
+/// via `STOCH_IMC_RNG=counter|xoshiro` or the explicit tuned APIs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RngMode {
+    #[default]
+    Counter,
+    Xoshiro,
+}
+
+/// Domain-separation constant for the node half-key (the same odd
+/// multiplier `Xoshiro256::split` uses for stream separation).
+const NODE_PHI: u64 = 0xA076_1D64_78BD_642F;
+
+/// Derive the node (SNG input site) half of a counter stream key. The
+/// full key is `lane_part.wrapping_add(counter_node_part(node))`; the
+/// split lets the lane half be computed once per lane per block and the
+/// node half once per input per block.
+#[inline]
+pub fn counter_node_part(node: u64) -> u64 {
+    mix64(node.wrapping_mul(GOLDEN_GAMMA) ^ NODE_PHI)
+}
+
+/// Counter-based stateless generator: draw `t` of the stream keyed by
+/// `key` is `mix64(key + GOLDEN_GAMMA·(t+1))` — i.e. the stream *is* a
+/// SplitMix64 sequence seeded at `key`, but addressed by counter instead
+/// of walked by mutation. Any draw is O(1)-computable in any order, so
+/// lanes, nodes and steps can be generated in whatever stride is fastest
+/// (the lane engine uses step-major strides across a whole lane word).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CounterRng {
+    key: u64,
+}
+
+impl CounterRng {
+    /// Stream addressed directly by a raw key (draw `t` equals
+    /// `SplitMix64::new(key)`'s `t+1`-th output).
+    pub fn from_key(key: u64) -> Self {
+        Self { key }
+    }
+
+    /// Stream for SNG input site `node` of the row seeded `row_seed` —
+    /// the composition the lane engine uses: lane half-key from the
+    /// row seed, node half-key from [`counter_node_part`].
+    pub fn keyed(row_seed: u64, node: u64) -> Self {
+        Self { key: mix64(row_seed ^ GOLDEN_GAMMA).wrapping_add(counter_node_part(node)) }
+    }
+
+    /// Raw draw `t` (0-indexed) of this stream.
+    #[inline]
+    pub fn draw_at(&self, t: u64) -> u64 {
+        mix64(self.key.wrapping_add(GOLDEN_GAMMA.wrapping_mul(t.wrapping_add(1))))
+    }
+
+    /// Uniform f64 in [0, 1) at position `t`, same 53-bit conversion as
+    /// [`Xoshiro256::next_f64`].
+    #[inline]
+    pub fn f64_at(&self, t: u64) -> f64 {
+        (self.draw_at(t) >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+}
+
+/// A bank of per-lane counter-stream half-keys: the stateless analogue
+/// of [`RngBank`]. Where the xoshiro bank holds 4×`n` words of mutable
+/// state and must be stepped in draw order, this holds one immutable
+/// half-key per lane, and [`CounterBank::draws_at_into`] computes any
+/// step of every lane directly — the generation loop is a pure
+/// map over lanes with no loop-carried dependence, which is what lets
+/// the compiler (or the explicit `simd` feature path) vectorize it.
+#[derive(Debug, Clone, Default)]
+pub struct CounterBank {
+    lane_keys: Vec<u64>,
+}
+
+impl CounterBank {
+    /// An empty bank; call [`CounterBank::reseed_with`] before drawing.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Number of lanes currently keyed.
+    pub fn len(&self) -> usize {
+        self.lane_keys.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lane_keys.is_empty()
+    }
+
+    /// Re-key the bank to `n` lanes, lane `l` from `seed_of(l)` — the
+    /// same per-lane seed contract as [`RngBank::reseed_with`], but the
+    /// expansion is a single mix instead of a 4-word SplitMix64 walk.
+    pub fn reseed_with(&mut self, n: usize, seed_of: impl Fn(usize) -> u64) {
+        self.lane_keys.clear();
+        for l in 0..n {
+            self.lane_keys.push(mix64(seed_of(l) ^ GOLDEN_GAMMA));
+        }
+    }
+
+    /// The standalone stream for lane `l` at node half-key `node_part`
+    /// (from [`counter_node_part`]). Lane `l`'s draws via
+    /// [`CounterBank::draws_at_into`] are bit-identical to this stream —
+    /// the bank/solo equivalence the scalar reference path relies on.
+    pub fn stream(&self, l: usize, node_part: u64) -> CounterRng {
+        CounterRng::from_key(self.lane_keys[l].wrapping_add(node_part))
+    }
+
+    /// Compute draw `t` of node `node_part`'s stream for every lane:
+    /// `out[l]` gets lane `l`'s draw. The per-step counter term is
+    /// hoisted so the loop body is add-then-mix over a contiguous key
+    /// array.
+    #[inline]
+    pub fn draws_at_into(&self, node_part: u64, t: u64, out: &mut [u64]) {
+        assert_eq!(out.len(), self.len(), "lane count mismatch");
+        let ctr = GOLDEN_GAMMA.wrapping_mul(t.wrapping_add(1)).wrapping_add(node_part);
+        #[cfg(feature = "simd")]
+        {
+            simd::draws_at(&self.lane_keys, ctr, out);
+        }
+        #[cfg(not(feature = "simd"))]
+        for (slot, &k) in out.iter_mut().zip(self.lane_keys.iter()) {
+            *slot = mix64(k.wrapping_add(ctr));
+        }
+    }
+}
+
+/// Explicit `std::simd` lanes for the counter draw kernel (nightly-only
+/// `simd` feature; the scalar loop above is the bit-identical default).
+#[cfg(feature = "simd")]
+mod simd {
+    use std::simd::u64x8;
+
+    /// [`super::mix64`] over 8 lanes at once. `Simd` integer ops wrap on
+    /// overflow, matching the scalar `wrapping_mul`/`wrapping_add`.
+    #[inline]
+    fn mix64x8(mut z: u64x8) -> u64x8 {
+        z = (z ^ (z >> u64x8::splat(30))) * u64x8::splat(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> u64x8::splat(27))) * u64x8::splat(0x94D0_49BB_1331_11EB);
+        z ^ (z >> u64x8::splat(31))
+    }
+
+    #[inline]
+    pub fn draws_at(keys: &[u64], ctr: u64, out: &mut [u64]) {
+        let ctrv = u64x8::splat(ctr);
+        let mut chunks = keys.chunks_exact(8);
+        let mut outs = out.chunks_exact_mut(8);
+        for (k, o) in (&mut chunks).zip(&mut outs) {
+            let v = mix64x8(u64x8::from_slice(k) + ctrv);
+            o.copy_from_slice(&v.to_array());
+        }
+        for (slot, &k) in outs.into_remainder().iter_mut().zip(chunks.remainder()) {
+            *slot = super::mix64(k.wrapping_add(ctr));
+        }
     }
 }
 
@@ -368,6 +542,74 @@ mod tests {
                 assert!(want < bound);
                 assert_eq!(out[l], want, "lane {l} round {round}");
             }
+        }
+    }
+
+    #[test]
+    fn counter_rng_is_seekable_splitmix() {
+        // The whole design: CounterRng::from_key(k) addressed at t is
+        // SplitMix64::new(k)'s (t+1)-th output. Sequential walk and
+        // O(1) seek must agree draw-for-draw, in any access order.
+        for key in [0u64, 1, 0xDEAD_BEEF, u64::MAX] {
+            let mut sm = SplitMix64::new(key);
+            let ctr = CounterRng::from_key(key);
+            let seq: Vec<u64> = (0..64).map(|_| sm.next_u64()).collect();
+            for t in (0..64).rev() {
+                assert_eq!(ctr.draw_at(t as u64), seq[t], "key {key:#x} t {t}");
+            }
+        }
+        // Pinned reference vector (seed 0, canonical SplitMix64).
+        let c = CounterRng::from_key(0);
+        assert_eq!(c.draw_at(0), 0xE220_A839_7B1D_CDAF);
+        assert_eq!(c.draw_at(1), 0x6E78_9E6A_A1B9_65F4);
+    }
+
+    #[test]
+    fn counter_f64_matches_xoshiro_conversion() {
+        let c = CounterRng::from_key(77);
+        for t in 0..1000 {
+            let f = c.f64_at(t);
+            assert!((0.0..1.0).contains(&f));
+            let expect = (c.draw_at(t) >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+            assert_eq!(f.to_bits(), expect.to_bits());
+        }
+    }
+
+    #[test]
+    fn counter_bank_matches_standalone_streams() {
+        let seeds = bank_seeds(67);
+        let mut bank = CounterBank::new();
+        bank.reseed_with(seeds.len(), |l| seeds[l]);
+        assert_eq!(bank.len(), 67);
+        assert!(!bank.is_empty());
+        let node = counter_node_part(0x1234);
+        let mut out = vec![0u64; seeds.len()];
+        for t in 0..100 {
+            bank.draws_at_into(node, t, &mut out);
+            for l in 0..seeds.len() {
+                assert_eq!(out[l], bank.stream(l, node).draw_at(t), "lane {l} t {t}");
+                // And the composed keying matches CounterRng::keyed.
+                let keyed = CounterRng::keyed(seeds[l], 0x1234);
+                assert_eq!(out[l], keyed.draw_at(t), "lane {l} t {t}");
+            }
+        }
+    }
+
+    #[test]
+    fn counter_adjacent_keys_distinct() {
+        // Adjacent (node, lane, step) coordinates must give unrelated
+        // draws: collect a window around a base coordinate in every
+        // direction and require all values distinct.
+        let mut seen = std::collections::HashSet::new();
+        let base = CounterRng::keyed(42, 7);
+        for t in 0..32 {
+            assert!(seen.insert(base.draw_at(t)));
+        }
+        for node in 0..32 {
+            assert!(seen.insert(CounterRng::keyed(42, node).draw_at(100)));
+        }
+        for row_seed in 0..32 {
+            assert!(seen.insert(CounterRng::keyed(row_seed, 7).draw_at(100)));
         }
     }
 

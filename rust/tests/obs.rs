@@ -166,6 +166,9 @@ fn server_snapshot_schema_and_round_trip() {
             "stage_total_ms",
             "wave_live_rows_max",
             "wear_writes",
+            "sng_cache_hits",
+            "sng_cache_hit_rate",
+            "sng_cutoff_hits",
         ] {
             let key = format!("serve_{scope}_{metric}");
             assert!(snap.get(&key).is_some(), "missing {key}");

@@ -1,0 +1,146 @@
+//! Per-mode differential matrix for the two SNG generator families.
+//!
+//! `tests/wordparallel.rs` pins scalar ≡ word-parallel through the
+//! env-default mode; this suite pins each family *explicitly* via the
+//! tuned APIs, so the counter path (default) and the xoshiro compat
+//! path (`STOCH_IMC_RNG=xoshiro`) each stay bit-identical across
+//! scalar reference × lane widths {64, 128, 256, 512, auto} × worker
+//! counts {1, 3, 16} — and never alias each other. No test mutates the
+//! environment (explicit `RngMode` parameters only), so the suite is
+//! safe under the parallel test runner.
+
+use stoch_imc::runtime::InterpEngine;
+use stoch_imc::util::prng::{fnv1a, RngMode, Xoshiro256};
+
+const BATCH: usize = 200;
+const WIDTHS: [usize; 5] = [64, 128, 256, 512, 0];
+const MODES: [RngMode; 2] = [RngMode::Counter, RngMode::Xoshiro];
+
+fn engine(bl: usize, tag: &str) -> InterpEngine {
+    let dir = std::env::temp_dir().join(format!("stoch_imc_rngdiff_{tag}_{bl}"));
+    std::fs::create_dir_all(&dir).unwrap();
+    let manifest = format!(
+        "op_multiply 2 {b} {bl}\nop_scaled_divide 2 {b} {bl}\nop_exponential 1 {b} {bl}\n\
+         app_ol 6 {b} {bl}\napp_hdp 8 {b} {bl}\napp_lit 64 {b} {bl}\napp_kde 9 {b} {bl}\n",
+        b = BATCH,
+    );
+    std::fs::write(dir.join("manifest.txt"), manifest).unwrap();
+    InterpEngine::load(&dir).expect("differential engine load")
+}
+
+fn values_for(e: &InterpEngine, name: &str, seed: i32) -> Vec<f32> {
+    let n = e.spec(name).unwrap().n_inputs;
+    let mut rng = Xoshiro256::seeded(fnv1a(name) ^ seed as u32 as u64);
+    (0..BATCH * n).map(|_| rng.next_f64() as f32).collect()
+}
+
+/// Assert the explicit-mode scalar reference and every (width, threads)
+/// wide configuration agree bit-for-bit, per mode; return both modes'
+/// outputs so callers can assert the families differ.
+fn assert_mode_matrix(
+    e: &InterpEngine,
+    name: &str,
+    values: &[f32],
+    live: usize,
+    seed: i32,
+) -> [Vec<f32>; 2] {
+    MODES.map(|mode| {
+        let golden = e.execute_rows_scalar_tuned(name, values, seed, live, 1, Some(mode)).unwrap();
+        for width in WIDTHS {
+            for threads in [1usize, 3, 16] {
+                let (wide, _) = e
+                    .execute_rows_tuned(name, values, seed, live, threads, width, Some(mode), None)
+                    .unwrap();
+                assert_eq!(
+                    golden, wide,
+                    "artifact={name} mode={mode:?} live={live} width={width} \
+                     threads={threads} seed={seed}"
+                );
+            }
+        }
+        golden
+    })
+}
+
+#[test]
+fn ops_pinned_per_mode_across_widths_and_threads() {
+    // Ragged BL (100) and ragged live counts walk the lane-word
+    // boundaries; 200 live rows make a multi-block wave with a ragged
+    // tail at every width.
+    let e = engine(100, "ops");
+    for (i, name) in ["op_multiply", "op_scaled_divide", "op_exponential"].iter().enumerate() {
+        for (j, live) in [1usize, 65, 200].into_iter().enumerate() {
+            let seed = (i * 7 + j + 1) as i32;
+            let values = values_for(&e, name, seed);
+            let [ctr, xos] = assert_mode_matrix(&e, name, &values, live, seed);
+            // A single row on the 1/BL StoB grid can coincide across
+            // families by chance; only multi-row waves make aliasing
+            // all but impossible.
+            if live > 1 {
+                assert_ne!(ctr, xos, "artifact={name} live={live}: generator families alias");
+            }
+        }
+    }
+}
+
+#[test]
+fn apps_pinned_per_mode_including_staged_regeneration() {
+    // The staged pipelines (app_lit, app_kde) regenerate between
+    // stages and draw correlated groups — the counter path's group
+    // keying (NODE_GROUP) and per-stage node tagging must survive the
+    // full pipeline in both families.
+    let e = engine(100, "apps");
+    for (name, live, seed) in
+        [("app_ol", 65, 41), ("app_hdp", 63, 42), ("app_lit", 65, 43), ("app_kde", 65, 44)]
+    {
+        let values = values_for(&e, name, seed);
+        let [ctr, xos] = assert_mode_matrix(&e, name, &values, live, seed);
+        assert_ne!(ctr, xos, "artifact={name}: generator families alias");
+    }
+}
+
+#[test]
+fn repeated_value_batches_pin_the_cutoff_hoist_and_block_cache() {
+    // A batch where every row repeats the same inputs maximizes both
+    // per-wave cutoff-memo hits and (on re-execution) SNG block-cache
+    // hits; outputs must stay bit-identical to the scalar reference
+    // through all of it — the identity pin for the hoisted cutoffs.
+    let e = engine(256, "repeat");
+    let mut values = vec![0.0f32; BATCH * 2];
+    for i in 0..BATCH {
+        values[2 * i] = 0.7;
+        values[2 * i + 1] = 0.35;
+    }
+    assert_mode_matrix(&e, "op_multiply", &values, BATCH, 9);
+    // Re-execute the identical wave: the engine-level cache serves the
+    // blocks, and the outputs still match the scalar reference.
+    let golden =
+        e.execute_rows_scalar_tuned("op_multiply", &values, 9, BATCH, 1, Some(RngMode::Counter));
+    let (again, stats) = e
+        .execute_rows_tuned("op_multiply", &values, 9, BATCH, 2, 0, Some(RngMode::Counter), None)
+        .unwrap();
+    assert_eq!(golden.unwrap(), again);
+    assert!(stats.cache.hits > 0, "repeated wave must be served from the SNG block cache");
+    assert!(stats.cache.cutoff_hits > 0, "repeated values must hit the cutoff memo");
+}
+
+#[test]
+fn seeds_resample_both_families_without_unlocking_them() {
+    let e = engine(256, "seeds");
+    let values = values_for(&e, "op_multiply", 5);
+    for mode in MODES {
+        let mut last: Option<Vec<f32>> = None;
+        for seed in [1, 2, 999] {
+            let golden =
+                e.execute_rows_scalar_tuned("op_multiply", &values, seed, 200, 1, Some(mode));
+            let (wide, _) = e
+                .execute_rows_tuned("op_multiply", &values, seed, 200, 4, 0, Some(mode), None)
+                .unwrap();
+            assert_eq!(golden.unwrap(), wide, "mode={mode:?} seed={seed}");
+            if let Some(prev) = &last {
+                assert_ne!(prev, &wide, "mode={mode:?} seed {seed} must resample streams");
+            }
+            last = Some(wide);
+        }
+    }
+}

@@ -3,11 +3,14 @@
 //! through the scalar golden path (`execute_rows_scalar`, one row at a
 //! time through the staged reference `StagedPlan::eval_row_scalar` →
 //! `netlist::eval::eval_stochastic` per stage) and the lane-major
-//! word-parallel path (`execute_rows` / `execute_rows_wide`, up to 256
-//! rows per `u64×W` lane word), across lane widths {64, 128, 256} and
-//! auto, bitstream lengths (including BL % 64 != 0), ragged live-row
-//! counts (live % width != 0), worker counts, and seeds. The staged
-//! apps' dedicated matrix lives in `tests/staged.rs`.
+//! word-parallel path (`execute_rows` / `execute_rows_wide`, up to 512
+//! rows per `u64×W` lane word), across lane widths {64, 128, 256, 512}
+//! and auto, bitstream lengths (including BL % 64 != 0), ragged
+//! live-row counts (live % width != 0), worker counts, and seeds. Both
+//! paths resolve the same env-default RNG mode, so this suite pins
+//! whichever generator family is serving; the explicit per-mode matrix
+//! lives in `tests/rng_differential.rs`, the staged apps' dedicated
+//! matrix in `tests/staged.rs`.
 
 use stoch_imc::runtime::InterpEngine;
 use stoch_imc::util::prng::{fnv1a, Xoshiro256};
@@ -19,7 +22,7 @@ use stoch_imc::util::prng::{fnv1a, Xoshiro256};
 const BATCH: usize = 200;
 
 /// Every lane width the engine monomorphizes, plus 0 = auto sizing.
-const WIDTHS: [usize; 4] = [64, 128, 256, 0];
+const WIDTHS: [usize; 5] = [64, 128, 256, 512, 0];
 
 const OPS: [&str; 6] = [
     "op_multiply",
@@ -143,7 +146,7 @@ fn widths_agree_with_each_other_on_full_batches() {
     for name in ["op_multiply", "op_scaled_divide", "app_ol"] {
         let values = values_for(&e, name, 77);
         let base = e.execute_rows_wide(name, &values, 77, BATCH, 2, 64).unwrap();
-        for width in [128usize, 256, 0] {
+        for width in [128usize, 256, 512, 0] {
             let other = e.execute_rows_wide(name, &values, 77, BATCH, 3, width).unwrap();
             assert_eq!(base, other, "artifact={name} width={width}");
         }
