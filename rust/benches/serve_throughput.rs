@@ -115,6 +115,23 @@ fn main() {
             "row-parallel speedup on a {batch}-row wave: {:.2}x over sequential",
             per_cfg[1] / per_cfg[0]
         );
+
+        // Degraded-mode throughput: the same heavy wave two ladder steps
+        // down (BL 1024 → 256). An absolute rows/s number, deliberately
+        // not a *_speedup key — it tracks what a shard buys by degrading
+        // under overload, not a path-vs-path regression gate.
+        engine
+            .execute_rows_degraded("app_hdp", &values, 1, batch, 0, 0, None, None, 2)
+            .expect("wave");
+        let t0 = Instant::now();
+        for rep in 0..reps {
+            engine
+                .execute_rows_degraded("app_hdp", &values, rep as i32, batch, 0, 0, None, None, 2)
+                .expect("wave");
+        }
+        let degraded_rows_per_s = (reps * batch) as f64 / t0.elapsed().as_secs_f64();
+        println!("{:<30} {degraded_rows_per_s:>10.0} rows/s", "serve_degraded_rows_per_s");
+        results.push(("serve_degraded_rows_per_s".to_string(), degraded_rows_per_s));
     }
 
     let out = Path::new(benchjson::BENCH_FILE);

@@ -81,7 +81,7 @@ fn main() -> stoch_imc::error::Result<()> {
         }
     }
     tiny.drain()?;
-    let answered = pending.iter().filter(|rx| rx.recv().is_ok()).count();
+    let answered = pending.iter().filter(|rx| matches!(rx.recv(), Ok(Ok(_)))).count();
     println!(
         "admission control (queue_depth=1): {admitted} admitted (all {answered} answered), \
          {shed} shed with backpressure"

@@ -140,6 +140,22 @@ pub(crate) fn bindings_from(nl: &Netlist, mut f: impl FnMut(&str) -> Binding) ->
         .collect()
 }
 
+/// Fallible [`bindings_from`]: the runtime's load path maps unknown
+/// input names to a contextual error instead of a panic, so a malformed
+/// kernel definition fails `Engine::load` cleanly.
+pub(crate) fn try_bindings_from(
+    nl: &Netlist,
+    mut f: impl FnMut(&str) -> crate::error::Result<Binding>,
+) -> crate::error::Result<Vec<Binding>> {
+    nl.nodes
+        .iter()
+        .filter_map(|n| match n {
+            Node::Input { name, .. } => Some(f(name)),
+            _ => None,
+        })
+        .collect()
+}
+
 /// Index of output `name` in `nl`'s output order (regeneration edges
 /// reference stage outputs positionally).
 pub(crate) fn out_idx(nl: &Netlist, name: &str) -> usize {

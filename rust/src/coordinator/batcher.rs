@@ -7,6 +7,8 @@
 use std::sync::mpsc::Sender;
 use std::time::{Duration, Instant};
 
+use crate::serve::resilience::Reply;
+
 #[derive(Debug, Clone)]
 pub struct BatcherConfig {
     /// Wave size = artifact batch dimension.
@@ -24,8 +26,12 @@ impl Default for BatcherConfig {
 /// One pending request: flattened inputs + the response channel.
 pub struct Pending {
     pub inputs: Vec<f32>,
-    pub respond: Sender<f32>,
+    pub respond: Sender<Reply>,
     pub enqueued: Instant,
+    /// Absolute request deadline; `None` = unbounded. Expired entries
+    /// are answered `Err(Timeout)` by [`Batcher::expire`] or at wave
+    /// close instead of occupying subarray rows.
+    pub deadline: Option<Instant>,
 }
 
 /// A closed wave ready for execution.
@@ -33,10 +39,13 @@ pub struct Batch {
     /// Row-major [batch, n_inputs], zero-padded.
     pub values: Vec<f32>,
     /// Response channels for the live (non-padding) rows.
-    pub responders: Vec<Sender<f32>>,
+    pub responders: Vec<Sender<Reply>>,
     /// Submit timestamps aligned with `responders` — the executor turns
     /// these into queue-wait samples (submit → wave start).
     pub enqueued: Vec<Instant>,
+    /// Per-row deadlines aligned with `responders`, re-checked when the
+    /// wave completes (a slow wave can outlive a row's budget).
+    pub deadlines: Vec<Option<Instant>>,
     pub padded: usize,
 }
 
@@ -82,6 +91,22 @@ impl Batcher {
         }
     }
 
+    /// Remove and return every pending request whose deadline has
+    /// already expired at `now`, preserving arrival order of the
+    /// survivors. The caller answers the expired entries `Err(Timeout)`
+    /// — they never occupy wave rows. Fast path: no deadlines pending →
+    /// no allocation, no shuffle.
+    pub fn expire(&mut self, now: Instant) -> Vec<Pending> {
+        if !self.pending.iter().any(|p| p.deadline.is_some_and(|d| d <= now)) {
+            return Vec::new();
+        }
+        let drained = std::mem::take(&mut self.pending);
+        let (expired, live): (Vec<Pending>, Vec<Pending>) =
+            drained.into_iter().partition(|p| p.deadline.is_some_and(|d| d <= now));
+        self.pending = live;
+        expired
+    }
+
     /// Close and return one wave (up to `batch` requests, zero-padded).
     pub fn drain(&mut self) -> Batch {
         let take = self.pending.len().min(self.cfg.batch);
@@ -89,13 +114,15 @@ impl Batcher {
         let mut values = vec![0.0f32; self.cfg.batch * self.n_inputs];
         let mut responders = Vec::with_capacity(live.len());
         let mut enqueued = Vec::with_capacity(live.len());
+        let mut deadlines = Vec::with_capacity(live.len());
         for (i, p) in live.into_iter().enumerate() {
             values[i * self.n_inputs..(i + 1) * self.n_inputs].copy_from_slice(&p.inputs);
             responders.push(p.respond);
             enqueued.push(p.enqueued);
+            deadlines.push(p.deadline);
         }
         let padded = self.cfg.batch - responders.len();
-        Batch { values, responders, enqueued, padded }
+        Batch { values, responders, enqueued, deadlines, padded }
     }
 }
 
@@ -104,9 +131,15 @@ mod tests {
     use super::*;
     use std::sync::mpsc::channel;
 
-    fn pending(vals: &[f32]) -> (Pending, std::sync::mpsc::Receiver<f32>) {
+    fn pending(vals: &[f32]) -> (Pending, std::sync::mpsc::Receiver<Reply>) {
         let (tx, rx) = channel();
-        (Pending { inputs: vals.to_vec(), respond: tx, enqueued: Instant::now() }, rx)
+        let p = Pending {
+            inputs: vals.to_vec(),
+            respond: tx,
+            enqueued: Instant::now(),
+            deadline: None,
+        };
+        (p, rx)
     }
 
     #[test]
@@ -205,6 +238,40 @@ mod tests {
             assert_eq!(wave.padded, 0, "round {round}");
             assert!(b.is_empty(), "round {round}");
         }
+    }
+
+    #[test]
+    fn expire_removes_only_overdue_entries_in_order() {
+        let mut b = Batcher::new(BatcherConfig { batch: 8, max_wait: Duration::from_secs(10) }, 1);
+        let now = Instant::now();
+        let (mut p1, _r1) = pending(&[0.1]); // overdue
+        let (p2, _r2) = pending(&[0.2]); // no deadline — never expires
+        let (mut p3, _r3) = pending(&[0.3]); // future deadline — survives
+        let (mut p4, _r4) = pending(&[0.4]); // overdue
+        p1.deadline = Some(now);
+        p3.deadline = Some(now + Duration::from_secs(60));
+        p4.deadline = Some(now - Duration::from_millis(1));
+        for p in [p1, p2, p3, p4] {
+            b.push(p);
+        }
+        let expired = b.expire(now);
+        assert_eq!(expired.len(), 2);
+        assert_eq!(expired[0].inputs, vec![0.1]);
+        assert_eq!(expired[1].inputs, vec![0.4]);
+        assert_eq!(b.len(), 2, "survivors stay pending");
+        let wave = b.drain();
+        assert_eq!(wave.values[..2], [0.2, 0.3], "survivor order preserved");
+        assert_eq!(wave.deadlines.len(), 2);
+        assert!(wave.deadlines[0].is_none() && wave.deadlines[1].is_some());
+    }
+
+    #[test]
+    fn expire_without_deadlines_is_a_noop() {
+        let mut b = Batcher::new(BatcherConfig { batch: 4, max_wait: Duration::from_secs(10) }, 1);
+        let (p1, _r1) = pending(&[0.5]);
+        b.push(p1);
+        assert!(b.expire(Instant::now() + Duration::from_secs(60)).is_empty());
+        assert_eq!(b.len(), 1);
     }
 
     #[test]

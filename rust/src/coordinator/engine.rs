@@ -14,7 +14,7 @@ use std::path::Path;
 use std::sync::mpsc::Receiver;
 
 use crate::error::Result;
-use crate::serve::{Server, ServerConfig};
+use crate::serve::{Reply, Server, ServerConfig};
 
 use super::batcher::BatcherConfig;
 use super::metrics::Metrics;
@@ -45,8 +45,9 @@ impl Coordinator {
         self.server.n_inputs(app)
     }
 
-    /// Submit one instance; returns the receiver for its result.
-    pub fn submit(&self, app: &str, inputs: &[f64]) -> Result<Receiver<f32>> {
+    /// Submit one instance; returns the receiver for its terminal
+    /// [`Reply`] (value or typed error — see [`crate::serve::ServeError`]).
+    pub fn submit(&self, app: &str, inputs: &[f64]) -> Result<Receiver<Reply>> {
         self.server.submit(app, inputs)
     }
 

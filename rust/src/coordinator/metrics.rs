@@ -47,6 +47,22 @@ pub struct Metrics {
     pub backpressure_blocks: u64,
     /// `try_submit` requests shed on a full admission queue.
     pub shed: u64,
+    /// Times the shard supervisor caught an executor panic and
+    /// respawned the loop (attributed to the in-flight app, else the
+    /// shard's first home app).
+    pub executor_restarts: u64,
+    /// Requests answered `Err(Timeout)` — deadline expired at dequeue,
+    /// at wave close, or at completion.
+    pub deadline_timeouts: u64,
+    /// Requests answered with a terminal error (executor panic, engine
+    /// failure, or dead shard) — never silently dropped.
+    pub failed_requests: u64,
+    /// Waves executed below full bitstream length by the overload
+    /// controller.
+    pub degraded_waves: u64,
+    /// Current degradation-ladder level (gauge: 0 = full BL; pool merge
+    /// takes the max across apps/shards).
+    pub bl_level: u64,
     /// Eq 4 operation counters summed over every wave recorded here
     /// (price with [`Metrics::energy`]).
     pub ops: OpCounters,
@@ -132,6 +148,13 @@ impl Metrics {
         self.total_time += other.total_time;
         self.backpressure_blocks += other.backpressure_blocks;
         self.shed += other.shed;
+        self.executor_restarts += other.executor_restarts;
+        self.deadline_timeouts += other.deadline_timeouts;
+        self.failed_requests += other.failed_requests;
+        self.degraded_waves += other.degraded_waves;
+        // Gauge, not a counter: the pool-wide level is the deepest
+        // ladder step any app/shard is currently at.
+        self.bl_level = self.bl_level.max(other.bl_level);
         self.ops.add(&other.ops);
         self.wear.merge(&other.wear);
         self.spans.add(&other.spans);
@@ -215,6 +238,11 @@ impl Metrics {
         put("throughput_rps", self.throughput());
         put("backpressure_blocks", self.backpressure_blocks as f64);
         put("shed_total", self.shed as f64);
+        put("executor_restarts", self.executor_restarts as f64);
+        put("deadline_timeouts", self.deadline_timeouts as f64);
+        put("failed_requests", self.failed_requests as f64);
+        put("degraded_waves", self.degraded_waves as f64);
+        put("bl_level", self.bl_level as f64);
         put("latency_us_p50", self.latency.percentile(50.0) as f64);
         put("latency_us_p90", self.latency.percentile(90.0) as f64);
         put("latency_us_p95", self.latency.percentile(95.0) as f64);
@@ -382,6 +410,27 @@ mod tests {
     }
 
     #[test]
+    fn resilience_counters_merge_and_bl_level_is_a_gauge() {
+        let mut a = Metrics::default();
+        a.executor_restarts = 1;
+        a.deadline_timeouts = 2;
+        a.failed_requests = 3;
+        a.degraded_waves = 4;
+        a.bl_level = 1;
+        let mut b = Metrics::default();
+        b.executor_restarts = 2;
+        b.deadline_timeouts = 1;
+        b.degraded_waves = 6;
+        b.bl_level = 2;
+        a.merge(&b);
+        assert_eq!(a.executor_restarts, 3);
+        assert_eq!(a.deadline_timeouts, 3);
+        assert_eq!(a.failed_requests, 3);
+        assert_eq!(a.degraded_waves, 10);
+        assert_eq!(a.bl_level, 2, "gauge merges as max, not sum");
+    }
+
+    #[test]
     fn snapshot_emits_stable_schema() {
         let m = Metrics::default();
         let mut snap = MetricsSnapshot::default();
@@ -395,6 +444,11 @@ mod tests {
             "serve_pool_queue_depth_p99",
             "serve_pool_shed_total",
             "serve_pool_backpressure_blocks",
+            "serve_pool_executor_restarts",
+            "serve_pool_deadline_timeouts",
+            "serve_pool_failed_requests",
+            "serve_pool_degraded_waves",
+            "serve_pool_bl_level",
             "serve_pool_stage_sng_share",
             "serve_pool_stage_stob_share",
             "serve_pool_waves_deadline",

@@ -23,6 +23,13 @@
 //!                             workload); --check asserts the queue and
 //!                             stage-timing telemetry keys, --prom emits
 //!                             Prometheus text instead of flat JSON
+//!   chaos [--panics N] [--seconds S] [--shards K]
+//!                             resilience harness: flood the server while
+//!                             injecting executor panics + wave latency
+//!                             under deadlines and the degradation
+//!                             ladder; exits nonzero unless every
+//!                             admitted request got exactly one terminal
+//!                             outcome and the invariants held
 
 use std::path::{Path, PathBuf};
 
@@ -72,6 +79,7 @@ fn main() -> Result<()> {
         Some("faults") => cmd_faults(&cfg, &args[1..]),
         Some("bench-check") => cmd_bench_check(&args[1..]),
         Some("stats") => cmd_stats(&cfg, &args[1..]),
+        Some("chaos") => cmd_chaos(&args[1..]),
         other => {
             if let Some(o) = other {
                 eprintln!("unknown command `{o}`");
@@ -79,7 +87,7 @@ fn main() -> Result<()> {
             eprintln!(
                 "usage: stoch-imc \
                  <info|fig3|fig7|table2|table3|table4|fig10|fig11|run|serve|schedule|faults|\
-                 bench-check|stats> [--config FILE]"
+                 bench-check|stats|chaos> [--config FILE]"
             );
             std::process::exit(2);
         }
@@ -149,6 +157,11 @@ const REQUIRED_STATS_KEYS: &[&str] = &[
     "serve_pool_sng_cache_hits",
     "serve_pool_sng_cache_hit_rate",
     "serve_pool_sng_cutoff_hits",
+    "serve_pool_executor_restarts",
+    "serve_pool_deadline_timeouts",
+    "serve_pool_failed_requests",
+    "serve_pool_degraded_waves",
+    "serve_pool_bl_level",
 ];
 
 /// Stats exposition: print a stats snapshot — either one previously
@@ -732,6 +745,240 @@ fn cmd_faults(cfg: &Config, args: &[String]) -> Result<()> {
     benchjson::merge_and_write(&out, &entries)
         .with_context(|| format!("writing {}", out.display()))?;
     println!("\nwrote {} keys to {}", entries.len(), out.display());
+    Ok(())
+}
+
+/// The chaos harness: flood every servable artifact through a server
+/// configured with injected executor panics (supervised restarts),
+/// artificial wave latency, request deadlines, and the BL degradation
+/// ladder — then assert the resilience invariants: every admitted
+/// request received exactly one terminal outcome (a value or a typed
+/// error), nothing deadlocked, injected panics never exceeded their
+/// budget, degradation stayed within the ladder, and the server still
+/// answers cleanly once the storm has passed. Writes a flat-JSON report
+/// to `STOCH_IMC_CHAOS_OUT` (else `CHAOS_report.json`).
+fn cmd_chaos(args: &[String]) -> Result<()> {
+    use std::collections::VecDeque;
+    use std::sync::mpsc::Receiver;
+    use std::time::{Duration, Instant};
+
+    use stoch_imc::serve::{ChaosPlan, DegradeConfig, Reply, ServeError, Server, ServerConfig};
+    use stoch_imc::util::benchjson;
+
+    let mut panics: u64 = 3;
+    let mut seconds: u64 = 5;
+    let mut shards: usize = 0;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--panics" => {
+                panics = args.get(i + 1).and_then(|s| s.parse().ok()).context("--panics N")?;
+                i += 1;
+            }
+            "--seconds" => {
+                seconds = args.get(i + 1).and_then(|s| s.parse().ok()).context("--seconds S")?;
+                i += 1;
+            }
+            "--shards" => {
+                shards = args.get(i + 1).and_then(|s| s.parse().ok()).context("--shards K")?;
+                i += 1;
+            }
+            "--config" => i += 1,
+            other => bail!("chaos: unknown argument `{other}`"),
+        }
+        i += 1;
+    }
+
+    let degrade = DegradeConfig { wait_p95_us: 10_000, max_steps: 2, eval_waves: 8 };
+    let server = Server::start(
+        &artifact_dir(),
+        ServerConfig {
+            shards,
+            // batch is taken from each artifact's manifest spec; the
+            // 1ms max_wait keeps partial waves (and the storm) moving.
+            batcher: BatcherConfig { max_wait: Duration::from_millis(1), ..Default::default() },
+            deadline: Some(Duration::from_millis(250)),
+            degrade: Some(degrade),
+            chaos: Some(ChaosPlan {
+                panic_every: 5,
+                max_panics: panics,
+                latency_every: 7,
+                latency: Duration::from_millis(2),
+            }),
+            // Injected panics must never kill a shard on their own; the
+            // shared budget caps them at `panics` < this allowance.
+            max_restarts: (panics + 4).min(u64::from(u32::MAX)) as u32,
+            ..ServerConfig::default()
+        },
+    )?;
+    let apps = server.apps();
+    if apps.is_empty() {
+        bail!("no artifacts registered under {}", artifact_dir().display());
+    }
+    println!(
+        "chaos: {} app(s) over {} shard(s) for {seconds}s — panic every 5th wave \
+         (budget {panics}), +2ms every 7th wave, 250ms deadlines, BL ladder ≤{} steps",
+        apps.len(),
+        server.n_shards(),
+        degrade.max_steps
+    );
+
+    #[derive(Default, Clone, Copy)]
+    struct Tally {
+        admitted: u64,
+        submit_err: u64,
+        ok: u64,
+        timeout: u64,
+        exec: u64,
+        dead: u64,
+        dropped: u64,
+    }
+    impl Tally {
+        fn absorb(&mut self, reply: std::result::Result<Reply, std::sync::mpsc::RecvTimeoutError>) {
+            match reply {
+                Ok(Ok(_)) => self.ok += 1,
+                Ok(Err(ServeError::Timeout)) => self.timeout += 1,
+                Ok(Err(ServeError::ShardDead)) => self.dead += 1,
+                Ok(Err(ServeError::Exec(_))) => self.exec += 1,
+                Err(_) => self.dropped += 1,
+            }
+        }
+        fn terminal(&self) -> u64 {
+            self.ok + self.timeout + self.exec + self.dead
+        }
+    }
+
+    // One flooding thread per app; each keeps ≤512 requests in flight
+    // (tallying the oldest as it goes) and drains its tail when time is
+    // up. The 10s recv timeout only trips on a genuine deadlock — every
+    // admitted request is owed a terminal reply.
+    let until = Instant::now() + Duration::from_secs(seconds);
+    let recv_limit = Duration::from_secs(10);
+    let tallies: Vec<Tally> = std::thread::scope(|s| {
+        let handles: Vec<_> = apps
+            .iter()
+            .map(|app| {
+                let server = &server;
+                s.spawn(move || {
+                    let inputs = vec![0.5f64; server.n_inputs(app).unwrap_or(1)];
+                    let mut t = Tally::default();
+                    let mut pending: VecDeque<Receiver<Reply>> = VecDeque::new();
+                    while Instant::now() < until {
+                        match server.submit(app, &inputs) {
+                            Ok(rx) => {
+                                t.admitted += 1;
+                                pending.push_back(rx);
+                            }
+                            Err(_) => t.submit_err += 1,
+                        }
+                        if pending.len() >= 512 {
+                            let rx = pending.pop_front().expect("nonempty");
+                            t.absorb(rx.recv_timeout(recv_limit));
+                        }
+                    }
+                    for rx in pending {
+                        t.absorb(rx.recv_timeout(recv_limit));
+                    }
+                    t
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().unwrap_or_else(|_| panic!("chaos submitter thread panicked")))
+            .collect()
+    });
+    server.drain()?;
+
+    let mut total = Tally::default();
+    for t in &tallies {
+        total.admitted += t.admitted;
+        total.submit_err += t.submit_err;
+        total.ok += t.ok;
+        total.timeout += t.timeout;
+        total.exec += t.exec;
+        total.dead += t.dead;
+        total.dropped += t.dropped;
+    }
+    let pm = server.pool_metrics();
+    let snap = server.snapshot();
+    let bl_level = snap.get("serve_pool_bl_level").unwrap_or(0.0);
+    println!(
+        "chaos: {} admitted → ok={} timeout={} exec_err={} shard_dead={} dropped={} \
+         (submit errors {})",
+        total.admitted,
+        total.ok,
+        total.timeout,
+        total.exec,
+        total.dead,
+        total.dropped,
+        total.submit_err
+    );
+    println!(
+        "chaos: restarts={} deadline_timeouts={} failed_requests={} degraded_waves={} \
+         bl_level={bl_level} dead_shards={:?}",
+        pm.executor_restarts,
+        pm.deadline_timeouts,
+        pm.failed_requests,
+        pm.degraded_waves,
+        server.dead_shards()
+    );
+
+    // Invariant 1: exactly one terminal outcome per admitted request.
+    if total.dropped > 0 {
+        bail!(
+            "{} request(s) dropped without a terminal reply (deadlock or lost wave)",
+            total.dropped
+        );
+    }
+    if total.terminal() != total.admitted {
+        bail!("terminal outcomes {} != admitted {}", total.terminal(), total.admitted);
+    }
+    if total.ok == 0 {
+        bail!("no request ever succeeded under chaos");
+    }
+    // Invariant 2: injected panics never exceed their budget, and the
+    // supervisor never let one kill a shard (budget < restart allowance).
+    if pm.executor_restarts > panics {
+        bail!("{} restarts exceed the injected-panic budget {panics}", pm.executor_restarts);
+    }
+    if !server.dead_shards().is_empty() {
+        bail!("shard(s) {:?} died under a bounded panic budget", server.dead_shards());
+    }
+    // Invariant 3: degradation stays on the configured ladder.
+    if bl_level > f64::from(degrade.max_steps) {
+        bail!("bl_level {bl_level} beyond the {}-step ladder", degrade.max_steps);
+    }
+    // Invariant 4: the server still serves cleanly after the storm.
+    let calm = &apps[0];
+    let inputs = vec![0.5f64; server.n_inputs(calm).unwrap_or(1)];
+    for k in 0..8 {
+        let rx = server.submit(calm, &inputs)?;
+        match rx.recv_timeout(recv_limit) {
+            Ok(Ok(_)) | Ok(Err(ServeError::Timeout)) => {}
+            Ok(Err(e)) => bail!("post-chaos request {k} failed: {e}"),
+            Err(_) => bail!("post-chaos request {k} got no reply"),
+        }
+    }
+
+    let entries = vec![
+        ("chaos_submitted".to_string(), total.admitted as f64),
+        ("chaos_ok".to_string(), total.ok as f64),
+        ("chaos_timeouts".to_string(), total.timeout as f64),
+        ("chaos_exec_errors".to_string(), total.exec as f64),
+        ("chaos_shard_dead".to_string(), total.dead as f64),
+        ("chaos_submit_errors".to_string(), total.submit_err as f64),
+        ("chaos_restarts".to_string(), pm.executor_restarts as f64),
+        ("chaos_deadline_timeouts".to_string(), pm.deadline_timeouts as f64),
+        ("chaos_degraded_waves".to_string(), pm.degraded_waves as f64),
+        ("chaos_bl_level".to_string(), bl_level),
+    ];
+    let out = std::env::var("STOCH_IMC_CHAOS_OUT")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("CHAOS_report.json"));
+    benchjson::merge_and_write(&out, &entries)
+        .with_context(|| format!("writing {}", out.display()))?;
+    println!("chaos: all invariants held; wrote {} keys to {}", entries.len(), out.display());
     Ok(())
 }
 

@@ -80,6 +80,12 @@ struct Wave<'a> {
     kernel: &'a StagedPlan,
     values: &'a [f32],
     seed: i32,
+    /// Effective bitstream length for this wave — the manifest BL, or a
+    /// shorter ladder step when the serving layer degrades under
+    /// overload ([`effective_bl`]). Row streams are addressed by
+    /// `(seed, name, row)` only, so a degraded wave is bit-identical to
+    /// full execution of a manifest compiled at this BL.
+    bl: usize,
     /// Which generator feeds the SNG (counter default; xoshiro compat).
     rng: RngMode,
     /// SNG-cache epoch: fingerprints `(artifact, seed)` so a reseeded
@@ -182,37 +188,41 @@ fn binding_for(artifact: &str, input: &str) -> Option<Binding> {
 
 /// Resolve every primary input of a built-in single-stage kernel to its
 /// [`Binding`], once at load — the per-wave hot path never parses an
-/// input name again.
-fn compile_bindings(artifact: &str, nl: &Netlist) -> Vec<Binding> {
-    crate::apps::bindings_from(nl, |name| {
-        binding_for(artifact, name).unwrap_or_else(|| {
-            panic!("artifact `{artifact}`: no value binding for input `{name}`")
-        })
+/// input name again. A name with no binding is a malformed kernel
+/// definition: reported as an error (with the artifact and input named)
+/// so [`InterpEngine::load`] fails cleanly instead of panicking.
+fn compile_bindings(artifact: &str, nl: &Netlist) -> Result<Vec<Binding>> {
+    crate::apps::try_bindings_from(nl, |name| {
+        binding_for(artifact, name)
+            .with_context(|| format!("artifact `{artifact}`: no value binding for input `{name}`"))
     })
 }
 
-fn kernel_for(name: &str) -> Option<StagedPlan> {
-    // Compile the staged gate-plan pipeline once per kernel at load;
-    // every wave reuses it.
-    fn single(name: &str, nl: Netlist) -> StagedPlan {
-        let n = expected_arity(name).expect("built-in kernel has a known arity");
-        let bindings = compile_bindings(name, &nl);
-        StagedPlan::single(n, nl, bindings, "out")
-            .unwrap_or_else(|e| panic!("kernel `{name}`: {e}"))
+/// Compile the staged gate-plan pipeline once per kernel at load; every
+/// wave reuses it. `Ok(None)` = no built-in kernel for this name (the
+/// caller skips the artifact); `Err` = the kernel definition itself is
+/// inconsistent (unknown arity, unbound input, malformed plan) — a
+/// load-time error, never a panic.
+fn kernel_for(name: &str) -> Result<Option<StagedPlan>> {
+    fn single(name: &str, nl: Netlist) -> Result<StagedPlan> {
+        let n = expected_arity(name)
+            .with_context(|| format!("kernel `{name}`: no known instance arity"))?;
+        let bindings = compile_bindings(name, &nl)?;
+        StagedPlan::single(n, nl, bindings, "out").with_context(|| format!("kernel `{name}`"))
     }
-    Some(match name {
-        "op_multiply" => single(name, ops::multiply()),
-        "op_scaled_add" => single(name, ops::scaled_add()),
-        "op_abs_subtract" => single(name, ops::abs_subtract()),
-        "op_scaled_divide" => single(name, ops::scaled_divide()),
-        "op_square_root" => single(name, ops::square_root(ops::ADDIE_BITS_APP)),
-        "op_exponential" => single(name, ops::exponential()),
-        "app_ol" => single(name, Ol::default().stoch_cost_netlists().remove(0)),
-        "app_hdp" => single(name, Hdp.stoch_cost_netlists().remove(0)),
+    Ok(Some(match name {
+        "op_multiply" => single(name, ops::multiply())?,
+        "op_scaled_add" => single(name, ops::scaled_add())?,
+        "op_abs_subtract" => single(name, ops::abs_subtract())?,
+        "op_scaled_divide" => single(name, ops::scaled_divide())?,
+        "op_square_root" => single(name, ops::square_root(ops::ADDIE_BITS_APP))?,
+        "op_exponential" => single(name, ops::exponential())?,
+        "app_ol" => single(name, Ol::default().stoch_cost_netlists().remove(0))?,
+        "app_hdp" => single(name, Hdp.stoch_cost_netlists().remove(0))?,
         "app_lit" => Lit::default().staged_plan(),
         "app_kde" => Kde::default().staged_plan(),
-        _ => return None,
-    })
+        _ => return Ok(None),
+    }))
 }
 
 /// Instance arity each kernel consumes (the artifact contract's `n`).
@@ -256,7 +266,9 @@ impl InterpEngine {
         let mut specs = HashMap::new();
         let mut kernels = HashMap::new();
         for spec in load_manifest(dir)? {
-            let Some(k) = kernel_for(&spec.name) else {
+            let Some(k) =
+                kernel_for(&spec.name).with_context(|| format!("loading artifact `{}`", spec.name))?
+            else {
                 eprintln!(
                     "interp backend: skipping artifact `{}` — no interpreter kernel \
                      (build HLO artifacts and use the xla-runtime backend for custom graphs)",
@@ -264,7 +276,8 @@ impl InterpEngine {
                 );
                 continue;
             };
-            let expected = expected_arity(&spec.name).expect("kernel implies known arity");
+            let expected = expected_arity(&spec.name)
+                .with_context(|| format!("artifact `{}`: kernel has no known arity", spec.name))?;
             if spec.n_inputs != expected {
                 eprintln!(
                     "interp backend: skipping artifact `{}` — manifest declares {} inputs \
@@ -324,7 +337,7 @@ impl InterpEngine {
         live: usize,
         threads: usize,
     ) -> Result<Vec<f32>> {
-        Ok(self.execute_impl(name, values, seed, live, threads, 0, true, None, None)?.0)
+        Ok(self.execute_impl(name, values, seed, live, threads, 0, true, None, None, 0)?.0)
     }
 
     /// [`InterpEngine::execute_rows`] with an explicit lane width:
@@ -342,7 +355,7 @@ impl InterpEngine {
         threads: usize,
         lane_width: usize,
     ) -> Result<Vec<f32>> {
-        Ok(self.execute_impl(name, values, seed, live, threads, lane_width, true, None, None)?.0)
+        Ok(self.execute_impl(name, values, seed, live, threads, lane_width, true, None, None, 0)?.0)
     }
 
     /// The fully tuned wave entry point: everything
@@ -364,7 +377,32 @@ impl InterpEngine {
         rng: Option<RngMode>,
         fault: Option<&FaultPlan>,
     ) -> Result<(Vec<f32>, WaveStats)> {
-        self.execute_impl(name, values, seed, live, threads, lane_width, true, rng, fault)
+        self.execute_impl(name, values, seed, live, threads, lane_width, true, rng, fault, 0)
+    }
+
+    /// [`InterpEngine::execute_rows_tuned`] with a degradation level:
+    /// the wave runs at `effective_bl(manifest BL, bl_shift)` — each
+    /// shift halves the bitstream (floored at [`MIN_DEGRADED_BL`]), the
+    /// serving layer's graceful-degradation ladder. `bl_shift = 0` is
+    /// exactly the tuned path. Because row streams are addressed by
+    /// `(seed, name, row)` and StoB normalizes by the effective BL, a
+    /// degraded wave is bit-identical to full execution of the same
+    /// artifact compiled at the shorter BL — shorter streams cost
+    /// accuracy (variance), never correctness.
+    #[allow(clippy::too_many_arguments)]
+    pub fn execute_rows_degraded(
+        &self,
+        name: &str,
+        values: &[f32],
+        seed: i32,
+        live: usize,
+        threads: usize,
+        lane_width: usize,
+        rng: Option<RngMode>,
+        fault: Option<&FaultPlan>,
+        bl_shift: u32,
+    ) -> Result<(Vec<f32>, WaveStats)> {
+        self.execute_impl(name, values, seed, live, threads, lane_width, true, rng, fault, bl_shift)
     }
 
     /// [`InterpEngine::execute_rows_wide`] with the paper's reliability
@@ -385,7 +423,7 @@ impl InterpEngine {
         lane_width: usize,
         fault: Option<&FaultPlan>,
     ) -> Result<(Vec<f32>, WaveStats)> {
-        self.execute_impl(name, values, seed, live, threads, lane_width, true, None, fault)
+        self.execute_impl(name, values, seed, live, threads, lane_width, true, None, fault, 0)
     }
 
     /// [`InterpEngine::execute_rows`] forced onto the scalar golden
@@ -403,7 +441,7 @@ impl InterpEngine {
         live: usize,
         threads: usize,
     ) -> Result<Vec<f32>> {
-        Ok(self.execute_impl(name, values, seed, live, threads, 0, false, None, None)?.0)
+        Ok(self.execute_impl(name, values, seed, live, threads, 0, false, None, None, 0)?.0)
     }
 
     /// [`InterpEngine::execute_rows_scalar`] with an explicit generator
@@ -418,7 +456,7 @@ impl InterpEngine {
         threads: usize,
         rng: Option<RngMode>,
     ) -> Result<Vec<f32>> {
-        Ok(self.execute_impl(name, values, seed, live, threads, 0, false, rng, None)?.0)
+        Ok(self.execute_impl(name, values, seed, live, threads, 0, false, rng, None, 0)?.0)
     }
 
     /// [`InterpEngine::execute_rows_scalar`] under fault injection —
@@ -436,7 +474,7 @@ impl InterpEngine {
         threads: usize,
         fault: &FaultPlan,
     ) -> Result<Vec<f32>> {
-        Ok(self.execute_impl(name, values, seed, live, threads, 0, false, None, Some(fault))?.0)
+        Ok(self.execute_impl(name, values, seed, live, threads, 0, false, None, Some(fault), 0)?.0)
     }
 
     #[allow(clippy::too_many_arguments)]
@@ -451,6 +489,7 @@ impl InterpEngine {
         word_parallel: bool,
         rng: Option<RngMode>,
         fault: Option<&FaultPlan>,
+        bl_shift: u32,
     ) -> Result<(Vec<f32>, WaveStats)> {
         let Some(spec) = self.specs.get(name) else {
             bail!("unknown artifact `{name}`");
@@ -472,6 +511,11 @@ impl InterpEngine {
         let live = live.min(spec.batch);
         let threads = if threads == 0 { default_row_threads() } else { threads };
         let rng = resolve_rng_mode(rng);
+        // Degradation ladder: halve the manifest BL per shift step
+        // (floored at MIN_DEGRADED_BL). Row streams are addressed by
+        // (seed, name, row), never by BL, so a shifted wave's bits are
+        // exactly the prefix a shorter-BL manifest would draw.
+        let bl = effective_bl(spec.bl, bl_shift);
         // A no-op plan (all rates 0) degrades to the clean path: same
         // bits by construction *and* zero instrumentation overhead.
         let cuts = fault.and_then(|p| if p.is_noop() { None } else { Some(p.cutoffs()) });
@@ -479,7 +523,8 @@ impl InterpEngine {
         let mut stats = WaveStats::default();
         if word_parallel {
             let epoch = mix64(fnv1a(name) ^ mix64(seed as u32 as u64));
-            let wave = Wave { name, spec, kernel, values, seed, rng, epoch, fault: cuts.as_ref() };
+            let wave =
+                Wave { name, spec, kernel, values, seed, bl, rng, epoch, fault: cuts.as_ref() };
             let ops = Mutex::new((
                 OpCounters::default(),
                 StageSpans::default(),
@@ -493,16 +538,20 @@ impl InterpEngine {
                 256 => self.execute_blocks::<4>(&wave, &mut out[..live], threads, &ops)?,
                 _ => self.execute_blocks::<8>(&wave, &mut out[..live], threads, &ops)?,
             }
+            // Worker counters are monotonic sums: recover from a
+            // poisoned mutex (a panicked worker) rather than cascading
+            // the panic into every later wave of the process.
             (stats.ops, stats.spans, stats.cache) =
-                ops.into_inner().expect("ops mutex poisoned");
+                ops.into_inner().unwrap_or_else(|e| e.into_inner());
             if live > 0 {
                 // Eq 11 terms for this wave: every stage slot of every
                 // live lane is a utilized subarray row; the hottest
-                // cell takes one preset + one write per time step.
+                // cell takes one preset + one write per time step (of
+                // the *effective* BL — a degraded wave writes less).
                 stats.wear = WearProfile {
                     used_cells: (kernel.n_slots_total() * live) as u64,
                     writes: stats.ops.write_total(),
-                    max_cell_writes: 2 * spec.bl.max(1) as u64,
+                    max_cell_writes: 2 * bl as u64,
                 };
             }
         } else {
@@ -512,6 +561,7 @@ impl InterpEngine {
                 kernel,
                 values,
                 seed,
+                bl,
                 &mut out[..live],
                 threads,
                 rng,
@@ -563,7 +613,10 @@ impl InterpEngine {
                 );
             }
             (cache.cutoff_hits, cache.cutoff_misses) = ws.cutcache.counters();
-            let mut total = ops.lock().expect("ops mutex poisoned");
+            // Poison recovery: the counters are additive, so folding
+            // into a snapshot another worker abandoned mid-update only
+            // undercounts that worker's block — never corrupts.
+            let mut total = ops.lock().unwrap_or_else(|e| e.into_inner());
             total.0.add(&local);
             total.1.add(&spans);
             total.2.add(&cache);
@@ -617,7 +670,7 @@ impl InterpEngine {
             planes,
             counts,
         } = ws;
-        let bl = w.spec.bl.max(1);
+        let bl = w.bl;
         let lanes = out.len();
         let n = w.spec.n_inputs;
         let name_hash = fnv1a(w.name);
@@ -798,6 +851,7 @@ impl InterpEngine {
         kernel: &StagedPlan,
         values: &[f32],
         seed: i32,
+        bl: usize,
         out: &mut [f32],
         threads: usize,
         rng: RngMode,
@@ -807,7 +861,6 @@ impl InterpEngine {
         if live == 0 {
             return Ok(());
         }
-        let bl = spec.bl.max(1);
         let name_hash = fnv1a(name);
         let workers = threads.min(live).max(1);
         parallel_chunks(out, workers, live.div_ceil(workers), |start, sub| {
@@ -882,6 +935,21 @@ struct BlockWorkspace<const W: usize> {
     planes: Vec<[u64; W]>,
     /// Per-lane popcounts from the vertical counter.
     counts: Vec<u32>,
+}
+
+/// Never degrade a wave's effective bitstream below this many steps —
+/// a 16-step stream still carries a usable (if coarse) estimate, and
+/// the floor keeps [`effective_bl`] well-defined for tiny manifests.
+pub const MIN_DEGRADED_BL: usize = 16;
+
+/// Effective bitstream length after `shift` degradation-ladder steps:
+/// halved per step, floored at [`MIN_DEGRADED_BL`], never above the
+/// manifest BL. The single source of truth shared by the engine (which
+/// applies it) and the serving layer's overload controller (which picks
+/// the step).
+pub fn effective_bl(bl: usize, shift: u32) -> usize {
+    let full = bl.max(1);
+    (full >> shift.min(63)).max(MIN_DEGRADED_BL).min(full)
 }
 
 /// The explicit lane-width override from `STOCH_IMC_LANE_WIDTH`:
@@ -1348,5 +1416,44 @@ mod tests {
         assert_eq!(e.artifact_names(), vec!["app_ol"]);
         let err = e.execute("app_lit", &[0.5; 32], 1, 1).unwrap_err();
         assert!(format!("{err:#}").contains("unknown artifact"), "{err:#}");
+    }
+
+    #[test]
+    fn degraded_wave_matches_shorter_bl_artifact_bit_exactly() {
+        // The graceful-degradation contract: because row streams are
+        // addressed by (seed, name, row) — never by BL — and StoB
+        // normalizes by the effective BL, a shift-k degraded wave on a
+        // BL=B manifest is bit-identical to full execution of the same
+        // kernel compiled at BL = B >> k.
+        let full = engine_with("op_multiply 2 24 256\n", "deg_full");
+        let half = engine_with("op_multiply 2 24 128\n", "deg_half");
+        let mut values = vec![0.0f32; 24 * 2];
+        for i in 0..24 {
+            values[2 * i] = 0.1 + 0.03 * i as f32;
+            values[2 * i + 1] = 0.85 - 0.02 * i as f32;
+        }
+        let run = |e: &InterpEngine, shift: u32| {
+            e.execute_rows_degraded("op_multiply", &values, 7, 24, 2, 0, None, None, shift)
+                .unwrap()
+                .0
+        };
+        // shift 0 is exactly the tuned path.
+        assert_eq!(
+            run(&full, 0),
+            full.execute_rows("op_multiply", &values, 7, 24, 2).unwrap()
+        );
+        // One ladder step == the half-BL artifact, bit for bit.
+        assert_eq!(run(&full, 1), run(&half, 0), "degraded 256>>1 vs native BL=128");
+        // Degradation costs variance, not correctness: both stay near
+        // the exact product.
+        for (i, o) in run(&full, 1).iter().enumerate() {
+            let exact = f64::from(values[2 * i]) * f64::from(values[2 * i + 1]);
+            assert!((f64::from(*o) - exact).abs() < 0.15, "row {i}: {o} vs {exact}");
+        }
+        // The ladder floors at MIN_DEGRADED_BL: a huge shift on BL=256
+        // clamps to 16, which equals the native BL=16 artifact.
+        let floor = engine_with("op_multiply 2 24 16\n", "deg_floor");
+        assert_eq!(effective_bl(256, 60), MIN_DEGRADED_BL);
+        assert_eq!(run(&full, 60), run(&floor, 0), "floored shift vs native BL=16");
     }
 }

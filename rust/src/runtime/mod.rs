@@ -39,8 +39,8 @@ compile_error!(
 
 pub use artifacts::{load_manifest, ArtifactSpec};
 pub use interp::{
-    default_row_threads, lane_width_override, rng_mode_override, row_threads_override,
-    InterpEngine, WaveStats,
+    default_row_threads, effective_bl, lane_width_override, rng_mode_override,
+    row_threads_override, InterpEngine, WaveStats, MIN_DEGRADED_BL,
 };
 
 use std::path::Path;
@@ -208,6 +208,37 @@ impl Engine {
             #[cfg(all(feature = "xla-runtime", xla_available))]
             Engine::Pjrt(e) => {
                 let _ = (threads, lane_width, rng, fault);
+                Ok((e.execute(name, values, seed, live)?, WaveStats::default()))
+            }
+        }
+    }
+
+    /// [`Engine::execute_rows_tuned`] with a degradation level: the
+    /// interpreter runs the wave at `effective_bl(manifest BL,
+    /// bl_shift)` — the serving layer's graceful-degradation ladder
+    /// (accuracy traded for latency, bit-identical to a manifest
+    /// compiled at the shorter BL). `bl_shift = 0` is exactly the tuned
+    /// path. PJRT executes its fixed artifact and ignores the shift.
+    #[allow(clippy::too_many_arguments)]
+    pub fn execute_rows_degraded(
+        &self,
+        name: &str,
+        values: &[f32],
+        seed: i32,
+        live: usize,
+        threads: usize,
+        lane_width: usize,
+        rng: Option<RngMode>,
+        fault: Option<&FaultPlan>,
+        bl_shift: u32,
+    ) -> Result<(Vec<f32>, WaveStats)> {
+        match self {
+            Engine::Interp(e) => e.execute_rows_degraded(
+                name, values, seed, live, threads, lane_width, rng, fault, bl_shift,
+            ),
+            #[cfg(all(feature = "xla-runtime", xla_available))]
+            Engine::Pjrt(e) => {
+                let _ = (threads, lane_width, rng, fault, bl_shift);
                 Ok((e.execute(name, values, seed, live)?, WaveStats::default()))
             }
         }

@@ -17,6 +17,14 @@
 //! * [`Server`] — the front door: `submit` / `try_submit` (admission
 //!   control with backpressure), `run_workload`, `drain`, and pool-wide
 //!   aggregated [`Metrics`].
+//! * [`resilience`] — the failure-domain toolkit: typed replies
+//!   (`Result<f32, ServeError>`), supervised executors (`catch_unwind`
+//!   + bounded respawns; dead shards are routed around), per-request
+//!   deadlines ([`SubmitOpts`]), the adaptive BL-degradation ladder
+//!   ([`DegradeConfig`] — the SC-native accuracy-for-latency trade
+//!   under overload), and the [`ChaosPlan`] fault injectors pinned by
+//!   `tests/chaos.rs`. See ARCHITECTURE.md "Failure domains &
+//!   graceful degradation".
 //!
 //! Row-level parallelism composes underneath: each wave is evaluated
 //! by the word-parallel engine via
@@ -40,8 +48,10 @@
 //! [`runtime::InterpEngine::execute_rows`]: crate::runtime::InterpEngine::execute_rows
 
 pub mod pool;
+pub mod resilience;
 pub mod server;
 pub mod shard;
 
 pub use pool::BankPool;
+pub use resilience::{ChaosPlan, DegradeConfig, Reply, ServeError, SubmitOpts};
 pub use server::{Server, ServerConfig};

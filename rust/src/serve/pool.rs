@@ -4,19 +4,23 @@
 //! artifact gets its own bank controller (the default), otherwise apps
 //! are FNV-hashed onto the available shards. Every shard shares one
 //! `Arc<Engine>` and one metrics map (each app lives on exactly one
-//! shard, so per-app metrics never contend across shards).
+//! *live* shard, so per-app metrics rarely contend across shards).
+//! Every shard also knows every servable app's spec, so when a shard
+//! dies (executor restart budget exhausted) [`BankPool::shard_for`]
+//! routes its apps to the next live sibling instead of failing them.
 
 use std::collections::HashMap;
+use std::sync::atomic::AtomicU64;
 use std::sync::mpsc::channel;
 use std::sync::{Arc, Mutex};
 
-use crate::coordinator::batcher::BatcherConfig;
 use crate::coordinator::metrics::Metrics;
 use crate::error::Result;
-use crate::fault::FaultPlan;
 use crate::runtime::Engine;
-use crate::util::prng::{fnv1a, RngMode};
+use crate::util::prng::fnv1a;
 
+use super::resilience::{lock_unpoisoned, DegradeConfig};
+use super::server::ServerConfig;
 use super::shard::{Shard, ShardMsg, WaveKnobs};
 
 /// Owns the shards; dropped last by [`super::Server`], which shuts every
@@ -42,63 +46,73 @@ pub(crate) fn route_apps(names: &[String], shards: usize) -> (usize, HashMap<Str
 }
 
 impl BankPool {
-    /// Spawn `n` shards over the shared engine. `specs` maps every
-    /// servable app to `(n_inputs, batch)`; `shards == 0` means one
+    /// Spawn the pool over the shared engine. `specs` maps every
+    /// servable app to `(n_inputs, batch)`; `cfg.shards == 0` means one
     /// shard per artifact.
-    #[allow(clippy::too_many_arguments)]
     pub(crate) fn start(
         engine: Arc<Engine>,
         specs: &HashMap<String, (usize, usize)>,
-        shards: usize,
-        cfg: &BatcherConfig,
-        queue_depth: usize,
-        row_threads: usize,
-        lane_width: usize,
-        rng: Option<RngMode>,
-        fault: Option<FaultPlan>,
+        cfg: &ServerConfig,
     ) -> Result<Self> {
         let mut names: Vec<String> = specs.keys().cloned().collect();
         names.sort();
-        let (n, route) = route_apps(&names, shards);
+        let (n, route) = route_apps(&names, cfg.shards);
         // Resolve the auto row-worker count once, here, hoisting the env
         // lookup off the per-wave path. An explicit STOCH_IMC_ROW_THREADS
         // is honored as-is; only the cores *fallback* is divided across
         // the shards (banks share the chip; N shards × full-core row
         // pools would oversubscribe and thrash).
-        let row_threads = if row_threads == 0 {
+        let row_threads = if cfg.row_threads == 0 {
             crate::runtime::row_threads_override().unwrap_or_else(|| {
                 let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
                 (cores / n).max(1)
             })
         } else {
-            row_threads
+            cfg.row_threads
         };
         // Same hoisting for the lane width: an explicit config value or
         // STOCH_IMC_LANE_WIDTH pins every wave; otherwise 0 lets the
         // engine auto-size each wave to its live row count.
-        let lane_width = match lane_width {
-            64 | 128 | 256 | 512 => lane_width,
+        let lane_width = match cfg.lane_width {
+            64 | 128 | 256 | 512 => cfg.lane_width,
             _ => crate::runtime::lane_width_override().unwrap_or(0),
         };
         // And for the generator family: an explicit config mode wins,
-        // then STOCH_IMC_RNG, then the counter default.
-        let rng = rng.or_else(crate::runtime::rng_mode_override).unwrap_or_default();
-        let knobs = WaveKnobs { row_threads, lane_width, rng, fault };
+        // then STOCH_IMC_RNG, then the counter default. Degradation
+        // follows the same pattern (config, then STOCH_IMC_DEGRADE_*,
+        // then disabled).
+        let rng = cfg.rng.or_else(crate::runtime::rng_mode_override).unwrap_or_default();
+        let degrade = cfg.degrade.or_else(DegradeConfig::from_env).unwrap_or_default();
+        let knobs = WaveKnobs {
+            row_threads,
+            lane_width,
+            rng,
+            fault: cfg.fault,
+            degrade,
+            chaos: cfg.chaos,
+            max_restarts: cfg.max_restarts,
+        };
+        // Pool-wide injected-panic allowance shared by every shard.
+        let chaos_budget =
+            Arc::new(AtomicU64::new(cfg.chaos.map_or(0, |c| c.max_panics)));
         let metrics: Arc<Mutex<HashMap<String, Metrics>>> = Arc::default();
         let mut pool_shards = Vec::with_capacity(n);
         for id in 0..n {
-            let shard_specs: HashMap<String, (usize, usize)> = route
-                .iter()
-                .filter(|(_, &s)| s == id)
-                .map(|(app, _)| (app.clone(), specs[app]))
-                .collect();
+            // Every shard gets the FULL spec map (it can absorb traffic
+            // routed around a dead sibling) plus its sorted home list
+            // (metrics attribution for restarts with no in-flight app).
+            let mut home: Vec<String> =
+                route.iter().filter(|(_, &s)| s == id).map(|(app, _)| app.clone()).collect();
+            home.sort();
             pool_shards.push(Shard::spawn(
                 id,
                 Arc::clone(&engine),
-                shard_specs,
-                cfg.clone(),
-                queue_depth,
+                specs.clone(),
+                home,
+                cfg.batcher.clone(),
+                cfg.queue_depth,
                 knobs,
+                Arc::clone(&chaos_budget),
                 Arc::clone(&metrics),
             )?);
         }
@@ -114,8 +128,18 @@ impl BankPool {
         self.route.get(app).copied()
     }
 
+    /// The live shard serving `app`: its home shard, or — when the home
+    /// (or a fallback) is dead — the next live shard in id order. `None`
+    /// for unknown apps or when every shard is dead.
     pub(crate) fn shard_for(&self, app: &str) -> Option<&Shard> {
-        self.shard_of(app).map(|i| &self.shards[i])
+        let home = self.shard_of(app)?;
+        let n = self.shards.len();
+        (0..n).map(|k| &self.shards[(home + k) % n]).find(|s| !s.is_dead())
+    }
+
+    /// Shards marked dead by their supervisor (restart budget spent).
+    pub fn dead_shards(&self) -> Vec<usize> {
+        self.shards.iter().filter(|s| s.is_dead()).map(|s| s.id()).collect()
     }
 
     pub(crate) fn metrics_map(&self) -> &Arc<Mutex<HashMap<String, Metrics>>> {
@@ -124,16 +148,14 @@ impl BankPool {
 
     /// Per-app metrics snapshot.
     pub fn metrics(&self, app: &str) -> Metrics {
-        self.metrics.lock().unwrap().get(app).cloned().unwrap_or_default()
+        lock_unpoisoned(&self.metrics).get(app).cloned().unwrap_or_default()
     }
 
     /// Pool-wide aggregate across every app on every shard.
     pub fn pool_metrics(&self) -> Metrics {
         let mut total = Metrics::default();
-        if let Ok(m) = self.metrics.lock() {
-            for app in m.values() {
-                total.merge(app);
-            }
+        for app in lock_unpoisoned(&self.metrics).values() {
+            total.merge(app);
         }
         total
     }

@@ -1,0 +1,350 @@
+//! Resilience primitives for the serving layer: typed terminal
+//! outcomes, per-request deadlines, the adaptive bitstream-length
+//! degradation controller, and the chaos-injection plan.
+//!
+//! The contract every piece here serves: **every admitted request gets
+//! exactly one terminal outcome** — a value, `Err(Timeout)`,
+//! `Err(ShardDead)`, or `Err(Exec(..))` — no matter what the executor
+//! does (panics included; see `shard::supervisor_loop`). Degradation is
+//! the SC-native overload response: stochastic computing trades
+//! accuracy for latency by shortening the bitstream, so an overloaded
+//! shard halves its effective BL down a bounded ladder instead of
+//! shedding, and steps back up when queue waits recover (§3 of the
+//! paper frames SC as exactly this approximation dial).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard};
+use std::time::Duration;
+
+use crate::obs::Histogram;
+
+/// Lock a mutex, recovering from poisoning: a thread that panicked
+/// while holding the metrics lock must not poison observability for the
+/// whole pool. Safe here because every guarded structure is a bag of
+/// monotonic counters/histograms — a partially-applied update is still
+/// a usable (merely slightly stale) snapshot.
+pub(crate) fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Why a request terminated without a value. Cloned into every affected
+/// responder, so it is cheap and comparable (tests match on variants).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// The request's deadline expired before a value could be produced
+    /// (checked at dequeue, at wave close, and again at completion).
+    Timeout,
+    /// The owning shard exhausted its executor restart budget; pending
+    /// and late-arriving requests are failed fast instead of queued.
+    ShardDead,
+    /// Wave execution failed — an engine error or an executor panic.
+    Exec(String),
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Timeout => write!(f, "request deadline exceeded"),
+            ServeError::ShardDead => write!(f, "shard dead (executor restart budget exhausted)"),
+            ServeError::Exec(msg) => write!(f, "{msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// The terminal outcome delivered on every request's response channel.
+pub type Reply = Result<f32, ServeError>;
+
+/// Per-submit options for [`super::Server::submit_opts`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SubmitOpts {
+    /// Per-request budget measured from submission. `None` = the
+    /// server's default deadline (`ServerConfig::deadline`, else
+    /// `STOCH_IMC_DEADLINE_MS`, else unbounded).
+    pub deadline: Option<Duration>,
+    /// Shed (error immediately) instead of blocking when the shard's
+    /// admission queue is full — the `try_submit` behaviour.
+    pub shed: bool,
+}
+
+/// The `STOCH_IMC_DEADLINE_MS` default request deadline: `None` when
+/// unset or `0` (unbounded); unparseable values warn and disable.
+pub fn deadline_override() -> Option<Duration> {
+    let s = std::env::var("STOCH_IMC_DEADLINE_MS").ok()?;
+    match s.trim().parse::<u64>() {
+        Ok(0) => None,
+        Ok(ms) => Some(Duration::from_millis(ms)),
+        Err(_) => {
+            eprintln!("STOCH_IMC_DEADLINE_MS=`{s}` is not a non-negative integer; no deadline");
+            None
+        }
+    }
+}
+
+/// Adaptive-degradation knobs: when a shard's recent queue-wait p95
+/// exceeds `wait_p95_us`, the shard halves its effective bitstream
+/// length (one ladder step, e.g. BL 256→128→64), and steps back up
+/// once the p95 falls below a quarter of the threshold (hysteresis).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DegradeConfig {
+    /// Queue-wait p95 threshold in microseconds; `0` disables the
+    /// controller entirely (the default — degraded waves change output
+    /// values, so the trade is strictly opt-in).
+    pub wait_p95_us: u64,
+    /// Maximum halvings below the artifact's full BL (the ladder
+    /// depth). Effective BL never drops below 16 steps.
+    pub max_steps: u32,
+    /// Evaluate the wait window every this many waves.
+    pub eval_waves: u32,
+}
+
+impl Default for DegradeConfig {
+    fn default() -> Self {
+        Self { wait_p95_us: 0, max_steps: 2, eval_waves: 8 }
+    }
+}
+
+impl DegradeConfig {
+    pub fn enabled(&self) -> bool {
+        self.wait_p95_us > 0 && self.max_steps > 0 && self.eval_waves > 0
+    }
+
+    /// Resolve the controller from the environment:
+    /// `STOCH_IMC_DEGRADE_WAIT_US` (threshold; presence enables),
+    /// `STOCH_IMC_DEGRADE_STEPS` (ladder depth, default 2),
+    /// `STOCH_IMC_DEGRADE_EVAL_WAVES` (window, default 8). `None` when
+    /// the threshold is unset, zero, or unparseable.
+    pub fn from_env() -> Option<Self> {
+        let s = std::env::var("STOCH_IMC_DEGRADE_WAIT_US").ok()?;
+        let wait_p95_us = match s.trim().parse::<u64>() {
+            Ok(us) if us > 0 => us,
+            Ok(_) => return None,
+            Err(_) => {
+                eprintln!(
+                    "STOCH_IMC_DEGRADE_WAIT_US=`{s}` is not a positive integer; \
+                     degradation disabled"
+                );
+                return None;
+            }
+        };
+        let parse = |var: &str, default: u32| {
+            std::env::var(var)
+                .ok()
+                .and_then(|v| v.trim().parse::<u32>().ok())
+                .filter(|&v| v > 0)
+                .unwrap_or(default)
+        };
+        Some(Self {
+            wait_p95_us,
+            max_steps: parse("STOCH_IMC_DEGRADE_STEPS", 2),
+            eval_waves: parse("STOCH_IMC_DEGRADE_EVAL_WAVES", 8),
+        })
+    }
+}
+
+/// Re-exported from the runtime (the engine applies the ladder): the
+/// effective-BL map and its floor live next to the wave evaluator so
+/// the serving layer and the engine can never disagree on the math.
+pub use crate::runtime::{effective_bl, MIN_DEGRADED_BL};
+
+/// Per-shard overload controller. Feed it every request's queue wait
+/// ([`DegradeController::record_wait`]) and tick it once per wave
+/// ([`DegradeController::on_wave`]); read the current ladder level with
+/// [`DegradeController::level`]. All state is shard-local — no locks,
+/// no shared windows.
+#[derive(Debug)]
+pub(crate) struct DegradeController {
+    cfg: DegradeConfig,
+    level: u32,
+    window: Histogram,
+    waves_in_window: u32,
+}
+
+impl DegradeController {
+    pub(crate) fn new(cfg: DegradeConfig) -> Self {
+        Self { cfg, level: 0, window: Histogram::default(), waves_in_window: 0 }
+    }
+
+    /// Current ladder level (0 = full BL).
+    pub(crate) fn level(&self) -> u32 {
+        self.level
+    }
+
+    pub(crate) fn record_wait_us(&mut self, us: u64) {
+        if self.cfg.enabled() {
+            self.window.record(us);
+        }
+    }
+
+    /// Tick after an executed wave; every `eval_waves` waves the window
+    /// p95 is compared against the threshold — above it the shard steps
+    /// one level down the ladder, below a quarter of it the shard steps
+    /// back up (waves with an empty window, e.g. all-timeout drains,
+    /// read p95 = 0 and recover). The window resets each evaluation so
+    /// old congestion can't pin the level.
+    pub(crate) fn on_wave(&mut self) {
+        if !self.cfg.enabled() {
+            return;
+        }
+        self.waves_in_window += 1;
+        if self.waves_in_window < self.cfg.eval_waves {
+            return;
+        }
+        let p95 = self.window.percentile(95.0);
+        if p95 > self.cfg.wait_p95_us {
+            self.level = (self.level + 1).min(self.cfg.max_steps);
+        } else if p95 * 4 <= self.cfg.wait_p95_us && self.level > 0 {
+            self.level -= 1;
+        }
+        self.window = Histogram::default();
+        self.waves_in_window = 0;
+    }
+}
+
+/// Chaos-injection plan for the resilience harness (`stoch-imc chaos`,
+/// `tests/chaos.rs`): deterministic executor panics and artificial wave
+/// latency, injected *inside* the shard's wave path so supervision,
+/// deadlines, and degradation all see realistic failures. An all-zero
+/// plan is exactly the clean path (the disturb hook short-circuits).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ChaosPlan {
+    /// Panic the executor on every Nth wave of a shard (`0` = never).
+    pub panic_every: u64,
+    /// Pool-wide cap on injected panics (a shared budget, so a bounded
+    /// chaos run can't exhaust every shard's restart allowance).
+    pub max_panics: u64,
+    /// Sleep before every Nth wave of a shard (`0` = never).
+    pub latency_every: u64,
+    /// The injected per-wave latency.
+    pub latency: Duration,
+}
+
+impl ChaosPlan {
+    /// Apply the plan at one wave: may panic (counted against the
+    /// shared `budget`) or sleep. Called after the wave is parked where
+    /// the supervisor can fail it, so an injected panic exercises the
+    /// exact recovery path a real executor fault would.
+    pub(crate) fn disturb(&self, wave: u64, budget: &AtomicU64) {
+        if self.panic_every > 0
+            && wave % self.panic_every == 0
+            && budget.fetch_update(Ordering::SeqCst, Ordering::SeqCst, |n| n.checked_sub(1)).is_ok()
+        {
+            panic!("chaos: injected executor panic at shard wave {wave}");
+        }
+        if self.latency_every > 0 && wave % self.latency_every == 0 && !self.latency.is_zero() {
+            std::thread::sleep(self.latency);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctl(wait_p95_us: u64, max_steps: u32, eval_waves: u32) -> DegradeController {
+        DegradeController::new(DegradeConfig { wait_p95_us, max_steps, eval_waves })
+    }
+
+    #[test]
+    fn effective_bl_ladder_and_floor() {
+        assert_eq!(effective_bl(256, 0), 256);
+        assert_eq!(effective_bl(256, 1), 128);
+        assert_eq!(effective_bl(256, 2), 64);
+        // Floored at MIN_DEGRADED_BL, never above the full BL.
+        assert_eq!(effective_bl(256, 10), MIN_DEGRADED_BL);
+        assert_eq!(effective_bl(8, 1), 8);
+        assert_eq!(effective_bl(0, 0), 1);
+        assert_eq!(effective_bl(1 << 20, 63), MIN_DEGRADED_BL);
+    }
+
+    #[test]
+    fn controller_steps_down_under_load_and_recovers() {
+        let mut c = ctl(1000, 2, 4);
+        // Four slow waves → one eval → one step down.
+        for _ in 0..4 {
+            c.record_wait_us(50_000);
+            c.on_wave();
+        }
+        assert_eq!(c.level(), 1);
+        // Sustained overload walks the ladder but never past max_steps.
+        for _ in 0..12 {
+            c.record_wait_us(50_000);
+            c.on_wave();
+        }
+        assert_eq!(c.level(), 2, "bounded by max_steps");
+        // Recovery needs p95 ≤ threshold/4 (hysteresis): 300 ≤ 250 is
+        // false, so the level holds...
+        for _ in 0..4 {
+            c.record_wait_us(300);
+            c.on_wave();
+        }
+        assert_eq!(c.level(), 2, "mid-band waits neither step nor recover");
+        // ...and genuinely quiet windows step back up to full BL.
+        for _ in 0..8 {
+            c.record_wait_us(10);
+            c.on_wave();
+        }
+        assert_eq!(c.level(), 0);
+    }
+
+    #[test]
+    fn controller_window_resets_between_evals() {
+        let mut c = ctl(1000, 4, 2);
+        // One congested window steps down once.
+        for _ in 0..2 {
+            c.record_wait_us(100_000);
+            c.on_wave();
+        }
+        assert_eq!(c.level(), 1);
+        // The next window is clean — the old samples must not linger
+        // and force a second step.
+        for _ in 0..2 {
+            c.record_wait_us(10);
+            c.on_wave();
+        }
+        assert_eq!(c.level(), 0);
+    }
+
+    #[test]
+    fn disabled_controller_never_degrades() {
+        let mut c = ctl(0, 2, 4);
+        for _ in 0..32 {
+            c.record_wait_us(u64::MAX);
+            c.on_wave();
+        }
+        assert_eq!(c.level(), 0);
+        assert!(!DegradeConfig::default().enabled());
+    }
+
+    #[test]
+    fn chaos_panic_budget_is_exact() {
+        let plan = ChaosPlan { panic_every: 1, max_panics: 2, ..ChaosPlan::default() };
+        let budget = AtomicU64::new(plan.max_panics);
+        for wave in 1..=2u64 {
+            let r = std::panic::catch_unwind(|| plan.disturb(wave, &budget));
+            assert!(r.is_err(), "wave {wave} must panic while budget remains");
+        }
+        // Budget exhausted: the same cadence no longer panics.
+        let r = std::panic::catch_unwind(|| plan.disturb(3, &budget));
+        assert!(r.is_ok(), "no panic once the shared budget is spent");
+        assert_eq!(budget.load(Ordering::SeqCst), 0);
+    }
+
+    #[test]
+    fn noop_chaos_plan_disturbs_nothing() {
+        let plan = ChaosPlan::default();
+        let budget = AtomicU64::new(0);
+        for wave in 1..=8u64 {
+            plan.disturb(wave, &budget); // must neither panic nor sleep
+        }
+    }
+
+    #[test]
+    fn serve_error_display_and_eq() {
+        assert_eq!(ServeError::Timeout, ServeError::Timeout);
+        assert_ne!(ServeError::Timeout, ServeError::ShardDead);
+        assert!(ServeError::ShardDead.to_string().contains("dead"));
+        assert!(ServeError::Exec("boom".into()).to_string().contains("boom"));
+    }
+}

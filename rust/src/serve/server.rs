@@ -5,18 +5,21 @@ use std::collections::HashMap;
 use std::path::Path;
 use std::sync::Arc;
 use std::sync::mpsc::{channel, Receiver};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::bail;
 use crate::coordinator::batcher::BatcherConfig;
 use crate::coordinator::metrics::Metrics;
-use crate::error::{Context, Result};
+use crate::error::Result;
 use crate::fault::FaultPlan;
 use crate::obs::MetricsSnapshot;
 use crate::runtime::Engine;
 use crate::util::prng::RngMode;
 
 use super::pool::BankPool;
+use super::resilience::{
+    deadline_override, lock_unpoisoned, ChaosPlan, DegradeConfig, Reply, SubmitOpts,
+};
 use super::shard::{Admission, ShardMsg};
 
 /// Serving configuration: how many bank shards, how deep each shard's
@@ -65,6 +68,23 @@ pub struct ServerConfig {
     /// campaign drives Table-4-style accuracy-vs-flip-rate sweeps
     /// through the full serving stack with this knob.
     pub fault: Option<FaultPlan>,
+    /// Default end-to-end request deadline applied to every submit that
+    /// doesn't carry its own ([`SubmitOpts::deadline`] wins). `None`
+    /// (default) = the `STOCH_IMC_DEADLINE_MS` env var if set, else
+    /// unbounded. Resolved once at start.
+    pub deadline: Option<Duration>,
+    /// Adaptive graceful-degradation controller (queue-wait p95 → BL
+    /// ladder). `None` (default) = the `STOCH_IMC_DEGRADE_*` env vars
+    /// if set, else disabled — degraded waves trade accuracy for
+    /// latency, so the ladder is strictly opt-in. Resolved once at
+    /// start.
+    pub degrade: Option<DegradeConfig>,
+    /// Chaos-injection plan for the resilience harness (`None` =
+    /// production serving; an all-zero plan is bit-identical to it).
+    pub chaos: Option<ChaosPlan>,
+    /// Consecutive executor panics a shard survives (supervised
+    /// respawn) before it is marked dead and routed around.
+    pub max_restarts: u32,
 }
 
 impl Default for ServerConfig {
@@ -77,6 +97,10 @@ impl Default for ServerConfig {
             lane_width: 0,
             rng: None,
             fault: None,
+            deadline: None,
+            degrade: None,
+            chaos: None,
+            max_restarts: 8,
         }
     }
 }
@@ -87,6 +111,9 @@ impl Default for ServerConfig {
 pub struct Server {
     pool: BankPool,
     specs: HashMap<String, (usize, usize)>, // name → (n_inputs, batch)
+    /// Deadline applied when a submit carries none — config, then
+    /// `STOCH_IMC_DEADLINE_MS`, resolved once at start.
+    default_deadline: Option<Duration>,
 }
 
 impl Server {
@@ -106,18 +133,9 @@ impl Server {
             .into_iter()
             .filter_map(|n| engine.spec(n).map(|s| (s.name.clone(), (s.n_inputs, s.batch))))
             .collect();
-        let pool = BankPool::start(
-            engine,
-            &specs,
-            cfg.shards,
-            &cfg.batcher,
-            cfg.queue_depth,
-            cfg.row_threads,
-            cfg.lane_width,
-            cfg.rng,
-            cfg.fault,
-        )?;
-        Ok(Self { pool, specs })
+        let default_deadline = cfg.deadline.or_else(deadline_override);
+        let pool = BankPool::start(engine, &specs, &cfg)?;
+        Ok(Self { pool, specs, default_deadline })
     }
 
     /// Servable artifact names, sorted.
@@ -141,18 +159,41 @@ impl Server {
     }
 
     /// Submit one instance; blocks while the owning shard's admission
-    /// queue is full (backpressure). Returns the result receiver.
-    pub fn submit(&self, app: &str, inputs: &[f64]) -> Result<Receiver<f32>> {
-        self.enqueue(app, inputs, true)
+    /// queue is full (backpressure). Returns the result receiver: every
+    /// admitted request gets exactly one [`Reply`] — a value, or a
+    /// typed error (`Timeout` / `ShardDead` / `Exec`).
+    pub fn submit(&self, app: &str, inputs: &[f64]) -> Result<Receiver<Reply>> {
+        self.submit_opts(app, inputs, SubmitOpts::default())
     }
 
     /// Non-blocking submit: errors immediately with a "queue full"
     /// message when the shard is saturated, so callers can shed load.
-    pub fn try_submit(&self, app: &str, inputs: &[f64]) -> Result<Receiver<f32>> {
-        self.enqueue(app, inputs, false)
+    pub fn try_submit(&self, app: &str, inputs: &[f64]) -> Result<Receiver<Reply>> {
+        self.submit_opts(app, inputs, SubmitOpts { shed: true, ..SubmitOpts::default() })
     }
 
-    fn enqueue(&self, app: &str, inputs: &[f64], block: bool) -> Result<Receiver<f32>> {
+    /// [`Server::submit`] with an explicit end-to-end deadline measured
+    /// from now: checked at dequeue, at wave close, and at completion;
+    /// an expired request is answered `Err(Timeout)`, never silently
+    /// dropped.
+    pub fn submit_with_deadline(
+        &self,
+        app: &str,
+        inputs: &[f64],
+        deadline: Duration,
+    ) -> Result<Receiver<Reply>> {
+        self.submit_opts(app, inputs, SubmitOpts { deadline: Some(deadline), shed: false })
+    }
+
+    /// The general submission entry point: [`SubmitOpts`] carries the
+    /// per-request deadline (defaulting to the server-wide one) and the
+    /// shed-vs-block admission policy.
+    pub fn submit_opts(
+        &self,
+        app: &str,
+        inputs: &[f64],
+        opts: SubmitOpts,
+    ) -> Result<Receiver<Reply>> {
         let Some(&(n, _)) = self.specs.get(app) else {
             bail!("unknown app `{app}` (have: {:?})", self.apps());
         };
@@ -160,35 +201,42 @@ impl Server {
             bail!("app `{app}` expects {n} inputs, got {}", inputs.len());
         }
         let Some(shard) = self.pool.shard_for(app) else {
-            bail!("app `{app}` has no shard (pool misrouted)");
+            let dead = self.pool.dead_shards();
+            if dead.is_empty() {
+                bail!("app `{app}` has no shard (pool misrouted)");
+            }
+            bail!("app `{app}` has no live shard (dead shards: {dead:?})");
         };
         let (rtx, rrx) = channel();
+        let deadline =
+            opts.deadline.or(self.default_deadline).map(|budget| Instant::now() + budget);
         let msg = ShardMsg::Request {
             app: app.to_string(),
             inputs: inputs.iter().map(|&v| v as f32).collect(),
             respond: rtx,
             enqueued: Instant::now(),
+            deadline,
         };
         // Admission telemetry: depth sampled at the enqueue edge,
         // backpressure blocks and sheds counted per app. The lock is a
         // few nanoseconds against millisecond waves.
-        match shard.admit(msg, block)? {
+        match shard.admit(msg, !opts.shed)? {
             Admission::Accepted(depth) => {
-                if let Ok(mut m) = self.pool.metrics_map().lock() {
-                    m.entry(app.to_string()).or_default().record_queue_depth(depth);
-                }
+                lock_unpoisoned(self.pool.metrics_map())
+                    .entry(app.to_string())
+                    .or_default()
+                    .record_queue_depth(depth);
             }
             Admission::AcceptedAfterBlock(depth) => {
-                if let Ok(mut m) = self.pool.metrics_map().lock() {
-                    let e = m.entry(app.to_string()).or_default();
-                    e.record_queue_depth(depth);
-                    e.backpressure_blocks += 1;
-                }
+                let mut m = lock_unpoisoned(self.pool.metrics_map());
+                let e = m.entry(app.to_string()).or_default();
+                e.record_queue_depth(depth);
+                e.backpressure_blocks += 1;
             }
             Admission::Shed => {
-                if let Ok(mut m) = self.pool.metrics_map().lock() {
-                    m.entry(app.to_string()).or_default().shed += 1;
-                }
+                let mut m = lock_unpoisoned(self.pool.metrics_map());
+                m.entry(app.to_string()).or_default().shed += 1;
+                drop(m);
                 bail!(
                     "shard {} admission queue full (backpressure)",
                     self.pool.shard_of(app).unwrap_or(0)
@@ -203,7 +251,7 @@ impl Server {
     /// (or the same) apps — that is the multi-bank serving path.
     pub fn run_workload(&self, app: &str, instances: &[Vec<f64>]) -> Result<Vec<f64>> {
         let t0 = Instant::now();
-        let receivers: Result<Vec<Receiver<f32>>> =
+        let receivers: Result<Vec<Receiver<Reply>>> =
             instances.iter().map(|x| self.submit(app, x)).collect();
         let receivers = receivers?;
         // Close the partial tail wave instead of waiting out max_wait.
@@ -213,11 +261,15 @@ impl Server {
         }
         let mut out = Vec::with_capacity(receivers.len());
         for r in receivers {
-            out.push(r.recv().with_context(|| format!("result dropped for `{app}`"))? as f64);
+            match r.recv() {
+                Ok(Ok(v)) => out.push(v as f64),
+                Ok(Err(e)) => bail!("request failed for `{app}`: {e}"),
+                Err(_) => bail!("result dropped for `{app}`"),
+            }
         }
-        if let Ok(mut m) = self.pool.metrics_map().lock() {
-            m.entry(app.to_string()).or_default().total_time += t0.elapsed();
-        }
+        let dt = t0.elapsed();
+        lock_unpoisoned(self.pool.metrics_map()).entry(app.to_string()).or_default().total_time +=
+            dt;
         Ok(out)
     }
 
@@ -245,7 +297,8 @@ impl Server {
     pub fn snapshot(&self) -> MetricsSnapshot {
         let mut snap = MetricsSnapshot::default();
         let mut pool = Metrics::default();
-        if let Ok(m) = self.pool.metrics_map().lock() {
+        {
+            let m = lock_unpoisoned(self.pool.metrics_map());
             let mut apps: Vec<&String> = m.keys().collect();
             apps.sort();
             for app in apps {
@@ -256,5 +309,11 @@ impl Server {
         }
         pool.snapshot_into("pool", &mut snap);
         snap
+    }
+
+    /// Shards whose supervisor gave up respawning (restart budget
+    /// exhausted); their apps are served by live siblings.
+    pub fn dead_shards(&self) -> Vec<usize> {
+        self.pool.dead_shards()
     }
 }

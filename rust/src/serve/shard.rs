@@ -1,5 +1,5 @@
 //! One bank-controller shard: bounded admission queue → per-app batcher
-//! → executor loop driving the shared engine.
+//! → supervised executor loop driving the shared engine.
 //!
 //! The shard thread is the only consumer of its queue; requests are
 //! grouped into artifact-sized waves (the subarray-group capacity) and
@@ -8,20 +8,49 @@
 //! blocking submitters wait (backpressure) and `try_submit` callers get
 //! an immediate "queue full" error — the admission-control contract the
 //! front-door [`super::Server`] exposes.
+//!
+//! # Supervision
+//!
+//! The executor loop runs under `catch_unwind` inside a supervisor that
+//! owns all loop state ([`ShardCore`]) *outside* the unwind boundary.
+//! A panic therefore loses nothing: the in-flight wave is parked in
+//! [`ExecState::inflight`] before any panic-prone work, so the
+//! supervisor fails exactly its responders with `Err(Exec)`, bumps the
+//! `executor_restarts` counter, and re-enters the loop — batched (not
+//! yet in-flight) requests survive the restart untouched. After
+//! `max_restarts` consecutive panics the shard is marked **dead**: all
+//! batched requests are failed `Err(ShardDead)` and a tombstone loop
+//! keeps draining the admission queue (fail-fast replies, flush acks,
+//! shutdown) so producers and `Drop` never deadlock. [`super::BankPool`]
+//! routes new submissions around dead shards.
+//!
+//! # Deadlines & degradation
+//!
+//! Request deadlines are enforced at three checkpoints: dequeue (an
+//! expired request never enters a batcher), wave close (expired
+//! batcher entries are answered before the wave drains), and completion
+//! (a slow wave re-checks each row's budget before replying). The
+//! per-shard [`DegradeController`] watches queue-wait p95 and steps the
+//! effective bitstream length down a bounded ladder under overload —
+//! see [`super::resilience`].
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
 use crate::bail;
-use crate::coordinator::batcher::{Batcher, BatcherConfig, Pending};
+use crate::coordinator::batcher::{Batch, Batcher, BatcherConfig, Pending};
 use crate::coordinator::metrics::{Metrics, WaveClose};
 use crate::error::{Context, Result};
 use crate::fault::FaultPlan;
 use crate::runtime::Engine;
+use crate::serve::resilience::{
+    lock_unpoisoned, ChaosPlan, DegradeConfig, DegradeController, Reply, ServeError,
+};
 use crate::util::prng::RngMode;
 
 /// Per-wave execution knobs, resolved once at pool start (env
@@ -38,6 +67,13 @@ pub(crate) struct WaveKnobs {
     /// Fault-injection plan applied to every wave (`None` = clean
     /// serving; a no-op plan is equally free).
     pub fault: Option<FaultPlan>,
+    /// Overload → BL-ladder controller config (disabled by default).
+    pub degrade: DegradeConfig,
+    /// Chaos-injection plan (`None` outside the chaos harness).
+    pub chaos: Option<ChaosPlan>,
+    /// Consecutive executor panics tolerated before the shard is
+    /// marked dead and routed around.
+    pub max_restarts: u32,
 }
 
 /// Messages accepted by a shard's admission queue.
@@ -45,10 +81,12 @@ pub(crate) enum ShardMsg {
     Request {
         app: String,
         inputs: Vec<f32>,
-        respond: Sender<f32>,
+        respond: Sender<Reply>,
         /// Submit timestamp — queue wait is measured from here to wave
         /// start, covering the admission channel *and* the batcher.
         enqueued: Instant,
+        /// Absolute deadline (submit time + budget); `None` = no limit.
+        deadline: Option<Instant>,
     },
     /// Drain every batcher (partial waves included), then ack.
     Flush(Sender<()>),
@@ -75,35 +113,67 @@ pub struct Shard {
     /// blocked submitters included, so depth can briefly exceed the
     /// channel bound under backpressure.
     depth: Arc<AtomicU64>,
+    /// Set by the supervisor once the restart budget is exhausted; the
+    /// pool routes new submissions to a live sibling instead.
+    dead: Arc<AtomicBool>,
     handle: Option<JoinHandle<()>>,
 }
 
 impl Shard {
-    /// Spawn the shard thread. `specs` maps each app routed to this
-    /// shard to its `(n_inputs, batch)`; the engine is shared across
-    /// shards (banks share the chip's periphery, each drives its own
-    /// subarray-group waves).
+    /// Spawn the shard thread. `specs` maps every servable app to its
+    /// `(n_inputs, batch)` — the full map, not just this shard's homes,
+    /// so a shard can absorb traffic routed around a dead sibling.
+    /// `home` lists the apps primarily routed here (restart metrics
+    /// attribution). The engine is shared across shards (banks share
+    /// the chip's periphery, each drives its own subarray-group waves);
+    /// `chaos_budget` is the pool-wide injected-panic allowance.
+    #[allow(clippy::too_many_arguments)]
     pub(crate) fn spawn(
         id: usize,
         engine: Arc<Engine>,
         specs: HashMap<String, (usize, usize)>,
+        home: Vec<String>,
         cfg: BatcherConfig,
         queue_depth: usize,
         knobs: WaveKnobs,
+        chaos_budget: Arc<AtomicU64>,
         metrics: Arc<Mutex<HashMap<String, Metrics>>>,
     ) -> Result<Self> {
         let (tx, rx) = sync_channel(queue_depth.max(1));
         let depth = Arc::new(AtomicU64::new(0));
+        let dead = Arc::new(AtomicBool::new(false));
         let loop_depth = Arc::clone(&depth);
+        let loop_dead = Arc::clone(&dead);
         let handle = std::thread::Builder::new()
             .name(format!("stoch-imc-shard-{id}"))
-            .spawn(move || shard_loop(id, &engine, rx, &loop_depth, &metrics, &specs, &cfg, knobs))
+            .spawn(move || {
+                supervisor_loop(
+                    id,
+                    &engine,
+                    &rx,
+                    &loop_depth,
+                    &metrics,
+                    &specs,
+                    &home,
+                    &cfg,
+                    &knobs,
+                    &chaos_budget,
+                    &loop_dead,
+                )
+            })
             .with_context(|| format!("spawning shard {id}"))?;
-        Ok(Self { id, tx, depth, handle: Some(handle) })
+        Ok(Self { id, tx, depth, dead, handle: Some(handle) })
     }
 
     pub fn id(&self) -> usize {
         self.id
+    }
+
+    /// Whether the supervisor declared this shard dead (restart budget
+    /// exhausted). Dead shards still drain their queue — fail-fast
+    /// replies, not silence — but the pool stops routing to them.
+    pub fn is_dead(&self) -> bool {
+        self.dead.load(Ordering::SeqCst)
     }
 
     /// Blocking enqueue: waits when the admission queue is full
@@ -167,65 +237,217 @@ impl Shard {
     }
 }
 
-/// The executor loop: one per shard thread. Identical in shape to the
-/// old single-controller loop, but scoped to this shard's apps and
+/// Wave-execution state that must survive an executor panic. Split out
+/// of [`ShardCore`] so `execute_wave` can borrow it disjointly from the
+/// batcher map.
+struct ExecState {
+    /// Per-shard wave-seed stream: mixed with the shard id so two
+    /// shards never replay each other's SNG draws. Survives restarts —
+    /// the seed stream continues where the panicked wave left off.
+    seed: i32,
+    /// Waves attempted on this shard (chaos cadence counter).
+    waves: u64,
+    /// The wave currently being executed, parked here *before* any
+    /// panic-prone work so the supervisor can fail its responders.
+    inflight: Option<(String, Batch)>,
+    /// Overload → BL-ladder controller.
+    ctl: DegradeController,
+}
+
+/// All executor-loop state, owned by the supervisor outside the unwind
+/// boundary: a panic loses the stack, never the pending requests.
+struct ShardCore {
+    batchers: HashMap<String, Batcher>,
+    exec: ExecState,
+    /// Set before the final drain so a panic *during* shutdown makes
+    /// the supervisor fail the remainder and exit instead of re-entering
+    /// a loop whose shutdown signal was already consumed.
+    shutdown: bool,
+}
+
+impl ShardCore {
+    fn new(id: usize, degrade: DegradeConfig) -> Self {
+        Self {
+            batchers: HashMap::new(),
+            exec: ExecState {
+                seed: 0x5eed ^ (id as i32).wrapping_mul(0x9E37_79B9_u32 as i32),
+                waves: 0,
+                inflight: None,
+                ctl: DegradeController::new(degrade),
+            },
+            shutdown: false,
+        }
+    }
+}
+
+/// The supervisor: owns [`ShardCore`], runs the executor loop under
+/// `catch_unwind`, converts panics into failed in-flight waves +
+/// restarts, and tombstones the shard once the restart budget is spent.
+#[allow(clippy::too_many_arguments)]
+fn supervisor_loop(
+    id: usize,
+    engine: &Engine,
+    rx: &Receiver<ShardMsg>,
+    depth: &AtomicU64,
+    metrics: &Arc<Mutex<HashMap<String, Metrics>>>,
+    specs: &HashMap<String, (usize, usize)>,
+    home: &[String],
+    cfg: &BatcherConfig,
+    knobs: &WaveKnobs,
+    chaos_budget: &AtomicU64,
+    dead: &AtomicBool,
+) {
+    let mut core = ShardCore::new(id, knobs.degrade);
+    let mut restarts: u32 = 0;
+    loop {
+        let outcome = catch_unwind(AssertUnwindSafe(|| {
+            shard_loop(id, engine, rx, depth, metrics, specs, cfg, knobs, chaos_budget, &mut core)
+        }));
+        match outcome {
+            // Clean exit (shutdown / producers gone) — nothing pending.
+            Ok(()) => return,
+            Err(_) => {
+                // Fail exactly the wave that was executing; batched
+                // requests survive the restart.
+                let inflight = core.exec.inflight.take();
+                let scope =
+                    inflight.as_ref().map(|(app, _)| app.clone()).or_else(|| home.first().cloned());
+                if let Some((app, wave)) = inflight {
+                    let err = ServeError::Exec(format!("shard {id} executor panicked mid-wave"));
+                    fail_wave(&app, &wave, err, metrics);
+                }
+                restarts += 1;
+                if let Some(scope) = scope {
+                    lock_unpoisoned(metrics).entry(scope).or_default().executor_restarts += 1;
+                }
+                if restarts > knobs.max_restarts {
+                    eprintln!(
+                        "shard {id}: executor panicked {restarts} times \
+                         (budget {}); marking shard dead",
+                        knobs.max_restarts
+                    );
+                    dead.store(true, Ordering::SeqCst);
+                    fail_all_batched(&mut core, metrics);
+                    tombstone_loop(rx, depth, metrics);
+                    return;
+                }
+                if core.shutdown {
+                    // The shutdown signal was already consumed; a
+                    // respawned loop would block forever on recv.
+                    fail_all_batched(&mut core, metrics);
+                    return;
+                }
+                eprintln!(
+                    "shard {id}: executor panicked; restarting ({restarts}/{})",
+                    knobs.max_restarts
+                );
+            }
+        }
+    }
+}
+
+/// Fail-fast drain for a dead shard: answer every request
+/// `Err(ShardDead)` immediately, keep acking flushes, exit on shutdown.
+/// Producers blocked on a full admission queue unblock as this consumes;
+/// nothing ever hangs on a dead shard.
+fn tombstone_loop(
+    rx: &Receiver<ShardMsg>,
+    depth: &AtomicU64,
+    metrics: &Arc<Mutex<HashMap<String, Metrics>>>,
+) {
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            ShardMsg::Request { app, respond, .. } => {
+                depth.fetch_sub(1, Ordering::Relaxed);
+                let _ = respond.send(Err(ServeError::ShardDead));
+                lock_unpoisoned(metrics).entry(app).or_default().failed_requests += 1;
+            }
+            ShardMsg::Flush(ack) => {
+                let _ = ack.send(());
+            }
+            ShardMsg::Shutdown => return,
+        }
+    }
+}
+
+/// The executor loop: one per shard thread, re-entered by the
+/// supervisor after a panic. Identical in shape to the old
+/// single-controller loop, but scoped to this shard's apps and
 /// executing waves row-parallel on the shared engine.
 #[allow(clippy::too_many_arguments)]
 fn shard_loop(
     id: usize,
     engine: &Engine,
-    rx: Receiver<ShardMsg>,
+    rx: &Receiver<ShardMsg>,
     depth: &AtomicU64,
     metrics: &Arc<Mutex<HashMap<String, Metrics>>>,
     specs: &HashMap<String, (usize, usize)>,
     cfg: &BatcherConfig,
-    knobs: WaveKnobs,
+    knobs: &WaveKnobs,
+    chaos_budget: &AtomicU64,
+    core: &mut ShardCore,
 ) {
-    let mut batchers: HashMap<String, Batcher> = HashMap::new();
-    // Per-shard wave-seed stream: mixed with the shard id so two shards
-    // never replay each other's SNG draws.
-    let mut seed: i32 = 0x5eed ^ (id as i32).wrapping_mul(0x9E37_79B9_u32 as i32);
     loop {
         // Wait for work (bounded, so timeouts can close partial waves).
         match rx.recv_timeout(cfg.max_wait) {
-            Ok(ShardMsg::Request { app, inputs, respond, enqueued }) => {
+            Ok(ShardMsg::Request { app, inputs, respond, enqueued, deadline }) => {
                 // Dequeue edge: the consumer-side depth sample pairs
                 // with the producer-side sample taken at admission.
                 let d = depth.fetch_sub(1, Ordering::Relaxed).saturating_sub(1);
                 let Some(&(n, batch)) = specs.get(&app) else {
                     // The server validates routing before enqueueing;
-                    // drop the responder so the caller sees an error.
-                    eprintln!("shard {id}: request for unrouted app `{app}` dropped");
+                    // answer with an error rather than dropping.
+                    eprintln!("shard {id}: request for unknown app `{app}` rejected");
+                    let _ = respond
+                        .send(Err(ServeError::Exec(format!("app `{app}` unknown to shard {id}"))));
                     continue;
                 };
-                if let Ok(mut m) = metrics.lock() {
-                    m.entry(app.clone()).or_default().record_queue_depth(d);
+                // Deadline checkpoint 1: dequeue. A request whose
+                // budget expired in the admission queue never occupies
+                // a batcher slot or a subarray row.
+                if deadline.is_some_and(|dl| dl <= Instant::now()) {
+                    let _ = respond.send(Err(ServeError::Timeout));
+                    let mut m = lock_unpoisoned(metrics);
+                    let e = m.entry(app).or_default();
+                    e.deadline_timeouts += 1;
+                    e.record_queue_depth(d);
+                    continue;
                 }
-                let b = batchers.entry(app).or_insert_with(|| {
+                lock_unpoisoned(metrics).entry(app.clone()).or_default().record_queue_depth(d);
+                let b = core.batchers.entry(app).or_insert_with(|| {
                     Batcher::new(BatcherConfig { batch, max_wait: cfg.max_wait }, n)
                 });
-                b.push(Pending { inputs, respond, enqueued });
+                b.push(Pending { inputs, respond, enqueued, deadline });
             }
             Ok(ShardMsg::Flush(ack)) => {
-                drain_all(engine, &mut batchers, metrics, &mut seed, knobs);
+                drain_all(engine, core, metrics, knobs, chaos_budget);
                 let _ = ack.send(());
             }
             Ok(ShardMsg::Shutdown) => {
-                drain_all(engine, &mut batchers, metrics, &mut seed, knobs);
+                core.shutdown = true;
+                drain_all(engine, core, metrics, knobs, chaos_budget);
                 return;
             }
             Err(RecvTimeoutError::Timeout) => {}
             Err(RecvTimeoutError::Disconnected) => {
-                drain_all(engine, &mut batchers, metrics, &mut seed, knobs);
+                core.shutdown = true;
+                drain_all(engine, core, metrics, knobs, chaos_budget);
                 return;
             }
         }
-        // Close any ready waves (full, or past the batching deadline).
+        // Deadline checkpoint 2 + wave close: expire overdue batcher
+        // entries, then close any ready waves (full, or past the
+        // batching deadline). Disjoint borrows: batchers vs exec.
         let now = Instant::now();
+        let ShardCore { batchers, exec, .. } = core;
         for (app, b) in batchers.iter_mut() {
+            let expired = b.expire(now);
+            if !expired.is_empty() {
+                timeout_pendings(app, expired, metrics);
+            }
             while b.ready(now) {
                 let close = if b.is_full() { WaveClose::Full } else { WaveClose::Deadline };
-                execute_wave(engine, app, b, metrics, &mut seed, knobs, close);
+                execute_wave(engine, app, b, metrics, exec, knobs, chaos_budget, close);
             }
         }
     }
@@ -233,18 +455,61 @@ fn shard_loop(
 
 fn drain_all(
     engine: &Engine,
-    batchers: &mut HashMap<String, Batcher>,
+    core: &mut ShardCore,
     metrics: &Arc<Mutex<HashMap<String, Metrics>>>,
-    seed: &mut i32,
-    knobs: WaveKnobs,
+    knobs: &WaveKnobs,
+    chaos_budget: &AtomicU64,
 ) {
+    let now = Instant::now();
+    let ShardCore { batchers, exec, .. } = core;
     for (app, b) in batchers.iter_mut() {
+        let expired = b.expire(now);
+        if !expired.is_empty() {
+            timeout_pendings(app, expired, metrics);
+        }
         while !b.is_empty() {
             // A full wave that happens to drain during a flush still
             // counts as a capacity close; only partial tails are
             // flush-closed.
             let close = if b.is_full() { WaveClose::Full } else { WaveClose::Flush };
-            execute_wave(engine, app, b, metrics, seed, knobs, close);
+            execute_wave(engine, app, b, metrics, exec, knobs, chaos_budget, close);
+        }
+    }
+}
+
+/// Answer expired batcher entries `Err(Timeout)` and count them.
+fn timeout_pendings(
+    app: &str,
+    expired: Vec<Pending>,
+    metrics: &Arc<Mutex<HashMap<String, Metrics>>>,
+) {
+    let n = expired.len() as u64;
+    for p in expired {
+        let _ = p.respond.send(Err(ServeError::Timeout));
+    }
+    lock_unpoisoned(metrics).entry(app.to_string()).or_default().deadline_timeouts += n;
+}
+
+/// Answer every live row of a wave with `err` and count the failures.
+fn fail_wave(
+    app: &str,
+    wave: &Batch,
+    err: ServeError,
+    metrics: &Arc<Mutex<HashMap<String, Metrics>>>,
+) {
+    for r in &wave.responders {
+        let _ = r.send(Err(err.clone()));
+    }
+    lock_unpoisoned(metrics).entry(app.to_string()).or_default().failed_requests +=
+        wave.responders.len() as u64;
+}
+
+/// Dead-shard cleanup: fail everything still batched with `ShardDead`.
+fn fail_all_batched(core: &mut ShardCore, metrics: &Arc<Mutex<HashMap<String, Metrics>>>) {
+    for (app, b) in core.batchers.iter_mut() {
+        while !b.is_empty() {
+            let wave = b.drain();
+            fail_wave(app, &wave, ServeError::ShardDead, metrics);
         }
     }
 }
@@ -255,46 +520,96 @@ fn execute_wave(
     app: &str,
     b: &mut Batcher,
     metrics: &Arc<Mutex<HashMap<String, Metrics>>>,
-    seed: &mut i32,
-    knobs: WaveKnobs,
+    exec: &mut ExecState,
+    knobs: &WaveKnobs,
+    chaos_budget: &AtomicU64,
     close: WaveClose,
 ) {
     let wave = b.drain();
-    *seed = seed.wrapping_mul(0x343FD).wrapping_add(0x269EC3);
+    exec.seed = exec.seed.wrapping_mul(0x343FD).wrapping_add(0x269EC3);
+    exec.waves += 1;
+    let seed = exec.seed;
+    let wave_no = exec.waves;
+    let level = exec.ctl.level();
+    // Park the wave where the supervisor can reach it BEFORE any
+    // panic-prone work (chaos injection, engine execution): a panic
+    // from here on fails exactly these responders, nothing hangs.
+    exec.inflight = Some((app.to_string(), wave));
+    let ExecState { inflight, ctl, .. } = exec;
     let t0 = Instant::now();
-    match engine.execute_rows_tuned(
-        app,
-        &wave.values,
-        *seed,
-        wave.responders.len(),
-        knobs.row_threads,
-        knobs.lane_width,
-        Some(knobs.rng),
-        knobs.fault.as_ref(),
-    ) {
+    // Disturb after t0: injected latency reads as wave execution time
+    // (it is), not as queue wait — the degradation controller must see
+    // real congestion, not the injection itself.
+    if let Some(chaos) = &knobs.chaos {
+        chaos.disturb(wave_no, chaos_budget);
+    }
+    let result = {
+        let (_, wave) = inflight.as_ref().expect("wave parked above");
+        engine.execute_rows_degraded(
+            app,
+            &wave.values,
+            seed,
+            wave.responders.len(),
+            knobs.row_threads,
+            knobs.lane_width,
+            Some(knobs.rng),
+            knobs.fault.as_ref(),
+            level,
+        )
+    };
+    let dt = t0.elapsed();
+    let (_, wave) = inflight.take().expect("wave parked above");
+    match result {
         Ok((outs, stats)) => {
-            let dt = t0.elapsed();
+            // Deadline checkpoint 3: completion. A slow wave can outlive
+            // a row's budget — those rows get `Err(Timeout)`, not a
+            // value that arrived too late to use.
+            let done = Instant::now();
+            let mut timeouts = 0u64;
             for (i, r) in wave.responders.iter().enumerate() {
-                let _ = r.send(outs[i]);
+                if wave.deadlines[i].is_some_and(|dl| dl <= done) {
+                    timeouts += 1;
+                    let _ = r.send(Err(ServeError::Timeout));
+                } else {
+                    let _ = r.send(Ok(outs[i]));
+                }
             }
-            if let Ok(mut m) = metrics.lock() {
-                let e = m.entry(app.to_string()).or_default();
-                e.record_wave(wave.responders.len(), wave.padded, dt);
-                e.record_stats(&stats);
-                e.record_drain(close);
-                for enq in &wave.enqueued {
-                    // Submit → wave start (admission channel + batcher
-                    // residence); saturates to zero across threads.
-                    e.record_queue_wait(t0.duration_since(*enq));
-                }
-                for _ in 0..wave.responders.len() {
-                    e.record_latency(dt);
-                }
+            let mut m = lock_unpoisoned(metrics);
+            let e = m.entry(app.to_string()).or_default();
+            e.record_wave(wave.responders.len(), wave.padded, dt);
+            e.record_stats(&stats);
+            e.record_drain(close);
+            e.deadline_timeouts += timeouts;
+            e.bl_level = u64::from(level);
+            if level > 0 {
+                e.degraded_waves += 1;
+            }
+            for enq in &wave.enqueued {
+                // Submit → wave start (admission channel + batcher
+                // residence); saturates to zero across threads. The
+                // same sample feeds the degradation controller.
+                let w = t0.duration_since(*enq);
+                e.record_queue_wait(w);
+                ctl.record_wait_us(w.as_micros().min(u128::from(u64::MAX)) as u64);
+            }
+            for _ in 0..wave.responders.len() {
+                e.record_latency(dt);
             }
         }
         Err(err) => {
-            // Surface the failure by dropping responders (recv() errors).
-            eprintln!("wave execution failed for `{app}`: {err:#}");
+            // Engine errors (including worker-pool panics mapped to
+            // errors) fail the wave's rows explicitly — receivers get
+            // a typed error, never a silent drop.
+            let msg = format!("wave execution failed for `{app}`: {err:#}");
+            eprintln!("{msg}");
+            for r in &wave.responders {
+                let _ = r.send(Err(ServeError::Exec(msg.clone())));
+            }
+            let mut m = lock_unpoisoned(metrics);
+            let e = m.entry(app.to_string()).or_default();
+            e.record_drain(close);
+            e.failed_requests += wave.responders.len() as u64;
         }
     }
+    ctl.on_wave();
 }

@@ -122,7 +122,8 @@ fn bounded_queue_sheds_load_then_drains() {
     server.drain().unwrap();
     let n_admitted = admitted.len();
     for rx in admitted {
-        let v = rx.recv().expect("admitted request answered") as f64;
+        let v =
+            rx.recv().expect("admitted request answered").expect("answered with a value") as f64;
         assert!((v - 0.25).abs() < 0.05, "got {v}");
     }
 
@@ -194,6 +195,98 @@ fn drop_drains_pending_partial_waves() {
     .unwrap();
     let rx = server.submit("op_multiply", &[0.6, 0.7]).unwrap();
     drop(server);
-    let out = rx.recv().expect("pending request answered on shutdown") as f64;
+    let out =
+        rx.recv().expect("pending request answered on shutdown").expect("drained with a value")
+            as f64;
     assert!((out - 0.42).abs() < 0.1, "got {out}");
+}
+
+#[test]
+fn dropped_receiver_does_not_wedge_the_executor() {
+    // A client that walks away (drops its Receiver) before the wave
+    // executes must not panic the shard or wedge its reply `send`; the
+    // executor keeps serving later requests on the same shard.
+    let dir = manifest_dir("droprx", "op_multiply 2 4 2048\n");
+    let server = Server::start(
+        &dir,
+        ServerConfig {
+            shards: 1,
+            batcher: BatcherConfig { batch: 4, max_wait: Duration::from_millis(1) },
+            ..Default::default()
+        },
+    )
+    .unwrap();
+
+    // Abandon a full wave's worth of requests before it can close.
+    for _ in 0..4 {
+        let rx = server.submit("op_multiply", &[0.5, 0.5]).unwrap();
+        drop(rx);
+    }
+    server.drain().unwrap();
+
+    // The shard is still healthy: fresh requests round-trip with values.
+    let out = server.run_workload("op_multiply", &[vec![0.6, 0.5]]).unwrap();
+    assert!((out[0] - 0.30).abs() < 0.1, "post-abandon request got {}", out[0]);
+
+    let m = server.metrics("op_multiply");
+    assert_eq!(m.requests, 5, "abandoned requests still count as served");
+    assert_eq!(m.failed_requests, 0, "dropped receivers are not failures");
+    assert!(server.dead_shards().is_empty(), "no restarts from dropped receivers");
+}
+
+#[test]
+fn blocking_admission_counts_accepted_after_block_under_contention() {
+    // batch=1 over a depth-1 queue with slow waves: blocking `submit`
+    // callers from two threads must park on the semaphore and be counted
+    // as AcceptedAfterBlock, while every request still gets a value.
+    use stoch_imc::serve::ChaosPlan;
+    let dir = manifest_dir("block", "op_multiply 2 1 1024\n");
+    let server = Server::start(
+        &dir,
+        ServerConfig {
+            shards: 1,
+            queue_depth: 1,
+            batcher: BatcherConfig { batch: 1, max_wait: Duration::from_millis(1) },
+            row_threads: 1,
+            // Latency on every wave keeps the executor busy so the
+            // admission queue stays full; no panics injected.
+            chaos: Some(ChaosPlan {
+                latency_every: 1,
+                latency: Duration::from_millis(2),
+                ..Default::default()
+            }),
+            ..ServerConfig::default()
+        },
+    )
+    .unwrap();
+
+    const PER_THREAD: usize = 12;
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..2)
+            .map(|_| {
+                let srv = &server;
+                s.spawn(move || {
+                    let mut rxs = Vec::with_capacity(PER_THREAD);
+                    for _ in 0..PER_THREAD {
+                        rxs.push(srv.submit("op_multiply", &[0.5, 0.5]).unwrap());
+                    }
+                    for rx in rxs {
+                        let v = rx.recv().expect("answered").expect("value") as f64;
+                        assert!((v - 0.25).abs() < 0.08, "got {v}");
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+
+    let m = server.metrics("op_multiply");
+    assert_eq!(m.requests, 2 * PER_THREAD as u64, "every blocking submit was served");
+    assert_eq!(m.shed, 0, "blocking submit never sheds");
+    assert!(
+        m.backpressure_blocks > 0,
+        "two fast producers over a depth-1 queue with 2ms waves must block at least once"
+    );
 }
