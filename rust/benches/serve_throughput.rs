@@ -134,6 +134,47 @@ fn main() {
         results.push(("serve_degraded_rows_per_s".to_string(), degraded_rows_per_s));
     }
 
+    // The TCP front door on loopback: the full wire path (encode →
+    // socket → decode → shard pool → response) with one retrying
+    // client per app. An absolute rows/s number, deliberately not a
+    // *_speedup key — loopback TCP always costs something over the
+    // in-process path; this tracks *how much*, not a gate.
+    {
+        use std::sync::Arc;
+        use stoch_imc::serve::net::{Client, ClientConfig};
+        use stoch_imc::serve::{TcpFront, TcpFrontConfig};
+
+        let srv = Arc::new(
+            Server::start(Path::new("artifacts"), ServerConfig::default()).expect("server start"),
+        );
+        let front = TcpFront::start(
+            srv,
+            TcpFrontConfig { addr: "127.0.0.1:0".into(), ..TcpFrontConfig::default() },
+        )
+        .expect("tcp front start");
+        let addr = front.local_addr().to_string();
+        let per_app = 256;
+        let run = |per_app: usize| {
+            let t0 = Instant::now();
+            std::thread::scope(|s| {
+                for &(name, n_inputs) in APPS {
+                    let addr = addr.clone();
+                    s.spawn(move || {
+                        let mut client = Client::new(addr, ClientConfig::default());
+                        for x in workload(n_inputs, per_app) {
+                            client.call(name, &x).expect("loopback call");
+                        }
+                    });
+                }
+            });
+            (APPS.len() * per_app) as f64 / t0.elapsed().as_secs_f64()
+        };
+        run(32); // warmup
+        let rows_per_s = run(per_app);
+        println!("{:<30} {rows_per_s:>10.0} rows/s", "serve_tcp_loopback_rows_per_s");
+        results.push(("serve_tcp_loopback_rows_per_s".to_string(), rows_per_s));
+    }
+
     let out = Path::new(benchjson::BENCH_FILE);
     benchjson::merge_and_write(out, &results).expect("writing bench json");
     println!("wrote {} keys to {}", results.len(), out.display());

@@ -30,6 +30,21 @@
 //!                             ladder; exits nonzero unless every
 //!                             admitted request got exactly one terminal
 //!                             outcome and the invariants held
+//!   serve-tcp [PORT] [shards] [--seconds S] [--accept-drop N] [--cut N]
+//!             [--trickle N] [--stall N]
+//!                             the TCP front door: length-prefixed wire
+//!                             protocol over the sharded server, bounded
+//!                             connection threads, slow-peer defenses,
+//!                             graceful SIGTERM/SIGINT drain; the
+//!                             optional flags enable network chaos
+//!                             (`serve --tcp [PORT]` is the same path)
+//!   flood <ADDR> [--seconds S] [--conns C] [--rate R]
+//!         [--mix poisson|bursty|mixed] [--deadline-ms D] [--seed N]
+//!                             loopback storm driver: retrying clients
+//!                             with Poisson/bursty arrivals over every
+//!                             registered artifact; exits nonzero on any
+//!                             client-invariant violation; writes a
+//!                             NET_report.json (STOCH_IMC_NET_OUT)
 
 use std::path::{Path, PathBuf};
 
@@ -61,6 +76,51 @@ fn artifact_dir() -> PathBuf {
         .unwrap_or_else(|_| PathBuf::from("artifacts"))
 }
 
+/// Signal-aware shutdown for `serve-tcp`, with no `libc` crate: a raw
+/// `signal(2)` binding installs a handler that only stores an
+/// `AtomicBool` (atomic stores are async-signal-safe), and the serve
+/// loop polls the flag — so SIGTERM/SIGINT trigger the graceful drain
+/// instead of killing in-flight waves. Non-Unix builds compile the
+/// polling loop against a flag nothing ever sets.
+#[cfg(unix)]
+mod signals {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    static SHUTDOWN: AtomicBool = AtomicBool::new(false);
+
+    extern "C" fn on_signal(_sig: i32) {
+        SHUTDOWN.store(true, Ordering::SeqCst);
+    }
+
+    extern "C" {
+        // POSIX `signal(2)`; the real return is the previous handler,
+        // opaque here (usize-sized either way).
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+
+    pub fn install() {
+        const SIGINT: i32 = 2;
+        const SIGTERM: i32 = 15;
+        unsafe {
+            signal(SIGINT, on_signal);
+            signal(SIGTERM, on_signal);
+        }
+    }
+
+    pub fn requested() -> bool {
+        SHUTDOWN.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(not(unix))]
+mod signals {
+    pub fn install() {}
+
+    pub fn requested() -> bool {
+        false
+    }
+}
+
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let cfg = load_config(&args)?;
@@ -80,6 +140,8 @@ fn main() -> Result<()> {
         Some("bench-check") => cmd_bench_check(&args[1..]),
         Some("stats") => cmd_stats(&cfg, &args[1..]),
         Some("chaos") => cmd_chaos(&args[1..]),
+        Some("serve-tcp") => cmd_serve_tcp(&args[1..]),
+        Some("flood") => cmd_flood(&cfg, &args[1..]),
         other => {
             if let Some(o) = other {
                 eprintln!("unknown command `{o}`");
@@ -87,7 +149,7 @@ fn main() -> Result<()> {
             eprintln!(
                 "usage: stoch-imc \
                  <info|fig3|fig7|table2|table3|table4|fig10|fig11|run|serve|schedule|faults|\
-                 bench-check|stats|chaos> [--config FILE]"
+                 bench-check|stats|chaos|serve-tcp|flood> [--config FILE]"
             );
             std::process::exit(2);
         }
@@ -162,6 +224,21 @@ const REQUIRED_STATS_KEYS: &[&str] = &[
     "serve_pool_failed_requests",
     "serve_pool_degraded_waves",
     "serve_pool_bl_level",
+    // The TCP front door's exposition set. Always emitted — in-process
+    // runs push a zeroed `NetMetrics` (see `with_net_keys`), so a
+    // missing key means the wire-layer schema regressed.
+    "serve_net_connections",
+    "serve_net_active_connections",
+    "serve_net_busy_rejected",
+    "serve_net_idle_reaped",
+    "serve_net_io_timeouts",
+    "serve_net_frames_rx",
+    "serve_net_frames_tx",
+    "serve_net_protocol_errors",
+    "serve_net_shed",
+    "serve_net_going_away",
+    "serve_net_wire_latency_us_p50",
+    "serve_net_wire_latency_us_p99",
 ];
 
 /// Stats exposition: print a stats snapshot — either one previously
@@ -254,7 +331,18 @@ fn live_stats_snapshot(cfg: &Config) -> Result<stoch_imc::obs::MetricsSnapshot> 
         bail!("no app_* artifacts registered under {}", artifact_dir().display());
     }
     server.drain()?;
-    Ok(server.snapshot())
+    Ok(with_net_keys(server.snapshot()))
+}
+
+/// Serve snapshots carry the full stable key schema — `serve_net_*`
+/// included — whether or not the TCP front ran: in-process runs merge a
+/// zeroed [`NetMetrics`](stoch_imc::serve::net::NetMetrics) so
+/// `stats --check` gates one schema for both modes.
+fn with_net_keys(mut snap: stoch_imc::obs::MetricsSnapshot) -> stoch_imc::obs::MetricsSnapshot {
+    if snap.get("serve_net_connections").is_none() {
+        stoch_imc::serve::net::NetMetrics::default().snapshot_into(&mut snap);
+    }
+    snap
 }
 
 fn cmd_info(cfg: &Config) -> Result<()> {
@@ -474,6 +562,15 @@ fn cmd_run(cfg: &Config, args: &[String]) -> Result<()> {
 fn cmd_serve(cfg: &Config, args: &[String]) -> Result<()> {
     use stoch_imc::serve::{Server, ServerConfig};
 
+    // `--tcp [PORT]` switches to the front-door mode; everything after
+    // the flag is forwarded so `serve --tcp 7117 --seconds 30` and
+    // `serve-tcp 7117 --seconds 30` share one code path (no duplicated
+    // pool/front setup).
+    if let Some(i) = args.iter().position(|a| a == "--tcp") {
+        let mut fwd: Vec<String> = args.to_vec();
+        fwd.remove(i);
+        return cmd_serve_tcp(&fwd);
+    }
     let n: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(128);
     let shards: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(0);
     let server = Server::start(
@@ -547,8 +644,9 @@ fn cmd_serve(cfg: &Config, args: &[String]) -> Result<()> {
         server.pool_metrics().summary()
     );
     // Stats exposition: the same flat snapshot `stoch-imc stats` checks,
-    // printed as a digest and written for the CI artifact.
-    let snap = server.snapshot();
+    // printed as a digest and written for the CI artifact (net keys
+    // zeroed — this is the in-process path).
+    let snap = with_net_keys(server.snapshot());
     print_pool_observability(&snap);
     let out = write_stats_snapshot(&snap)?;
     println!("wrote {} stats keys to {}", snap.len(), out.display());
@@ -804,6 +902,7 @@ fn cmd_chaos(args: &[String]) -> Result<()> {
                 max_panics: panics,
                 latency_every: 7,
                 latency: Duration::from_millis(2),
+                ..ChaosPlan::default()
             }),
             // Injected panics must never kill a shard on their own; the
             // shared budget caps them at `panics` < this allowance.
@@ -979,6 +1078,415 @@ fn cmd_chaos(args: &[String]) -> Result<()> {
     benchjson::merge_and_write(&out, &entries)
         .with_context(|| format!("writing {}", out.display()))?;
     println!("chaos: all invariants held; wrote {} keys to {}", entries.len(), out.display());
+    Ok(())
+}
+
+/// The TCP front door (`serve-tcp [PORT] [shards]`, also reached via
+/// `serve --tcp`): start the sharded server, put a `TcpFront` on a
+/// loopback port, and serve until SIGTERM/SIGINT (or `--seconds`)
+/// triggers the graceful drain. The `--accept-drop/--cut/--trickle/
+/// --stall N` flags enable the network chaos injectors on every Nth
+/// connection/response/request — the CI loopback storm runs with them
+/// live. Ends by writing the stats snapshot (pool + `serve_net_*`).
+fn cmd_serve_tcp(args: &[String]) -> Result<()> {
+    use std::sync::Arc;
+    use std::time::{Duration, Instant};
+
+    use stoch_imc::serve::{NetChaos, Server, ServerConfig, TcpFront, TcpFrontConfig};
+
+    let mut pos: Vec<u64> = Vec::new();
+    let mut seconds: Option<u64> = None;
+    let mut net = NetChaos::default();
+    let mut i = 0;
+    let take = |args: &[String], i: usize, what: &str| -> Result<u64> {
+        args.get(i + 1).and_then(|s| s.parse().ok()).with_context(|| format!("{what} N"))
+    };
+    while i < args.len() {
+        match args[i].as_str() {
+            "--seconds" => {
+                seconds = Some(take(args, i, "--seconds")?);
+                i += 1;
+            }
+            "--accept-drop" => {
+                net.accept_drop_every = take(args, i, "--accept-drop")?;
+                i += 1;
+            }
+            "--cut" => {
+                net.cut_every = take(args, i, "--cut")?;
+                i += 1;
+            }
+            "--trickle" => {
+                net.trickle_every = take(args, i, "--trickle")?;
+                net.trickle_delay = Duration::from_millis(1);
+                i += 1;
+            }
+            "--stall" => {
+                net.stall_read_every = take(args, i, "--stall")?;
+                net.stall = Duration::from_millis(50);
+                i += 1;
+            }
+            "--config" => i += 1,
+            a if a.starts_with("--") => bail!("serve-tcp: unknown flag `{a}`"),
+            a => pos.push(a.parse().with_context(|| format!("bad positional `{a}`"))?),
+        }
+        i += 1;
+    }
+    let port: Option<u16> = pos.first().map(|&p| p as u16);
+    let shards: usize = pos.get(1).map(|&s| s as usize).unwrap_or(0);
+
+    signals::install();
+    let scfg = ServerConfig { shards, ..ServerConfig::default() };
+    let server = Arc::new(Server::start(&artifact_dir(), scfg)?);
+    let mut fcfg = TcpFrontConfig::from_env();
+    if let Some(p) = port {
+        fcfg.addr = format!("127.0.0.1:{p}");
+    }
+    fcfg.chaos = net;
+    let mut front = TcpFront::start(Arc::clone(&server), fcfg)?;
+    println!(
+        "serve-tcp: {} app(s) over {} shard(s) on {} — SIGTERM/SIGINT drains{}{}",
+        server.apps().len(),
+        server.n_shards(),
+        front.local_addr(),
+        seconds.map(|s| format!(", auto-drain after {s}s")).unwrap_or_default(),
+        if net.is_noop() { String::new() } else { format!("; net chaos {net:?}") },
+    );
+
+    let t0 = Instant::now();
+    loop {
+        if signals::requested() {
+            println!("serve-tcp: signal received — draining…");
+            break;
+        }
+        if let Some(s) = seconds {
+            if t0.elapsed() >= Duration::from_secs(s) {
+                println!("serve-tcp: {s}s elapsed — draining…");
+                break;
+            }
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    front.shutdown();
+    let snap = front.snapshot();
+    print_pool_observability(&snap);
+    print_net_observability(&snap);
+    let out = write_stats_snapshot(&snap)?;
+    println!("serve-tcp: drained cleanly; wrote {} stats keys to {}", snap.len(), out.display());
+    Ok(())
+}
+
+/// Wire-layer digest from a stats snapshot — the `serve-tcp` sibling
+/// of [`print_pool_observability`].
+fn print_net_observability(snap: &stoch_imc::obs::MetricsSnapshot) {
+    let g = |k: &str| snap.get(k).unwrap_or(0.0);
+    println!(
+        "net: conns={:.0} (active {:.0}, busy-rejected {:.0}, idle-reaped {:.0}, \
+         io-timeouts {:.0})",
+        g("serve_net_connections"),
+        g("serve_net_active_connections"),
+        g("serve_net_busy_rejected"),
+        g("serve_net_idle_reaped"),
+        g("serve_net_io_timeouts"),
+    );
+    println!(
+        "net: frames rx={:.0} tx={:.0}, protocol-errors={:.0}, shed={:.0}, going-away={:.0}",
+        g("serve_net_frames_rx"),
+        g("serve_net_frames_tx"),
+        g("serve_net_protocol_errors"),
+        g("serve_net_shed"),
+        g("serve_net_going_away"),
+    );
+    println!(
+        "net: wire latency µs p50={:.0} p95={:.0} p99={:.0} max={:.0}; chaos: drops={:.0} \
+         cuts={:.0} trickles={:.0} stalls={:.0}",
+        g("serve_net_wire_latency_us_p50"),
+        g("serve_net_wire_latency_us_p95"),
+        g("serve_net_wire_latency_us_p99"),
+        g("serve_net_wire_latency_us_max"),
+        g("serve_net_chaos_accept_drops"),
+        g("serve_net_chaos_cuts"),
+        g("serve_net_chaos_trickles"),
+        g("serve_net_chaos_stalls"),
+    );
+}
+
+/// The loopback storm driver: `--conns` client threads flood `<ADDR>`
+/// with Poisson/bursty arrival mixes over every registered artifact,
+/// each through a retrying [`Client`](stoch_imc::serve::net::Client)
+/// with per-request deadlines. Exits nonzero unless every request
+/// reached exactly one terminal outcome, at least one value was
+/// delivered, and no well-formed request was rejected as malformed.
+/// Writes a flat-JSON report to `STOCH_IMC_NET_OUT` (else
+/// `NET_report.json`).
+fn cmd_flood(cfg: &Config, args: &[String]) -> Result<()> {
+    use std::time::{Duration, Instant};
+
+    use stoch_imc::serve::net::{Client, ClientConfig, NetError, RetryPolicy};
+    use stoch_imc::serve::ServeError;
+    use stoch_imc::util::benchjson;
+    use stoch_imc::util::prng::{mix64, GOLDEN_GAMMA};
+
+    let mut addr: Option<String> = None;
+    let mut seconds: u64 = 5;
+    let mut conns: u64 = 4;
+    let mut rate: f64 = 200.0;
+    let mut mix = String::from("mixed");
+    let mut deadline_ms: u64 = 250;
+    let mut seed: u64 = cfg.seed ^ 0xF100D;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--seconds" => {
+                seconds = args.get(i + 1).and_then(|s| s.parse().ok()).context("--seconds S")?;
+                i += 1;
+            }
+            "--conns" => {
+                conns = args.get(i + 1).and_then(|s| s.parse().ok()).context("--conns C")?;
+                i += 1;
+            }
+            "--rate" => {
+                rate = args.get(i + 1).and_then(|s| s.parse().ok()).context("--rate R")?;
+                i += 1;
+            }
+            "--mix" => {
+                mix = args.get(i + 1).cloned().context("--mix poisson|bursty|mixed")?;
+                i += 1;
+            }
+            "--deadline-ms" => {
+                deadline_ms =
+                    args.get(i + 1).and_then(|s| s.parse().ok()).context("--deadline-ms D")?;
+                i += 1;
+            }
+            "--seed" => {
+                seed = args.get(i + 1).and_then(|s| s.parse().ok()).context("--seed N")?;
+                i += 1;
+            }
+            "--config" => i += 1,
+            a if a.starts_with("--") => bail!("flood: unknown flag `{a}`"),
+            a => addr = Some(a.to_string()),
+        }
+        i += 1;
+    }
+    let addr = addr.context(
+        "flood <ADDR> [--seconds S] [--conns C] [--rate R] [--mix poisson|bursty|mixed] \
+         [--deadline-ms D] [--seed N]",
+    )?;
+    if !matches!(mix.as_str(), "poisson" | "bursty" | "mixed") {
+        bail!("flood: --mix must be poisson|bursty|mixed, got `{mix}`");
+    }
+    let conns = conns.max(1);
+    let rate = if rate.is_finite() && rate > 0.0 { rate } else { 200.0 };
+
+    // App names + arities from the local manifest: the storm cycles
+    // through every registered artifact.
+    let specs = stoch_imc::runtime::load_manifest(&artifact_dir())?;
+    if specs.is_empty() {
+        bail!("no artifacts registered under {}", artifact_dir().display());
+    }
+    println!(
+        "flood: {} → {} conn(s) × ~{rate:.0} req/s for {seconds}s, mix={mix}, \
+         deadline {deadline_ms}ms, {} app(s), seed {seed}",
+        addr,
+        conns,
+        specs.len()
+    );
+
+    /// Terminal-outcome tally; one increment per completed call, so
+    /// `terminal()` == calls made is the exactly-once invariant.
+    #[derive(Default, Clone, Copy)]
+    struct Tally {
+        sent: u64,
+        ok: u64,
+        timeout: u64,
+        exec: u64,
+        shard_dead: u64,
+        overloaded: u64,
+        transport: u64,
+        protocol: u64,
+        bad_request: u64,
+        going_away: u64,
+        breaker: u64,
+        exhausted: u64,
+    }
+    impl Tally {
+        fn absorb(&mut self, r: &std::result::Result<f32, NetError>) {
+            match r {
+                Ok(_) => self.ok += 1,
+                Err(NetError::Serve(ServeError::Timeout)) => self.timeout += 1,
+                Err(NetError::Serve(ServeError::ShardDead)) => self.shard_dead += 1,
+                Err(NetError::Serve(ServeError::Exec(_))) => self.exec += 1,
+                Err(NetError::Overloaded) => self.overloaded += 1,
+                Err(NetError::Transport(_)) => self.transport += 1,
+                Err(NetError::Protocol(_)) => self.protocol += 1,
+                Err(NetError::BadRequest(_)) => self.bad_request += 1,
+                Err(NetError::GoingAway) => self.going_away += 1,
+                Err(NetError::BreakerOpen) => self.breaker += 1,
+                Err(NetError::RetriesExhausted { .. }) => self.exhausted += 1,
+            }
+        }
+        fn terminal(&self) -> u64 {
+            self.ok
+                + self.timeout
+                + self.exec
+                + self.shard_dead
+                + self.overloaded
+                + self.transport
+                + self.protocol
+                + self.bad_request
+                + self.going_away
+                + self.breaker
+                + self.exhausted
+        }
+        fn merge(&mut self, o: &Tally) {
+            self.sent += o.sent;
+            self.ok += o.ok;
+            self.timeout += o.timeout;
+            self.exec += o.exec;
+            self.shard_dead += o.shard_dead;
+            self.overloaded += o.overloaded;
+            self.transport += o.transport;
+            self.protocol += o.protocol;
+            self.bad_request += o.bad_request;
+            self.going_away += o.going_away;
+            self.breaker += o.breaker;
+            self.exhausted += o.exhausted;
+        }
+    }
+
+    let until = Instant::now() + Duration::from_secs(seconds);
+    let t0 = Instant::now();
+    let per_conn: Vec<(Tally, stoch_imc::serve::net::ClientStats)> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..conns)
+            .map(|k| {
+                let addr = addr.clone();
+                let specs = &specs;
+                let mix = mix.as_str();
+                s.spawn(move || {
+                    let mut client = Client::new(
+                        addr,
+                        ClientConfig {
+                            deadline: Some(Duration::from_millis(deadline_ms)),
+                            retry: RetryPolicy {
+                                seed: seed ^ k.wrapping_mul(GOLDEN_GAMMA),
+                                base: Duration::from_millis(5),
+                                ..RetryPolicy::from_env()
+                            },
+                            ..ClientConfig::from_env()
+                        },
+                    );
+                    // Arrival mix per lane: Poisson (exponential gaps)
+                    // or bursty (16 back-to-back, then one long gap).
+                    let poisson = match mix {
+                        "poisson" => true,
+                        "bursty" => false,
+                        _ => k % 2 == 0,
+                    };
+                    let mut t = Tally::default();
+                    let mut ctr = 0u64;
+                    let mut req = 0u64;
+                    while Instant::now() < until {
+                        let spec = &specs[((k + req) % specs.len() as u64) as usize];
+                        let inputs = vec![0.5f64; spec.n_inputs];
+                        t.sent += 1;
+                        t.absorb(&client.call(&spec.name, &inputs));
+                        req += 1;
+                        let gap = if poisson {
+                            ctr += 1;
+                            let bits = mix64(seed ^ k ^ ctr.wrapping_mul(GOLDEN_GAMMA));
+                            let u = (((bits >> 11) as f64) / ((1u64 << 53) as f64)).max(1e-12);
+                            Duration::from_secs_f64((-u.ln() / rate).min(1.0))
+                        } else if req % 16 == 0 {
+                            Duration::from_secs_f64((16.0 / rate).min(1.0))
+                        } else {
+                            Duration::ZERO
+                        };
+                        if !gap.is_zero() {
+                            std::thread::sleep(gap);
+                        }
+                    }
+                    (t, client.stats())
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().unwrap_or_else(|_| panic!("flood client thread panicked")))
+            .collect()
+    });
+    let dt = t0.elapsed();
+
+    let mut total = Tally::default();
+    let mut retries = 0u64;
+    let mut connects = 0u64;
+    let mut breaker_fast_fails = 0u64;
+    for (t, cs) in &per_conn {
+        total.merge(t);
+        retries += cs.retries;
+        connects += cs.connects;
+        breaker_fast_fails += cs.breaker_fast_fails;
+    }
+    let rps = total.sent as f64 / dt.as_secs_f64().max(1e-9);
+    println!(
+        "flood: {} sent in {:.2?} ({rps:.0}/s) → ok={} timeout={} exec={} shard_dead={} \
+         overloaded={} transport={} protocol={} going_away={} breaker={} exhausted={} \
+         bad_request={}",
+        total.sent,
+        dt,
+        total.ok,
+        total.timeout,
+        total.exec,
+        total.shard_dead,
+        total.overloaded,
+        total.transport,
+        total.protocol,
+        total.going_away,
+        total.breaker,
+        total.exhausted,
+        total.bad_request,
+    );
+    println!(
+        "flood: client side — {retries} retries, {connects} connects, \
+         {breaker_fast_fails} breaker fast-fails"
+    );
+
+    let entries = vec![
+        ("flood_sent".to_string(), total.sent as f64),
+        ("flood_ok".to_string(), total.ok as f64),
+        ("flood_timeouts".to_string(), total.timeout as f64),
+        ("flood_exec_errors".to_string(), total.exec as f64),
+        ("flood_shard_dead".to_string(), total.shard_dead as f64),
+        ("flood_overloaded".to_string(), total.overloaded as f64),
+        ("flood_transport_errors".to_string(), total.transport as f64),
+        ("flood_protocol_errors".to_string(), total.protocol as f64),
+        ("flood_going_away".to_string(), total.going_away as f64),
+        ("flood_breaker_fast_fails".to_string(), breaker_fast_fails as f64),
+        ("flood_retries_exhausted".to_string(), total.exhausted as f64),
+        ("flood_bad_requests".to_string(), total.bad_request as f64),
+        ("flood_client_retries".to_string(), retries as f64),
+        ("flood_client_connects".to_string(), connects as f64),
+        ("flood_rate_rps".to_string(), rps),
+    ];
+    let out = std::env::var("STOCH_IMC_NET_OUT")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("NET_report.json"));
+    benchjson::merge_and_write(&out, &entries)
+        .with_context(|| format!("writing {}", out.display()))?;
+    println!("flood: wrote {} keys to {}", entries.len(), out.display());
+
+    // Invariant 1: every request reached exactly one terminal outcome.
+    if total.terminal() != total.sent {
+        bail!("terminal outcomes {} != sent {} (a call vanished)", total.terminal(), total.sent);
+    }
+    // Invariant 2: the storm actually delivered values.
+    if total.ok == 0 {
+        bail!("no request ever succeeded against {addr}");
+    }
+    // Invariant 3: every frame we send is well-formed, so a BadRequest
+    // means the server misdecoded (or the codec regressed).
+    if total.bad_request > 0 {
+        bail!("{} well-formed request(s) rejected as bad", total.bad_request);
+    }
+    println!("flood: all client invariants held");
     Ok(())
 }
 

@@ -25,6 +25,13 @@
 //!   under overload), and the [`ChaosPlan`] fault injectors pinned by
 //!   `tests/chaos.rs`. See ARCHITECTURE.md "Failure domains &
 //!   graceful degradation".
+//! * [`net`] — the TCP front door: a std-only length-prefixed wire
+//!   protocol carrying deadline budgets and the full `ServeError`
+//!   taxonomy, a bounded-thread [`net::TcpFront`] with slow-peer
+//!   defenses and graceful drain, and a retrying [`net::Client`] with
+//!   seeded backoff and a circuit breaker — the same
+//!   exactly-one-terminal-outcome contract, across a socket. See
+//!   ARCHITECTURE.md "Network front door".
 //!
 //! Row-level parallelism composes underneath: each wave is evaluated
 //! by the word-parallel engine via
@@ -47,11 +54,13 @@
 //! [`runtime::Engine`]: crate::runtime::Engine
 //! [`runtime::InterpEngine::execute_rows`]: crate::runtime::InterpEngine::execute_rows
 
+pub mod net;
 pub mod pool;
 pub mod resilience;
 pub mod server;
 pub mod shard;
 
+pub use net::{Client, ClientConfig, NetError, TcpFront, TcpFrontConfig};
 pub use pool::BankPool;
-pub use resilience::{ChaosPlan, DegradeConfig, Reply, ServeError, SubmitOpts};
+pub use resilience::{ChaosPlan, DegradeConfig, NetChaos, Reply, ServeError, SubmitOpts};
 pub use server::{Server, ServerConfig};

@@ -1,0 +1,604 @@
+//! The retrying TCP client: connection reuse, wire-propagated
+//! deadlines, exponential backoff with deterministic seeded jitter,
+//! and a per-target circuit breaker.
+//!
+//! The retry policy only replays *idempotent-safe* outcomes — failures
+//! where the request provably did not deliver a result to this caller
+//! (connect/transport failures, `ShardDead`, admission sheds, protocol
+//! errors, going-away). A delivered value or a terminal serve-layer
+//! verdict (`Timeout`, `Exec`, `BadRequest`) is returned exactly once
+//! and never re-requested, so one client call can never double-count a
+//! result. Backoff jitter derives from `mix64(seed, attempt)` — fully
+//! deterministic for a given seed, so tests pin exact schedules
+//! without a clock.
+
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::{Duration, Instant};
+
+use crate::serve::resilience::ServeError;
+use crate::util::prng::{mix64, GOLDEN_GAMMA};
+
+use super::wire::{self, Control, ReadError, RespBody};
+
+/// One terminal client-side outcome. Every [`Client::call`] returns
+/// exactly one `Ok` value or one of these — a request is never left
+/// ambiguous.
+#[derive(Debug, Clone, PartialEq)]
+pub enum NetError {
+    /// A serve-layer verdict carried over the wire, variant-preserved.
+    Serve(ServeError),
+    /// The server shed the request at admission (queue full) or the
+    /// connection pool was busy. Retry-safe.
+    Overloaded,
+    /// The server rejected the request as invalid (unknown app, arity
+    /// mismatch). Not retry-safe: the same bytes cannot succeed.
+    BadRequest(String),
+    /// The peer and this client disagreed about the protocol
+    /// (malformed frame, id mismatch, unexpected kind). The connection
+    /// is dropped; retry-safe on a fresh connection.
+    Protocol(String),
+    /// A transport failure: connect, send, or mid-response read. No
+    /// result was delivered, so retry-safe; counts toward the breaker.
+    Transport(String),
+    /// The server announced drain; the connection is closed.
+    /// Retry-safe (against a restarted or different server).
+    GoingAway,
+    /// The circuit breaker is open for this target: fast-fail without
+    /// touching the network.
+    BreakerOpen,
+    /// The retry budget ran out; `last` is the final attempt's error.
+    RetriesExhausted { attempts: u32, last: Box<NetError> },
+}
+
+impl NetError {
+    /// May this outcome be retried without risking a double-counted
+    /// result? True exactly when no result was (or could have been)
+    /// delivered for the attempt.
+    pub fn retry_safe(&self) -> bool {
+        match self {
+            NetError::Transport(_)
+            | NetError::Overloaded
+            | NetError::Protocol(_)
+            | NetError::GoingAway
+            | NetError::Serve(ServeError::ShardDead) => true,
+            NetError::Serve(_)
+            | NetError::BadRequest(_)
+            | NetError::BreakerOpen
+            | NetError::RetriesExhausted { .. } => false,
+        }
+    }
+
+    /// Does this outcome indicate the *transport* (not the server's
+    /// application layer) is unhealthy? Only these trip the breaker.
+    pub fn is_transport(&self) -> bool {
+        matches!(self, NetError::Transport(_))
+    }
+}
+
+impl std::fmt::Display for NetError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            NetError::Serve(e) => write!(f, "serve error: {e}"),
+            NetError::Overloaded => write!(f, "server overloaded (request shed)"),
+            NetError::BadRequest(m) => write!(f, "bad request: {m}"),
+            NetError::Protocol(m) => write!(f, "protocol error: {m}"),
+            NetError::Transport(m) => write!(f, "transport error: {m}"),
+            NetError::GoingAway => write!(f, "server going away (drain)"),
+            NetError::BreakerOpen => write!(f, "circuit breaker open"),
+            NetError::RetriesExhausted { attempts, last } => {
+                write!(f, "retries exhausted after {attempts} attempts; last: {last}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for NetError {}
+
+/// Exponential backoff with deterministic seeded jitter: attempt `k`
+/// sleeps `base·2^k + jitter(seed, k)` where the jitter is uniform in
+/// `[0, base)` derived from `mix64` — no clock, no global RNG, so a
+/// given seed always produces the same schedule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Retries after the first attempt (`0` = never retry).
+    pub max: u32,
+    /// Base backoff unit.
+    pub base: Duration,
+    /// Jitter seed; vary per client to decorrelate a retry storm.
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        Self { max: 3, base: Duration::from_millis(10), seed: 0x5EED }
+    }
+}
+
+impl RetryPolicy {
+    /// Resolve from `STOCH_IMC_RETRY_MAX` / `STOCH_IMC_RETRY_BASE_MS`
+    /// over the defaults; unparseable values warn and keep the default.
+    pub fn from_env() -> Self {
+        let mut p = Self::default();
+        if let Ok(s) = std::env::var("STOCH_IMC_RETRY_MAX") {
+            match s.trim().parse::<u32>() {
+                Ok(n) => p.max = n,
+                Err(_) => eprintln!("STOCH_IMC_RETRY_MAX=`{s}` is not an integer; using {}", p.max),
+            }
+        }
+        if let Ok(s) = std::env::var("STOCH_IMC_RETRY_BASE_MS") {
+            match s.trim().parse::<u64>() {
+                Ok(ms) => p.base = Duration::from_millis(ms),
+                Err(_) => {
+                    eprintln!("STOCH_IMC_RETRY_BASE_MS=`{s}` is not an integer; keeping default")
+                }
+            }
+        }
+        p
+    }
+
+    /// The backoff before retry number `attempt` (0-based). Pure —
+    /// deterministic in `(seed, attempt)`.
+    pub fn delay(&self, attempt: u32) -> Duration {
+        let base_ns = self.base.as_nanos().min(u64::MAX as u128) as u64;
+        if base_ns == 0 {
+            return Duration::ZERO;
+        }
+        let exp = base_ns.saturating_mul(1u64 << attempt.min(20));
+        let jitter = mix64(self.seed ^ u64::from(attempt).wrapping_mul(GOLDEN_GAMMA)) % base_ns;
+        Duration::from_nanos(exp.saturating_add(jitter))
+    }
+}
+
+/// Circuit-breaker knobs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BreakerConfig {
+    /// Consecutive transport failures that open the breaker.
+    pub threshold: u32,
+    /// How long the breaker stays open before half-opening (one probe
+    /// attempt allowed; its outcome closes or re-opens).
+    pub cooloff: Duration,
+}
+
+impl Default for BreakerConfig {
+    fn default() -> Self {
+        Self { threshold: 5, cooloff: Duration::from_millis(500) }
+    }
+}
+
+/// Breaker states, readable for tests and metrics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BreakerState {
+    /// Healthy: all attempts allowed.
+    Closed,
+    /// Tripped: attempts fast-fail until the cooloff elapses.
+    Open,
+    /// Cooloff elapsed: exactly one probe is in flight.
+    HalfOpen,
+}
+
+/// Per-target circuit breaker. A pure state machine over explicit
+/// `Instant`s — callers pass `now`, so tests drive it with a fake
+/// clock (synthetic instants) and never sleep.
+#[derive(Debug)]
+pub struct Breaker {
+    cfg: BreakerConfig,
+    consecutive_failures: u32,
+    /// `Some(when)` = open since `when`; half-open once
+    /// `now >= when + cooloff`.
+    opened_at: Option<Instant>,
+    probing: bool,
+}
+
+impl Breaker {
+    pub fn new(cfg: BreakerConfig) -> Self {
+        Self { cfg, consecutive_failures: 0, opened_at: None, probing: false }
+    }
+
+    pub fn state(&self) -> BreakerState {
+        match self.opened_at {
+            None => BreakerState::Closed,
+            Some(_) if self.probing => BreakerState::HalfOpen,
+            Some(_) => BreakerState::Open,
+        }
+    }
+
+    /// May an attempt proceed at `now`? Opening the half-open window
+    /// marks a probe, so concurrent callers of a shared breaker would
+    /// send exactly one probe per cooloff.
+    pub fn allow(&mut self, now: Instant) -> bool {
+        match self.opened_at {
+            None => true,
+            Some(when) => {
+                if self.probing {
+                    false
+                } else if now.saturating_duration_since(when) >= self.cfg.cooloff {
+                    self.probing = true;
+                    true
+                } else {
+                    false
+                }
+            }
+        }
+    }
+
+    /// A delivered (non-transport-failed) attempt closes the breaker.
+    pub fn on_success(&mut self) {
+        self.consecutive_failures = 0;
+        self.opened_at = None;
+        self.probing = false;
+    }
+
+    /// A transport failure at `now`: counts toward the threshold; a
+    /// failed half-open probe re-opens immediately.
+    pub fn on_failure(&mut self, now: Instant) {
+        self.consecutive_failures = self.consecutive_failures.saturating_add(1);
+        if self.probing || self.consecutive_failures >= self.cfg.threshold {
+            self.opened_at = Some(now);
+            self.probing = false;
+        }
+    }
+}
+
+/// Client configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct ClientConfig {
+    /// Per-io-operation budget: connect, send, and the tail of a
+    /// response read all individually bound by this.
+    pub io_timeout: Duration,
+    /// Default end-to-end deadline per call (`None` = unbounded; the
+    /// response wait is then bounded by `io_timeout` alone). The
+    /// remaining budget is re-sent on the wire each attempt.
+    pub deadline: Option<Duration>,
+    pub retry: RetryPolicy,
+    pub breaker: BreakerConfig,
+}
+
+impl Default for ClientConfig {
+    fn default() -> Self {
+        Self {
+            io_timeout: Duration::from_secs(2),
+            deadline: None,
+            retry: RetryPolicy::default(),
+            breaker: BreakerConfig::default(),
+        }
+    }
+}
+
+impl ClientConfig {
+    /// Defaults with the retry policy resolved from the environment.
+    pub fn from_env() -> Self {
+        Self { retry: RetryPolicy::from_env(), ..Self::default() }
+    }
+}
+
+/// Client-side counters, exposed for the flood harness and tests.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ClientStats {
+    /// Values delivered.
+    pub ok: u64,
+    /// Retry attempts performed (not counting first attempts).
+    pub retries: u64,
+    /// Fresh TCP connects (first connect included).
+    pub connects: u64,
+    /// Calls fast-failed by the open breaker.
+    pub breaker_fast_fails: u64,
+    /// Protocol-class failures observed.
+    pub protocol_errors: u64,
+    /// Transport-class failures observed.
+    pub transport_errors: u64,
+}
+
+/// A reusable connection to one `TcpFront` target.
+///
+/// Not `Sync`: one client per thread (the flood harness spawns one per
+/// connection lane), mirroring one socket per client.
+pub struct Client {
+    addr: String,
+    cfg: ClientConfig,
+    conn: Option<TcpStream>,
+    breaker: Breaker,
+    next_id: u64,
+    stats: ClientStats,
+}
+
+impl Client {
+    /// Create a client for `addr` (e.g. `127.0.0.1:7117`). Lazy: no
+    /// connection is made until the first call.
+    pub fn new(addr: impl Into<String>, cfg: ClientConfig) -> Self {
+        let breaker = Breaker::new(cfg.breaker);
+        // Decorrelate jitter across clients even with a shared config
+        // seed: fold the target address into the stream.
+        let addr = addr.into();
+        let mut cfg = cfg;
+        cfg.retry.seed ^= crate::util::prng::fnv1a(&addr);
+        Self { addr, cfg, conn: None, breaker, next_id: 1, stats: ClientStats::default() }
+    }
+
+    pub fn stats(&self) -> ClientStats {
+        self.stats
+    }
+
+    pub fn breaker_state(&self) -> BreakerState {
+        self.breaker.state()
+    }
+
+    /// Call `app(inputs)` under the client's default deadline.
+    pub fn call(&mut self, app: &str, inputs: &[f64]) -> Result<f32, NetError> {
+        self.call_opt(app, inputs, self.cfg.deadline)
+    }
+
+    /// Call with an explicit end-to-end deadline budget covering every
+    /// retry and backoff sleep; the remaining budget at each attempt
+    /// is propagated on the wire.
+    pub fn call_with_deadline(
+        &mut self,
+        app: &str,
+        inputs: &[f64],
+        budget: Duration,
+    ) -> Result<f32, NetError> {
+        self.call_opt(app, inputs, Some(budget))
+    }
+
+    fn call_opt(
+        &mut self,
+        app: &str,
+        inputs: &[f64],
+        budget: Option<Duration>,
+    ) -> Result<f32, NetError> {
+        let deadline = budget.map(|b| Instant::now() + b);
+        let mut last: Option<NetError> = None;
+        let mut attempts = 0u32;
+        for attempt in 0..=self.cfg.retry.max {
+            if attempt > 0 {
+                let delay = self.cfg.retry.delay(attempt - 1);
+                if let Some(dl) = deadline {
+                    // A sleep that would outlive the deadline cannot
+                    // lead to a successful attempt; stop retrying.
+                    if Instant::now() + delay >= dl {
+                        break;
+                    }
+                }
+                std::thread::sleep(delay);
+                self.stats.retries += 1;
+            }
+            if !self.breaker.allow(Instant::now()) {
+                self.stats.breaker_fast_fails += 1;
+                return Err(NetError::BreakerOpen);
+            }
+            attempts += 1;
+            match self.attempt(app, inputs, deadline) {
+                Ok(v) => {
+                    self.breaker.on_success();
+                    self.stats.ok += 1;
+                    return Ok(v);
+                }
+                Err(e) => {
+                    match &e {
+                        NetError::Transport(_) => {
+                            self.stats.transport_errors += 1;
+                            self.breaker.on_failure(Instant::now());
+                        }
+                        NetError::Protocol(_) => {
+                            self.stats.protocol_errors += 1;
+                            self.breaker.on_success(); // transport delivered bytes
+                        }
+                        _ => self.breaker.on_success(),
+                    }
+                    if !e.retry_safe() {
+                        return Err(e);
+                    }
+                    last = Some(e);
+                }
+            }
+        }
+        let last = last.unwrap_or(NetError::Transport("no attempt was made".into()));
+        Err(NetError::RetriesExhausted { attempts, last: Box::new(last) })
+    }
+
+    /// One attempt over one (possibly reused) connection. Any failure
+    /// drops the connection, so a stale response from a failed attempt
+    /// can never be read by a later one — that, plus fresh per-attempt
+    /// ids, is what makes the retry loop double-delivery-proof.
+    fn attempt(
+        &mut self,
+        app: &str,
+        inputs: &[f64],
+        deadline: Option<Instant>,
+    ) -> Result<f32, NetError> {
+        let remaining = deadline.map(|dl| dl.saturating_duration_since(Instant::now()));
+        if let Some(r) = remaining {
+            if r.is_zero() {
+                return Err(NetError::Serve(ServeError::Timeout));
+            }
+        }
+        self.ensure_connected()?;
+        let id = self.next_id;
+        self.next_id += 1;
+        let req = wire::Request {
+            id,
+            deadline_budget_us: remaining.map_or(0, |r| r.as_micros().min(u64::MAX as u128) as u64),
+            app: app.to_string(),
+            inputs: inputs.to_vec(),
+        };
+        let io = self.cfg.io_timeout;
+        let stream = self.conn.as_mut().expect("connected above");
+        if let Err(e) = wire::write_frame(stream, &wire::encode_request(&req), io) {
+            self.conn = None;
+            return Err(NetError::Transport(format!("send failed: {e}")));
+        }
+        // Response wait: the deadline budget (plus one io grace for the
+        // wire hop) when bounded, the io timeout alone when not.
+        let wait = remaining.map_or(io, |r| r + io);
+        let out = match wire::read_frame(stream, wait, io) {
+            Ok((wire::KIND_RESPONSE, payload)) => match wire::decode_response(&payload) {
+                Ok(resp) if resp.id == id => match resp.body {
+                    RespBody::Value(v) => return Ok(v), // connection stays reusable
+                    RespBody::Err(e) => Err(NetError::Serve(e)),
+                    RespBody::Overloaded => Err(NetError::Overloaded),
+                    RespBody::BadRequest(m) => Err(NetError::BadRequest(m)),
+                },
+                Ok(resp) => {
+                    Err(NetError::Protocol(format!("response id {} for request {id}", resp.id)))
+                }
+                Err(e) => Err(NetError::Protocol(e.to_string())),
+            },
+            Ok((wire::KIND_CONTROL, payload)) => match wire::decode_control(&payload) {
+                Ok(Control::GoingAway) => Err(NetError::GoingAway),
+                Ok(Control::Busy) => Err(NetError::Overloaded),
+                Ok(Control::ProtocolError(m)) => {
+                    Err(NetError::Protocol(format!("server rejected frame: {m}")))
+                }
+                Err(e) => Err(NetError::Protocol(e.to_string())),
+            },
+            Ok((kind, _)) => Err(NetError::Protocol(format!("unexpected frame kind {kind}"))),
+            Err(ReadError::Idle) => Err(match deadline {
+                // The budget (plus grace) elapsed with no response: a
+                // terminal timeout, NOT retried — the server may still
+                // deliver, and a retry could double-execute the work.
+                Some(_) => NetError::Serve(ServeError::Timeout),
+                None => NetError::Transport("response timed out".into()),
+            }),
+            Err(ReadError::Stalled) => {
+                Err(NetError::Transport("response stalled mid-frame".into()))
+            }
+            Err(ReadError::Closed) => {
+                Err(NetError::Transport("connection closed by server".into()))
+            }
+            Err(ReadError::Io(e)) => Err(NetError::Transport(format!("read failed: {e}"))),
+            Err(ReadError::Wire(e)) => Err(NetError::Protocol(e.to_string())),
+        };
+        // Terminal serve verdicts arrive on a healthy connection; every
+        // other path leaves the stream in an unknown framing state.
+        if !matches!(out, Err(NetError::Serve(_)) | Err(NetError::Overloaded)) {
+            self.conn = None;
+        }
+        out
+    }
+
+    fn ensure_connected(&mut self) -> Result<(), NetError> {
+        if self.conn.is_some() {
+            return Ok(());
+        }
+        let sa = self
+            .addr
+            .to_socket_addrs()
+            .map_err(|e| NetError::Transport(format!("resolve {}: {e}", self.addr)))?
+            .next()
+            .ok_or_else(|| NetError::Transport(format!("no address for {}", self.addr)))?;
+        let stream = TcpStream::connect_timeout(&sa, self.cfg.io_timeout)
+            .map_err(|e| NetError::Transport(format!("connect {}: {e}", self.addr)))?;
+        let _ = stream.set_nodelay(true);
+        self.stats.connects += 1;
+        self.conn = Some(stream);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_schedule_is_deterministic_and_exponential() {
+        let p = RetryPolicy { max: 4, base: Duration::from_millis(10), seed: 7 };
+        let q = RetryPolicy { max: 4, base: Duration::from_millis(10), seed: 7 };
+        for k in 0..6 {
+            // Same seed → the exact same schedule, run to run.
+            assert_eq!(p.delay(k), q.delay(k), "attempt {k}");
+            // base·2^k ≤ delay < base·2^k + base (jitter bounded).
+            let floor = Duration::from_millis(10 * (1 << k));
+            assert!(p.delay(k) >= floor, "attempt {k}: {:?} < {floor:?}", p.delay(k));
+            assert!(p.delay(k) < floor + Duration::from_millis(10), "attempt {k}");
+        }
+        // A different seed shifts the jitter (with overwhelming
+        // probability over mix64) but keeps the exponential floor.
+        let r = RetryPolicy { max: 4, base: Duration::from_millis(10), seed: 8 };
+        assert!((0..6).any(|k| r.delay(k) != p.delay(k)));
+        // Degenerate base never panics.
+        assert_eq!(RetryPolicy { max: 1, base: Duration::ZERO, seed: 1 }.delay(3), Duration::ZERO);
+        // Huge attempt numbers saturate instead of overflowing.
+        let _ = p.delay(u32::MAX);
+    }
+
+    /// Breaker state machine on a fake clock: synthetic `Instant`s are
+    /// passed explicitly, so no test time actually elapses.
+    #[test]
+    fn breaker_opens_half_opens_and_recovers() {
+        let cfg = BreakerConfig { threshold: 3, cooloff: Duration::from_secs(10) };
+        let mut b = Breaker::new(cfg);
+        let t0 = Instant::now();
+        assert_eq!(b.state(), BreakerState::Closed);
+        assert!(b.allow(t0));
+
+        // Two failures: still closed (threshold is 3).
+        b.on_failure(t0);
+        b.on_failure(t0);
+        assert_eq!(b.state(), BreakerState::Closed);
+        assert!(b.allow(t0));
+
+        // Third consecutive failure opens it; attempts fast-fail.
+        b.on_failure(t0);
+        assert_eq!(b.state(), BreakerState::Open);
+        assert!(!b.allow(t0));
+        assert!(!b.allow(t0 + Duration::from_secs(9)), "cooloff not elapsed");
+
+        // Cooloff elapsed: exactly one probe allowed (half-open).
+        let t_probe = t0 + Duration::from_secs(10);
+        assert!(b.allow(t_probe));
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+        assert!(!b.allow(t_probe), "only one probe per half-open window");
+
+        // Failed probe re-opens immediately (no threshold count).
+        b.on_failure(t_probe);
+        assert_eq!(b.state(), BreakerState::Open);
+        assert!(!b.allow(t_probe + Duration::from_secs(9)));
+
+        // Next probe succeeds → closed, counters reset.
+        let t2 = t_probe + Duration::from_secs(10);
+        assert!(b.allow(t2));
+        b.on_success();
+        assert_eq!(b.state(), BreakerState::Closed);
+        // Two fresh failures don't re-open (count restarted).
+        b.on_failure(t2);
+        b.on_failure(t2);
+        assert_eq!(b.state(), BreakerState::Closed);
+    }
+
+    #[test]
+    fn breaker_success_between_failures_resets_the_count() {
+        let mut b = Breaker::new(BreakerConfig { threshold: 2, cooloff: Duration::from_secs(1) });
+        let t0 = Instant::now();
+        for _ in 0..8 {
+            b.on_failure(t0);
+            b.on_success();
+        }
+        assert_eq!(b.state(), BreakerState::Closed, "non-consecutive failures never open");
+    }
+
+    #[test]
+    fn retry_safety_classification() {
+        assert!(NetError::Transport("x".into()).retry_safe());
+        assert!(NetError::Overloaded.retry_safe());
+        assert!(NetError::Protocol("x".into()).retry_safe());
+        assert!(NetError::GoingAway.retry_safe());
+        assert!(NetError::Serve(ServeError::ShardDead).retry_safe());
+        // A delivered verdict is terminal: retrying could double-count.
+        assert!(!NetError::Serve(ServeError::Timeout).retry_safe());
+        assert!(!NetError::Serve(ServeError::Exec("boom".into())).retry_safe());
+        assert!(!NetError::BadRequest("x".into()).retry_safe());
+        assert!(!NetError::BreakerOpen.retry_safe());
+        // Only transport failures trip the breaker.
+        assert!(NetError::Transport("x".into()).is_transport());
+        assert!(!NetError::Serve(ServeError::ShardDead).is_transport());
+        assert!(!NetError::Overloaded.is_transport());
+    }
+
+    #[test]
+    fn retry_policy_env_parsing_ignores_garbage() {
+        // Pure-default path (env vars are absent in the test runner
+        // unless a caller set them; don't mutate process env here).
+        let p = RetryPolicy::default();
+        assert_eq!(p.max, 3);
+        assert_eq!(p.base, Duration::from_millis(10));
+    }
+}

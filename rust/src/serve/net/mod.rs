@@ -1,0 +1,41 @@
+//! The TCP front door: the serving layer's resilience contract,
+//! carried across a wire.
+//!
+//! PR 9's guarantees stop at the crate boundary — `Reply` is typed,
+//! shards are supervised, deadlines are enforced, but only for
+//! in-process callers. This module puts a std-only (zero external
+//! deps) TCP transport in front of [`Server`](crate::serve::Server)
+//! without weakening any of it:
+//!
+//! * [`wire`] — the length-prefixed binary protocol. Versioned 8-byte
+//!   header, bounded strict decoding (no allocation sized by untrusted
+//!   bytes, exact-consume payloads), and a response body that carries
+//!   the full `ServeError` taxonomy plus the wire-level outcomes
+//!   (`Overloaded`, `BadRequest`). Deadlines travel as remaining
+//!   *budgets* (µs), re-anchored server-side — no clock sync needed.
+//! * [`server`] — [`TcpFront`]: accept loop → bounded connection-
+//!   thread pool, per-connection io timeouts, idle reaper, total
+//!   frame-read deadlines (slowloris defense), admission wired to
+//!   shard backpressure (typed `Overloaded` sheds), graceful
+//!   signal-aware drain with `GoingAway` frames.
+//! * [`client`] — [`Client`]: connection reuse, wire-propagated
+//!   deadlines, exponential backoff with deterministic seeded jitter,
+//!   idempotent-safe-only retries, and a per-target circuit breaker.
+//!
+//! The network failure modes get the same treatment executor panics
+//! got: deterministic injectors
+//! ([`NetChaos`](crate::serve::resilience::NetChaos)) for
+//! accept-then-drop, mid-frame cuts, byte trickles, and stalled
+//! reads, with `tests/net_chaos.rs` pinning exactly-one-terminal-
+//! outcome per request, no-fault bit-identity with in-process
+//! `submit`, slow-peer isolation, and drain leaving zero wedged
+//! threads. See ARCHITECTURE.md "Network front door".
+
+pub mod client;
+pub mod server;
+pub mod wire;
+
+pub use client::{
+    Breaker, BreakerConfig, BreakerState, Client, ClientConfig, ClientStats, NetError, RetryPolicy,
+};
+pub use server::{NetMetrics, TcpFront, TcpFrontConfig};

@@ -1,0 +1,455 @@
+//! `TcpFront` — the network front door over a [`Server`].
+//!
+//! One accept loop feeds a bounded pool of connection threads; every
+//! connection gets per-io timeouts, an idle reaper, and a total
+//! frame-read deadline (so a slowloris peer trickling bytes can pin at
+//! most its own thread, and only until the io timeout). Admission is
+//! wired straight to the shard pool's backpressure: a full queue is
+//! answered with a typed `Overloaded` response (retry-safe) and a full
+//! connection pool with a `Busy` control frame — overload sheds at the
+//! edge, it never queues unboundedly. Shutdown is a graceful drain:
+//! stop accepting, tell idle connections `GoingAway`, flush in-flight
+//! replies, join every thread, then drain the shard pool.
+
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::{self, JoinHandle};
+use std::time::{Duration, Instant};
+
+use crate::error::{Context, Result};
+use crate::obs::{Histogram, MetricsSnapshot};
+use crate::serve::resilience::{lock_unpoisoned, NetChaos, ServeError};
+use crate::serve::server::Server;
+
+use super::wire::{self, Control, ReadError, RespBody, Response, WireError};
+
+/// How often blocked loops re-check the shutdown flag.
+const POLL: Duration = Duration::from_millis(10);
+/// Idle-wait slice inside a connection thread: the reaper accumulates
+/// these, and drain is noticed within one slice.
+const IDLE_SLICE: Duration = Duration::from_millis(50);
+
+/// Front-door configuration. Environment resolution
+/// ([`TcpFrontConfig::from_env`]) reads `STOCH_IMC_TCP_PORT`,
+/// `STOCH_IMC_TCP_CONN_THREADS`, `STOCH_IMC_TCP_IO_TIMEOUT_MS`, and
+/// `STOCH_IMC_TCP_IDLE_MS` once at start — the accept path never
+/// touches the environment.
+#[derive(Debug, Clone)]
+pub struct TcpFrontConfig {
+    /// Bind address. Port `0` picks an ephemeral port (tests/benches);
+    /// read the real one back from [`TcpFront::local_addr`].
+    pub addr: String,
+    /// Connection-thread pool bound: at capacity, new connections are
+    /// answered `Busy` and closed instead of queued.
+    pub conn_threads: usize,
+    /// Per-io budget: a started frame must complete (read side) and a
+    /// response must flush (write side) within this.
+    pub io_timeout: Duration,
+    /// Idle reaper: a connection with no frame for this long is closed.
+    pub idle: Duration,
+    /// Network chaos injectors (all-zero = clean serving).
+    pub chaos: NetChaos,
+}
+
+impl Default for TcpFrontConfig {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:7117".into(),
+            conn_threads: 16,
+            io_timeout: Duration::from_secs(2),
+            idle: Duration::from_secs(30),
+            chaos: NetChaos::default(),
+        }
+    }
+}
+
+impl TcpFrontConfig {
+    /// Defaults with the `STOCH_IMC_TCP_*` env overrides applied.
+    pub fn from_env() -> Self {
+        let mut cfg = Self::default();
+        let parse_u64 = |var: &str| {
+            std::env::var(var).ok().and_then(|s| match s.trim().parse::<u64>() {
+                Ok(v) => Some(v),
+                Err(_) => {
+                    eprintln!("{var}=`{s}` is not an integer; using the default");
+                    None
+                }
+            })
+        };
+        if let Some(p) = parse_u64("STOCH_IMC_TCP_PORT") {
+            cfg.addr = format!("127.0.0.1:{p}");
+        }
+        if let Some(n) = parse_u64("STOCH_IMC_TCP_CONN_THREADS") {
+            cfg.conn_threads = (n as usize).max(1);
+        }
+        if let Some(ms) = parse_u64("STOCH_IMC_TCP_IO_TIMEOUT_MS") {
+            cfg.io_timeout = Duration::from_millis(ms.max(1));
+        }
+        if let Some(ms) = parse_u64("STOCH_IMC_TCP_IDLE_MS") {
+            cfg.idle = Duration::from_millis(ms.max(1));
+        }
+        cfg
+    }
+}
+
+/// Front-door counters. Every key is emitted on every snapshot (the
+/// repo-wide stable-schema rule), so `stats --check` can require the
+/// `serve_net_*` set whether or not the TCP path ran.
+#[derive(Debug, Default)]
+pub struct NetMetrics {
+    /// Connections accepted (past the chaos accept-drop injector).
+    pub connections: AtomicU64,
+    /// Connections currently owned by a handler thread.
+    pub active: AtomicU64,
+    /// Connections refused with `Busy` (thread pool at capacity).
+    pub busy_rejected: AtomicU64,
+    /// Connections closed by the idle reaper.
+    pub idle_reaped: AtomicU64,
+    /// Connections killed mid-frame by the io deadline (slowloris).
+    pub io_timeouts: AtomicU64,
+    /// Request frames decoded.
+    pub frames_rx: AtomicU64,
+    /// Response frames fully written.
+    pub frames_tx: AtomicU64,
+    /// Malformed frames answered with a `ProtocolError` control.
+    pub protocol_errors: AtomicU64,
+    /// Requests shed at admission (answered `Overloaded`).
+    pub shed: AtomicU64,
+    /// `GoingAway` frames sent during drain.
+    pub going_away: AtomicU64,
+    /// Chaos: accepted-then-dropped connections.
+    pub chaos_accept_drops: AtomicU64,
+    /// Chaos: responses cut mid-frame.
+    pub chaos_cuts: AtomicU64,
+    /// Chaos: responses trickled byte-by-byte.
+    pub chaos_trickles: AtomicU64,
+    /// Chaos: injected pre-execution stalls.
+    pub chaos_stalls: AtomicU64,
+    /// Wire latency per request: decode done → response encoded, µs.
+    pub wire_latency_us: Mutex<Histogram>,
+}
+
+impl NetMetrics {
+    /// Flat `serve_net_*` exposition, always the full key set.
+    pub fn snapshot_into(&self, out: &mut MetricsSnapshot) {
+        let c = |a: &AtomicU64| a.load(Ordering::Relaxed) as f64;
+        out.push("serve_net_connections", c(&self.connections));
+        out.push("serve_net_active_connections", c(&self.active));
+        out.push("serve_net_busy_rejected", c(&self.busy_rejected));
+        out.push("serve_net_idle_reaped", c(&self.idle_reaped));
+        out.push("serve_net_io_timeouts", c(&self.io_timeouts));
+        out.push("serve_net_frames_rx", c(&self.frames_rx));
+        out.push("serve_net_frames_tx", c(&self.frames_tx));
+        out.push("serve_net_protocol_errors", c(&self.protocol_errors));
+        out.push("serve_net_shed", c(&self.shed));
+        out.push("serve_net_going_away", c(&self.going_away));
+        out.push("serve_net_chaos_accept_drops", c(&self.chaos_accept_drops));
+        out.push("serve_net_chaos_cuts", c(&self.chaos_cuts));
+        out.push("serve_net_chaos_trickles", c(&self.chaos_trickles));
+        out.push("serve_net_chaos_stalls", c(&self.chaos_stalls));
+        let h = lock_unpoisoned(&self.wire_latency_us);
+        out.push("serve_net_wire_latency_us_p50", h.percentile(50.0) as f64);
+        out.push("serve_net_wire_latency_us_p95", h.percentile(95.0) as f64);
+        out.push("serve_net_wire_latency_us_p99", h.percentile(99.0) as f64);
+        out.push("serve_net_wire_latency_us_max", h.max() as f64);
+    }
+}
+
+/// Everything the accept loop and connection threads share.
+struct FrontShared {
+    server: Arc<Server>,
+    cfg: TcpFrontConfig,
+    metrics: NetMetrics,
+    shutdown: AtomicBool,
+    /// Accept-order connection counter (chaos accept-drop cadence).
+    conn_seq: AtomicU64,
+    /// Processed-request counter (chaos stall cadence).
+    req_seq: AtomicU64,
+    /// Written-response counter (chaos cut/trickle cadence).
+    resp_seq: AtomicU64,
+}
+
+/// The TCP front door: owns the listener, the accept thread, and (via
+/// the accept thread) every connection thread. Dropping it shuts down
+/// gracefully; [`TcpFront::shutdown`] does the same explicitly and is
+/// idempotent.
+pub struct TcpFront {
+    shared: Arc<FrontShared>,
+    local: SocketAddr,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl TcpFront {
+    /// Bind and start accepting for `server`.
+    pub fn start(server: Arc<Server>, cfg: TcpFrontConfig) -> Result<Self> {
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("bind tcp front to {}", cfg.addr))?;
+        listener.set_nonblocking(true).context("set listener nonblocking")?;
+        let local = listener.local_addr().context("listener local addr")?;
+        let shared = Arc::new(FrontShared {
+            server,
+            cfg,
+            metrics: NetMetrics::default(),
+            shutdown: AtomicBool::new(false),
+            conn_seq: AtomicU64::new(0),
+            req_seq: AtomicU64::new(0),
+            resp_seq: AtomicU64::new(0),
+        });
+        let sh = Arc::clone(&shared);
+        let accept = thread::Builder::new()
+            .name("tcp-front-accept".into())
+            .spawn(move || accept_loop(listener, &sh))
+            .context("spawn accept thread")?;
+        Ok(Self { shared, local, accept: Some(accept) })
+    }
+
+    /// The bound address (resolves port 0 to the real ephemeral port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local
+    }
+
+    /// Graceful drain: stop accepting, notify idle connections with
+    /// `GoingAway`, let in-flight requests flush their responses, join
+    /// every connection thread, then drain the shard pool. Idempotent;
+    /// returns within roughly one io timeout of the slowest in-flight
+    /// request.
+    pub fn shutdown(&mut self) {
+        if self.shared.shutdown.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        if let Some(h) = self.accept.take() {
+            let _ = h.join(); // joins every connection thread first
+        }
+        let _ = self.shared.server.drain();
+    }
+
+    /// Pool + net metrics in one flat snapshot (`serve_*` and
+    /// `serve_net_*` keys).
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let mut snap = self.shared.server.snapshot();
+        self.shared.metrics.snapshot_into(&mut snap);
+        snap
+    }
+
+    /// The shared server (for mixed in-process + TCP callers).
+    pub fn server(&self) -> &Arc<Server> {
+        &self.shared.server
+    }
+}
+
+impl Drop for TcpFront {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn accept_loop(listener: TcpListener, sh: &Arc<FrontShared>) {
+    let mut handles: Vec<JoinHandle<()>> = Vec::new();
+    while !sh.shutdown.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                handles.retain(|h| !h.is_finished());
+                let n = sh.conn_seq.fetch_add(1, Ordering::SeqCst) + 1;
+                let chaos = sh.cfg.chaos;
+                if chaos.accept_drop_every > 0 && n % chaos.accept_drop_every == 0 {
+                    // Accept-then-drop injector: the peer sees a
+                    // successful connect followed by an abrupt close.
+                    sh.metrics.chaos_accept_drops.fetch_add(1, Ordering::Relaxed);
+                    drop(stream);
+                    continue;
+                }
+                sh.metrics.connections.fetch_add(1, Ordering::Relaxed);
+                if sh.metrics.active.load(Ordering::SeqCst) >= sh.cfg.conn_threads as u64 {
+                    reject_busy(stream, sh);
+                    continue;
+                }
+                sh.metrics.active.fetch_add(1, Ordering::SeqCst);
+                let sh2 = Arc::clone(sh);
+                let spawned = thread::Builder::new()
+                    .name(format!("tcp-front-conn-{n}"))
+                    .spawn(move || {
+                        handle_conn(stream, &sh2);
+                        sh2.metrics.active.fetch_sub(1, Ordering::SeqCst);
+                    });
+                match spawned {
+                    Ok(h) => handles.push(h),
+                    Err(_) => {
+                        sh.metrics.active.fetch_sub(1, Ordering::SeqCst);
+                    }
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => thread::sleep(POLL),
+            Err(_) => thread::sleep(POLL),
+        }
+    }
+    // Drain: every handler notices the flag within one idle slice (or
+    // finishes its in-flight request first) and exits; join them all
+    // so shutdown() returning means zero threads remain.
+    for h in handles {
+        let _ = h.join();
+    }
+}
+
+fn reject_busy(stream: TcpStream, sh: &Arc<FrontShared>) {
+    sh.metrics.busy_rejected.fetch_add(1, Ordering::Relaxed);
+    let mut stream = stream;
+    let _ = stream.set_nonblocking(false);
+    let _ = wire::write_frame(
+        &mut stream,
+        &wire::encode_control(&Control::Busy),
+        Duration::from_millis(200),
+    );
+}
+
+/// Answer a malformed frame with a typed protocol error, then close.
+fn protocol_reject(stream: &mut TcpStream, sh: &Arc<FrontShared>, err: &WireError) {
+    sh.metrics.protocol_errors.fetch_add(1, Ordering::Relaxed);
+    let ctrl = Control::ProtocolError(err.to_string());
+    let _ = wire::write_frame(stream, &wire::encode_control(&ctrl), sh.cfg.io_timeout);
+}
+
+fn handle_conn(mut stream: TcpStream, sh: &Arc<FrontShared>) {
+    // Accepted sockets may inherit the listener's nonblocking flag on
+    // some platforms; the handler runs on blocking io + timeouts.
+    let _ = stream.set_nonblocking(false);
+    let _ = stream.set_nodelay(true);
+    let mut idle = Duration::ZERO;
+    loop {
+        if sh.shutdown.load(Ordering::SeqCst) {
+            sh.metrics.going_away.fetch_add(1, Ordering::Relaxed);
+            let _ = wire::write_frame(
+                &mut stream,
+                &wire::encode_control(&Control::GoingAway),
+                sh.cfg.io_timeout,
+            );
+            return;
+        }
+        match wire::read_frame(&mut stream, IDLE_SLICE.min(sh.cfg.idle), sh.cfg.io_timeout) {
+            Ok((wire::KIND_REQUEST, payload)) => {
+                idle = Duration::ZERO;
+                match wire::decode_request(&payload) {
+                    Ok(req) => {
+                        if !handle_request(&mut stream, sh, req) {
+                            return;
+                        }
+                    }
+                    Err(e) => {
+                        protocol_reject(&mut stream, sh, &e);
+                        return;
+                    }
+                }
+            }
+            Ok((_, _)) => {
+                // Clients have no business sending responses/controls.
+                protocol_reject(&mut stream, sh, &WireError::Malformed("unexpected frame kind"));
+                return;
+            }
+            Err(ReadError::Idle) => {
+                idle += IDLE_SLICE;
+                if idle >= sh.cfg.idle {
+                    sh.metrics.idle_reaped.fetch_add(1, Ordering::Relaxed);
+                    return;
+                }
+            }
+            Err(ReadError::Closed) => return,
+            Err(ReadError::Stalled) => {
+                // The slowloris kill: a frame that started but did not
+                // finish within the io budget.
+                sh.metrics.io_timeouts.fetch_add(1, Ordering::Relaxed);
+                return;
+            }
+            Err(ReadError::Io(_)) => return,
+            Err(ReadError::Wire(e)) => {
+                protocol_reject(&mut stream, sh, &e);
+                return;
+            }
+        }
+    }
+}
+
+/// Serve one decoded request; returns whether the connection stays
+/// alive for the next frame.
+fn handle_request(stream: &mut TcpStream, sh: &Arc<FrontShared>, req: wire::Request) -> bool {
+    sh.metrics.frames_rx.fetch_add(1, Ordering::Relaxed);
+    let chaos = sh.cfg.chaos;
+    if chaos.stall_read_every > 0 {
+        let n = sh.req_seq.fetch_add(1, Ordering::SeqCst) + 1;
+        if n % chaos.stall_read_every == 0 && !chaos.stall.is_zero() {
+            // Stalled-read injector: the server sits on a decoded
+            // request, exercising client deadlines/timeouts.
+            sh.metrics.chaos_stalls.fetch_add(1, Ordering::Relaxed);
+            thread::sleep(chaos.stall);
+        }
+    }
+    let t0 = Instant::now();
+    let budget = (req.deadline_budget_us > 0)
+        .then(|| Duration::from_micros(req.deadline_budget_us));
+    let body = match sh.server.submit_shedding(&req.app, &req.inputs, budget) {
+        Err(e) => RespBody::BadRequest(e.to_string()),
+        Ok(None) => {
+            // Pool backpressure surfaces as a typed, retry-safe shed.
+            sh.metrics.shed.fetch_add(1, Ordering::Relaxed);
+            RespBody::Overloaded
+        }
+        Ok(Some(rx)) => {
+            // The shard answers every admitted request (the PR 9
+            // exactly-once contract); the extra io budget only guards
+            // against a wedged executor leaking this thread.
+            let wait = budget.map_or(sh.cfg.io_timeout, |b| b + sh.cfg.io_timeout);
+            match rx.recv_timeout(wait) {
+                Ok(Ok(v)) => RespBody::Value(v),
+                Ok(Err(e)) => RespBody::Err(e),
+                Err(_) => RespBody::Err(ServeError::Exec(
+                    "front door: reply wait exceeded".into(),
+                )),
+            }
+        }
+    };
+    lock_unpoisoned(&sh.metrics.wire_latency_us)
+        .record(t0.elapsed().as_micros().min(u64::MAX as u128) as u64);
+    let frame = wire::encode_response(&Response { id: req.id, body });
+    write_response(stream, sh, &frame)
+}
+
+/// Write a response frame, applying the mid-frame-cut and byte-trickle
+/// chaos injectors on their cadences.
+fn write_response(stream: &mut TcpStream, sh: &Arc<FrontShared>, frame: &[u8]) -> bool {
+    let chaos = sh.cfg.chaos;
+    let n = sh.resp_seq.fetch_add(1, Ordering::SeqCst) + 1;
+    if chaos.cut_every > 0 && n % chaos.cut_every == 0 {
+        // Mid-frame disconnect: half a response, then a hard close.
+        sh.metrics.chaos_cuts.fetch_add(1, Ordering::Relaxed);
+        let half = frame.len() / 2;
+        let _ = wire::write_frame(stream, &frame[..half], sh.cfg.io_timeout);
+        let _ = stream.shutdown(Shutdown::Both);
+        return false;
+    }
+    if chaos.trickle_every > 0 && n % chaos.trickle_every == 0 {
+        // Byte-trickle slow write: the frame arrives, eventually. The
+        // client's total-frame read deadline decides whether that is
+        // tolerable; other connections are unaffected (thread-per-
+        // connection, no shared writer).
+        sh.metrics.chaos_trickles.fetch_add(1, Ordering::Relaxed);
+        for b in frame {
+            if wire::write_frame(stream, std::slice::from_ref(b), sh.cfg.io_timeout).is_err() {
+                return false;
+            }
+            if !chaos.trickle_delay.is_zero() {
+                thread::sleep(chaos.trickle_delay);
+            }
+        }
+        sh.metrics.frames_tx.fetch_add(1, Ordering::Relaxed);
+        return true;
+    }
+    match wire::write_frame(stream, frame, sh.cfg.io_timeout) {
+        Ok(()) => {
+            sh.metrics.frames_tx.fetch_add(1, Ordering::Relaxed);
+            true
+        }
+        Err(_) => {
+            sh.metrics.io_timeouts.fetch_add(1, Ordering::Relaxed);
+            false
+        }
+    }
+}

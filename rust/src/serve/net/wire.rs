@@ -1,0 +1,735 @@
+//! The length-prefixed binary wire protocol for the TCP front door.
+//!
+//! Every frame is an 8-byte header followed by a bounded payload:
+//!
+//! ```text
+//! offset  size  field
+//! 0       2     magic  b"SC"
+//! 2       1     version (currently 1)
+//! 3       1     kind    (1 = request, 2 = response, 3 = control)
+//! 4       4     payload length, u32 LE, <= MAX_PAYLOAD
+//! ```
+//!
+//! Decoding is strict and bounded: the payload length is validated
+//! against [`MAX_PAYLOAD`] *before* any allocation, every inner length
+//! (app name, input count, message) has its own cap, payloads must be
+//! consumed exactly (trailing bytes are an error), and every malformed
+//! shape maps to a typed [`WireError`] — never a panic, never a hang,
+//! never an allocation sized by untrusted bytes. The response body
+//! carries the full [`ServeError`] taxonomy plus the two wire-level
+//! outcomes (`Overloaded` admission shed, `BadRequest` validation), so
+//! the in-process resilience contract survives the hop.
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use crate::serve::resilience::ServeError;
+
+/// Frame magic: the first two bytes of every frame.
+pub const MAGIC: [u8; 2] = *b"SC";
+/// Current protocol version. Unknown versions are rejected with
+/// [`WireError::UnknownVersion`] so a future v2 can change anything
+/// after the 4-byte prefix.
+pub const VERSION: u8 = 1;
+/// Fixed frame-header size.
+pub const HEADER_LEN: usize = 8;
+/// Hard cap on a frame payload. Anything larger is rejected from the
+/// header alone ([`WireError::Oversized`]) — the bytes are never read,
+/// let alone allocated.
+pub const MAX_PAYLOAD: usize = 4096;
+/// Cap on the app-name length inside a request.
+pub const MAX_APP_LEN: usize = 128;
+/// Cap on the input count inside a request.
+pub const MAX_INPUTS: usize = 256;
+/// Cap on any error/control message carried on the wire; longer
+/// messages are truncated at encode time (on a char boundary).
+pub const MAX_MSG_LEN: usize = 512;
+
+/// Frame kinds (the `kind` header byte).
+pub const KIND_REQUEST: u8 = 1;
+pub const KIND_RESPONSE: u8 = 2;
+pub const KIND_CONTROL: u8 = 3;
+
+/// A typed decode failure. Every variant is answered by the server
+/// with a `Control::ProtocolError` frame and a close — malformed input
+/// terminates the connection, not the process.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WireError {
+    /// The buffer ended before the fields it promised (truncated
+    /// header, or a payload shorter than its inner lengths claim).
+    Truncated,
+    /// The first two bytes were not [`MAGIC`].
+    BadMagic([u8; 2]),
+    /// A version byte this decoder does not speak.
+    UnknownVersion(u8),
+    /// A kind byte outside the known set.
+    UnknownKind(u8),
+    /// Header declared a payload longer than [`MAX_PAYLOAD`].
+    Oversized(u32),
+    /// Structurally valid lengths but semantically invalid content.
+    Malformed(&'static str),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Truncated => write!(f, "truncated frame"),
+            WireError::BadMagic(m) => write!(f, "bad frame magic {m:02x?}"),
+            WireError::UnknownVersion(v) => write!(f, "unknown protocol version {v}"),
+            WireError::UnknownKind(k) => write!(f, "unknown frame kind {k}"),
+            WireError::Oversized(n) => {
+                write!(f, "payload length {n} exceeds cap {MAX_PAYLOAD}")
+            }
+            WireError::Malformed(what) => write!(f, "malformed frame: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+/// One client request: compute `app(inputs)` under an optional
+/// deadline budget, echo `id` on the response.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Request {
+    /// Client-chosen correlation id, echoed verbatim on the response.
+    /// A fresh id per attempt lets the client detect stale responses.
+    pub id: u64,
+    /// Remaining deadline budget in microseconds at send time; `0` =
+    /// no deadline. The server re-anchors it on arrival (one-way
+    /// budget, not a wall-clock timestamp, so clock skew is harmless).
+    pub deadline_budget_us: u64,
+    pub app: String,
+    pub inputs: Vec<f64>,
+}
+
+/// The terminal outcome of one request, as carried on the wire.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RespBody {
+    /// The computed value (status 0).
+    Value(f32),
+    /// A serve-layer error, variant-preserved (status 1–3).
+    Err(ServeError),
+    /// Admission shed: the shard's queue was full. Retry-safe — the
+    /// request was never enqueued (status 4).
+    Overloaded,
+    /// Request validation failed (unknown app, arity mismatch). Not
+    /// retry-safe: resending the same bytes cannot succeed (status 5).
+    BadRequest(String),
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Response {
+    pub id: u64,
+    pub body: RespBody,
+}
+
+/// Out-of-band connection-scoped signals.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Control {
+    /// Server is draining; the connection closes after this frame.
+    GoingAway,
+    /// Connection-thread pool is full; the connection closes after
+    /// this frame. Retry-safe (nothing was admitted).
+    Busy,
+    /// The peer sent a malformed frame; the connection closes after
+    /// this frame.
+    ProtocolError(String),
+}
+
+const CTRL_GOING_AWAY: u8 = 1;
+const CTRL_BUSY: u8 = 2;
+const CTRL_PROTOCOL_ERROR: u8 = 3;
+
+const STATUS_OK: u8 = 0;
+const STATUS_TIMEOUT: u8 = 1;
+const STATUS_SHARD_DEAD: u8 = 2;
+const STATUS_EXEC: u8 = 3;
+const STATUS_OVERLOADED: u8 = 4;
+const STATUS_BAD_REQUEST: u8 = 5;
+
+/// Truncate a message to [`MAX_MSG_LEN`] bytes on a char boundary so
+/// arbitrarily long engine errors can't bloat (or break) a frame.
+fn clip(msg: &str) -> &str {
+    if msg.len() <= MAX_MSG_LEN {
+        return msg;
+    }
+    let mut end = MAX_MSG_LEN;
+    while end > 0 && !msg.is_char_boundary(end) {
+        end -= 1;
+    }
+    &msg[..end]
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    let s = clip(s);
+    out.extend_from_slice(&(s.len() as u16).to_le_bytes());
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn frame(kind: u8, payload: Vec<u8>) -> Vec<u8> {
+    debug_assert!(payload.len() <= MAX_PAYLOAD);
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+    out.extend_from_slice(&MAGIC);
+    out.push(VERSION);
+    out.push(kind);
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&payload);
+    out
+}
+
+/// Encode a request as a complete frame (header included).
+pub fn encode_request(req: &Request) -> Vec<u8> {
+    let mut p = Vec::with_capacity(16 + req.app.len() + 8 * req.inputs.len() + 8);
+    p.extend_from_slice(&req.id.to_le_bytes());
+    p.extend_from_slice(&req.deadline_budget_us.to_le_bytes());
+    put_str(&mut p, &req.app);
+    p.extend_from_slice(&(req.inputs.len() as u16).to_le_bytes());
+    for v in &req.inputs {
+        p.extend_from_slice(&v.to_le_bytes());
+    }
+    frame(KIND_REQUEST, p)
+}
+
+/// Encode a response as a complete frame (header included).
+pub fn encode_response(resp: &Response) -> Vec<u8> {
+    let mut p = Vec::with_capacity(32);
+    p.extend_from_slice(&resp.id.to_le_bytes());
+    match &resp.body {
+        RespBody::Value(v) => {
+            p.push(STATUS_OK);
+            p.extend_from_slice(&v.to_le_bytes());
+        }
+        RespBody::Err(ServeError::Timeout) => p.push(STATUS_TIMEOUT),
+        RespBody::Err(ServeError::ShardDead) => p.push(STATUS_SHARD_DEAD),
+        RespBody::Err(ServeError::Exec(msg)) => {
+            p.push(STATUS_EXEC);
+            put_str(&mut p, msg);
+        }
+        RespBody::Overloaded => p.push(STATUS_OVERLOADED),
+        RespBody::BadRequest(msg) => {
+            p.push(STATUS_BAD_REQUEST);
+            put_str(&mut p, msg);
+        }
+    }
+    frame(KIND_RESPONSE, p)
+}
+
+/// Encode a control frame (header included).
+pub fn encode_control(ctrl: &Control) -> Vec<u8> {
+    let mut p = Vec::with_capacity(8);
+    match ctrl {
+        Control::GoingAway => {
+            p.push(CTRL_GOING_AWAY);
+            put_str(&mut p, "");
+        }
+        Control::Busy => {
+            p.push(CTRL_BUSY);
+            put_str(&mut p, "");
+        }
+        Control::ProtocolError(msg) => {
+            p.push(CTRL_PROTOCOL_ERROR);
+            put_str(&mut p, msg);
+        }
+    }
+    frame(KIND_CONTROL, p)
+}
+
+/// Validate a frame header; returns `(kind, payload_len)`. The length
+/// is checked against [`MAX_PAYLOAD`] here, before any payload byte is
+/// read — an attacker-controlled length can reject a frame but can
+/// never size an allocation.
+pub fn decode_header(h: &[u8; HEADER_LEN]) -> Result<(u8, usize), WireError> {
+    if h[0..2] != MAGIC {
+        return Err(WireError::BadMagic([h[0], h[1]]));
+    }
+    if h[2] != VERSION {
+        return Err(WireError::UnknownVersion(h[2]));
+    }
+    let kind = h[3];
+    if !(KIND_REQUEST..=KIND_CONTROL).contains(&kind) {
+        return Err(WireError::UnknownKind(kind));
+    }
+    let len = u32::from_le_bytes([h[4], h[5], h[6], h[7]]);
+    if len as usize > MAX_PAYLOAD {
+        return Err(WireError::Oversized(len));
+    }
+    Ok((kind, len as usize))
+}
+
+/// Bounds-checked payload cursor: every read is validated against the
+/// remaining slice, so a lying inner length yields [`WireError::Truncated`]
+/// instead of a panic.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        let end = self.pos.checked_add(n).ok_or(WireError::Truncated)?;
+        if end > self.buf.len() {
+            return Err(WireError::Truncated);
+        }
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, WireError> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn u64(&mut self) -> Result<u64, WireError> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes(b.try_into().expect("8-byte slice")))
+    }
+
+    fn f32(&mut self) -> Result<f32, WireError> {
+        let b = self.take(4)?;
+        Ok(f32::from_le_bytes(b.try_into().expect("4-byte slice")))
+    }
+
+    fn f64(&mut self) -> Result<f64, WireError> {
+        let b = self.take(8)?;
+        Ok(f64::from_le_bytes(b.try_into().expect("8-byte slice")))
+    }
+
+    /// A length-prefixed UTF-8 string, bounded by `cap`.
+    fn str(&mut self, cap: usize) -> Result<String, WireError> {
+        let len = self.u16()? as usize;
+        if len > cap {
+            return Err(WireError::Malformed("string field exceeds cap"));
+        }
+        let bytes = self.take(len)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| WireError::Malformed("string not UTF-8"))
+    }
+
+    /// Every payload must be consumed exactly; trailing bytes mean the
+    /// peer and we disagree about the schema.
+    fn finish(self) -> Result<(), WireError> {
+        if self.pos != self.buf.len() {
+            return Err(WireError::Malformed("trailing bytes after payload"));
+        }
+        Ok(())
+    }
+}
+
+/// Decode a request payload (the bytes after the header).
+pub fn decode_request(payload: &[u8]) -> Result<Request, WireError> {
+    let mut r = Reader::new(payload);
+    let id = r.u64()?;
+    let deadline_budget_us = r.u64()?;
+    let app = r.str(MAX_APP_LEN)?;
+    if app.is_empty() {
+        return Err(WireError::Malformed("empty app name"));
+    }
+    let n = r.u16()? as usize;
+    if n > MAX_INPUTS {
+        return Err(WireError::Malformed("input count exceeds cap"));
+    }
+    // `n` was validated against MAX_INPUTS above, so this allocation is
+    // bounded regardless of what the peer claimed.
+    let mut inputs = Vec::with_capacity(n);
+    for _ in 0..n {
+        inputs.push(r.f64()?);
+    }
+    r.finish()?;
+    Ok(Request { id, deadline_budget_us, app, inputs })
+}
+
+/// Decode a response payload (the bytes after the header).
+pub fn decode_response(payload: &[u8]) -> Result<Response, WireError> {
+    let mut r = Reader::new(payload);
+    let id = r.u64()?;
+    let body = match r.u8()? {
+        STATUS_OK => RespBody::Value(r.f32()?),
+        STATUS_TIMEOUT => RespBody::Err(ServeError::Timeout),
+        STATUS_SHARD_DEAD => RespBody::Err(ServeError::ShardDead),
+        STATUS_EXEC => RespBody::Err(ServeError::Exec(r.str(MAX_MSG_LEN)?)),
+        STATUS_OVERLOADED => RespBody::Overloaded,
+        STATUS_BAD_REQUEST => RespBody::BadRequest(r.str(MAX_MSG_LEN)?),
+        _ => return Err(WireError::Malformed("unknown response status")),
+    };
+    r.finish()?;
+    Ok(Response { id, body })
+}
+
+/// Decode a control payload (the bytes after the header).
+pub fn decode_control(payload: &[u8]) -> Result<Control, WireError> {
+    let mut r = Reader::new(payload);
+    let code = r.u8()?;
+    let msg = r.str(MAX_MSG_LEN)?;
+    r.finish()?;
+    match code {
+        CTRL_GOING_AWAY => Ok(Control::GoingAway),
+        CTRL_BUSY => Ok(Control::Busy),
+        CTRL_PROTOCOL_ERROR => Ok(Control::ProtocolError(msg)),
+        _ => Err(WireError::Malformed("unknown control code")),
+    }
+}
+
+/// Decode one complete frame from a byte buffer; returns
+/// `(kind, payload)`. Test/offline convenience over the same strict
+/// path the streaming reader uses.
+pub fn decode_frame_bytes(buf: &[u8]) -> Result<(u8, &[u8]), WireError> {
+    if buf.len() < HEADER_LEN {
+        return Err(WireError::Truncated);
+    }
+    let hdr: [u8; HEADER_LEN] = buf[..HEADER_LEN].try_into().expect("8-byte header");
+    let (kind, len) = decode_header(&hdr)?;
+    let payload = buf.get(HEADER_LEN..HEADER_LEN + len).ok_or(WireError::Truncated)?;
+    if buf.len() > HEADER_LEN + len {
+        return Err(WireError::Malformed("trailing bytes after frame"));
+    }
+    Ok((kind, payload))
+}
+
+/// How a framed read terminated without a frame.
+#[derive(Debug)]
+pub enum ReadError {
+    /// No first byte arrived within the idle window. Not an error for
+    /// a server (the connection is just quiet); a deadline for a
+    /// client awaiting a response.
+    Idle,
+    /// The first byte arrived but the rest of the frame did not within
+    /// the total io budget — a trickling or stalled peer. The
+    /// connection should be closed.
+    Stalled,
+    /// The peer closed the connection cleanly at a frame boundary.
+    Closed,
+    /// A transport-level error.
+    Io(std::io::Error),
+    /// The header or payload failed validation.
+    Wire(WireError),
+}
+
+impl std::fmt::Display for ReadError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ReadError::Idle => write!(f, "no frame within the idle window"),
+            ReadError::Stalled => write!(f, "frame stalled mid-read (io timeout)"),
+            ReadError::Closed => write!(f, "connection closed"),
+            ReadError::Io(e) => write!(f, "io error: {e}"),
+            ReadError::Wire(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut)
+}
+
+/// Fill `buf` completely, failing with [`ReadError::Stalled`] once
+/// `deadline` passes. The deadline is absolute: a peer trickling one
+/// byte per timeout window still cannot hold the read open past it —
+/// that is the slowloris defense.
+fn read_exact_deadline(
+    stream: &mut TcpStream,
+    buf: &mut [u8],
+    deadline: Instant,
+) -> Result<(), ReadError> {
+    let mut filled = 0usize;
+    while filled < buf.len() {
+        let remaining = deadline.saturating_duration_since(Instant::now());
+        if remaining.is_zero() {
+            return Err(ReadError::Stalled);
+        }
+        stream
+            .set_read_timeout(Some(remaining.max(Duration::from_millis(1))))
+            .map_err(ReadError::Io)?;
+        match stream.read(&mut buf[filled..]) {
+            Ok(0) => return Err(ReadError::Wire(WireError::Truncated)),
+            Ok(n) => filled += n,
+            Err(e) if is_timeout(&e) => return Err(ReadError::Stalled),
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => return Err(ReadError::Io(e)),
+        }
+    }
+    Ok(())
+}
+
+/// Read one frame: wait up to `first_byte_wait` for the frame to
+/// start, then require the whole frame within `io_timeout` of the
+/// first byte. Returns `(kind, payload)`.
+///
+/// * A quiet connection yields [`ReadError::Idle`] after
+///   `first_byte_wait` — callers slice this to poll shutdown flags and
+///   accumulate idle time for the reaper.
+/// * A clean EOF at a frame boundary yields [`ReadError::Closed`];
+///   EOF mid-frame is [`WireError::Truncated`].
+/// * A started-but-unfinished frame yields [`ReadError::Stalled`] once
+///   the total budget expires, no matter how steadily the peer
+///   trickles bytes.
+pub fn read_frame(
+    stream: &mut TcpStream,
+    first_byte_wait: Duration,
+    io_timeout: Duration,
+) -> Result<(u8, Vec<u8>), ReadError> {
+    let mut hdr = [0u8; HEADER_LEN];
+    stream
+        .set_read_timeout(Some(first_byte_wait.max(Duration::from_millis(1))))
+        .map_err(ReadError::Io)?;
+    let got = loop {
+        match stream.read(&mut hdr) {
+            Ok(0) => return Err(ReadError::Closed),
+            Ok(n) => break n,
+            Err(e) if is_timeout(&e) => return Err(ReadError::Idle),
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => return Err(ReadError::Io(e)),
+        }
+    };
+    // The frame has started: everything else must land within the
+    // total io budget measured from here.
+    let deadline = Instant::now() + io_timeout;
+    read_exact_deadline(stream, &mut hdr[got..], deadline)?;
+    let (kind, len) = decode_header(&hdr).map_err(ReadError::Wire)?;
+    // `len` ≤ MAX_PAYLOAD (validated in decode_header): bounded alloc.
+    let mut payload = vec![0u8; len];
+    if len > 0 {
+        read_exact_deadline(stream, &mut payload, deadline)?;
+    }
+    Ok((kind, payload))
+}
+
+/// Write a complete frame under a write timeout. Frames are tiny
+/// (≤ [`MAX_PAYLOAD`] + header) so a healthy peer's socket buffer
+/// absorbs them instantly; a peer that stops reading trips the timeout
+/// and the connection is closed.
+pub fn write_frame(
+    stream: &mut TcpStream,
+    bytes: &[u8],
+    io_timeout: Duration,
+) -> std::io::Result<()> {
+    stream.set_write_timeout(Some(io_timeout.max(Duration::from_millis(1))))?;
+    stream.write_all(bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip_request(req: &Request) -> Request {
+        let frame = encode_request(req);
+        let (kind, payload) = decode_frame_bytes(&frame).expect("decode");
+        assert_eq!(kind, KIND_REQUEST);
+        decode_request(payload).expect("request")
+    }
+
+    fn roundtrip_response(resp: &Response) -> Response {
+        let frame = encode_response(resp);
+        let (kind, payload) = decode_frame_bytes(&frame).expect("decode");
+        assert_eq!(kind, KIND_RESPONSE);
+        decode_response(payload).expect("response")
+    }
+
+    #[test]
+    fn request_roundtrip_preserves_everything() {
+        let req = Request {
+            id: 0xDEAD_BEEF_0BAD_F00D,
+            deadline_budget_us: 250_000,
+            app: "op_multiply".into(),
+            inputs: vec![0.25, -0.5, 1.0, 0.0, f64::MIN_POSITIVE],
+        };
+        assert_eq!(roundtrip_request(&req), req);
+        // No deadline and a single input also survive.
+        let req = Request { id: 0, deadline_budget_us: 0, app: "x".into(), inputs: vec![0.9] };
+        assert_eq!(roundtrip_request(&req), req);
+    }
+
+    #[test]
+    fn response_roundtrip_over_all_serve_error_variants() {
+        // The satellite's property test: every ServeError variant (plus
+        // the wire-only outcomes) survives encode→decode, including
+        // messages with quotes, newlines, and non-ASCII content.
+        let msgs = ["boom", "line1\nline2\t\"quoted\"", "úñíçødé ≤≥ 🦀", "", "x"];
+        let mut bodies = vec![
+            RespBody::Value(0.4375),
+            RespBody::Value(-0.0),
+            RespBody::Err(ServeError::Timeout),
+            RespBody::Err(ServeError::ShardDead),
+            RespBody::Overloaded,
+        ];
+        for m in msgs {
+            bodies.push(RespBody::Err(ServeError::Exec(m.to_string())));
+            bodies.push(RespBody::BadRequest(m.to_string()));
+        }
+        for (i, body) in bodies.into_iter().enumerate() {
+            let resp = Response { id: i as u64 * 7 + 1, body };
+            assert_eq!(roundtrip_response(&resp), resp, "variant {i}");
+        }
+        // f32 bit patterns are preserved exactly (the bit-identity
+        // invariant rides on this).
+        let v = f32::from_bits(0x7F7F_FFFF); // f32::MAX's exact bit pattern
+        let got = roundtrip_response(&Response { id: 9, body: RespBody::Value(v) });
+        match got.body {
+            RespBody::Value(g) => assert_eq!(g.to_bits(), v.to_bits()),
+            other => panic!("expected value, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn control_roundtrip_all_codes() {
+        for ctrl in [
+            Control::GoingAway,
+            Control::Busy,
+            Control::ProtocolError("bad frame".into()),
+        ] {
+            let frame = encode_control(&ctrl);
+            let (kind, payload) = decode_frame_bytes(&frame).expect("decode");
+            assert_eq!(kind, KIND_CONTROL);
+            assert_eq!(decode_control(payload).expect("control"), ctrl);
+        }
+    }
+
+    #[test]
+    fn oversized_messages_are_clipped_not_rejected() {
+        let long = "é".repeat(MAX_MSG_LEN); // 2 bytes per char
+        let resp = Response { id: 1, body: RespBody::Err(ServeError::Exec(long)) };
+        let got = roundtrip_response(&resp);
+        match got.body {
+            RespBody::Err(ServeError::Exec(m)) => {
+                assert!(m.len() <= MAX_MSG_LEN);
+                assert!(!m.is_empty());
+                assert!(m.chars().all(|c| c == 'é'), "clip landed on a char boundary");
+            }
+            other => panic!("expected exec error, got {other:?}"),
+        }
+    }
+
+    /// The satellite's malformed-frame table: every row is a byte
+    /// mutation and the exact typed error it must produce. None may
+    /// panic, hang, or allocate from the corrupt length.
+    #[test]
+    fn malformed_frame_table() {
+        let good = encode_request(&Request {
+            id: 42,
+            deadline_budget_us: 1000,
+            app: "op_multiply".into(),
+            inputs: vec![0.25, 0.75],
+        });
+
+        // -- Header-level rejections --------------------------------
+        let mut bad_magic = good.clone();
+        bad_magic[0] = b'X';
+        assert_eq!(decode_frame_bytes(&bad_magic), Err(WireError::BadMagic([b'X', b'C'])));
+
+        let mut bad_version = good.clone();
+        bad_version[2] = 9;
+        assert_eq!(decode_frame_bytes(&bad_version), Err(WireError::UnknownVersion(9)));
+
+        let mut bad_kind = good.clone();
+        bad_kind[3] = 7;
+        assert_eq!(decode_frame_bytes(&bad_kind), Err(WireError::UnknownKind(7)));
+
+        // Truncated header: fewer than 8 bytes can never be a frame.
+        for n in 0..HEADER_LEN {
+            assert_eq!(decode_frame_bytes(&good[..n]), Err(WireError::Truncated), "len {n}");
+        }
+
+        // Length > cap is rejected from the header alone — the payload
+        // is untouched, so no allocation is sized by the bad length.
+        let mut oversized = good.clone();
+        oversized[4..8].copy_from_slice(&(MAX_PAYLOAD as u32 + 1).to_le_bytes());
+        assert_eq!(
+            decode_frame_bytes(&oversized),
+            Err(WireError::Oversized(MAX_PAYLOAD as u32 + 1))
+        );
+
+        // A header promising more payload than the buffer holds.
+        let mut hungry = good.clone();
+        let claimed = (good.len() - HEADER_LEN + 9) as u32;
+        hungry[4..8].copy_from_slice(&claimed.to_le_bytes());
+        assert_eq!(decode_frame_bytes(&hungry), Err(WireError::Truncated));
+
+        // Trailing garbage after a complete frame.
+        let mut trailing = good.clone();
+        trailing.push(0xAA);
+        assert_eq!(
+            decode_frame_bytes(&trailing),
+            Err(WireError::Malformed("trailing bytes after frame"))
+        );
+
+        // -- Payload-level rejections -------------------------------
+        let payload = |frame: &[u8]| frame[HEADER_LEN..].to_vec();
+
+        // Truncated payload: cut at every single boundary; each must be
+        // a typed error, never a panic.
+        let p = payload(&good);
+        for cut in 0..p.len() {
+            let err = decode_request(&p[..cut]).expect_err("cut payload must fail");
+            assert!(
+                matches!(err, WireError::Truncated | WireError::Malformed(_)),
+                "cut {cut}: {err:?}"
+            );
+        }
+
+        // Zero-length app name.
+        let empty_app = payload(&encode_request(&Request {
+            id: 1,
+            deadline_budget_us: 0,
+            app: String::new(),
+            inputs: vec![],
+        }));
+        assert_eq!(decode_request(&empty_app), Err(WireError::Malformed("empty app name")));
+
+        // App-name length beyond its cap.
+        let mut big_app = p.clone();
+        big_app[16..18].copy_from_slice(&(MAX_APP_LEN as u16 + 1).to_le_bytes());
+        assert_eq!(
+            decode_request(&big_app),
+            Err(WireError::Malformed("string field exceeds cap"))
+        );
+
+        // Input count beyond its cap (bounded alloc guard).
+        let mut big_n = p.clone();
+        let n_off = 16 + 2 + "op_multiply".len();
+        big_n[n_off..n_off + 2].copy_from_slice(&(MAX_INPUTS as u16 + 1).to_le_bytes());
+        assert_eq!(
+            decode_request(&big_n),
+            Err(WireError::Malformed("input count exceeds cap"))
+        );
+
+        // Non-UTF-8 app name.
+        let mut bad_utf8 = p.clone();
+        bad_utf8[18] = 0xFF;
+        assert_eq!(decode_request(&bad_utf8), Err(WireError::Malformed("string not UTF-8")));
+
+        // Trailing bytes inside the payload.
+        let mut inner_trailing = p.clone();
+        inner_trailing.push(0);
+        assert_eq!(
+            decode_request(&inner_trailing),
+            Err(WireError::Malformed("trailing bytes after payload"))
+        );
+
+        // Unknown response status byte.
+        let mut resp = payload(&encode_response(&Response {
+            id: 3,
+            body: RespBody::Overloaded,
+        }));
+        resp[8] = 200;
+        assert_eq!(decode_response(&resp), Err(WireError::Malformed("unknown response status")));
+
+        // Unknown control code.
+        let mut ctrl = payload(&encode_control(&Control::Busy));
+        ctrl[0] = 200;
+        assert_eq!(decode_control(&ctrl), Err(WireError::Malformed("unknown control code")));
+    }
+
+    #[test]
+    fn wire_error_display_is_descriptive() {
+        assert!(WireError::Oversized(1 << 30).to_string().contains("cap"));
+        assert!(WireError::UnknownVersion(9).to_string().contains('9'));
+        assert!(WireError::Malformed("empty app name").to_string().contains("empty app name"));
+    }
+}

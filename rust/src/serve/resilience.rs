@@ -218,6 +218,39 @@ pub struct ChaosPlan {
     pub latency_every: u64,
     /// The injected per-wave latency.
     pub latency: Duration,
+    /// Network-layer injectors, applied by `serve::net::TcpFront`
+    /// (in-process serving ignores them; the default is a no-op).
+    pub net: NetChaos,
+}
+
+/// Network chaos injectors for the TCP front door (`tests/net_chaos.rs`
+/// and the `flood` CI smoke): each failure mode networks add on top of
+/// the in-process ones, on a deterministic cadence. An all-zero plan is
+/// exactly the clean wire path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct NetChaos {
+    /// Accept every Nth connection, then drop it before reading a
+    /// byte (`0` = never) — the classic flaky-LB connect.
+    pub accept_drop_every: u64,
+    /// Cut every Nth response mid-frame and hard-close (`0` = never):
+    /// clients see a truncated frame, never a value.
+    pub cut_every: u64,
+    /// Trickle every Nth response one byte at a time (`0` = never).
+    pub trickle_every: u64,
+    /// Inter-byte delay while trickling.
+    pub trickle_delay: Duration,
+    /// Stall every Nth decoded request before execution (`0` = never):
+    /// the server goes quiet with a request in hand.
+    pub stall_read_every: u64,
+    /// The injected stall.
+    pub stall: Duration,
+}
+
+impl NetChaos {
+    /// True when every injector is disabled (the clean wire path).
+    pub fn is_noop(&self) -> bool {
+        *self == NetChaos::default()
+    }
 }
 
 impl ChaosPlan {

@@ -194,6 +194,35 @@ impl Server {
         inputs: &[f64],
         opts: SubmitOpts,
     ) -> Result<Receiver<Reply>> {
+        match self.submit_inner(app, inputs, opts)? {
+            Some(rx) => Ok(rx),
+            None => bail!(
+                "shard {} admission queue full (backpressure)",
+                self.pool.shard_of(app).unwrap_or(0)
+            ),
+        }
+    }
+
+    /// Shed-aware admission for the TCP front door: `Ok(None)` when
+    /// the shard's queue is full, so the wire layer can answer with a
+    /// typed `Overloaded` response (retry-safe at the client) instead
+    /// of string-matching a formatted error. `Err` remains request
+    /// validation (unknown app, arity) — a `BadRequest` on the wire.
+    pub fn submit_shedding(
+        &self,
+        app: &str,
+        inputs: &[f64],
+        deadline: Option<Duration>,
+    ) -> Result<Option<Receiver<Reply>>> {
+        self.submit_inner(app, inputs, SubmitOpts { deadline, shed: true })
+    }
+
+    fn submit_inner(
+        &self,
+        app: &str,
+        inputs: &[f64],
+        opts: SubmitOpts,
+    ) -> Result<Option<Receiver<Reply>>> {
         let Some(&(n, _)) = self.specs.get(app) else {
             bail!("unknown app `{app}` (have: {:?})", self.apps());
         };
@@ -236,14 +265,10 @@ impl Server {
             Admission::Shed => {
                 let mut m = lock_unpoisoned(self.pool.metrics_map());
                 m.entry(app.to_string()).or_default().shed += 1;
-                drop(m);
-                bail!(
-                    "shard {} admission queue full (backpressure)",
-                    self.pool.shard_of(app).unwrap_or(0)
-                );
+                return Ok(None);
             }
         }
-        Ok(rrx)
+        Ok(Some(rrx))
     }
 
     /// Run a whole workload synchronously; returns outputs in order.

@@ -290,6 +290,7 @@ fn chaos_storm_yields_exactly_one_terminal_outcome_per_request() {
                 max_panics: 5,
                 latency_every: 2,
                 latency: Duration::from_millis(1),
+                ..Default::default()
             }),
             max_restarts: 20,
             ..ServerConfig::default()

@@ -1,0 +1,432 @@
+//! Network chaos acceptance — the TCP front door must carry the serve
+//! layer's resilience contract across a socket:
+//!
+//! * with no fault injection, the TCP path is **bit-identical** to the
+//!   in-process `submit` path at the same seeds;
+//! * malformed frames get a typed `ProtocolError` control and a close —
+//!   never a panic, never a hang;
+//! * a slowloris peer pins at most its own connection thread, and only
+//!   until the io deadline; concurrent good connections are unaffected;
+//! * graceful drain answers idle connections `GoingAway`, returns
+//!   promptly, and leaves zero wedged threads;
+//! * the retrying client reconnects through mid-frame cuts and delivers
+//!   each result exactly once; the circuit breaker fast-fails a dead
+//!   target and half-opens on its timer;
+//! * a multi-client storm under the full injector set still yields
+//!   exactly one terminal outcome per request.
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use stoch_imc::coordinator::BatcherConfig;
+use stoch_imc::serve::net::wire;
+use stoch_imc::serve::net::{
+    BreakerConfig, BreakerState, Client, ClientConfig, NetError, RetryPolicy,
+};
+use stoch_imc::serve::{ChaosPlan, NetChaos, Server, ServerConfig, TcpFront, TcpFrontConfig};
+
+fn manifest_dir(tag: &str, lines: &str) -> PathBuf {
+    // Pin the default backend (see tests/interp_engine.rs for why this
+    // is safe in this binary).
+    std::env::remove_var("STOCH_IMC_BACKEND");
+    let dir = std::env::temp_dir().join(format!("stoch_imc_it_net_{tag}"));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.txt"), lines).unwrap();
+    dir
+}
+
+/// A front on an ephemeral port over a deterministic single-shard,
+/// single-row-thread server (batch=1 ⇒ every request is its own wave,
+/// so sequential callers reproduce the exact wave sequence).
+fn start_front(tag: &str, front_cfg: TcpFrontConfig) -> TcpFront {
+    start_front_over(tag, ServerConfig::default(), front_cfg)
+}
+
+fn start_front_over(tag: &str, server_cfg: ServerConfig, front_cfg: TcpFrontConfig) -> TcpFront {
+    let dir = manifest_dir(tag, "op_multiply 2 1 512\n");
+    let cfg = ServerConfig { shards: 1, row_threads: 1, ..server_cfg };
+    let server = Arc::new(Server::start(&dir, cfg).unwrap());
+    let front_cfg = TcpFrontConfig { addr: "127.0.0.1:0".into(), ..front_cfg };
+    TcpFront::start(server, front_cfg).unwrap()
+}
+
+fn client_for(front: &TcpFront, cfg: ClientConfig) -> Client {
+    Client::new(front.local_addr().to_string(), cfg)
+}
+
+#[test]
+fn no_fault_tcp_path_is_bit_identical_to_in_process_submit() {
+    // Same manifest, same sequential workload, batch=1 single-shard
+    // single-row-thread servers: the wave sequence is identical, so the
+    // TCP hop must not change a single bit of any result.
+    let dir = manifest_dir("bitident", "op_multiply 2 1 512\n");
+    let work: Vec<Vec<f64>> = (0..16).map(|i| vec![(i as f64 + 1.0) / 20.0, 0.7]).collect();
+    let cfg = || ServerConfig { shards: 1, row_threads: 1, ..ServerConfig::default() };
+
+    let in_proc = Server::start(&dir, cfg()).unwrap();
+    let mut want = Vec::new();
+    for x in &work {
+        let rx = in_proc.submit("op_multiply", x).unwrap();
+        want.push(rx.recv().unwrap().expect("clean serving yields values"));
+    }
+    drop(in_proc);
+
+    let front = TcpFront::start(
+        Arc::new(Server::start(&dir, cfg()).unwrap()),
+        TcpFrontConfig { addr: "127.0.0.1:0".into(), ..TcpFrontConfig::default() },
+    )
+    .unwrap();
+    let mut client = client_for(&front, ClientConfig::default());
+    for (x, want) in work.iter().zip(&want) {
+        let got = client.call("op_multiply", x).expect("no-fault TCP call succeeds");
+        assert_eq!(got.to_bits(), want.to_bits(), "TCP result differs from in-process submit");
+    }
+    let snap = front.snapshot();
+    assert_eq!(snap.get("serve_net_frames_rx"), Some(16.0));
+    assert_eq!(snap.get("serve_net_frames_tx"), Some(16.0));
+    assert_eq!(snap.get("serve_net_protocol_errors"), Some(0.0));
+    // One connection reused across all 16 calls.
+    assert_eq!(snap.get("serve_net_connections"), Some(1.0));
+    assert_eq!(client.stats().connects, 1, "clean serving never reconnects");
+}
+
+#[test]
+fn malformed_frames_get_a_typed_protocol_error_then_close() {
+    // Raw-socket abuse: every malformed frame is answered with a
+    // `ProtocolError` control frame and a close — no panic, no hang,
+    // and the front keeps serving afterwards.
+    let front = start_front("malformed", TcpFrontConfig::default());
+    let addr = front.local_addr();
+
+    let mut oversized = vec![b'S', b'C', wire::VERSION, wire::KIND_REQUEST];
+    oversized.extend_from_slice(&(wire::MAX_PAYLOAD as u32 + 1).to_le_bytes());
+    // A syntactically valid header whose payload is garbage.
+    let mut bad_payload = vec![b'S', b'C', wire::VERSION, wire::KIND_REQUEST];
+    bad_payload.extend_from_slice(&4u32.to_le_bytes());
+    bad_payload.extend_from_slice(&[0xDE, 0xAD, 0xBE, 0xEF]);
+    let cases: Vec<(&str, Vec<u8>)> = vec![
+        ("bad magic", vec![b'X', b'C', wire::VERSION, wire::KIND_REQUEST, 0, 0, 0, 0]),
+        ("unknown version", vec![b'S', b'C', 9, wire::KIND_REQUEST, 0, 0, 0, 0]),
+        ("unknown kind", vec![b'S', b'C', wire::VERSION, 7, 0, 0, 0, 0]),
+        ("oversized length", oversized),
+        ("garbage payload", bad_payload),
+    ];
+    for (name, bytes) in &cases {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        s.write_all(bytes).unwrap();
+        let mut buf = Vec::new();
+        s.read_to_end(&mut buf).unwrap_or_else(|e| panic!("{name}: read: {e}"));
+        let (kind, payload) =
+            wire::decode_frame_bytes(&buf).unwrap_or_else(|e| panic!("{name}: reply frame: {e}"));
+        assert_eq!(kind, wire::KIND_CONTROL, "{name}");
+        match wire::decode_control(payload) {
+            Ok(wire::Control::ProtocolError(msg)) => {
+                assert!(!msg.is_empty(), "{name}: empty diagnostic");
+            }
+            other => panic!("{name}: expected ProtocolError control, got {other:?}"),
+        }
+    }
+    // The front survived all of it and still serves values.
+    let mut client = client_for(&front, ClientConfig::default());
+    assert!(client.call("op_multiply", &[0.5, 0.5]).is_ok(), "front wedged by malformed frames");
+    let snap = front.snapshot();
+    assert_eq!(snap.get("serve_net_protocol_errors"), Some(5.0));
+}
+
+#[test]
+fn slow_peer_is_killed_by_the_io_deadline_without_stalling_others() {
+    // A slowloris peer sends 3 bytes of a header and stops. The total
+    // frame-read deadline kills it within ~io_timeout, and a healthy
+    // client on a sibling connection is answered promptly throughout.
+    let io = Duration::from_millis(300);
+    let front = start_front(
+        "slowpeer",
+        TcpFrontConfig { io_timeout: io, ..TcpFrontConfig::default() },
+    );
+    let mut slow = TcpStream::connect(front.local_addr()).unwrap();
+    slow.write_all(&[b'S', b'C', wire::VERSION]).unwrap();
+    let t0 = Instant::now();
+
+    // While the slow peer dangles, a good client gets quick answers.
+    let mut client = client_for(&front, ClientConfig::default());
+    for _ in 0..5 {
+        let t = Instant::now();
+        client.call("op_multiply", &[0.5, 0.5]).expect("healthy lane serves");
+        assert!(t.elapsed() < Duration::from_secs(5), "healthy lane stalled behind slow peer");
+    }
+
+    // The slow connection is closed within the io budget (plus grace).
+    slow.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    let mut buf = [0u8; 16];
+    let closed = matches!(slow.read(&mut buf), Ok(0) | Err(_));
+    assert!(closed, "slowloris connection outlived the io deadline");
+    assert!(
+        t0.elapsed() < io + Duration::from_secs(5),
+        "stall kill took {:?}, io budget {:?}",
+        t0.elapsed(),
+        io
+    );
+    let snap = front.snapshot();
+    assert!(snap.get("serve_net_io_timeouts").unwrap_or(0.0) >= 1.0, "stall not counted");
+}
+
+#[test]
+fn drain_answers_going_away_and_leaves_zero_wedged_threads() {
+    // An idle connection at drain time is told `GoingAway`; shutdown
+    // joins every thread and returns promptly; post-drain the metrics
+    // show zero active connections.
+    let mut front = start_front("drain", TcpFrontConfig::default());
+    let mut idle = TcpStream::connect(front.local_addr()).unwrap();
+    idle.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    // Serve one request first so the connection is fully established.
+    let mut client = client_for(&front, ClientConfig::default());
+    client.call("op_multiply", &[0.5, 0.5]).unwrap();
+
+    let t0 = Instant::now();
+    front.shutdown();
+    assert!(t0.elapsed() < Duration::from_secs(10), "drain wedged: {:?}", t0.elapsed());
+
+    // The idle peer received the GoingAway control before the close.
+    let mut buf = Vec::new();
+    idle.read_to_end(&mut buf).unwrap();
+    let (kind, payload) = wire::decode_frame_bytes(&buf).expect("drain notice is a clean frame");
+    assert_eq!(kind, wire::KIND_CONTROL);
+    assert!(matches!(wire::decode_control(payload), Ok(wire::Control::GoingAway)));
+
+    let snap = front.snapshot();
+    assert_eq!(snap.get("serve_net_active_connections"), Some(0.0), "threads left behind");
+    assert!(snap.get("serve_net_going_away").unwrap_or(0.0) >= 1.0);
+    // A second shutdown is an idempotent no-op.
+    front.shutdown();
+}
+
+#[test]
+fn client_retries_through_mid_frame_cuts_and_delivers_exactly_once() {
+    // Every second response is cut mid-frame and the socket slammed
+    // shut. Cuts are transport failures (no result delivered), so the
+    // client retries on a fresh connection and every call still lands
+    // exactly one value — never zero, never two.
+    let front = start_front(
+        "cuts",
+        TcpFrontConfig {
+            chaos: NetChaos { cut_every: 2, ..NetChaos::default() },
+            ..TcpFrontConfig::default()
+        },
+    );
+    let mut client = client_for(
+        &front,
+        ClientConfig {
+            retry: RetryPolicy { max: 4, base: Duration::from_millis(1), seed: 42 },
+            ..ClientConfig::default()
+        },
+    );
+    const CALLS: usize = 12;
+    for i in 0..CALLS {
+        let v = client.call("op_multiply", &[0.5, 0.5]).unwrap_or_else(|e| {
+            panic!("call {i} should retry through the cut: {e}");
+        });
+        assert!((f64::from(v) - 0.25).abs() < 0.1, "call {i}: value {v}");
+    }
+    let stats = client.stats();
+    assert_eq!(stats.ok as usize, CALLS, "exactly one delivery per call");
+    assert!(stats.retries >= (CALLS / 2) as u64, "cut responses must have been retried");
+    assert!(stats.connects > 1, "cut connections must reconnect");
+    let snap = front.snapshot();
+    assert!(snap.get("serve_net_chaos_cuts").unwrap_or(0.0) >= (CALLS / 2) as f64);
+}
+
+#[test]
+fn breaker_fast_fails_a_dead_target_and_half_opens_on_its_timer() {
+    // Reserve an ephemeral port, then free it: connects are refused.
+    let addr = {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap().to_string()
+    };
+    let cooloff = Duration::from_millis(200);
+    let mut client = Client::new(
+        addr,
+        ClientConfig {
+            io_timeout: Duration::from_millis(200),
+            retry: RetryPolicy { max: 0, base: Duration::from_millis(1), seed: 1 },
+            breaker: BreakerConfig { threshold: 2, cooloff },
+            ..ClientConfig::default()
+        },
+    );
+    // Two transport failures trip the breaker…
+    for i in 0..2 {
+        match client.call("op_multiply", &[0.5, 0.5]) {
+            Err(NetError::RetriesExhausted { last, .. }) => {
+                assert!(matches!(*last, NetError::Transport(_)), "call {i}: {last:?}");
+            }
+            other => panic!("call {i}: expected exhausted transport error, got {other:?}"),
+        }
+    }
+    assert_eq!(client.breaker_state(), BreakerState::Open);
+    // …so the next call fast-fails without touching the network.
+    let connects_before = client.stats().connects;
+    assert!(matches!(client.call("op_multiply", &[0.5, 0.5]), Err(NetError::BreakerOpen)));
+    assert_eq!(client.stats().connects, connects_before, "fast-fail must not dial");
+    assert_eq!(client.stats().breaker_fast_fails, 1);
+    // After the cooloff the breaker half-opens: exactly one probe goes
+    // out (a real connect attempt), fails, and re-opens the breaker.
+    std::thread::sleep(cooloff + Duration::from_millis(50));
+    let probe = client.call("op_multiply", &[0.5, 0.5]);
+    assert!(matches!(probe, Err(NetError::RetriesExhausted { .. })), "{probe:?}");
+    assert_eq!(client.stats().connects, connects_before, "refused connects never complete");
+    assert_eq!(client.breaker_state(), BreakerState::Open, "failed probe re-opens");
+}
+
+#[test]
+fn overload_is_shed_as_typed_overloaded_not_queued_unboundedly() {
+    // queue_depth=1 against 20ms waves: concurrent callers overrun the
+    // admission queue and the overflow is answered with a typed,
+    // retry-safe `Overloaded` — the front never queues unboundedly.
+    let front = start_front_over(
+        "shed",
+        ServerConfig {
+            queue_depth: 1,
+            batcher: BatcherConfig { max_wait: Duration::from_millis(1), ..Default::default() },
+            chaos: Some(ChaosPlan {
+                latency_every: 1,
+                latency: Duration::from_millis(20),
+                ..Default::default()
+            }),
+            ..ServerConfig::default()
+        },
+        TcpFrontConfig::default(),
+    );
+    let addr = front.local_addr().to_string();
+    let (ok, overloaded) = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let addr = addr.clone();
+                s.spawn(move || {
+                    let mut client = Client::new(
+                        addr,
+                        ClientConfig {
+                            retry: RetryPolicy { max: 0, base: Duration::ZERO, seed: 3 },
+                            ..ClientConfig::default()
+                        },
+                    );
+                    let (mut ok, mut overloaded) = (0u64, 0u64);
+                    for _ in 0..10 {
+                        match client.call("op_multiply", &[0.5, 0.5]) {
+                            Ok(_) => ok += 1,
+                            Err(NetError::RetriesExhausted { last, .. })
+                                if *last == NetError::Overloaded =>
+                            {
+                                overloaded += 1;
+                            }
+                            Err(e) => panic!("unexpected outcome under overload: {e}"),
+                        }
+                    }
+                    (ok, overloaded)
+                })
+            })
+            .collect();
+        let (mut ok, mut overloaded) = (0u64, 0u64);
+        for h in handles {
+            let (o, v) = h.join().expect("client thread");
+            ok += o;
+            overloaded += v;
+        }
+        (ok, overloaded)
+    });
+    assert_eq!(ok + overloaded, 80, "every call terminal");
+    assert!(ok > 0, "some calls must get through");
+    assert!(overloaded > 0, "queue_depth=1 under 8 concurrent callers must shed");
+    let snap = front.snapshot();
+    assert_eq!(snap.get("serve_net_shed"), Some(overloaded as f64), "sheds counted exactly");
+}
+
+#[test]
+fn storm_under_full_net_chaos_yields_one_terminal_outcome_per_call() {
+    // The kitchen sink: accept-then-drop, mid-frame cuts, byte
+    // trickles, and stalled reads, against four concurrent retrying
+    // clients with real deadlines. The promises: every call returns
+    // exactly one terminal outcome, values still flow, and the front
+    // drains clean afterwards.
+    let net = NetChaos {
+        accept_drop_every: 5,
+        cut_every: 7,
+        trickle_every: 5,
+        trickle_delay: Duration::from_millis(1),
+        stall_read_every: 9,
+        stall: Duration::from_millis(30),
+    };
+    let mut front = start_front_over(
+        "storm",
+        ServerConfig {
+            batcher: BatcherConfig { max_wait: Duration::from_millis(1), ..Default::default() },
+            ..ServerConfig::default()
+        },
+        TcpFrontConfig {
+            chaos: net,
+            io_timeout: Duration::from_millis(500),
+            ..TcpFrontConfig::default()
+        },
+    );
+    let addr = front.local_addr().to_string();
+    const THREADS: u64 = 4;
+    const PER: u64 = 25;
+    let (ok, errs) = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..THREADS)
+            .map(|k| {
+                let addr = addr.clone();
+                s.spawn(move || {
+                    let mut client = Client::new(
+                        addr,
+                        ClientConfig {
+                            io_timeout: Duration::from_millis(500),
+                            retry: RetryPolicy {
+                                max: 3,
+                                base: Duration::from_millis(2),
+                                seed: 0xBAD ^ k,
+                            },
+                            ..ClientConfig::default()
+                        },
+                    );
+                    let (mut ok, mut errs) = (0u64, 0u64);
+                    for _ in 0..PER {
+                        match client.call_with_deadline(
+                            "op_multiply",
+                            &[0.5, 0.5],
+                            Duration::from_millis(800),
+                        ) {
+                            Ok(v) => {
+                                assert!((f64::from(v) - 0.25).abs() < 0.1, "storm value {v}");
+                                ok += 1;
+                            }
+                            Err(_) => errs += 1,
+                        }
+                    }
+                    (ok, errs)
+                })
+            })
+            .collect();
+        let (mut ok, mut errs) = (0u64, 0u64);
+        for h in handles {
+            let (o, e) = h.join().expect("storm client thread");
+            ok += o;
+            errs += e;
+        }
+        (ok, errs)
+    });
+    assert_eq!(ok + errs, THREADS * PER, "exactly one terminal outcome per call");
+    assert!(ok > 0, "the storm must still deliver values");
+
+    let t0 = Instant::now();
+    front.shutdown();
+    assert!(t0.elapsed() < Duration::from_secs(10), "post-storm drain wedged");
+    let snap = front.snapshot();
+    assert_eq!(snap.get("serve_net_active_connections"), Some(0.0), "wedged threads post-drain");
+    assert!(snap.get("serve_net_chaos_cuts").unwrap_or(0.0) > 0.0, "cut injector never fired");
+    assert!(
+        snap.get("serve_net_chaos_accept_drops").unwrap_or(0.0) > 0.0,
+        "accept-drop injector never fired"
+    );
+}
